@@ -1,0 +1,56 @@
+//! Figure 1a / Figure 4a: copying-task convergence curves across methods.
+//!
+//! Short-horizon version of `examples/copying_task.rs` sized for `cargo
+//! bench`: trains each method for a fixed budget and reports where the loss
+//! sits relative to the no-memory baseline 10 log8/(T+20).  `--long` runs
+//! the Fig. 4a variant (longer horizon).
+
+use cwy::coordinator::{Schedule, Trainer};
+use cwy::data::copying::CopyTask;
+use cwy::report::Table;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", if args.has_flag("long") { 150 } else { 80 });
+    let engine = Engine::open("artifacts")?;
+    let methods = ["cwy", "hr", "exprnn", "scornn", "lstm", "rnn"];
+
+    let mut table = Table::new(&["METHOD", "final loss", "vs baseline", "acc", "ms/step"]);
+    for method in methods {
+        let name = format!("copy_{method}_step");
+        if engine.manifest.get(&name).is_err() {
+            continue;
+        }
+        let mut trainer = Trainer::new(&engine, &name, Schedule::Constant(1e-3))?;
+        let spec = trainer.artifact.spec.clone();
+        let t_blank: usize = spec.meta_str("t_blank").unwrap().parse()?;
+        let batch: usize = spec.meta_str("batch").unwrap().parse()?;
+        let mut task = CopyTask::new(t_blank, batch, 0);
+        let baseline = task.baseline_ce();
+
+        for _ in 0..steps {
+            let b = task.next_batch();
+            trainer.train_step(vec![
+                HostTensor::i32(vec![b.batch, b.t_total], b.tokens),
+                HostTensor::i32(vec![b.batch, b.t_total], b.targets),
+            ])?;
+        }
+        let h = &trainer.history;
+        let final_loss = h.recent_mean_loss(10).unwrap();
+        let acc = h.records.last().unwrap().metrics[0];
+        let ms = h.total_wall_s() / steps as f64 * 1e3;
+        println!("{method}: loss {final_loss:.4} (baseline {baseline:.4}), acc {acc:.3}, {ms:.2} ms/step");
+        table.row(&[
+            method.to_uppercase(),
+            format!("{final_loss:.4}"),
+            format!("{:+.4}", final_loss - baseline),
+            format!("{acc:.3}"),
+            format!("{ms:.2}"),
+        ]);
+    }
+    println!("\n## Figure 1a (copying task @ {steps} steps; negative 'vs baseline' beats it)\n");
+    print!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Figure 1b / Figure 4b: pixel-by-pixel digit classification accuracy.
+//!
+//! Trains CWY and LSTM on the procedural pixel-digit stream (196-step pixel
+//! sequences) and reports accuracy; `--permuted` applies the fixed pixel
+//! permutation (the Fig. 4b variant).
+
+use cwy::coordinator::{Schedule, Trainer};
+use cwy::data::digits::DigitTask;
+use cwy::report::Table;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 120);
+    let permuted = args.has_flag("permuted");
+    let engine = Engine::open("artifacts")?;
+    let methods = ["cwy", "lstm"];
+
+    let mut table = Table::new(&["METHOD", "final loss", "train acc", "ms/step"]);
+    for method in methods {
+        let name = format!("smnist_{method}_step");
+        if engine.manifest.get(&name).is_err() {
+            continue;
+        }
+        let mut trainer = Trainer::new(&engine, &name, Schedule::Constant(1e-3))?;
+        let spec = trainer.artifact.spec.clone();
+        let batch: usize = spec.meta_str("batch").unwrap().parse()?;
+        let t: usize = spec.meta_str("t").unwrap().parse()?;
+        let mut task = DigitTask::new(batch, 0, permuted);
+
+        for _ in 0..steps {
+            let b = task.next_batch();
+            trainer.train_step(vec![
+                HostTensor::f32(vec![batch, t], b.pixels),
+                HostTensor::i32(vec![batch], b.labels),
+            ])?;
+        }
+        let h = &trainer.history;
+        // accuracy averaged over the last 10 steps
+        let tail = &h.records[h.records.len().saturating_sub(10)..];
+        let acc: f32 = tail.iter().map(|r| r.metrics[0]).sum::<f32>() / tail.len() as f32;
+        let ms = h.total_wall_s() / steps as f64 * 1e3;
+        println!("{method}: loss {:.4}, acc {acc:.3}, {ms:.2} ms/step",
+                 h.recent_mean_loss(10).unwrap());
+        table.row(&[
+            method.to_uppercase(),
+            format!("{:.4}", h.recent_mean_loss(10).unwrap()),
+            format!("{acc:.3}"),
+            format!("{ms:.2}"),
+        ]);
+    }
+    println!(
+        "\n## Figure 1b ({}pixel-by-pixel digits @ {steps} steps)\n",
+        if permuted { "permuted " } else { "" }
+    );
+    print!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Figure 1c: parametrization construction time — CWY vs matrix exponential
+//! vs Cayley map across matrix sizes N.
+//!
+//! The paper's claim: CWY is 1-3 orders of magnitude faster on parallel
+//! hardware.  On CPU-PJRT the gap is narrower (no GPU batched solves),
+//! but the ordering CWY < Cayley < expm must hold and widen with N.
+
+use cwy::report::{Series, Table};
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::rng::Pcg32;
+use cwy::util::timing::bench;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    let sizes = [64usize, 128, 256, 512];
+    let methods = ["cwy", "expm", "cayley"];
+
+    let mut table = Table::new(&["N", "CWY ms", "expm ms", "Cayley ms",
+                                 "expm/CWY", "Cayley/CWY"]);
+    let mut series = Series::new("fig1c_param_time", &["n", "cwy_ms", "expm_ms", "cayley_ms"]);
+
+    for &n in &sizes {
+        let mut times = Vec::new();
+        for method in methods {
+            let name = format!("param_{method}_n{n}");
+            let art = match engine.load(&name) {
+                Ok(a) => a,
+                Err(_) => {
+                    eprintln!("missing {name}");
+                    times.push(f64::NAN);
+                    continue;
+                }
+            };
+            let mut rng = Pcg32::seeded(n as u64);
+            let input = HostTensor::f32(vec![n, n], rng.normal_vec(n * n, 1.0));
+            let stats = bench(&name, 2, 0.4, || {
+                art.run(std::slice::from_ref(&input)).expect("run");
+            });
+            times.push(stats.mean_ms());
+        }
+        println!(
+            "N={n:<5} cwy {:.3} ms   expm {:.3} ms   cayley {:.3} ms",
+            times[0], times[1], times[2]
+        );
+        table.row(&[
+            n.to_string(),
+            format!("{:.3}", times[0]),
+            format!("{:.3}", times[1]),
+            format!("{:.3}", times[2]),
+            format!("{:.1}x", times[1] / times[0]),
+            format!("{:.1}x", times[2] / times[0]),
+        ]);
+        series.push(&[n as f64, times[0], times[1], times[2]]);
+    }
+
+    println!("\n## Figure 1c (construction time, CPU-PJRT)\n");
+    print!("{}", table.to_markdown());
+    let path = series.save(std::path::Path::new("reports"))?;
+    println!("\nseries -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Figure 2: CWY vs explicit sequential Householder reflections — identical
+//! numerics, very different wall time as L grows.
+//!
+//! Times a T-step rollout artifact for each L and verifies the two methods'
+//! outputs agree to float tolerance (the "numerically equivalent" half of
+//! the paper's claim).
+
+use cwy::report::{Series, Table};
+use cwy::runtime::Engine;
+use cwy::util::timing::bench;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    let ls = [4usize, 8, 16, 32, 64];
+
+    let mut table = Table::new(&["L", "CWY ms", "HR ms", "HR/CWY", "max |diff|"]);
+    let mut series = Series::new("fig2_cwy_vs_hr", &["l", "cwy_ms", "hr_ms"]);
+
+    for &l in &ls {
+        let cwy_art = engine.load(&format!("rollout_cwy_l{l}"))?;
+        let hr_art = engine.load(&format!("rollout_hr_l{l}"))?;
+
+        // Both artifacts embed the same example inputs in the manifest specs;
+        // regenerate them identically (seed 0, matching aot.py).
+        let spec = &cwy_art.spec;
+        let v_shape = spec.inputs[0].shape.clone();
+        let h_shape = spec.inputs[1].shape.clone();
+        let v = pseudo_randn(&v_shape, 0);
+        let h = pseudo_randn(&h_shape, 1);
+
+        let inputs = vec![v, h];
+        let out_cwy = cwy_art.run(&inputs)?;
+        let out_hr = hr_art.run(&inputs)?;
+        let diff = out_cwy[0]
+            .as_f32()?
+            .iter()
+            .zip(out_hr[0].as_f32()?)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+
+        let s_cwy = bench("cwy", 2, 0.3, || {
+            cwy_art.run(&inputs).expect("cwy");
+        });
+        let s_hr = bench("hr", 2, 0.3, || {
+            hr_art.run(&inputs).expect("hr");
+        });
+        println!(
+            "L={l:<4} cwy {:.3} ms   hr {:.3} ms   ratio {:.1}x   diff {diff:.2e}",
+            s_cwy.mean_ms(),
+            s_hr.mean_ms(),
+            s_hr.mean_s / s_cwy.mean_s
+        );
+        table.row(&[
+            l.to_string(),
+            format!("{:.3}", s_cwy.mean_ms()),
+            format!("{:.3}", s_hr.mean_ms()),
+            format!("{:.1}x", s_hr.mean_s / s_cwy.mean_s),
+            format!("{diff:.2e}"),
+        ]);
+        series.push(&[l as f64, s_cwy.mean_ms(), s_hr.mean_ms()]);
+    }
+
+    println!("\n## Figure 2 (rollout time vs L; N=64, T=32, CPU-PJRT)\n");
+    print!("{}", table.to_markdown());
+    let path = series.save(std::path::Path::new("reports"))?;
+    println!("\nseries -> {}", path.display());
+    Ok(())
+}
+
+/// Deterministic pseudo-normal tensor (same for both artifacts).
+fn pseudo_randn(shape: &[usize], seed: u64) -> cwy::runtime::HostTensor {
+    let mut rng = cwy::util::rng::Pcg32::seeded(seed + 1234);
+    let n: usize = shape.iter().product();
+    cwy::runtime::HostTensor::f32(shape.to_vec(), rng.normal_vec(n, 1.0))
+}

@@ -1,0 +1,68 @@
+//! Table 1: forward-pass cost across orthogonal-RNN methods.
+//!
+//! Prints (a) the paper's analytical complexity rows evaluated at the
+//! benchmark's (T, N, L) and (b) measured wall time of the AOT forward
+//! rollout artifacts for each method and N.
+
+use cwy::orthogonal::flops;
+use cwy::report::Table;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::rng::Pcg32;
+use cwy::util::timing::bench;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    let methods = ["rnn", "cwy", "hr", "exprnn", "scornn"];
+    let sizes = [64usize, 128];
+    let (t_steps, l) = (32usize, 32usize);
+
+    // Analytical rows (paper Table 1), evaluated at the measured scale.
+    println!("## Table 1 — analytical (T={t_steps}, N=128, L={l})\n");
+    let mut t1 = Table::new(&["METHOD", "SERIAL", "PARALLEL", "DOMAIN", "FLOPs"]);
+    for r in flops::table1(t_steps, 128, l) {
+        t1.row(&[
+            r.method.to_string(),
+            r.serial.to_string(),
+            r.parallel.to_string(),
+            r.domain.to_string(),
+            format!("{:.2e}", r.flops),
+        ]);
+    }
+    print!("{}", t1.to_markdown());
+
+    // Measured rows.
+    println!("\n## Table 1 — measured forward rollout (T={t_steps}, B=16, CPU-PJRT)\n");
+    let mut tm = Table::new(&["METHOD", "N=64 ms", "N=128 ms"]);
+    for method in methods {
+        let mut cells = vec![method.to_uppercase()];
+        for &n in &sizes {
+            let name = format!("fwd_{method}_n{n}");
+            let art = match engine.load(&name) {
+                Ok(a) => a,
+                Err(_) => {
+                    cells.push("-".into());
+                    continue;
+                }
+            };
+            let inputs: Vec<HostTensor> = art
+                .spec
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let mut rng = Pcg32::seeded(i as u64 + 9);
+                    let count: usize = s.shape.iter().product();
+                    HostTensor::f32(s.shape.clone(), rng.normal_vec(count, 0.5))
+                })
+                .collect();
+            let stats = bench(&name, 2, 0.3, || {
+                art.run(&inputs).expect("run");
+            });
+            cells.push(format!("{:.3}", stats.mean_ms()));
+            println!("{name}: {:.3} ms", stats.mean_ms());
+        }
+        tm.row(&cells);
+    }
+    print!("{}", tm.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Table 2: Stiefel-manifold step cost — T-CWY vs RGD variants vs OWN.
+//!
+//! Prints the paper's analytical FLOP rows at (N, M) = (256, 32) plus the
+//! measured wall time of (a) the AOT step/construct artifacts and (b) the
+//! native rust implementations, confirming T-CWY is the cheapest.
+
+use cwy::linalg::{householder_qr, Matrix};
+use cwy::orthogonal::{flops, own, rgd, tcwy};
+use cwy::report::Table;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::rng::Pcg32;
+use cwy::util::timing::bench;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    let (n, m) = (256usize, 32usize);
+
+    println!("## Table 2 — analytical FLOPs (N={n}, M={m})\n");
+    let mut t2 = Table::new(&["APPROACH", "PARALLEL", "INVERTED", "FLOPs expr", "FLOPs"]);
+    for r in flops::table2(n, m) {
+        t2.row(&[
+            r.method.to_string(),
+            r.parallel.to_string(),
+            r.inverted.to_string(),
+            r.flops_expr.to_string(),
+            format!("{:.2e}", r.flops),
+        ]);
+    }
+    print!("{}", t2.to_markdown());
+
+    // Measured: AOT artifacts.
+    println!("\n## Table 2 — measured, AOT artifacts (CPU-PJRT)\n");
+    let mut rng = Pcg32::seeded(0);
+    let omega0 = householder_qr(&Matrix::random_normal(&mut rng, n, m, 1.0)).0;
+    let grad = Matrix::random_normal(&mut rng, n, m, 0.1);
+    let v = Matrix::random_normal(&mut rng, m, n, 1.0);
+    let vn = Matrix::random_normal(&mut rng, n, m, 0.1);
+
+    let mut ta = Table::new(&["ARTIFACT", "mean ms"]);
+    let arts: Vec<(String, Vec<HostTensor>)> = vec![
+        ("stiefel_tcwy_construct".into(),
+         vec![HostTensor::f32(vec![m, n], v.data.clone())]),
+        ("stiefel_own_construct".into(),
+         vec![HostTensor::f32(vec![n, m], vn.data.clone())]),
+        ("stiefel_rgd_cc_step".into(), rgd_inputs(&omega0, &grad)),
+        ("stiefel_rgd_ec_step".into(), rgd_inputs(&omega0, &grad)),
+        ("stiefel_rgd_cqr_step".into(), rgd_inputs(&omega0, &grad)),
+        ("stiefel_rgd_eqr_step".into(), rgd_inputs(&omega0, &grad)),
+    ];
+    for (name, inputs) in &arts {
+        match engine.load(name) {
+            Ok(art) => {
+                let stats = bench(name, 2, 0.3, || {
+                    art.run(inputs).expect("run");
+                });
+                println!("{name}: {:.3} ms", stats.mean_ms());
+                ta.row(&[name.clone(), format!("{:.3}", stats.mean_ms())]);
+            }
+            Err(_) => {
+                ta.row(&[name.clone(), "-".into()]);
+            }
+        }
+    }
+    print!("{}", ta.to_markdown());
+
+    // Measured: native rust implementations.
+    println!("\n## Table 2 — measured, native rust\n");
+    let mut tn = Table::new(&["METHOD", "mean ms"]);
+    let entries: Vec<(&str, Box<dyn Fn()>)> = vec![
+        ("T-CWY construct", Box::new(|| {
+            std::hint::black_box(tcwy::matrix(&v));
+        })),
+        ("OWN construct", Box::new(|| {
+            std::hint::black_box(own::matrix(&vn));
+        })),
+        ("RGD-C-C step", Box::new(|| {
+            std::hint::black_box(rgd::step(&omega0, &grad, 0.1, rgd::Inner::Canonical, rgd::Retraction::Cayley));
+        })),
+        ("RGD-E-C step", Box::new(|| {
+            std::hint::black_box(rgd::step(&omega0, &grad, 0.1, rgd::Inner::Euclidean, rgd::Retraction::Cayley));
+        })),
+        ("RGD-C-QR step", Box::new(|| {
+            std::hint::black_box(rgd::step(&omega0, &grad, 0.1, rgd::Inner::Canonical, rgd::Retraction::Qr));
+        })),
+        ("RGD-E-QR step", Box::new(|| {
+            std::hint::black_box(rgd::step(&omega0, &grad, 0.1, rgd::Inner::Euclidean, rgd::Retraction::Qr));
+        })),
+    ];
+    for (name, f) in entries {
+        let stats = bench(name, 1, 0.3, || f());
+        println!("{name}: {:.3} ms", stats.mean_ms());
+        tn.row(&[name.to_string(), format!("{:.3}", stats.mean_ms())]);
+    }
+    print!("{}", tn.to_markdown());
+    Ok(())
+}
+
+fn rgd_inputs(omega: &Matrix, grad: &Matrix) -> Vec<HostTensor> {
+    vec![
+        HostTensor::f32(vec![omega.rows, omega.cols], omega.data.clone()),
+        HostTensor::f32(vec![grad.rows, grad.cols], grad.data.clone()),
+        HostTensor::scalar_f32(0.1),
+    ]
+}

@@ -1,0 +1,60 @@
+//! Table 3: NMT step time and short-horizon perplexity across methods.
+//!
+//! The full training comparison lives in `examples/nmt.rs`; this bench
+//! isolates the per-step cost (the paper's TIME column) so the CWY-vs-
+//! orthogonal-baseline speed ordering is directly measurable.
+
+use cwy::coordinator::{Schedule, Trainer};
+use cwy::data::corpus::CorpusGen;
+use cwy::report::Table;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::timing::stats;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    let methods = ["cwy_l16", "cwy_l32", "cwy_l64", "rnn", "gru", "lstm",
+                   "scornn", "exprnn"];
+    let steps = 30usize;
+
+    let mut table = Table::new(&["MODEL", "ms/step", "PP @30 steps", "PARAMS"]);
+    for method in methods {
+        let name = format!("nmt_{method}_step");
+        if engine.manifest.get(&name).is_err() {
+            continue;
+        }
+        let mut trainer = Trainer::new(&engine, &name, Schedule::Constant(2e-3))?;
+        let spec = trainer.artifact.spec.clone();
+        let batch: usize = spec.meta_str("batch").unwrap().parse()?;
+        let ts: usize = spec.meta_str("ts").unwrap().parse()?;
+        let tt: usize = spec.meta_str("tt").unwrap().parse()?;
+        let mut gen = CorpusGen::new(5);
+
+        let mut times = Vec::new();
+        let mut last_pp = f32::NAN;
+        for _ in 0..steps {
+            let b = gen.batch(batch, ts, tt);
+            let data = vec![
+                HostTensor::i32(vec![batch, ts], b.src),
+                HostTensor::i32(vec![batch, tt], b.tgt_in),
+                HostTensor::i32(vec![batch, tt], b.tgt_out),
+            ];
+            let t0 = std::time::Instant::now();
+            let (_, m) = trainer.train_step(data)?;
+            times.push(t0.elapsed().as_secs_f64());
+            last_pp = m[0];
+        }
+        // Skip the first (compile-warm) step in the mean.
+        let s = stats(&name, &times[1..]);
+        println!("{name}: {:.3} ms/step, pp {last_pp:.3}", s.mean_ms());
+        table.row(&[
+            method.to_uppercase(),
+            format!("{:.3}", s.mean_ms()),
+            format!("{last_pp:.3}"),
+            spec.meta_str("param_count").unwrap_or("-").to_string(),
+        ]);
+    }
+
+    println!("\n## Table 3 (step time + early PP; CPU-PJRT)\n");
+    print!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Table 4: video-prediction step time across recurrent-unit designs.
+//!
+//! Complements `examples/video_prediction.rs` (which reports the per-class
+//! l1 table): here we measure the per-step cost and the parameter-count
+//! ratio the paper highlights (ConvNERU ~4.5x fewer params than ConvLSTM).
+
+use cwy::coordinator::{Schedule, Trainer};
+use cwy::data::video::VideoTask;
+use cwy::report::Table;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::timing::stats;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    let methods = ["convneru_tcwy", "convneru_own", "convneru_free",
+                   "convneru_zeros", "convlstm"];
+    let steps = 20usize;
+
+    let mut table = Table::new(&["METHOD", "ms/step", "l1 @20 steps", "PARAMS"]);
+    let mut params_by_method = Vec::new();
+
+    for method in methods {
+        let name = format!("video_{method}_step");
+        if engine.manifest.get(&name).is_err() {
+            continue;
+        }
+        let mut trainer = Trainer::new(&engine, &name, Schedule::Constant(1e-3))?;
+        let spec = trainer.artifact.spec.clone();
+        let batch: usize = spec.meta_str("batch").unwrap().parse()?;
+        let t: usize = spec.meta_str("t").unwrap().parse()?;
+        let hw: usize = spec.meta_str("hw").unwrap().parse()?;
+        let mut gen = VideoTask::new(hw, t, batch, 3);
+
+        let mut times = Vec::new();
+        let mut last_l1 = f32::NAN;
+        for _ in 0..steps {
+            let frames = gen.batch_mixed();
+            let data = vec![HostTensor::f32(vec![batch, t, hw, hw, 1], frames)];
+            let t0 = std::time::Instant::now();
+            let (loss, _) = trainer.train_step(data)?;
+            times.push(t0.elapsed().as_secs_f64());
+            last_l1 = loss;
+        }
+        let s = stats(&name, &times[1..]);
+        let params: f64 = spec
+            .meta_str("param_count")
+            .and_then(|p| p.parse().ok())
+            .unwrap_or(f64::NAN);
+        params_by_method.push((method, params));
+        println!("{name}: {ms:.3} ms/step, l1 {last_l1:.2}, params {params}",
+                 ms = s.mean_ms());
+        table.row(&[
+            method.to_string(),
+            format!("{:.3}", s.mean_ms()),
+            format!("{last_l1:.2}"),
+            format!("{params}"),
+        ]);
+    }
+
+    println!("\n## Table 4 (step cost; CPU-PJRT)\n");
+    print!("{}", table.to_markdown());
+
+    // The paper's parameter-ratio claim.
+    let lstm = params_by_method.iter().find(|(m, _)| *m == "convlstm");
+    let neru = params_by_method.iter().find(|(m, _)| *m == "convneru_tcwy");
+    if let (Some((_, pl)), Some((_, pn))) = (lstm, neru) {
+        println!("\nConvLSTM/ConvNERU parameter ratio: {:.2}x (paper: ~4.5x)",
+                 pl / pn);
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+// L3 perf probe: isolate marshalling cost from PJRT execution.
+use cwy::coordinator::{Schedule, Trainer};
+use cwy::data::copying::CopyTask;
+use cwy::runtime::{Engine, HostTensor};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    let mut tr = Trainer::new(&engine, "copy_cwy_full_step", Schedule::Constant(1e-3))?;
+    let spec = tr.artifact.spec.clone();
+    let t_blank: usize = spec.meta_str("t_blank").unwrap().parse()?;
+    let batch: usize = spec.meta_str("batch").unwrap().parse()?;
+    let mut task = CopyTask::new(t_blank, batch, 0);
+
+    // Warm up (compile)
+    for _ in 0..3 {
+        let b = task.next_batch();
+        tr.train_step(vec![
+            HostTensor::i32(vec![b.batch, b.t_total], b.tokens),
+            HostTensor::i32(vec![b.batch, b.t_total], b.targets),
+        ])?;
+    }
+    let n = 100;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let b = task.next_batch();
+        tr.train_step(vec![
+            HostTensor::i32(vec![b.batch, b.t_total], b.tokens),
+            HostTensor::i32(vec![b.batch, b.t_total], b.targets),
+        ])?;
+    }
+    let per = t0.elapsed().as_secs_f64() / n as f64;
+    println!("copy_cwy_full_step: {:.3} ms/step over {n} steps", per * 1e3);
+
+    // data-gen cost alone
+    let t1 = Instant::now();
+    for _ in 0..n { std::hint::black_box(task.next_batch()); }
+    println!("data gen: {:.3} ms/step", t1.elapsed().as_secs_f64() / n as f64 * 1e3);
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//!   1. Open the artifact engine (PJRT CPU + manifest).
+//!   2. Build an orthogonal matrix with the AOT CWY artifact and check it
+//!      against the native rust implementation.
+//!   3. Run a few fused train steps of the copying task.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use cwy::coordinator::{Schedule, Trainer};
+use cwy::data::copying::CopyTask;
+use cwy::linalg::Matrix;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // --- 1. CWY construction: artifact vs native --------------------------
+    let n = 64;
+    let art = engine.load("param_cwy_n64")?;
+    let mut rng = Pcg32::seeded(42);
+    let v = Matrix::random_normal(&mut rng, n, n, 1.0);
+    let out = art.run(&[HostTensor::f32(vec![n, n], v.data.clone())])?;
+    let q = Matrix::from_rows(n, n, out[0].as_f32()?.to_vec());
+
+    let q_native = cwy::orthogonal::cwy::matrix(&v);
+    println!(
+        "CWY({n}x{n}):  orthogonality defect {:.2e},  artifact-vs-native {:.2e}",
+        q.orthogonality_defect(),
+        q.max_abs_diff(&q_native)
+    );
+
+    // --- 2. Train the copying task for a handful of steps -----------------
+    let mut trainer = Trainer::new(&engine, "copy_cwy_step", Schedule::Constant(1e-3))?;
+    let spec = &trainer.artifact.spec;
+    let t_blank: usize = spec.meta_str("t_blank").unwrap().parse()?;
+    let batch: usize = spec.meta_str("batch").unwrap().parse()?;
+    let mut task = CopyTask::new(t_blank, batch, 7);
+    println!(
+        "copying task: T={t_blank}, no-memory baseline CE = {:.4}",
+        task.baseline_ce()
+    );
+
+    for step in 0..20 {
+        let b = task.next_batch();
+        let data = vec![
+            HostTensor::i32(vec![b.batch, b.t_total], b.tokens),
+            HostTensor::i32(vec![b.batch, b.t_total], b.targets),
+        ];
+        let (loss, metrics) = trainer.train_step(data)?;
+        if step % 5 == 0 || step == 19 {
+            println!("step {step:>3}: loss {loss:.4}  accuracy {:.3}", metrics[0]);
+        }
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Video-prediction driver (paper §4.3, Table 4 / Fig. 3): ConvNERU with
+//! T-CWY / OWN / unconstrained kernels vs ConvLSTM vs the "Zeros"
+//! no-recurrence ablation on the moving-shapes dataset, evaluated per
+//! motion class like the paper's per-action split.
+//!
+//! Run: cargo run --release --example video_prediction -- [--steps 150] [--curves]
+
+use cwy::coordinator::{evaluate, Schedule, Trainer};
+use cwy::data::video::{VideoTask, CLASSES};
+use cwy::report::{Series, Table};
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 150);
+    let methods: Vec<String> = args
+        .get_or(
+            "methods",
+            "convneru_tcwy,convneru_own,convneru_free,convneru_zeros,convlstm",
+        )
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let engine = Engine::open(args.get_or("artifacts", "artifacts"))?;
+
+    let mut header: Vec<&str> = vec!["METHOD"];
+    header.extend(CLASSES.iter().map(|c| *c));
+    header.push("MEAN");
+    header.push("PARAMS");
+    let mut table = Table::new(&header);
+    let mut curves = Series::new("fig3_video_val", &["step", "method_idx", "val_l1"]);
+
+    for (mi, method) in methods.iter().enumerate() {
+        let name = format!("video_{method}_step");
+        if engine.manifest.get(&name).is_err() {
+            eprintln!("skipping {method}");
+            continue;
+        }
+        let mut trainer = Trainer::new(&engine, &name, Schedule::Constant(1e-3))?;
+        let spec = trainer.artifact.spec.clone();
+        let batch: usize = spec.meta_str("batch").unwrap().parse()?;
+        let t: usize = spec.meta_str("t").unwrap().parse()?;
+        let hw: usize = spec.meta_str("hw").unwrap().parse()?;
+        let params_count = spec.meta_str("param_count").unwrap_or("-").to_string();
+
+        let mut train_gen = VideoTask::new(hw, t, batch, 21);
+        let eval_art = engine.load(&format!("video_{method}_eval"))?;
+        let mut val_gen = VideoTask::new(hw, t, batch, 1021);
+
+        println!("== {method}: {steps} steps ==");
+        for step in 0..steps {
+            let frames = train_gen.batch_mixed();
+            let data = vec![HostTensor::f32(vec![batch, t, hw, hw, 1], frames)];
+            let (loss, _) = trainer.train_step(data)?;
+            if step % 25 == 0 || step + 1 == steps {
+                // validation l1 on a held-out mixed batch
+                let vframes = val_gen.batch_mixed();
+                let vdata = vec![HostTensor::f32(vec![batch, t, hw, hw, 1], vframes)];
+                let m = evaluate(&eval_art, trainer.params(), vdata)?;
+                curves.push(&[step as f64, mi as f64, m[0] as f64]);
+                println!("  step {step:>4}: train l1 {loss:.2}  val l1 {:.2}", m[0]);
+            }
+        }
+
+        // Per-class test evaluation (the Table 4 breakdown).
+        let mut row = vec![method.to_string()];
+        let mut total = 0.0f32;
+        let mut test_gen = VideoTask::new(hw, t, batch, 99999);
+        for class in 0..CLASSES.len() {
+            let frames = test_gen.batch_of_class(class);
+            let data = vec![HostTensor::f32(vec![batch, t, hw, hw, 1], frames)];
+            let m = evaluate(&eval_art, trainer.params(), data)?;
+            total += m[0];
+            row.push(format!("{:.2}", m[0]));
+        }
+        row.push(format!("{:.2}", total / CLASSES.len() as f32));
+        row.push(params_count);
+        table.row(&row);
+    }
+
+    println!("\n## Table 4 (moving-shapes scale; per-class test l1)\n");
+    print!("{}", table.to_markdown());
+    if args.has_flag("curves") || true {
+        let path = curves.save(std::path::Path::new("reports"))?;
+        println!("\nvalidation curves -> {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L1 kernels + L2 models -> AOT HLO artifacts.
+
+Never imported at runtime — the rust coordinator only consumes the
+`artifacts/` directory this package produces.
+"""

@@ -1,0 +1,495 @@
+"""AOT artifact pipeline: lower every L2 model to HLO text + manifest.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (behind the rust
+`xla` crate) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Outputs, per artifact:
+    artifacts/<name>.hlo.txt    the lowered module
+    artifacts/<name>.state.bin  initial flat state (f32 LE), step/grad kinds
+    artifacts/manifest.json     machine-readable index for the rust runtime
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import struct
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import models, parametrize, stiefel, train_steps
+from .kernels import cwy as cwy_kernel
+from .kernels import householder as hr_kernel
+from .linalg_hlo import cayley, expm_taylor
+
+jax.config.update("jax_enable_x64", False)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Experiment configurations (shared with python/tests)
+# ---------------------------------------------------------------------------
+
+COPY_CFG = dict(n=64, l=64, t_blank=64, batch=32, nonlin="abs")
+SMNIST_CFG = dict(n=96, l=48, t=196, batch=32, nonlin="abs")
+NMT_CFG = dict(n=64, emb=32, vocab=64, ts=12, tt=12, batch=16, nonlin="abs")
+VIDEO_CFG = dict(q=3, f=8, hw=16, t=8, batch=4, cin=1)
+
+# cwy_full is the paper's L = N fast path (§3.1): materialize Q once per
+# rollout instead of the two panel products per step.
+COPY_METHODS = ["cwy", "cwy_full", "hr", "exprnn", "scornn", "lstm", "rnn"]
+SMNIST_METHODS = ["cwy", "lstm"]
+NMT_METHODS = ["cwy_l16", "cwy_l32", "cwy_l64", "rnn", "gru", "lstm",
+               "scornn", "exprnn"]
+VIDEO_METHODS = ["convneru_tcwy", "convneru_own", "convneru_free",
+                 "convneru_zeros", "convlstm"]
+
+METRICS = {"copy": ["loss", "accuracy"],
+           "smnist": ["loss", "accuracy"],
+           "nmt": ["loss", "perplexity"],
+           "video": ["loss", "l1"]}
+
+
+def _split_method(m: str) -> Tuple[str, int]:
+    """'cwy_l32' -> ('cwy', 32); 'lstm' -> ('lstm', -1)."""
+    mm = re.fullmatch(r"(\w+?)_l(\d+)", m)
+    if mm:
+        return mm.group(1), int(mm.group(2))
+    return m, -1
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+class Artifact:
+    """One lowered HLO module plus everything the rust runtime must know."""
+
+    def __init__(self, name: str, kind: str, fn: Callable,
+                 example_args: Sequence, arg_specs: List[dict],
+                 out_names: List[str], state_leaves=None, meta=None):
+        self.name = name
+        self.kind = kind
+        self.fn = fn
+        self.example_args = example_args
+        self.arg_specs = arg_specs
+        self.out_names = out_names
+        self.state_leaves = state_leaves
+        self.meta = meta or {}
+
+
+REGISTRY: Dict[str, Callable[[], List[Artifact]]] = {}
+
+
+def _spec(name: str, arr, kind: str) -> dict:
+    a = np.asarray(arr)
+    return {"name": name, "shape": list(a.shape),
+            "dtype": str(a.dtype), "kind": kind}
+
+
+def _train_artifacts(task: str, method_tag: str, init_fn, loss_fn,
+                     data_example: List[Tuple[str, np.ndarray]],
+                     cfg: dict, kinds=("step", "eval"),
+                     optimizer: str = "adam") -> List[Artifact]:
+    """Common builder for step/grad/apply/eval artifacts of one model."""
+    method, l_override = _split_method(method_tag)
+    cfg = dict(cfg)
+    cfg["method"] = method
+    if l_override > 0:
+        cfg["l"] = l_override
+
+    key = jax.random.PRNGKey(cfg.get("seed", 0))
+    params = init_fn(key, cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    names = train_steps.flatten_names(params)
+    n_leaves = len(leaves)
+    n_data = len(data_example)
+
+    loss_cfg = lambda p, *data: loss_fn(p, *data, cfg)
+    metrics_names = METRICS[task]
+    out: List[Artifact] = []
+
+    if "step" in kinds:
+        state = train_steps.init_state(leaves, optimizer)
+        fn = train_steps.make_step(loss_cfg, treedef, n_leaves, n_data,
+                                   optimizer)
+        state_names = (names + [f"m.{n}" for n in names]
+                       + [f"v.{n}" for n in names] + ["t"])
+        specs = ([_spec(n, s, "state") for n, s in zip(state_names, state)]
+                 + [_spec(n, d, "data") for n, d in data_example]
+                 + [{"name": "lr", "shape": [], "dtype": "float32",
+                     "kind": "hyper"}])
+        args = list(state) + [d for _, d in data_example] + [np.float32(1e-3)]
+        out.append(Artifact(
+            f"{task}_{method_tag}_step", "step", fn, args, specs,
+            state_names + metrics_names, state_leaves=state,
+            meta={"task": task, "method": method_tag, "optimizer": optimizer,
+                  "n_state": len(state), "n_params": n_leaves,
+                  "param_count": int(sum(int(np.prod(np.asarray(l).shape))
+                                         for l in leaves)),
+                  **{k: str(v) for k, v in cfg.items()}}))
+
+    if "grad" in kinds:
+        fn = train_steps.make_grad(loss_cfg, treedef, n_leaves, n_data)
+        specs = ([_spec(n, p, "state") for n, p in zip(names, leaves)]
+                 + [_spec(n, d, "data") for n, d in data_example])
+        args = list(leaves) + [d for _, d in data_example]
+        out.append(Artifact(
+            f"{task}_{method_tag}_grad", "grad", fn, args, specs,
+            [f"g.{n}" for n in names] + ["loss"] + metrics_names[1:],
+            state_leaves=list(leaves),
+            meta={"task": task, "method": method_tag, "n_params": n_leaves}))
+
+    if "apply" in kinds:
+        fn = train_steps.make_apply(n_leaves, optimizer)
+        m = [np.zeros_like(np.asarray(p)) for p in leaves]
+        args = (list(leaves) + m + [np.copy(x) for x in m]
+                + [np.float32(0.0)]
+                + [np.zeros_like(np.asarray(p)) for p in leaves]
+                + [np.float32(1e-3)])
+        state_names = (names + [f"m.{n}" for n in names]
+                       + [f"v.{n}" for n in names] + ["t"])
+        specs = ([_spec(n, a, "state") for n, a in
+                  zip(state_names, args[: 3 * n_leaves + 1])]
+                 + [_spec(f"g.{n}", p, "data") for n, p in zip(names, leaves)]
+                 + [{"name": "lr", "shape": [], "dtype": "float32",
+                     "kind": "hyper"}])
+        out.append(Artifact(
+            f"{task}_{method_tag}_apply", "apply", fn, args, specs,
+            state_names, meta={"task": task, "method": method_tag,
+                               "optimizer": optimizer, "n_params": n_leaves}))
+
+    if "eval" in kinds:
+        fn = train_steps.make_eval(loss_cfg, treedef, n_leaves, n_data)
+        specs = ([_spec(n, p, "state") for n, p in zip(names, leaves)]
+                 + [_spec(n, d, "data") for n, d in data_example])
+        args = list(leaves) + [d for _, d in data_example]
+        out.append(Artifact(
+            f"{task}_{method_tag}_eval", "eval", fn, args, specs,
+            metrics_names, meta={"task": task, "method": method_tag,
+                                 "n_params": n_leaves}))
+    return out
+
+
+# --- Copying task -------------------------------------------------------------
+
+def _copy_data(cfg):
+    t_total = cfg["t_blank"] + 20
+    b = cfg["batch"]
+    return [("tokens", np.zeros((b, t_total), np.int32)),
+            ("targets", np.zeros((b, t_total), np.int32))]
+
+
+for m in COPY_METHODS:
+    def _mk_copy(m=m):
+        kinds = (("step", "eval", "grad", "apply") if m == "cwy"
+                 else ("step", "eval"))
+        return _train_artifacts("copy", m, models.copy_init, models.copy_loss,
+                                _copy_data(COPY_CFG), COPY_CFG, kinds)
+    REGISTRY[f"copy_{m}"] = _mk_copy
+
+# --- Pixel-by-pixel classification ---------------------------------------------
+
+def _smnist_data(cfg):
+    b = cfg["batch"]
+    return [("pixels", np.zeros((b, cfg["t"]), np.float32)),
+            ("labels", np.zeros((b,), np.int32))]
+
+
+for m in SMNIST_METHODS:
+    def _mk_smnist(m=m):
+        return _train_artifacts("smnist", m, models.smnist_init,
+                                models.smnist_loss, _smnist_data(SMNIST_CFG),
+                                SMNIST_CFG)
+    REGISTRY[f"smnist_{m}"] = _mk_smnist
+
+# --- NMT --------------------------------------------------------------------------
+
+def _nmt_data(cfg):
+    b = cfg["batch"]
+    return [("src", np.zeros((b, cfg["ts"]), np.int32)),
+            ("tgt_in", np.zeros((b, cfg["tt"]), np.int32)),
+            ("tgt_out", np.zeros((b, cfg["tt"]), np.int32))]
+
+
+for m in NMT_METHODS:
+    def _mk_nmt(m=m):
+        cfg = dict(NMT_CFG)
+        cfg["l"] = 32  # default L when the tag has no _lXX suffix
+        return _train_artifacts("nmt", m, models.nmt_init, models.nmt_loss,
+                                _nmt_data(cfg), cfg)
+    REGISTRY[f"nmt_{m}"] = _mk_nmt
+
+# --- Video prediction ---------------------------------------------------------------
+
+def _video_data(cfg):
+    b, t, hw = cfg["batch"], cfg["t"], cfg["hw"]
+    return [("frames", np.zeros((b, t, hw, hw, cfg["cin"]), np.float32))]
+
+
+for m in VIDEO_METHODS:
+    def _mk_video(m=m):
+        return _train_artifacts("video", m, models.video_init,
+                                models.video_loss, _video_data(VIDEO_CFG),
+                                VIDEO_CFG)
+    REGISTRY[f"video_{m}"] = _mk_video
+
+
+# --- Micro artifacts: Figure 1c (construction time) ----------------------------------
+
+def _micro(name: str, fn, args_named: List[Tuple[str, np.ndarray]],
+           out_names: List[str], meta=None) -> Artifact:
+    specs = [_spec(n, a, "data") for n, a in args_named]
+    return Artifact(name, "micro", fn, [a for _, a in args_named], specs,
+                    out_names, meta=meta)
+
+
+FIG1C_SIZES = [64, 128, 256, 512]
+
+for n in FIG1C_SIZES:
+    def _mk_p_cwy(n=n):
+        rng = np.random.RandomState(0)
+        V = rng.randn(n, n).astype(np.float32)
+        fn = lambda v: (cwy_kernel.matrix(v, use_pallas=False),)
+        return [_micro(f"param_cwy_n{n}", fn, [("v", V)], ["q"],
+                       {"fig": "1c", "method": "cwy", "n": str(n)})]
+
+    def _mk_p_expm(n=n):
+        rng = np.random.RandomState(0)
+        A = rng.randn(n, n).astype(np.float32)
+        fn = lambda a: (expm_taylor(0.5 * (a - a.T)),)
+        return [_micro(f"param_expm_n{n}", fn, [("a", A)], ["q"],
+                       {"fig": "1c", "method": "expm", "n": str(n)})]
+
+    def _mk_p_cayley(n=n):
+        rng = np.random.RandomState(0)
+        A = rng.randn(n, n).astype(np.float32)
+        fn = lambda a: (cayley(0.5 * (a - a.T)),)
+        return [_micro(f"param_cayley_n{n}", fn, [("a", A)], ["q"],
+                       {"fig": "1c", "method": "cayley", "n": str(n)})]
+
+    REGISTRY[f"param_cwy_n{n}"] = _mk_p_cwy
+    REGISTRY[f"param_expm_n{n}"] = _mk_p_expm
+    REGISTRY[f"param_cayley_n{n}"] = _mk_p_cayley
+
+
+# --- Micro artifacts: Figure 2 (CWY vs sequential HR rollout) --------------------------
+
+FIG2_LS = [4, 8, 16, 32, 64]
+FIG2_N, FIG2_T, FIG2_B = 64, 32, 16
+
+for l in FIG2_LS:
+    def _mk_roll_cwy(l=l):
+        rng = np.random.RandomState(0)
+        V = rng.randn(l, FIG2_N).astype(np.float32)
+        h = rng.randn(FIG2_B, FIG2_N).astype(np.float32)
+
+        def fn(v, h0):
+            op = parametrize.cwy_operator(v, use_pallas=False)
+
+            def step(hh, _):
+                return op(hh), None
+            h2, _ = jax.lax.scan(step, h0, None, length=FIG2_T)
+            return (h2,)
+        return [_micro(f"rollout_cwy_l{l}", fn, [("v", V), ("h", h)], ["h"],
+                       {"fig": "2", "method": "cwy", "l": str(l),
+                        "n": str(FIG2_N), "t": str(FIG2_T)})]
+
+    def _mk_roll_hr(l=l):
+        rng = np.random.RandomState(0)
+        V = rng.randn(l, FIG2_N).astype(np.float32)
+        h = rng.randn(FIG2_B, FIG2_N).astype(np.float32)
+
+        def fn(v, h0):
+            def step(hh, _):
+                return hr_kernel.apply_chain(hh, v), None
+            h2, _ = jax.lax.scan(step, h0, None, length=FIG2_T)
+            return (h2,)
+        return [_micro(f"rollout_hr_l{l}", fn, [("v", V), ("h", h)], ["h"],
+                       {"fig": "2", "method": "hr", "l": str(l),
+                        "n": str(FIG2_N), "t": str(FIG2_T)})]
+
+    REGISTRY[f"rollout_cwy_l{l}"] = _mk_roll_cwy
+    REGISTRY[f"rollout_hr_l{l}"] = _mk_roll_hr
+
+
+# --- Micro artifacts: Table 1 (forward pass across methods) ----------------------------
+
+T1_METHODS = ["rnn", "cwy", "hr", "exprnn", "scornn"]
+T1_SIZES = [64, 128]
+T1_T, T1_B = 32, 16
+
+for m in T1_METHODS:
+    for n in T1_SIZES:
+        def _mk_fwd(m=m, n=n):
+            l = min(n, 32)
+            key = jax.random.PRNGKey(0)
+            params = models.init_transition(key, m, n, l)
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            rng = np.random.RandomState(0)
+            h = rng.randn(T1_B, n).astype(np.float32)
+
+            def fn(*args):
+                ps = jax.tree_util.tree_unflatten(treedef, args[:-1])
+                h0 = args[-1]
+                op = models.transition_operator(m, ps, use_pallas=False)
+
+                def step(hh, _):
+                    return jnp.abs(op(hh)), None
+                h2, _ = jax.lax.scan(step, h0, None, length=T1_T)
+                return (h2,)
+
+            names = train_steps.flatten_names(params)
+            args_named = [(nm, np.asarray(lv))
+                          for nm, lv in zip(names, leaves)]
+            args_named.append(("h", h))
+            return [_micro(f"fwd_{m}_n{n}", fn, args_named, ["h"],
+                           {"table": "1", "method": m, "n": str(n),
+                            "t": str(T1_T)})]
+        REGISTRY[f"fwd_{m}_n{n}"] = _mk_fwd
+
+
+# --- Micro artifacts: Table 2 (Stiefel step) --------------------------------------------
+
+T2_N, T2_M = 256, 32
+
+
+def _stiefel_omega():
+    rng = np.random.RandomState(0)
+    a = rng.randn(T2_N, T2_M)
+    q, _ = np.linalg.qr(a)
+    return q.astype(np.float32)
+
+
+for variant, kw in stiefel.RGD_VARIANTS.items():
+    def _mk_rgd(variant=variant, kw=kw):
+        omega = _stiefel_omega()
+        rng = np.random.RandomState(1)
+        g = (rng.randn(T2_N, T2_M) * 0.1).astype(np.float32)
+
+        def fn(om, gr, lr):
+            return (stiefel.rgd_step(om, gr, lr, **kw),)
+        return [_micro(f"stiefel_{variant}_step", fn,
+                       [("omega", omega), ("grad", g),
+                        ("lr", np.float32(0.1))], ["omega"],
+                       {"table": "2", "method": variant,
+                        "n": str(T2_N), "m": str(T2_M)})]
+    REGISTRY[f"stiefel_{variant}"] = _mk_rgd
+
+
+def _mk_tcwy_construct():
+    rng = np.random.RandomState(0)
+    V = rng.randn(T2_M, T2_N).astype(np.float32)
+    fn = lambda v: (stiefel.tcwy_matrix(v, use_pallas=False),)
+    return [_micro("stiefel_tcwy_construct", fn, [("v", V)], ["omega"],
+                   {"table": "2", "method": "tcwy", "n": str(T2_N),
+                    "m": str(T2_M)})]
+
+
+def _mk_own_construct():
+    rng = np.random.RandomState(0)
+    V = (rng.randn(T2_N, T2_M) * 0.1).astype(np.float32)
+    fn = lambda v: (stiefel.own_matrix(v),)
+    return [_micro("stiefel_own_construct", fn, [("v", V)], ["omega"],
+                   {"table": "2", "method": "own", "n": str(T2_N),
+                    "m": str(T2_M)})]
+
+
+REGISTRY["stiefel_tcwy"] = _mk_tcwy_construct
+REGISTRY["stiefel_own"] = _mk_own_construct
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def build(only, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    pat = re.compile(only) if only else None
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"artifacts": []}
+    if os.path.exists(manifest_path) and only:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    built = []
+    for reg_name, builder in sorted(REGISTRY.items()):
+        if pat and not pat.search(reg_name):
+            continue
+        for art in builder():
+            path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+            print(f"[aot] lowering {art.name} ...", flush=True)
+            shapes = [jax.ShapeDtypeStruct(np.asarray(a).shape,
+                                           np.asarray(a).dtype)
+                      for a in art.example_args]
+            # keep_unused=True: jit would otherwise prune arguments the
+            # graph doesn't read (e.g. ConvLSTM's unused k_in), breaking the
+            # manifest's input arity.
+            lowered = jax.jit(art.fn, keep_unused=True).lower(*shapes)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+
+            out_shapes = jax.eval_shape(art.fn, *shapes)
+            outputs = [{"name": nm, "shape": list(s.shape),
+                        "dtype": str(s.dtype)}
+                       for nm, s in zip(art.out_names, out_shapes)]
+
+            entry = {"name": art.name, "file": f"{art.name}.hlo.txt",
+                     "kind": art.kind, "inputs": art.arg_specs,
+                     "outputs": outputs, "meta": art.meta}
+
+            if art.state_leaves is not None:
+                bin_name = f"{art.name}.state.bin"
+                with open(os.path.join(out_dir, bin_name), "wb") as f:
+                    for leaf in art.state_leaves:
+                        a = np.asarray(leaf, np.float32)
+                        f.write(struct.pack("<Q", a.size))
+                        f.write(a.tobytes())
+                entry["state_bin"] = bin_name
+
+            manifest["artifacts"] = [e for e in manifest["artifacts"]
+                                     if e["name"] != art.name]
+            manifest["artifacts"].append(entry)
+            built.append(art.name)
+            # Write incrementally so a crash mid-build never loses entries.
+            manifest["artifacts"].sort(key=lambda e: e["name"])
+            with open(manifest_path, "w") as f:
+                json.dump(manifest, f, indent=1)
+
+    print(f"[aot] built {len(built)} artifacts -> {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex over registry names (incremental build)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for name in sorted(REGISTRY):
+            print(name)
+        return
+    build(args.only, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

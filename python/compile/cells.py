@@ -1,0 +1,126 @@
+"""L2 recurrent cells.
+
+`orthogonal_cell` is the paper's eq. (1) with the transition matrix applied
+through a parametrization operator (cwy / hr / exprnn / scornn);
+`lstm_cell` / `gru_cell` / `vanilla_cell` are the unconstrained baselines of
+Tables 3/5.
+
+All cells share the signature
+    step(carry, x_t) -> (carry', h_t)
+so the rollout is a single `lax.scan` regardless of method.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ApplyFn = Callable[[jax.Array], jax.Array]
+
+
+def nonlinearity(name: str):
+    if name == "relu":
+        return jax.nn.relu
+    if name == "abs":
+        # Exact norm-preserving nonlinearity (Dorobantu et al. 2016), used by
+        # the paper's NMT experiments.
+        return jnp.abs
+    if name == "tanh":
+        return jnp.tanh
+    raise ValueError(name)
+
+
+# --- Orthogonal RNN -----------------------------------------------------------
+
+def orthogonal_cell(apply_q: ApplyFn, Win: jax.Array, b: jax.Array,
+                    nonlin: str = "abs"):
+    """h' = sigma(Q^T-rollout(h) + x Win^T + b)   (paper eq. 1)."""
+    sigma = nonlinearity(nonlin)
+
+    def step(h, x):
+        h2 = sigma(apply_q(h) + x @ Win.T + b[None, :])
+        return h2, h2
+
+    return step
+
+
+def vanilla_cell(W: jax.Array, Win: jax.Array, b: jax.Array,
+                 nonlin: str = "tanh"):
+    """Unconstrained RNN baseline (Table 3 row 'RNN')."""
+    sigma = nonlinearity(nonlin)
+
+    def step(h, x):
+        h2 = sigma(h @ W + x @ Win.T + b[None, :])
+        return h2, h2
+
+    return step
+
+
+# --- LSTM ----------------------------------------------------------------------
+
+def lstm_init(key, n: int, k: int) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(n)
+    return {
+        "wx": jax.random.uniform(k1, (k, 4 * n), minval=-scale, maxval=scale),
+        "wh": jax.random.uniform(k2, (n, 4 * n), minval=-scale, maxval=scale),
+        "b": jnp.zeros((4 * n,), jnp.float32)
+        # forget-gate bias init to 1 improves stability, matching common refs
+        .at[n : 2 * n]
+        .set(1.0),
+    }
+
+
+def lstm_cell(params: Dict[str, jax.Array]):
+    n = params["wh"].shape[0]
+
+    def step(carry, x):
+        h, c = carry
+        z = x @ params["wx"] + h @ params["wh"] + params["b"][None, :]
+        i = jax.nn.sigmoid(z[:, :n])
+        f = jax.nn.sigmoid(z[:, n : 2 * n])
+        g = jnp.tanh(z[:, 2 * n : 3 * n])
+        o = jax.nn.sigmoid(z[:, 3 * n :])
+        c2 = f * c + i * g
+        h2 = o * jnp.tanh(c2)
+        return (h2, c2), h2
+
+    return step
+
+
+# --- GRU --------------------------------------------------------------------------
+
+def gru_init(key, n: int, k: int) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(n)
+    return {
+        "wx": jax.random.uniform(k1, (k, 3 * n), minval=-scale, maxval=scale),
+        "wh": jax.random.uniform(k2, (n, 3 * n), minval=-scale, maxval=scale),
+        "b": jnp.zeros((3 * n,), jnp.float32),
+    }
+
+
+def gru_cell(params: Dict[str, jax.Array]):
+    n = params["wh"].shape[0]
+
+    def step(h, x):
+        zx = x @ params["wx"] + params["b"][None, :]
+        zh = h @ params["wh"]
+        r = jax.nn.sigmoid(zx[:, :n] + zh[:, :n])
+        u = jax.nn.sigmoid(zx[:, n : 2 * n] + zh[:, n : 2 * n])
+        cand = jnp.tanh(zx[:, 2 * n :] + r * zh[:, 2 * n :])
+        h2 = (1.0 - u) * h + u * cand
+        return h2, h2
+
+    return step
+
+
+# --- Rollout helper ----------------------------------------------------------------
+
+def rollout(step, carry0, xs_btk: jax.Array):
+    """Scan a cell over time-major inputs; xs is (B, T, K)."""
+    xs = jnp.swapaxes(xs_btk, 0, 1)  # (T, B, K)
+    carry, hs = jax.lax.scan(step, carry0, xs)
+    return carry, jnp.swapaxes(hs, 0, 1)  # (B, T, N)

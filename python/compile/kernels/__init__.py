@@ -1,0 +1,3 @@
+"""L1 Pallas kernels: CWY / T-CWY / sequential-Householder hot paths."""
+
+from . import cwy, householder, ref, tcwy  # noqa: F401

@@ -1,0 +1,200 @@
+"""L1 Pallas kernels for the CWY transform.
+
+The CWY transform (paper Thm 2) represents a product of L Householder
+reflections as
+
+    Q = I - U S^{-1} U^T,   S = 0.5 I + striu(U^T U),
+
+with U the column-normalized reflection vectors.  The two kernels here are
+the compute hot-spots of a CWY-parametrized RNN:
+
+* :func:`build_s` — the Gram panel `U^T U` plus the striu/diag masking.
+* :func:`apply` — the fused rollout step `h <- h - ((h U) Sinv^T) U^T`,
+  i.e. rows of `h` mapped by `Q^T` (the transition `W h` of eq. (1) in
+  row-major batch form).
+
+TPU adaptation (DESIGN.md §6): the kernels tile `U` into (BLK_N, L) VMEM
+panels; both panel products are MXU-shaped matmuls, and the grid walks the
+N dimension so the full N x L panel never has to be VMEM-resident.  On this
+testbed kernels are lowered with ``interpret=True`` (CPU PJRT cannot run
+Mosaic custom-calls), which produces the identical HLO dataflow.
+
+Reverse-mode: ``pallas_call`` has no autodiff rule, so :func:`apply` carries
+a ``jax.custom_vjp`` whose backward is the analytic adjoint (plain jnp —
+it fuses into the same HLO module at export time).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..linalg_hlo import triu_inv
+
+# Block size along the hidden dimension N.  128 matches the MXU systolic
+# array edge; shrunk automatically for small N.
+BLK_N = 128
+
+
+def _grid_blocks(n: int, blk: int) -> int:
+    return (n + blk - 1) // blk
+
+
+# ---------------------------------------------------------------------------
+# S-matrix build
+# ---------------------------------------------------------------------------
+
+def _build_s_kernel(u_ref, o_ref):
+    """One grid step: accumulate a BLK_N slab of the Gram matrix U^T U."""
+    i = pl.program_id(0)
+    u = u_ref[...]  # (blk, L)
+    partial = u.T @ u  # (L, L)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def _gram_pallas(U: jax.Array, block_n: int = BLK_N) -> jax.Array:
+    n, l = U.shape
+    blk = min(block_n, n)
+    grid = _grid_blocks(n, blk)
+    return pl.pallas_call(
+        _build_s_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((blk, l), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((l, l), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, l), U.dtype),
+        interpret=True,
+    )(U)
+
+
+@jax.custom_vjp
+def gram(U: jax.Array) -> jax.Array:
+    """U^T U via the blocked pallas kernel (pallas has no AD rule, so the
+    symmetric-product adjoint U(G-bar + G-bar^T) is attached explicitly)."""
+    return _gram_pallas(U)
+
+
+def _gram_fwd(U):
+    return _gram_pallas(U), U
+
+
+def _gram_bwd(U, g):
+    return (U @ (g + g.T),)
+
+
+gram.defvjp(_gram_fwd, _gram_bwd)
+
+
+def build_s(U: jax.Array, *, use_pallas: bool = True,
+            block_n: int = BLK_N) -> jax.Array:
+    """S = 0.5 I + striu(U^T U) for column-normalized U (N, L)."""
+    n, l = U.shape
+    g = gram(U) if use_pallas else U.T @ U
+    return 0.5 * jnp.eye(l, dtype=U.dtype) + jnp.triu(g, k=1)
+
+
+# ---------------------------------------------------------------------------
+# Fused CWY apply
+# ---------------------------------------------------------------------------
+
+def _apply_kernel(h_ref, u_ref, sinv_ref, o_ref, acc_ref):
+    """Fused apply: h <- h @ Q = h - ((h U) Sinv) U^T.
+
+    Row-major batch convention: `out = h @ Q` with Q = H(v_1)...H(v_L) =
+    I - U Sinv U^T, matching the sequential HR chain exactly (Thm 2).
+    """
+    h = h_ref[...]
+    u = u_ref[...]
+    si = sinv_ref[...]
+    t = h @ u            # (B, L)   panel product 1 (MXU)
+    v = t @ si           # (B, L)   small triangular-inverse panel
+    o_ref[...] = h - v @ u.T  # panel product 2 (MXU)
+    acc_ref[...] = t
+
+
+def _apply_pallas(h: jax.Array, U: jax.Array, Sinv: jax.Array) -> jax.Array:
+    b, n = h.shape
+    _, l = U.shape
+    out, _ = pl.pallas_call(
+        _apply_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, n), h.dtype),
+            jax.ShapeDtypeStruct((b, l), h.dtype),
+        ),
+        interpret=True,
+    )(h, U, Sinv)
+    return out
+
+
+def _apply_math(h, U, Sinv):
+    return h - ((h @ U) @ Sinv) @ U.T
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def apply(h: jax.Array, U: jax.Array, Sinv: jax.Array,
+          use_pallas: bool = True) -> jax.Array:
+    """`h @ Q` for each row of `h` (B, N), `Q = I - U Sinv U^T`.
+
+    Numerically identical to chaining the L reflections H(v_1)..H(v_L) on
+    the right (Thm 2) — the Fig. 2 equivalence the paper demonstrates.
+    """
+    if use_pallas:
+        return _apply_pallas(h, U, Sinv)
+    return _apply_math(h, U, Sinv)
+
+
+def _apply_fwd(h, U, Sinv, use_pallas):
+    out = _apply_pallas(h, U, Sinv) if use_pallas else _apply_math(h, U, Sinv)
+    return out, (h, U, Sinv)
+
+
+def _apply_bwd(use_pallas, res, g):
+    """Analytic adjoint of o = h - h U A U^T with A = Sinv.
+
+    hbar    = g - ((g U) A^T) U^T            (right-multiply by Q^T)
+    Ubar    = -h^T g U A^T - g^T h U A
+    Abar    = -U^T h^T g U
+    """
+    h, U, Sinv = res
+    hbar = g - ((g @ U) @ Sinv.T) @ U.T
+    hTg_U = (h.T @ g) @ U
+    gTh_U = (g.T @ h) @ U
+    Ubar = -hTg_U @ Sinv.T - gTh_U @ Sinv
+    Sinvbar = -(U.T @ hTg_U)
+    return hbar, Ubar, Sinvbar
+
+
+apply.defvjp(_apply_fwd, _apply_bwd)
+
+
+# ---------------------------------------------------------------------------
+# High-level parametrization entry points
+# ---------------------------------------------------------------------------
+
+def normalize(V: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Rows of V (L, N) -> column-normalized U (N, L)."""
+    norms = jnp.sqrt(jnp.sum(V * V, axis=1, keepdims=True) + eps)
+    return (V / norms).T
+
+
+def precompute(V: jax.Array, *, use_pallas: bool = True):
+    """V (L, N) raw reflection vectors -> (U, Sinv) rollout operands."""
+    U = normalize(V)
+    S = build_s(U, use_pallas=use_pallas)
+    return U, triu_inv(S)
+
+
+def matrix(V: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """Materialize Q = I - U S^{-1} U^T (the L = N fast path of §3.1)."""
+    U, Sinv = precompute(V, use_pallas=use_pallas)
+    n = U.shape[0]
+    return jnp.eye(n, dtype=V.dtype) - U @ Sinv @ U.T

@@ -1,0 +1,66 @@
+"""L1 kernel for the *sequential* Householder-reflection baseline (HR).
+
+This is the method of Mhammedi et al. (2017) the paper compares against in
+Figure 2: L reflections applied one after another,
+
+    h <- h - 2 v (v^T h) / ||v||^2,
+
+which has parallel depth O(L log N) — the serial chain CWY removes.  The
+pallas kernel applies a single reflection (one grid step per reflection via
+`lax.scan` at L2); keeping the chain explicit is the point of the baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _reflect_kernel(h_ref, v_ref, o_ref):
+    h = h_ref[...]           # (B, N)
+    v = v_ref[...]           # (N,)
+    vnorm2 = jnp.sum(v * v)
+    coef = (h @ v) * (2.0 / vnorm2)   # (B,)
+    o_ref[...] = h - coef[:, None] * v[None, :]
+
+
+def reflect(h: jax.Array, v: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """Apply one Householder reflection H(v) to each row of h (B, N)."""
+    if use_pallas:
+        return pl.pallas_call(
+            _reflect_kernel,
+            out_shape=jax.ShapeDtypeStruct(h.shape, h.dtype),
+            interpret=True,
+        )(h, v)
+    vnorm2 = jnp.sum(v * v)
+    coef = (h @ v) * (2.0 / vnorm2)
+    return h - coef[:, None] * v[None, :]
+
+
+def apply_chain(h: jax.Array, V: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    """`h @ Q` with Q = H(v_1) ... H(v_L), as a sequential scan over L.
+
+    Matches `cwy.apply(h, *cwy.precompute(V))` in exact arithmetic (Thm 2);
+    each reflection is symmetric so right-multiplying by H(v_1) first, then
+    H(v_2), ... composes to `h @ (H(v_1) ... H(v_L))`.
+    """
+    def step(h, v):
+        return reflect(h, v, use_pallas=use_pallas), None
+
+    out, _ = lax.scan(step, h, V)
+    return out
+
+
+def matrix(V: jax.Array) -> jax.Array:
+    """Materialize Q = H(v_1) ... H(v_L) explicitly (O(L N^2) sequential)."""
+    n = V.shape[1]
+    q = jnp.eye(n, dtype=V.dtype)
+
+    def step(q, v):
+        vnorm2 = jnp.sum(v * v)
+        return q - (2.0 / vnorm2) * jnp.outer(q @ v, v), None
+
+    q, _ = lax.scan(step, q, V)
+    return q

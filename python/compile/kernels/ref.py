@@ -1,0 +1,62 @@
+"""Pure-jnp/numpy oracles for kernel correctness (pytest target).
+
+Everything here is written as naively as possible — explicit reflection
+products, dense solves via numpy — so disagreement with the kernels is
+always the kernels' fault.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def householder_matrix(v: np.ndarray) -> np.ndarray:
+    v = np.asarray(v, np.float64)
+    n = v.shape[0]
+    return np.eye(n) - 2.0 * np.outer(v, v) / (v @ v)
+
+
+def householder_product(V: np.ndarray) -> np.ndarray:
+    """Q = H(v_1) ... H(v_L), explicit sequential float64 product."""
+    V = np.asarray(V, np.float64)
+    n = V.shape[1]
+    q = np.eye(n)
+    for v in V:
+        q = q @ householder_matrix(v)
+    return q
+
+
+def cwy_matrix(V: np.ndarray) -> np.ndarray:
+    """Q = I - U S^{-1} U^T with a dense float64 solve."""
+    V = np.asarray(V, np.float64)
+    U = (V / np.linalg.norm(V, axis=1, keepdims=True)).T  # (N, L)
+    L = V.shape[0]
+    G = U.T @ U
+    S = 0.5 * np.eye(L) + np.triu(G, k=1)
+    return np.eye(U.shape[0]) - U @ np.linalg.solve(S, U.T)
+
+
+def tcwy_matrix(V: np.ndarray) -> np.ndarray:
+    """Omega = [I;0] - U S^{-1} U_1^T, dense float64."""
+    V = np.asarray(V, np.float64)
+    m, n = V.shape
+    U = (V / np.linalg.norm(V, axis=1, keepdims=True)).T  # (n, m)
+    G = U.T @ U
+    S = 0.5 * np.eye(m) + np.triu(G, k=1)
+    eye_top = np.eye(n, m)
+    return eye_top - U @ np.linalg.solve(S, U[:m, :].T)
+
+
+def apply_rows(h: np.ndarray, Q: np.ndarray) -> np.ndarray:
+    """Rows of h mapped by Q^T (matches kernels' batch convention)."""
+    return np.asarray(h, np.float64) @ np.asarray(Q, np.float64)
+
+
+def is_orthogonal(Q: np.ndarray, tol: float = 1e-4) -> bool:
+    Q = np.asarray(Q, np.float64)
+    return bool(np.abs(Q.T @ Q - np.eye(Q.shape[1])).max() < tol)
+
+
+def jnp_cwy_apply(h, U, Sinv):
+    """The jnp reference for the fused apply kernel (out = h @ Q)."""
+    return h - ((h @ U) @ Sinv) @ U.T

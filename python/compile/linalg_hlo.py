@@ -1,0 +1,202 @@
+"""Custom-call-free linear algebra for AOT export.
+
+jax >= 0.5 lowers `jax.scipy.linalg.solve_triangular`, `expm`, `qr`, `eigh`
+(on CPU) to typed-FFI LAPACK custom calls, which xla_extension 0.5.1 — the
+backend behind the rust `xla` crate — rejects with
+`Unknown custom-call API version enum value: 4 (API_VERSION_TYPED_FFI)`.
+
+Every routine here therefore lowers to *plain HLO only* (dot/add/mul,
+`lax.scan`, `lax.fori_loop`, dynamic slices), so exported artifacts compile
+and run on the rust PJRT CPU client.  This restriction is not merely a
+workaround: the log-depth triangular inversion below is exactly the
+"O(L^2 log L) parallel preprocessing" the paper's Table 1 claims for CWY.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Triangular inverse (exact, log-depth)
+# ---------------------------------------------------------------------------
+
+def triu_inv(S: jax.Array) -> jax.Array:
+    """Inverse of an upper-triangular matrix via the nilpotent Neumann product.
+
+    Write S = D(I + M) with D = diag(S) and M strictly upper-triangular.
+    M is nilpotent (M^L = 0), so with X = -M,
+
+        (I + M)^{-1} = sum_{k=0}^{L-1} X^k = prod_{j=0}^{J-1} (I + X^{2^j}),
+
+    exact once 2^J >= L.  That is ceil(log2 L) matmuls — the parallel
+    O(L^2 log L) inversion from the paper's complexity analysis.
+    """
+    n = S.shape[0]
+    d = jnp.diagonal(S)
+    dinv = 1.0 / d
+    # D^{-1} S = I + M; X = -M.
+    X = -(dinv[:, None] * S - jnp.eye(n, dtype=S.dtype))
+    eye = jnp.eye(n, dtype=S.dtype)
+    acc = eye + X
+    p = X
+    steps = max(1, (n - 1).bit_length())
+    for _ in range(steps - 1):
+        p = p @ p
+        acc = acc @ (eye + p)
+    # S^{-1} = (I+M)^{-1} D^{-1}
+    return acc * dinv[None, :]
+
+
+def tril_inv(S: jax.Array) -> jax.Array:
+    """Inverse of a lower-triangular matrix (transpose of :func:`triu_inv`)."""
+    return triu_inv(S.T).T
+
+
+def triu_solve(S: jax.Array, B: jax.Array) -> jax.Array:
+    """Solve S X = B for upper-triangular S (custom-call-free)."""
+    return triu_inv(S) @ B
+
+
+# ---------------------------------------------------------------------------
+# Matrix exponential (Taylor + scaling-and-squaring)
+# ---------------------------------------------------------------------------
+
+def expm_taylor(A: jax.Array, order: int = 12, squarings: int = 6) -> jax.Array:
+    """exp(A) by scaling-and-squaring with a Taylor polynomial.
+
+    Matmuls only.  For the skew-symmetric arguments used by EXPRNN the
+    spectral radius is moderate and (order=12, squarings=6) gives ~1e-6
+    float32 accuracy for ||A|| <~ 10.
+    """
+    n = A.shape[0]
+    As = A / (2.0 ** squarings)
+    eye = jnp.eye(n, dtype=A.dtype)
+    term = eye
+    acc = eye
+    for k in range(1, order + 1):
+        term = term @ As / k
+        acc = acc + term
+    for _ in range(squarings):
+        acc = acc @ acc
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Dense inverse (Gauss-Jordan), for the Cayley transform
+# ---------------------------------------------------------------------------
+
+def gauss_jordan_inv(A: jax.Array) -> jax.Array:
+    """Dense inverse via Gauss-Jordan elimination without pivoting.
+
+    Lowers to a `fori_loop` of rank-1 updates (plain HLO).  Intended for the
+    well-conditioned matrices the paper inverts — `I + A/2` with A
+    skew-symmetric has eigenvalues `1 + i*lam/2`, so every diagonal pivot
+    stays bounded away from zero.
+    """
+    n = A.shape[0]
+    aug = jnp.concatenate([A, jnp.eye(n, dtype=A.dtype)], axis=1)  # (n, 2n)
+
+    def body(i, aug):
+        pivot = aug[i, :] / aug[i, i]
+        col = aug[:, i]
+        # eliminate column i from all rows except i, then set row i to pivot
+        aug = aug - col[:, None] * pivot[None, :]
+        aug = aug.at[i, :].set(pivot)
+        return aug
+
+    aug = lax.fori_loop(0, n, body, aug)
+    return aug[:, n:]
+
+
+def cayley(A: jax.Array) -> jax.Array:
+    """Cayley transform (I + A/2)^{-1} (I - A/2), custom-call-free."""
+    n = A.shape[0]
+    eye = jnp.eye(n, dtype=A.dtype)
+    return gauss_jordan_inv(eye + 0.5 * A) @ (eye - 0.5 * A)
+
+
+# ---------------------------------------------------------------------------
+# QR decomposition (Householder, scan-based)
+# ---------------------------------------------------------------------------
+
+def householder_qr(A: jax.Array):
+    """Thin QR of A (n x m, n >= m) via Householder reflections in a scan.
+
+    Returns (Q, R) with Q in St(n, m) and R upper-triangular with positive
+    diagonal (the `qf` convention used by the paper's QR retraction).
+    """
+    n, m = A.shape
+    eps = jnp.asarray(1e-12, A.dtype)
+
+    def step(R, k):
+        # Build the reflector for column k, masked below row k.
+        col = R[:, k]
+        idx = jnp.arange(n)
+        mask = (idx >= k).astype(A.dtype)
+        x = col * mask
+        normx = jnp.sqrt(jnp.sum(x * x) + eps)
+        alpha = jnp.where(x[k] >= 0, -normx, normx)
+        v = x - alpha * (idx == k).astype(A.dtype)
+        vnorm2 = jnp.sum(v * v) + eps
+        R2 = R - (2.0 / vnorm2) * jnp.outer(v, v @ R)
+        return R2, v
+
+    R, vs = lax.scan(step, A, jnp.arange(m))
+
+    # Accumulate Q = H(v_1) ... H(v_m) applied to [I; 0] columns.
+    def apply_back(Q, v):
+        vnorm2 = jnp.sum(v * v) + eps
+        return Q - (2.0 / vnorm2) * jnp.outer(v, v @ Q), None
+
+    Qfull = jnp.eye(n, m, dtype=A.dtype)
+    # Apply reflections in reverse order: Q = H1 H2 ... Hm [I;0]
+    Q, _ = lax.scan(apply_back, Qfull, vs, reverse=True)
+
+    # Sign-fix: make diag(R) positive.
+    signs = jnp.sign(jnp.diagonal(R[:m, :m])) + (jnp.diagonal(R[:m, :m]) == 0)
+    Q = Q * signs[None, :]
+    R = R[:m, :m] * signs[:, None]
+    return Q, R
+
+
+# ---------------------------------------------------------------------------
+# Inverse matrix square root (Newton-Schulz), for OWN
+# ---------------------------------------------------------------------------
+
+def newton_schulz_invsqrt(G: jax.Array, iters: int = 25) -> jax.Array:
+    """(G)^{-1/2} for symmetric positive-definite G, matmuls only.
+
+    Coupled Newton-Schulz iteration on the trace-normalized matrix; converges
+    quadratically when the spectrum of G/tr(G) lies in (0, 1].  Used by the
+    OWN baseline, which the paper implements with an eigendecomposition
+    (a LAPACK call we cannot export).
+    """
+    m = G.shape[0]
+    eye = jnp.eye(m, dtype=G.dtype)
+    tr = jnp.trace(G)
+    Y = G / tr
+    Z = eye
+
+    def body(_, YZ):
+        Y, Z = YZ
+        T = 0.5 * (3.0 * eye - Z @ Y)
+        return (Y @ T, T @ Z)
+
+    Y, Z = lax.fori_loop(0, iters, body, (Y, Z))
+    # Z -> (G/tr)^{-1/2}; scale back.
+    return Z / jnp.sqrt(tr)
+
+
+__all__ = [
+    "triu_inv",
+    "tril_inv",
+    "triu_solve",
+    "expm_taylor",
+    "gauss_jordan_inv",
+    "cayley",
+    "householder_qr",
+    "newton_schulz_invsqrt",
+]

@@ -1,0 +1,121 @@
+"""L2 parametrizations of the orthogonal group O(N).
+
+Each entry returns a *rollout operator*: a function `(h: (B,N)) -> (B,N)`
+applying the (transposed) transition matrix to a batch of hidden states,
+plus whatever precomputation the method amortizes across the RNN rollout
+(paper §3.1).  All lower to custom-call-free HLO (see linalg_hlo).
+
+Methods (paper §2.2.1):
+  cwy     — Q = I - U S^{-1} U^T; precompute (U, S^{-1}) once per rollout.
+  hr      — sequential Householder chain (Mhammedi et al. 2017 baseline).
+  exprnn  — Q = expm(A - A^T) (Lezcano-Casado & Martinez-Rubio 2019).
+  scornn  — Q = Cayley(A - A^T), D-tilde fixed to I as in the paper §2.2.1.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cwy as cwy_kernel
+from .kernels import householder as hr_kernel
+from .linalg_hlo import cayley, expm_taylor
+
+ApplyFn = Callable[[jax.Array], jax.Array]
+
+
+def skew(A: jax.Array) -> jax.Array:
+    """Project to Skew(N): A -> (A - A^T)/2 (scaled to match torch refs)."""
+    return 0.5 * (A - A.T)
+
+
+# --- CWY -------------------------------------------------------------------
+
+def cwy_operator(V: jax.Array, *, use_pallas: bool = True) -> ApplyFn:
+    """Precompute (U, Sinv) and return the fused rollout apply.
+
+    When L == N the paper materializes Q once instead; `cwy_matrix_operator`
+    implements that fast path.
+    """
+    U, Sinv = cwy_kernel.precompute(V, use_pallas=use_pallas)
+
+    def apply(h: jax.Array) -> jax.Array:
+        return cwy_kernel.apply(h, U, Sinv, use_pallas)
+
+    return apply
+
+
+def cwy_matrix_operator(V: jax.Array, *, use_pallas: bool = True) -> ApplyFn:
+    """L = N fast path: materialize Q and roll out with a plain matmul."""
+    Q = cwy_kernel.matrix(V, use_pallas=use_pallas)
+
+    def apply(h: jax.Array) -> jax.Array:
+        return h @ Q
+
+    return apply
+
+
+# --- Sequential Householder -------------------------------------------------
+
+def hr_operator(V: jax.Array, *, use_pallas: bool = False) -> ApplyFn:
+    """The sequential baseline: L chained reflections, no precompute."""
+
+    def apply(h: jax.Array) -> jax.Array:
+        return hr_kernel.apply_chain(h, V, use_pallas=use_pallas)
+
+    return apply
+
+
+# --- EXPRNN ------------------------------------------------------------------
+
+def exprnn_operator(A: jax.Array) -> ApplyFn:
+    """Q = expm(skew(A)); O(N^3) construct, matmul rollout."""
+    Q = expm_taylor(skew(A))
+
+    def apply(h: jax.Array) -> jax.Array:
+        return h @ Q
+
+    return apply
+
+
+# --- SCORNN ------------------------------------------------------------------
+
+def scornn_operator(A: jax.Array) -> ApplyFn:
+    """Q = Cayley(skew(A)); O(N^3) construct via Gauss-Jordan inverse."""
+    Q = cayley(skew(A))
+
+    def apply(h: jax.Array) -> jax.Array:
+        return h @ Q
+
+    return apply
+
+
+OPERATORS = {
+    "cwy": cwy_operator,
+    "cwy_full": cwy_matrix_operator,
+    "hr": hr_operator,
+    "exprnn": exprnn_operator,
+    "scornn": scornn_operator,
+}
+
+
+# --- Initialization -----------------------------------------------------------
+
+def henaff_skew(key: jax.Array, n: int) -> jax.Array:
+    """Henaff et al. (2016) block-diagonal skew init used for the copy task."""
+    theta = jax.random.uniform(key, (n // 2,), minval=-jnp.pi, maxval=jnp.pi)
+    A = jnp.zeros((n, n), jnp.float32)
+    idx = jnp.arange(n // 2)
+    A = A.at[2 * idx, 2 * idx + 1].set(theta)
+    A = A.at[2 * idx + 1, 2 * idx].set(-theta)
+    return A
+
+
+def cwy_init(key: jax.Array, l: int, n: int) -> jax.Array:
+    """Random nonzero reflection vectors (paper App. C initializes from the
+    QR-of-expm procedure; a spherical init is what their time-comparison
+    uses and trains equivalently at our scales)."""
+    V = jax.random.normal(key, (l, n), jnp.float32)
+    return V

@@ -1,0 +1,108 @@
+"""L2 Stiefel-manifold St(N, M) optimization methods (paper §2.2.2, §3.2).
+
+Two families:
+
+* Parametrizations — unconstrained parameters mapped onto the manifold,
+  trained with vanilla SGD/Adam:
+    - `tcwy_matrix`  (ours, Thm 3)
+    - `own_matrix`   (Huang et al. 2018) via Newton–Schulz inverse sqrt
+* Riemannian gradient descent — a retraction step `(Omega, G, lr) -> Omega'`
+  staying on the manifold, with the four paper variants
+  RGD-{canonical,euclidean} x {Cayley,QR}:
+    - Cayley retraction uses the Sherman–Morrison–Woodbury low-rank form of
+      the paper's Appendix A (Lemma 1): inverted matrix is 2M x 2M
+      (canonical) or 3M x 3M (euclidean), never N x N.
+    - QR retraction uses the custom-call-free Householder QR.
+
+All custom-call-free (see linalg_hlo).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import tcwy as tcwy_kernel
+from .linalg_hlo import gauss_jordan_inv, householder_qr, newton_schulz_invsqrt
+
+
+# --- Parametrizations ---------------------------------------------------------
+
+def tcwy_matrix(V: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """Omega = [I;0] - U S^{-1} U_1^T in St(N, M); V is (M, N)."""
+    return tcwy_kernel.matrix(V, use_pallas=use_pallas)
+
+
+def own_matrix(V: jax.Array) -> jax.Array:
+    """Orthogonal Weight Normalization: Omega = V~ (V~^T V~)^{-1/2}.
+
+    V is (N, M).  The paper centers V then whitens with the eigendecomposition
+    P Lambda^{-1/2} P^T; the Newton–Schulz inverse square root computes the
+    identical map with matmuls only (eigh is a LAPACK custom call we cannot
+    export — DESIGN.md §4.2).
+    """
+    n = V.shape[0]
+    Vc = V - jnp.mean(V, axis=0, keepdims=True)
+    G = Vc.T @ Vc + 1e-5 * jnp.eye(V.shape[1], dtype=V.dtype)
+    return Vc @ newton_schulz_invsqrt(G)
+
+
+# --- RGD retractions ------------------------------------------------------------
+
+def _bc_factors(omega: jax.Array, grad: jax.Array, lr, inner: str):
+    """Low-rank factors B, C with lr*A = B C^T (paper Appendix A)."""
+    if inner == "canonical":
+        B = lr * jnp.concatenate([grad, omega], axis=1)            # (N, 2M)
+        C = jnp.concatenate([omega, -grad], axis=1)                # (N, 2M)
+    elif inner == "euclidean":
+        E = grad.T @ omega - omega.T @ grad                        # (M, M)
+        B = lr * jnp.concatenate([grad, omega, 0.5 * omega @ E], axis=1)
+        C = jnp.concatenate([omega, -grad, omega], axis=1)         # (N, 3M)
+    else:
+        raise ValueError(inner)
+    return B, C
+
+
+def rgd_cayley_step(omega: jax.Array, grad: jax.Array, lr,
+                    inner: str = "canonical") -> jax.Array:
+    """Omega' = Cayley(lr A) Omega via SMW (Lemma 1):
+
+        Cayley(A) Omega = Omega - B (I + C^T B / 2)^{-1} (C^T Omega),
+
+    inverting only a 2M x 2M (canonical) or 3M x 3M (euclidean) matrix.
+    Cayley(eta A) ~ I - eta A, so a positive step size descends.
+    """
+    B, C = _bc_factors(omega, grad, lr, inner)
+    d = B.shape[1]
+    inner_mat = jnp.eye(d, dtype=omega.dtype) + 0.5 * (C.T @ B)
+    return omega - B @ (gauss_jordan_inv(inner_mat) @ (C.T @ omega))
+
+
+def rgd_qr_step(omega: jax.Array, grad: jax.Array, lr,
+                inner: str = "canonical") -> jax.Array:
+    """Omega' = qf(Omega - lr * A Omega) with qf = Householder-QR Q factor."""
+    if inner == "canonical":
+        A_omega = grad @ (omega.T @ omega) - omega @ (grad.T @ omega)
+    else:
+        ghat = grad - 0.5 * omega @ (omega.T @ grad)
+        A_omega = ghat @ (omega.T @ omega) - omega @ (ghat.T @ omega)
+    q, _ = householder_qr(omega - lr * A_omega)
+    return q
+
+
+def rgd_step(omega: jax.Array, grad: jax.Array, lr, *,
+             inner: str = "canonical", retraction: str = "cayley") -> jax.Array:
+    """Dispatch over the paper's four RGD-A-B variants (Table 2 notation)."""
+    if retraction == "cayley":
+        return rgd_cayley_step(omega, grad, lr, inner)
+    if retraction == "qr":
+        return rgd_qr_step(omega, grad, lr, inner)
+    raise ValueError(retraction)
+
+
+RGD_VARIANTS = {
+    "rgd_cc": dict(inner="canonical", retraction="cayley"),
+    "rgd_ec": dict(inner="euclidean", retraction="cayley"),
+    "rgd_cqr": dict(inner="canonical", retraction="qr"),
+    "rgd_eqr": dict(inner="euclidean", retraction="qr"),
+}

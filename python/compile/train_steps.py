@@ -1,0 +1,173 @@
+"""Build AOT-exportable train-step functions over flattened state.
+
+Artifact calling convention (DESIGN.md §5):
+
+    step  :  state...,  data...,  lr  ->  state'...,  metrics...
+    grad  :  params..., data...       ->  grads...,   loss, metrics...
+    apply :  params..., opt..., grads..., lr -> params'..., opt'...
+
+`state` = params leaves ++ optimizer-state leaves (Adam: m, v, t).  The rust
+coordinator treats state as an opaque ordered Vec<Tensor>; the manifest
+records leaf names/shapes so checkpoints stay introspectable.
+
+Everything (loss, backward, Adam update) fuses into one HLO module, so a
+training step is a single PJRT execution with no python anywhere near it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_names(params) -> List[str]:
+    """Stable dotted-path names for the leaves of a params pytree."""
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Optimizers (in-graph)
+# ---------------------------------------------------------------------------
+
+def sgd_update(leaves, grads, _m, _v, _t, lr):
+    new = [p - lr * g for p, g in zip(leaves, grads)]
+    return new, _m, _v, _t
+
+
+def adam_update(leaves, grads, m, v, t, lr,
+                b1=0.9, b2=0.999, eps=1e-8):
+    t2 = t + 1.0
+    bc1 = 1.0 - b1 ** t2
+    bc2 = 1.0 - b2 ** t2
+    m2 = [b1 * mi + (1 - b1) * g for mi, g in zip(m, grads)]
+    v2 = [b2 * vi + (1 - b2) * g * g for vi, g in zip(v, grads)]
+    new = [p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+           for p, mi, vi in zip(leaves, m2, v2)]
+    return new, m2, v2, t2
+
+
+OPTIMIZERS = {"sgd": sgd_update, "adam": adam_update}
+
+
+def opt_state_size(n_leaves: int, optimizer: str) -> int:
+    """Number of optimizer-state tensors appended after the params leaves."""
+    return 2 * n_leaves + 1 if optimizer == "adam" else 1  # m,v,t | t
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_step(loss_fn: Callable, treedef, n_leaves: int, n_data: int,
+              optimizer: str = "adam"):
+    """Fused loss+grad+update step over flat arguments.
+
+    loss_fn(params_pytree, *data) -> (loss, metrics tuple)
+    Returned fn(*flat) with flat = leaves + opt_state + data + [lr].
+    """
+    upd = OPTIMIZERS[optimizer]
+    has_mv = optimizer == "adam"
+
+    def step(*flat):
+        leaves = list(flat[:n_leaves])
+        off = n_leaves
+        if has_mv:
+            m = list(flat[off:off + n_leaves]); off += n_leaves
+            v = list(flat[off:off + n_leaves]); off += n_leaves
+        else:
+            m = v = []
+        t = flat[off]; off += 1
+        data = flat[off:off + n_data]; off += n_data
+        lr = flat[off]
+
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+
+        def scalar_loss(p):
+            loss, metrics = loss_fn(p, *data)
+            return loss, metrics
+
+        (loss, metrics), grads_tree = jax.value_and_grad(
+            scalar_loss, has_aux=True)(params)
+        grads = jax.tree_util.tree_leaves(grads_tree)
+        new, m2, v2, t2 = upd(leaves, grads, m, v, t, lr)
+        out = tuple(new) + tuple(m2) + tuple(v2) + (t2, loss) + tuple(metrics)
+        return out
+
+    return step
+
+
+def make_grad(loss_fn: Callable, treedef, n_leaves: int, n_data: int):
+    """Gradient-only artifact for the data-parallel coordinator."""
+
+    def grad_fn(*flat):
+        leaves = list(flat[:n_leaves])
+        data = flat[n_leaves:n_leaves + n_data]
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+
+        def scalar_loss(p):
+            loss, metrics = loss_fn(p, *data)
+            return loss, metrics
+
+        (loss, metrics), grads_tree = jax.value_and_grad(
+            scalar_loss, has_aux=True)(params)
+        grads = jax.tree_util.tree_leaves(grads_tree)
+        return tuple(grads) + (loss,) + tuple(metrics)
+
+    return grad_fn
+
+
+def make_apply(n_leaves: int, optimizer: str = "adam"):
+    """Update-only artifact: params..., m..., v..., t, grads..., lr."""
+    upd = OPTIMIZERS[optimizer]
+    has_mv = optimizer == "adam"
+
+    def apply_fn(*flat):
+        leaves = list(flat[:n_leaves])
+        off = n_leaves
+        if has_mv:
+            m = list(flat[off:off + n_leaves]); off += n_leaves
+            v = list(flat[off:off + n_leaves]); off += n_leaves
+        else:
+            m = v = []
+        t = flat[off]; off += 1
+        grads = list(flat[off:off + n_leaves]); off += n_leaves
+        lr = flat[off]
+        new, m2, v2, t2 = upd(leaves, grads, m, v, t, lr)
+        return tuple(new) + tuple(m2) + tuple(v2) + (t2,)
+
+    return apply_fn
+
+
+def make_eval(loss_fn: Callable, treedef, n_leaves: int, n_data: int):
+    """Forward-only loss/metrics artifact (validation path)."""
+
+    def eval_fn(*flat):
+        leaves = list(flat[:n_leaves])
+        data = flat[n_leaves:n_leaves + n_data]
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+        loss, metrics = loss_fn(params, *data)
+        return (loss,) + tuple(metrics)
+
+    return eval_fn
+
+
+def init_state(params_leaves: Sequence[jax.Array], optimizer: str = "adam"):
+    """Initial flat state = leaves ++ adam(m, v) ++ t."""
+    if optimizer == "adam":
+        zeros = [jnp.zeros_like(p) for p in params_leaves]
+        return list(params_leaves) + zeros + [jnp.zeros_like(p) for p in params_leaves] + [jnp.zeros((), jnp.float32)]
+    return list(params_leaves) + [jnp.zeros((), jnp.float32)]

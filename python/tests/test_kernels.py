@@ -1,0 +1,253 @@
+"""L1 kernel correctness: pallas kernels vs pure-numpy oracles.
+
+Includes hypothesis sweeps over shapes when hypothesis is available, with a
+deterministic fallback grid otherwise (the CI image may not ship hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import cwy, householder, ref, tcwy
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.RandomState(0)
+
+
+def rand_v(l, n, seed=0):
+    return np.random.RandomState(seed).randn(l, n).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# CWY == sequential Householder product (Thm 2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,n", [(1, 4), (2, 8), (5, 16), (16, 16), (8, 64),
+                                 (32, 32)])
+def test_cwy_matrix_equals_householder_product(l, n):
+    v = rand_v(l, n, seed=l * 100 + n)
+    q_ref = ref.householder_product(v)
+    q_cwy = np.asarray(cwy.matrix(jnp.asarray(v), use_pallas=True))
+    np.testing.assert_allclose(q_cwy, q_ref, atol=5e-4)
+
+
+@pytest.mark.parametrize("l,n", [(4, 16), (8, 32)])
+def test_cwy_matrix_orthogonal(l, n):
+    v = rand_v(l, n, seed=7)
+    q = np.asarray(cwy.matrix(jnp.asarray(v)))
+    assert ref.is_orthogonal(q)
+
+
+# ---------------------------------------------------------------------------
+# Fused apply kernel vs oracle (pallas and jnp paths)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("b,l,n", [(1, 2, 8), (4, 8, 32), (16, 16, 64),
+                                   (3, 5, 17)])
+def test_apply_matches_matrix_action(b, l, n, use_pallas):
+    v = rand_v(l, n, seed=b + l + n)
+    h = np.random.RandomState(1).randn(b, n).astype(np.float32)
+    U, Sinv = cwy.precompute(jnp.asarray(v), use_pallas=use_pallas)
+    out = np.asarray(cwy.apply(jnp.asarray(h), U, Sinv, use_pallas))
+    q = ref.householder_product(v)
+    np.testing.assert_allclose(out, ref.apply_rows(h, q), atol=5e-4)
+
+
+def test_apply_pallas_equals_jnp():
+    v = rand_v(8, 32, seed=3)
+    h = np.random.RandomState(2).randn(4, 32).astype(np.float32)
+    U, Sinv = cwy.precompute(jnp.asarray(v), use_pallas=False)
+    a = np.asarray(cwy.apply(jnp.asarray(h), U, Sinv, True))
+    b = np.asarray(cwy.apply(jnp.asarray(h), U, Sinv, False))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_apply_norm_preserving():
+    v = rand_v(16, 48, seed=4)
+    h = np.random.RandomState(3).randn(6, 48).astype(np.float32)
+    U, Sinv = cwy.precompute(jnp.asarray(v))
+    out = np.asarray(cwy.apply(jnp.asarray(h), U, Sinv, True))
+    np.testing.assert_allclose(
+        np.linalg.norm(out, axis=1), np.linalg.norm(h, axis=1), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Gradients of the custom VJPs vs jnp autodiff
+# ---------------------------------------------------------------------------
+
+def test_apply_vjp_matches_autodiff():
+    v = rand_v(8, 24, seed=5)
+    h = np.random.RandomState(4).randn(4, 24).astype(np.float32)
+    U, Sinv = cwy.precompute(jnp.asarray(v), use_pallas=False)
+
+    def f_pallas(h, U, Sinv):
+        return jnp.sum(jnp.sin(cwy.apply(h, U, Sinv, True)))
+
+    def f_jnp(h, U, Sinv):
+        return jnp.sum(jnp.sin(ref.jnp_cwy_apply(h, U, Sinv)))
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(jnp.asarray(h), U, Sinv)
+    g2 = jax.grad(f_jnp, argnums=(0, 1, 2))(jnp.asarray(h), U, Sinv)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_gram_vjp_matches_autodiff():
+    u = np.random.RandomState(6).randn(20, 6).astype(np.float32)
+
+    def f_pallas(u):
+        return jnp.sum(jnp.cos(cwy.gram(u)))
+
+    def f_jnp(u):
+        return jnp.sum(jnp.cos(u.T @ u))
+
+    g1 = jax.grad(f_pallas)(jnp.asarray(u))
+    g2 = jax.grad(f_jnp)(jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+def test_grad_through_scan_pallas_vs_jnp():
+    v = jnp.asarray(rand_v(6, 16, seed=8))
+    h = jnp.asarray(np.random.RandomState(7).randn(3, 16), jnp.float32)
+
+    def rollout(v, h, up):
+        U, Sinv = cwy.precompute(v, use_pallas=up)
+
+        def step(hh, _):
+            return cwy.apply(hh, U, Sinv, up), None
+
+        h2, _ = jax.lax.scan(step, h, None, length=4)
+        return jnp.sum(jnp.tanh(h2))
+
+    g1 = jax.grad(rollout)(v, h, True)
+    g2 = jax.grad(rollout)(v, h, False)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# T-CWY (Thm 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("m,n", [(1, 4), (4, 16), (8, 32), (16, 64)])
+def test_tcwy_matches_oracle(m, n, use_pallas):
+    v = rand_v(m, n, seed=m * 10 + n)
+    omega = np.asarray(tcwy.matrix(jnp.asarray(v), use_pallas=use_pallas))
+    np.testing.assert_allclose(omega, ref.tcwy_matrix(v), atol=5e-4)
+
+
+@pytest.mark.parametrize("m,n", [(4, 16), (8, 24)])
+def test_tcwy_on_stiefel(m, n):
+    v = rand_v(m, n, seed=9)
+    omega = np.asarray(tcwy.matrix(jnp.asarray(v)))
+    assert ref.is_orthogonal(omega)
+
+
+def test_tcwy_equals_truncated_cwy():
+    # Thm 3: Omega = first M columns of the full CWY/HR product.
+    v = rand_v(5, 20, seed=10)
+    omega = np.asarray(tcwy.matrix(jnp.asarray(v), use_pallas=False))
+    q = ref.householder_product(v)
+    np.testing.assert_allclose(omega, q[:, :5], atol=5e-4)
+
+
+def test_tcwy_vjp_matches_jnp():
+    v = jnp.asarray(rand_v(4, 16, seed=11))
+
+    def f(v, up):
+        return jnp.sum(jnp.sin(tcwy.matrix(v, use_pallas=up)))
+
+    g1 = jax.grad(lambda v: f(v, True))(v)
+    g2 = jax.grad(lambda v: f(v, False))(v)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+def test_tcwy_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        tcwy.matrix(jnp.zeros((8, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Householder chain kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_reflect_matches_oracle(use_pallas):
+    v = np.random.RandomState(12).randn(16).astype(np.float32)
+    h = np.random.RandomState(13).randn(4, 16).astype(np.float32)
+    out = np.asarray(householder.reflect(
+        jnp.asarray(h), jnp.asarray(v), use_pallas=use_pallas))
+    expect = ref.apply_rows(h, ref.householder_matrix(v))
+    np.testing.assert_allclose(out, expect, atol=1e-4)
+
+
+def test_chain_equals_cwy_apply():
+    # The Fig. 2 claim: CWY and HR are numerically equivalent.
+    v = rand_v(8, 32, seed=14)
+    h = np.random.RandomState(15).randn(4, 32).astype(np.float32)
+    chain = np.asarray(householder.apply_chain(jnp.asarray(h), jnp.asarray(v)))
+    U, Sinv = cwy.precompute(jnp.asarray(v), use_pallas=False)
+    fused = np.asarray(cwy.apply(jnp.asarray(h), U, Sinv, False))
+    np.testing.assert_allclose(chain, fused, atol=5e-4)
+
+
+def test_hr_matrix_matches_oracle():
+    v = rand_v(6, 12, seed=16)
+    q = np.asarray(householder.matrix(jnp.asarray(v)))
+    np.testing.assert_allclose(q, ref.householder_product(v), atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (shape/dtype space) when available
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        l=st.integers(min_value=1, max_value=12),
+        n_extra=st.integers(min_value=0, max_value=20),
+        b=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_apply_sweep(l, n_extra, b, seed):
+        n = l + n_extra + 1
+        v = np.random.RandomState(seed).randn(l, n).astype(np.float32)
+        h = np.random.RandomState(seed + 1).randn(b, n).astype(np.float32)
+        U, Sinv = cwy.precompute(jnp.asarray(v), use_pallas=True)
+        out = np.asarray(cwy.apply(jnp.asarray(h), U, Sinv, True))
+        expect = ref.apply_rows(h, ref.householder_product(v))
+        np.testing.assert_allclose(out, expect, atol=2e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=10),
+        n_extra=st.integers(min_value=1, max_value=24),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_tcwy_sweep(m, n_extra, seed):
+        n = m + n_extra
+        v = np.random.RandomState(seed).randn(m, n).astype(np.float32)
+        omega = np.asarray(tcwy.matrix(jnp.asarray(v), use_pallas=True))
+        np.testing.assert_allclose(omega, ref.tcwy_matrix(v), atol=2e-3)
+else:
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_fallback_apply_sweep(seed):
+        rng = np.random.RandomState(seed)
+        l = rng.randint(1, 12)
+        n = l + rng.randint(1, 20)
+        b = rng.randint(1, 8)
+        v = rng.randn(l, n).astype(np.float32)
+        h = rng.randn(b, n).astype(np.float32)
+        U, Sinv = cwy.precompute(jnp.asarray(v), use_pallas=True)
+        out = np.asarray(cwy.apply(jnp.asarray(h), U, Sinv, True))
+        expect = ref.apply_rows(h, ref.householder_product(v))
+        np.testing.assert_allclose(out, expect, atol=2e-3)

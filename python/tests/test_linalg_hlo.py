@@ -1,0 +1,133 @@
+"""Custom-call-free linalg vs scipy/numpy references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import linalg_hlo as lh
+
+
+def test_triu_inv_various_sizes():
+    for n in [1, 2, 3, 5, 8, 16, 33, 64]:
+        rng = np.random.RandomState(n)
+        s = np.triu(rng.randn(n, n)).astype(np.float32)
+        s += np.eye(n, dtype=np.float32) * 2.0 * np.sign(np.diag(s) + 1e-3)
+        inv = np.asarray(lh.triu_inv(jnp.asarray(s)))
+        np.testing.assert_allclose(inv @ s, np.eye(n), atol=2e-3)
+
+
+def test_triu_inv_is_triangular():
+    rng = np.random.RandomState(0)
+    s = np.triu(rng.randn(12, 12)).astype(np.float32) + 3 * np.eye(12, dtype=np.float32)
+    inv = np.asarray(lh.triu_inv(jnp.asarray(s)))
+    np.testing.assert_allclose(np.tril(inv, k=-1), 0.0, atol=1e-5)
+
+
+def test_triu_inv_cwy_s_matrix():
+    # The actual S shape used by CWY: 0.5 I + striu of a Gram matrix.
+    rng = np.random.RandomState(1)
+    u = rng.randn(64, 16)
+    u /= np.linalg.norm(u, axis=0, keepdims=True)
+    s = (0.5 * np.eye(16) + np.triu(u.T @ u, k=1)).astype(np.float32)
+    inv = np.asarray(lh.triu_inv(jnp.asarray(s)))
+    np.testing.assert_allclose(inv @ s, np.eye(16), atol=1e-4)
+
+
+def test_tril_inv():
+    rng = np.random.RandomState(2)
+    s = np.tril(rng.randn(10, 10)).astype(np.float32) + 3 * np.eye(10, dtype=np.float32)
+    inv = np.asarray(lh.tril_inv(jnp.asarray(s)))
+    np.testing.assert_allclose(inv @ s, np.eye(10), atol=1e-3)
+
+
+def test_expm_taylor_vs_scipy():
+    scipy = pytest.importorskip("scipy.linalg")
+    rng = np.random.RandomState(3)
+    for n in [2, 8, 24]:
+        a = rng.randn(n, n).astype(np.float32) * 0.5
+        a = 0.5 * (a - a.T)
+        got = np.asarray(lh.expm_taylor(jnp.asarray(a)))
+        expect = scipy.expm(a.astype(np.float64))
+        np.testing.assert_allclose(got, expect, atol=1e-4)
+
+
+def test_expm_orthogonal_for_skew():
+    rng = np.random.RandomState(4)
+    a = rng.randn(16, 16).astype(np.float32)
+    a = 0.5 * (a - a.T)
+    q = np.asarray(lh.expm_taylor(jnp.asarray(a)))
+    np.testing.assert_allclose(q.T @ q, np.eye(16), atol=1e-4)
+
+
+def test_gauss_jordan_inv():
+    rng = np.random.RandomState(5)
+    for n in [1, 4, 16, 40]:
+        a = rng.randn(n, n).astype(np.float32) + 4 * np.eye(n, dtype=np.float32)
+        inv = np.asarray(lh.gauss_jordan_inv(jnp.asarray(a)))
+        np.testing.assert_allclose(inv @ a, np.eye(n), atol=2e-3)
+
+
+def test_cayley_orthogonal():
+    rng = np.random.RandomState(6)
+    a = rng.randn(20, 20).astype(np.float32)
+    a = 0.5 * (a - a.T)
+    q = np.asarray(lh.cayley(jnp.asarray(a)))
+    np.testing.assert_allclose(q.T @ q, np.eye(20), atol=1e-4)
+
+
+def test_cayley_matches_dense_solve():
+    rng = np.random.RandomState(7)
+    a = rng.randn(12, 12)
+    a = 0.5 * (a - a.T)
+    got = np.asarray(lh.cayley(jnp.asarray(a.astype(np.float32))))
+    expect = np.linalg.solve(np.eye(12) + a / 2, np.eye(12) - a / 2)
+    np.testing.assert_allclose(got, expect, atol=1e-4)
+
+
+def test_householder_qr_reconstruction():
+    rng = np.random.RandomState(8)
+    for (n, m) in [(8, 3), (16, 16), (30, 7)]:
+        a = rng.randn(n, m).astype(np.float32)
+        q, r = lh.householder_qr(jnp.asarray(a))
+        q, r = np.asarray(q), np.asarray(r)
+        np.testing.assert_allclose(q @ r, a, atol=2e-3)
+        np.testing.assert_allclose(q.T @ q, np.eye(m), atol=1e-3)
+        assert (np.diag(r) >= -1e-5).all()
+        np.testing.assert_allclose(np.tril(r, k=-1), 0.0, atol=1e-4)
+
+
+def test_qr_matches_numpy_qf():
+    rng = np.random.RandomState(9)
+    a = rng.randn(12, 5).astype(np.float32)
+    q, _ = lh.householder_qr(jnp.asarray(a))
+    qn, rn = np.linalg.qr(a.astype(np.float64))
+    # Fix numpy's sign convention to positive diag(R).
+    signs = np.sign(np.diag(rn))
+    np.testing.assert_allclose(np.asarray(q), qn * signs[None, :], atol=1e-3)
+
+
+def test_newton_schulz_invsqrt():
+    rng = np.random.RandomState(10)
+    for m in [2, 8, 16]:
+        a = rng.randn(m + 6, m).astype(np.float32)
+        g = a.T @ a + 1e-3 * np.eye(m, dtype=np.float32)
+        zi = np.asarray(lh.newton_schulz_invsqrt(jnp.asarray(g), iters=40))
+        np.testing.assert_allclose(zi @ g @ zi, np.eye(m), atol=5e-2)
+
+
+def test_everything_differentiable():
+    """Each routine must admit reverse-mode AD (artifacts fuse grads)."""
+    rng = np.random.RandomState(11)
+    s = np.triu(rng.randn(6, 6)).astype(np.float32) + 2 * np.eye(6, dtype=np.float32)
+    a = rng.randn(6, 6).astype(np.float32)
+    sk = 0.5 * (a - a.T)
+
+    for fn, arg in [
+        (lh.triu_inv, jnp.asarray(s)),
+        (lh.expm_taylor, jnp.asarray(sk)),
+        (lh.gauss_jordan_inv, jnp.asarray(a + 4 * np.eye(6, dtype=np.float32))),
+        (lh.cayley, jnp.asarray(sk)),
+    ]:
+        g = jax.grad(lambda x: jnp.sum(jnp.sin(fn(x))))(arg)
+        assert np.isfinite(np.asarray(g)).all(), fn.__name__

@@ -1,0 +1,156 @@
+"""L2 model shape/loss sanity + short-training descent per method."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, parametrize
+
+SMALL_COPY = dict(method="cwy", n=16, l=8, t_blank=8, batch=4, nonlin="abs",
+                  use_pallas=False)
+
+
+def copy_batch(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    t_total = cfg["t_blank"] + 20
+    b = cfg["batch"]
+    tokens = np.zeros((b, t_total), np.int32)
+    targets = np.zeros((b, t_total), np.int32)
+    digits = rng.randint(1, 9, size=(b, 10))
+    tokens[:, :10] = digits
+    tokens[:, 10 + cfg["t_blank"]] = 9
+    targets[:, -10:] = digits
+    return jnp.asarray(tokens), jnp.asarray(targets)
+
+
+@pytest.mark.parametrize("method", ["cwy", "hr", "exprnn", "scornn", "rnn",
+                                    "lstm", "gru"])
+def test_copy_loss_finite(method):
+    cfg = dict(SMALL_COPY, method=method)
+    params = models.copy_init(jax.random.PRNGKey(0), cfg)
+    tokens, targets = copy_batch(cfg)
+    loss, (acc,) = models.copy_loss(params, tokens, targets, cfg)
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_copy_loss_near_uniform_at_init():
+    # With random init the CE should be near log(9) over all positions.
+    cfg = dict(SMALL_COPY)
+    params = models.copy_init(jax.random.PRNGKey(1), cfg)
+    tokens, targets = copy_batch(cfg)
+    loss, _ = models.copy_loss(params, tokens, targets, cfg)
+    assert float(loss) < 2.0 * np.log(9.0)
+
+
+@pytest.mark.parametrize("method", ["cwy", "lstm"])
+def test_copy_short_training_descends(method):
+    cfg = dict(SMALL_COPY, method=method)
+    params = models.copy_init(jax.random.PRNGKey(2), cfg)
+    tokens, targets = copy_batch(cfg)
+
+    def loss_fn(p):
+        return models.copy_loss(p, tokens, targets, cfg)[0]
+
+    l0 = float(loss_fn(params))
+    step = jax.jit(lambda p: jax.tree_util.tree_map(
+        lambda x, g: x - 0.05 * g, p, jax.grad(loss_fn)(p)))
+    for _ in range(20):
+        params = step(params)
+    assert float(loss_fn(params)) < l0
+
+
+def test_smnist_shapes():
+    cfg = dict(method="cwy", n=24, l=8, nonlin="abs", use_pallas=False)
+    params = models.smnist_init(jax.random.PRNGKey(3), cfg)
+    rng = np.random.RandomState(0)
+    pixels = jnp.asarray(rng.rand(4, 49), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, 10, size=4), jnp.int32)
+    loss, (acc,) = models.smnist_loss(params, pixels, labels, cfg)
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_nmt_loss_and_masking():
+    cfg = dict(method="cwy", n=16, l=8, vocab=32, emb=8, nonlin="abs",
+               use_pallas=False)
+    params = models.nmt_init(jax.random.PRNGKey(4), cfg)
+    rng = np.random.RandomState(1)
+    src = jnp.asarray(rng.randint(1, 32, size=(2, 6)), jnp.int32)
+    tgt_in = jnp.asarray(rng.randint(1, 32, size=(2, 6)), jnp.int32)
+    tgt_out_np = rng.randint(1, 32, size=(2, 6)).astype(np.int32)
+    loss_full, (pp,) = models.nmt_loss(
+        params, src, tgt_in, jnp.asarray(tgt_out_np), cfg)
+    assert np.isfinite(float(loss_full))
+    assert float(pp) == pytest.approx(np.exp(float(loss_full)), rel=1e-4)
+
+    # Padding half the targets must change the masked mean loss.
+    tgt_masked = tgt_out_np.copy()
+    tgt_masked[:, 3:] = 0
+    loss_masked, _ = models.nmt_loss(
+        params, src, tgt_in, jnp.asarray(tgt_masked), cfg)
+    assert not np.isclose(float(loss_full), float(loss_masked))
+
+
+def test_nmt_gradients_flow_to_attention():
+    cfg = dict(method="rnn", n=12, l=4, vocab=16, emb=6, nonlin="abs",
+               use_pallas=False)
+    params = models.nmt_init(jax.random.PRNGKey(5), cfg)
+    rng = np.random.RandomState(2)
+    src = jnp.asarray(rng.randint(1, 16, size=(2, 5)), jnp.int32)
+    tgt = jnp.asarray(rng.randint(1, 16, size=(2, 5)), jnp.int32)
+
+    g = jax.grad(lambda p: models.nmt_loss(p, src, tgt, tgt, cfg)[0])(params)
+    for key in ["att_w1", "att_w2", "att_v"]:
+        assert float(jnp.abs(g[key]).max()) > 0.0, key
+
+
+VIDEO_CFG = dict(q=3, f=4, hw=8, t=4, batch=2, cin=1, use_pallas=False)
+
+
+@pytest.mark.parametrize("method", ["convneru_tcwy", "convneru_own",
+                                    "convneru_free", "convneru_zeros",
+                                    "convlstm"])
+def test_video_loss_finite(method):
+    cfg = dict(VIDEO_CFG, method=method)
+    params = models.video_init(jax.random.PRNGKey(6), cfg)
+    rng = np.random.RandomState(3)
+    frames = jnp.asarray(rng.rand(2, 4, 8, 8, 1), jnp.float32)
+    loss, _ = models.video_loss(params, frames, cfg)
+    assert np.isfinite(float(loss))
+
+
+def test_video_tcwy_kernel_is_stiefel():
+    cfg = dict(VIDEO_CFG, method="convneru_tcwy")
+    params = models.video_init(jax.random.PRNGKey(7), cfg)
+    k = models._recurrent_kernel(params, cfg)
+    q, f = cfg["q"], cfg["f"]
+    omega = np.asarray(k).reshape(q * q * f, f) * q
+    np.testing.assert_allclose(omega.T @ omega, np.eye(f), atol=1e-3)
+
+
+def test_video_norm_nonexplosion():
+    """ConvNERU's hidden-state norm must not explode (Appendix B claim),
+    in contrast to an unconstrained kernel scaled up."""
+    cfg = dict(VIDEO_CFG, method="convneru_tcwy", t=12)
+    params = models.video_init(jax.random.PRNGKey(8), cfg)
+    rng = np.random.RandomState(4)
+    frames = jnp.asarray(rng.rand(1, 12, 8, 8, 1), jnp.float32)
+    loss, _ = models.video_loss(params, frames, cfg)
+    assert np.isfinite(float(loss)) and float(loss) < 1e4
+
+
+@pytest.mark.parametrize("method", ["cwy", "exprnn", "scornn"])
+def test_transition_operators_orthogonal(method):
+    n, l = 16, 8
+    params = models.init_transition(jax.random.PRNGKey(9), method, n, l)
+    op = models.transition_operator(method, params, use_pallas=False)
+    h = jnp.asarray(np.eye(n), jnp.float32)
+    q = np.asarray(op(h))  # rows of I mapped -> Q itself
+    np.testing.assert_allclose(q.T @ q, np.eye(n), atol=1e-3)
+
+
+def test_henaff_init_is_skew():
+    a = np.asarray(parametrize.henaff_skew(jax.random.PRNGKey(10), 16))
+    np.testing.assert_allclose(a, -a.T, atol=1e-6)

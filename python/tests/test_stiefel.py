@@ -1,0 +1,103 @@
+"""Stiefel methods: manifold invariants, descent, FLOP ordering claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import stiefel
+
+
+def random_stiefel(n, m, seed=0):
+    rng = np.random.RandomState(seed)
+    q, _ = np.linalg.qr(rng.randn(n, m))
+    return jnp.asarray(q, jnp.float32)
+
+
+def defect(omega):
+    omega = np.asarray(omega, np.float64)
+    return np.abs(omega.T @ omega - np.eye(omega.shape[1])).max()
+
+
+def test_tcwy_on_manifold():
+    rng = np.random.RandomState(1)
+    for (m, n) in [(2, 8), (8, 32), (16, 128)]:
+        v = jnp.asarray(rng.randn(m, n), jnp.float32)
+        assert defect(stiefel.tcwy_matrix(v)) < 1e-3
+
+
+def test_own_on_manifold():
+    rng = np.random.RandomState(2)
+    v = jnp.asarray(rng.randn(48, 8) * 0.3, jnp.float32)
+    assert defect(stiefel.own_matrix(v)) < 5e-2
+
+
+@pytest.mark.parametrize("variant", sorted(stiefel.RGD_VARIANTS))
+def test_rgd_stays_on_manifold(variant):
+    kw = stiefel.RGD_VARIANTS[variant]
+    omega = random_stiefel(24, 6, seed=3)
+    rng = np.random.RandomState(4)
+    grad = jnp.asarray(rng.randn(24, 6) * 0.3, jnp.float32)
+    nxt = stiefel.rgd_step(omega, grad, 0.1, **kw)
+    assert defect(nxt) < 5e-3, variant
+
+
+@pytest.mark.parametrize("variant", sorted(stiefel.RGD_VARIANTS))
+def test_rgd_descends(variant):
+    """f(Omega) = ||Omega - Target||^2/2 decreases under every variant."""
+    kw = stiefel.RGD_VARIANTS[variant]
+    target = random_stiefel(16, 4, seed=5)
+    omega = random_stiefel(16, 4, seed=6)
+
+    def f(o):
+        return 0.5 * float(jnp.sum((o - target) ** 2))
+
+    before = f(omega)
+    for _ in range(30):
+        grad = omega - target
+        omega = stiefel.rgd_step(omega, grad, 0.1, **kw)
+    assert f(omega) < before, f"{variant}: {before} -> {f(omega)}"
+
+
+def test_rgd_zero_grad_fixed_point():
+    omega = random_stiefel(20, 5, seed=7)
+    zero = jnp.zeros((20, 5), jnp.float32)
+    for variant, kw in stiefel.RGD_VARIANTS.items():
+        nxt = stiefel.rgd_step(omega, zero, 0.3, **kw)
+        np.testing.assert_allclose(
+            np.asarray(nxt), np.asarray(omega), atol=1e-3,
+            err_msg=variant)
+
+
+def test_tcwy_gradient_flows():
+    v = jnp.asarray(np.random.RandomState(8).randn(4, 16), jnp.float32)
+    target = random_stiefel(16, 4, seed=9)
+
+    def loss(v):
+        return jnp.sum((stiefel.tcwy_matrix(v, use_pallas=False) - target) ** 2)
+
+    # A few SGD steps must reduce the loss (exercises Thm 4's setting).
+    l0 = float(loss(v))
+    for _ in range(40):
+        v = v - 0.1 * jax.grad(loss)(v)
+    assert float(loss(v)) < l0 * 0.7
+
+
+def test_bc_factors_reproduce_a():
+    """lr*A must equal B C^T for both inner products (Appendix A)."""
+    omega = random_stiefel(12, 3, seed=10)
+    grad = jnp.asarray(np.random.RandomState(11).randn(12, 3), jnp.float32)
+    lr = 0.37
+
+    # canonical: A = G W^T - W G^T
+    b, c = stiefel._bc_factors(omega, grad, lr, "canonical")
+    a_direct = lr * (grad @ omega.T - omega @ grad.T)
+    np.testing.assert_allclose(np.asarray(b @ c.T), np.asarray(a_direct),
+                               atol=1e-4)
+
+    b, c = stiefel._bc_factors(omega, grad, lr, "euclidean")
+    e = grad.T @ omega - omega.T @ grad
+    a_direct = lr * (grad @ omega.T - omega @ grad.T
+                     + 0.5 * omega @ e @ omega.T)
+    np.testing.assert_allclose(np.asarray(b @ c.T), np.asarray(a_direct),
+                               atol=1e-4)

@@ -1,0 +1,110 @@
+//! Checkpointing: save/restore the flat training state.
+//!
+//! Format (little-endian):
+//!   magic "CWYCKPT1" | u64 step | u64 n_tensors |
+//!   per tensor: u64 rank, u64 dims..., u64 elem_count, f32 data...
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::HostTensor;
+
+const MAGIC: &[u8; 8] = b"CWYCKPT1";
+
+pub fn save(path: impl AsRef<Path>, step: usize, state: &[HostTensor]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(step as u64).to_le_bytes());
+    buf.extend_from_slice(&(state.len() as u64).to_le_bytes());
+    for t in state {
+        let data = t
+            .as_f32()
+            .context("checkpointing supports f32 state only")?;
+        buf.extend_from_slice(&(t.shape.len() as u64).to_le_bytes());
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        for &v in data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut f = fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<(usize, Vec<HostTensor>)> {
+    let bytes = fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let mut off = 0usize;
+    let take_u64 = |bytes: &[u8], off: &mut usize| -> Result<u64> {
+        if *off + 8 > bytes.len() {
+            bail!("checkpoint truncated at byte {off}");
+        }
+        let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+        *off += 8;
+        Ok(v)
+    };
+    if bytes.len() < 8 || &bytes[..8] != MAGIC {
+        bail!("not a CWY checkpoint (bad magic)");
+    }
+    off += 8;
+    let step = take_u64(&bytes, &mut off)? as usize;
+    let n = take_u64(&bytes, &mut off)? as usize;
+    let mut state = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rank = take_u64(&bytes, &mut off)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(take_u64(&bytes, &mut off)? as usize);
+        }
+        let count = take_u64(&bytes, &mut off)? as usize;
+        if count != shape.iter().product::<usize>() {
+            bail!("checkpoint tensor count/shape mismatch");
+        }
+        if off + count * 4 > bytes.len() {
+            bail!("checkpoint truncated in tensor data");
+        }
+        let data: Vec<f32> = bytes[off..off + count * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        off += count * 4;
+        state.push(HostTensor::f32(shape, data));
+    }
+    Ok((step, state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("cwy_ckpt_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let state = vec![
+            HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect()),
+            HostTensor::f32(vec![], vec![7.5]),
+        ];
+        save(&path, 42, &state).unwrap();
+        let (step, got) = load(&path).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(got, state);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("cwy_ckpt_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Training metrics: per-step records, EMA smoothing, curve export.
+
+/// One recorded training step.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub metrics: Vec<f32>,
+    pub wall_s: f64,
+}
+
+/// Loss/metric history for a run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub records: Vec<StepRecord>,
+    pub metric_names: Vec<String>,
+}
+
+impl History {
+    pub fn new(metric_names: Vec<String>) -> History {
+        History { records: Vec::new(), metric_names }
+    }
+
+    pub fn push(&mut self, step: usize, loss: f32, metrics: Vec<f32>, wall_s: f64) {
+        self.records.push(StepRecord { step, loss, metrics, wall_s });
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the most recent `n` steps.
+    pub fn recent_mean_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Exponential moving average of the loss curve.
+    pub fn ema_loss(&self, alpha: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut ema = None;
+        for r in &self.records {
+            ema = Some(match ema {
+                None => r.loss,
+                Some(e) => alpha * r.loss + (1.0 - alpha) * e,
+            });
+            out.push(ema.unwrap());
+        }
+        out
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.records.iter().map(|r| r.wall_s).sum()
+    }
+
+    /// CSV with header `step,loss,<metrics...>,wall_s`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss");
+        for m in &self.metric_names {
+            out.push(',');
+            out.push_str(m);
+        }
+        out.push_str(",wall_s\n");
+        for r in &self.records {
+            out.push_str(&format!("{},{}", r.step, r.loss));
+            for m in &r.metrics {
+                out.push_str(&format!(",{m}"));
+            }
+            out.push_str(&format!(",{:.6}\n", r.wall_s));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> History {
+        let mut h = History::new(vec!["acc".into()]);
+        for i in 0..10 {
+            h.push(i, 10.0 - i as f32, vec![i as f32 / 10.0], 0.01);
+        }
+        h
+    }
+
+    #[test]
+    fn recent_mean() {
+        let h = sample();
+        assert_eq!(h.last_loss(), Some(1.0));
+        let m = h.recent_mean_loss(2).unwrap();
+        assert!((m - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_monotone_for_decreasing_loss() {
+        let h = sample();
+        let e = h.ema_loss(0.3);
+        assert_eq!(e.len(), 10);
+        for w in e.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6);
+        }
+    }
+
+    #[test]
+    fn csv_header_and_rows() {
+        let csv = sample().to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "step,loss,acc,wall_s");
+        assert_eq!(csv.lines().count(), 11);
+    }
+}

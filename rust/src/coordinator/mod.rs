@@ -1,0 +1,17 @@
+//! L3 coordinator: training orchestration over AOT artifacts.
+//!
+//! The paper's contribution is a parametrization (L1/L2), so the coordinator
+//! is the training fabric around it: generic trainer over step artifacts,
+//! simulated multi-worker data parallelism with rust-side all-reduce,
+//! schedules, metrics, checkpoints.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod parallel;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::History;
+pub use parallel::DataParallel;
+pub use schedule::Schedule;
+pub use trainer::{evaluate, DataProvider, Trainer};

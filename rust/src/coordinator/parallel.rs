@@ -1,0 +1,124 @@
+//! Simulated data-parallel training: W logical workers each compute
+//! gradients on a shard via the `*_grad` artifact; the coordinator
+//! all-reduces (averages) in rust and applies one fused `*_apply` update.
+//!
+//! The single CPU PJRT device executes worker grads sequentially — the
+//! *communication pattern* (shard -> grad -> all-reduce -> apply) is what
+//! this module exercises and tests; on a multi-device PJRT client the same
+//! loop maps 1:1 onto devices (DESIGN.md §5).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::metrics::History;
+use super::schedule::Schedule;
+use crate::runtime::engine::{Compiled, Engine};
+use crate::runtime::tensor::HostTensor;
+use crate::util::timing::Stopwatch;
+
+pub struct DataParallel {
+    grad_art: Rc<Compiled>,
+    apply_art: Rc<Compiled>,
+    /// Flat state of the apply artifact: params..., m..., v..., t.
+    pub state: Vec<HostTensor>,
+    pub schedule: Schedule,
+    pub history: History,
+    pub step: usize,
+    pub workers: usize,
+    n_params: usize,
+}
+
+impl DataParallel {
+    /// `base` is the artifact family name, e.g. "copy_cwy" (expects
+    /// `<base>_grad` and `<base>_apply` plus `<base>_step` for init state).
+    pub fn new(engine: &Engine, base: &str, workers: usize, schedule: Schedule) -> Result<DataParallel> {
+        let grad_art = engine.load(&format!("{base}_grad"))?;
+        let apply_art = engine.load(&format!("{base}_apply"))?;
+        let state = engine.initial_state(&format!("{base}_step"))?;
+        let n_params: usize = grad_art
+            .spec
+            .meta_str("n_params")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("{base}_grad missing n_params meta"))?;
+        if workers == 0 {
+            bail!("need at least one worker");
+        }
+        Ok(DataParallel {
+            grad_art,
+            apply_art,
+            state,
+            schedule,
+            history: History::new(vec!["loss".into()]),
+            step: 0,
+            workers,
+            n_params,
+        })
+    }
+
+    pub fn params(&self) -> &[HostTensor] {
+        &self.state[..self.n_params]
+    }
+
+    /// One data-parallel step over per-worker batches; returns mean loss.
+    pub fn train_step(&mut self, worker_batches: Vec<Vec<HostTensor>>) -> Result<f32> {
+        if worker_batches.len() != self.workers {
+            bail!(
+                "got {} worker batches, configured {}",
+                worker_batches.len(),
+                self.workers
+            );
+        }
+        let watch = Stopwatch::start();
+        let params = &self.state[..self.n_params];
+
+        // Fan out gradient computations (one PJRT execution per worker).
+        let mut grad_sum: Option<Vec<HostTensor>> = None;
+        let mut loss_sum = 0.0f32;
+        for batch in &worker_batches {
+            let mut inputs: Vec<&HostTensor> =
+                Vec::with_capacity(params.len() + batch.len());
+            inputs.extend(params.iter());
+            inputs.extend(batch.iter());
+            let out = self.grad_art.run_refs(&inputs)?;
+            let (grads, metrics) = out.split_at(self.n_params);
+            loss_sum += metrics[0].scalar()?;
+            grad_sum = Some(match grad_sum {
+                None => grads.to_vec(),
+                Some(mut acc) => {
+                    for (a, g) in acc.iter_mut().zip(grads) {
+                        let gv = g.as_f32()?;
+                        for (x, y) in a.as_f32_mut()?.iter_mut().zip(gv) {
+                            *x += *y;
+                        }
+                    }
+                    acc
+                }
+            });
+        }
+
+        // All-reduce: average.
+        let mut grads = grad_sum.unwrap();
+        let scale = 1.0 / self.workers as f32;
+        for g in grads.iter_mut() {
+            for x in g.as_f32_mut()? {
+                *x *= scale;
+            }
+        }
+
+        // Fused optimizer apply.
+        let lr = self.schedule.at(self.step);
+        let lr_t = HostTensor::scalar_f32(lr);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(self.state.len() + grads.len() + 1);
+        inputs.extend(self.state.iter());
+        inputs.extend(grads.iter());
+        inputs.push(&lr_t);
+        self.state = self.apply_art.run_refs(&inputs)?;
+
+        let loss = loss_sum / self.workers as f32;
+        self.history.push(self.step, loss, vec![], watch.elapsed_s());
+        self.step += 1;
+        Ok(loss)
+    }
+}

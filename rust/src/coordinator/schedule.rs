@@ -1,0 +1,88 @@
+//! Learning-rate schedules.
+
+/// Schedule kinds supported by the trainer CLI.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    Constant(f32),
+    /// lr0 / sqrt(1 + step) — the k^{-0.5} rate of the paper's Theorem 4.
+    InvSqrt(f32),
+    /// Linear warmup to `lr`, then constant.
+    Warmup { lr: f32, warmup_steps: usize },
+    /// Step decay: lr * gamma^(step / every).
+    StepDecay { lr: f32, gamma: f32, every: usize },
+}
+
+impl Schedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant(lr) => lr,
+            Schedule::InvSqrt(lr0) => lr0 / ((1 + step) as f32).sqrt(),
+            Schedule::Warmup { lr, warmup_steps } => {
+                if warmup_steps == 0 || step >= warmup_steps {
+                    lr
+                } else {
+                    lr * (step + 1) as f32 / warmup_steps as f32
+                }
+            }
+            Schedule::StepDecay { lr, gamma, every } => {
+                lr * gamma.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+
+    /// Parse "constant:0.001", "invsqrt:0.01", "warmup:0.001:100",
+    /// "stepdecay:0.01:0.5:200".
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["constant", lr] => Some(Schedule::Constant(lr.parse().ok()?)),
+            ["invsqrt", lr] => Some(Schedule::InvSqrt(lr.parse().ok()?)),
+            ["warmup", lr, w] => Some(Schedule::Warmup {
+                lr: lr.parse().ok()?,
+                warmup_steps: w.parse().ok()?,
+            }),
+            ["stepdecay", lr, g, e] => Some(Schedule::StepDecay {
+                lr: lr.parse().ok()?,
+                gamma: g.parse().ok()?,
+                every: e.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invsqrt_matches_theorem_rate() {
+        let s = Schedule::InvSqrt(1.0);
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!((s.at(3) - 0.5).abs() < 1e-6);
+        assert!((s.at(99) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = Schedule::Warmup { lr: 1.0, warmup_steps: 10 };
+        assert!(s.at(0) < s.at(5));
+        assert_eq!(s.at(10), 1.0);
+        assert_eq!(s.at(100), 1.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert!(matches!(Schedule::parse("constant:0.01"), Some(Schedule::Constant(_))));
+        assert!(matches!(Schedule::parse("invsqrt:0.1"), Some(Schedule::InvSqrt(_))));
+        assert!(Schedule::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = Schedule::StepDecay { lr: 1.0, gamma: 0.5, every: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(10), 0.5);
+        assert_eq!(s.at(25), 0.25);
+    }
+}

@@ -1,0 +1,158 @@
+//! Training orchestrator over AOT step artifacts.
+//!
+//! A `Trainer` owns the flat state vector and drives `state' = step(state,
+//! data, lr)` executions; the convention (state... / data... / lr inputs,
+//! state'... / metrics... outputs) is recorded per-artifact in the manifest,
+//! so this loop is generic over every task/method in the repo.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::metrics::History;
+use super::schedule::Schedule;
+use crate::runtime::engine::{Compiled, Engine};
+use crate::runtime::tensor::HostTensor;
+use crate::util::timing::Stopwatch;
+
+/// Supplies the `data...` tensors for each step (batch generators live in
+/// `crate::data`; examples adapt them through closures).
+pub trait DataProvider {
+    fn next_batch(&mut self) -> Vec<HostTensor>;
+}
+
+impl<F: FnMut() -> Vec<HostTensor>> DataProvider for F {
+    fn next_batch(&mut self) -> Vec<HostTensor> {
+        self()
+    }
+}
+
+pub struct Trainer {
+    pub artifact: Rc<Compiled>,
+    pub state: Vec<HostTensor>,
+    pub schedule: Schedule,
+    pub history: History,
+    pub step: usize,
+    n_state: usize,
+    n_data: usize,
+    has_lr: bool,
+}
+
+impl Trainer {
+    /// Build from a `*_step` artifact, loading its recorded initial state.
+    pub fn new(engine: &Engine, artifact_name: &str, schedule: Schedule) -> Result<Trainer> {
+        let artifact = engine.load(artifact_name)?;
+        let state = engine.initial_state(artifact_name)?;
+        let n_state = artifact.spec.n_state();
+        let n_data = artifact.spec.n_data();
+        if state.len() != n_state {
+            bail!(
+                "{artifact_name}: state.bin has {} tensors, manifest says {n_state}",
+                state.len()
+            );
+        }
+        // Output names beyond the state are the metric names.
+        let metric_names: Vec<String> = artifact.spec.outputs[n_state..]
+            .iter()
+            .map(|s| s.name.clone())
+            .collect();
+        Ok(Trainer {
+            artifact,
+            state,
+            schedule,
+            history: History::new(metric_names),
+            step: 0,
+            n_state,
+            n_data,
+            has_lr: true,
+        })
+    }
+
+    /// Restore state from a checkpoint produced by `checkpoint::save`.
+    pub fn restore(&mut self, step: usize, state: Vec<HostTensor>) -> Result<()> {
+        if state.len() != self.n_state {
+            bail!("checkpoint has {} tensors, expected {}", state.len(), self.n_state);
+        }
+        self.state = state;
+        self.step = step;
+        Ok(())
+    }
+
+    /// One fused train step; returns (loss, metrics beyond loss).
+    pub fn train_step(&mut self, data: Vec<HostTensor>) -> Result<(f32, Vec<f32>)> {
+        if data.len() != self.n_data {
+            bail!("step got {} data tensors, expected {}", data.len(), self.n_data);
+        }
+        let lr = self.schedule.at(self.step);
+        let lr_t = HostTensor::scalar_f32(lr);
+        // Borrow the state instead of cloning it — at N=1024-scale models
+        // the state clone dominates rust-side step time (§Perf).
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(self.n_state + self.n_data + 1);
+        inputs.extend(self.state.iter());
+        inputs.extend(data.iter());
+        if self.has_lr {
+            inputs.push(&lr_t);
+        }
+        let watch = Stopwatch::start();
+        let mut outputs = self.artifact.run_refs(&inputs)?;
+        let wall = watch.elapsed_s();
+
+        let metrics_out: Vec<HostTensor> = outputs.split_off(self.n_state);
+        self.state = outputs;
+        let loss = metrics_out
+            .first()
+            .map(|t| t.scalar())
+            .transpose()?
+            .unwrap_or(f32::NAN);
+        let extra: Vec<f32> = metrics_out[1..]
+            .iter()
+            .map(|t| t.scalar().unwrap_or(f32::NAN))
+            .collect();
+        self.history.push(self.step, loss, extra.clone(), wall);
+        self.step += 1;
+        Ok((loss, extra))
+    }
+
+    /// Run `steps` iterations pulling batches from `provider`; optional
+    /// per-step callback for logging.
+    pub fn train(
+        &mut self,
+        provider: &mut dyn DataProvider,
+        steps: usize,
+        mut on_step: impl FnMut(usize, f32, &[f32]),
+    ) -> Result<()> {
+        for _ in 0..steps {
+            let batch = provider.next_batch();
+            let (loss, metrics) = self.train_step(batch)?;
+            on_step(self.step - 1, loss, &metrics);
+        }
+        Ok(())
+    }
+
+    /// The params prefix of the state (before optimizer moments), sized via
+    /// the artifact meta's `n_params` when present.
+    pub fn params(&self) -> &[HostTensor] {
+        let n_params: usize = self
+            .artifact
+            .spec
+            .meta_str("n_params")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(self.n_state);
+        &self.state[..n_params.min(self.state.len())]
+    }
+}
+
+/// Run a forward-only `*_eval` artifact on (params..., data...).
+pub fn evaluate(
+    eval_art: &Compiled,
+    params: &[HostTensor],
+    data: Vec<HostTensor>,
+) -> Result<Vec<f32>> {
+    let mut inputs: Vec<&HostTensor> =
+        Vec::with_capacity(params.len() + data.len());
+    inputs.extend(params.iter());
+    inputs.extend(data.iter());
+    let out = eval_art.run_refs(&inputs)?;
+    out.iter().map(|t| t.scalar()).collect()
+}

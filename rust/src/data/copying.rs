@@ -1,0 +1,101 @@
+//! Copying-task generator (paper §4.1).
+//!
+//! Input:  10 digits from {1..8}, then T blanks (0), one marker (9),
+//!         then 9 blanks.
+//! Target: T+10 blanks, then the 10 input digits.
+//! The no-memory baseline cross-entropy is 10 log 8 / (T + 20).
+
+use crate::util::rng::Pcg32;
+
+/// One generated batch of the copying task, token- and target-major.
+pub struct CopyBatch {
+    /// (batch, t_total) input tokens in 0..=9, flattened row-major.
+    pub tokens: Vec<i32>,
+    /// (batch, t_total) target classes in 0..=8, flattened row-major.
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub t_total: usize,
+}
+
+pub struct CopyTask {
+    pub t_blank: usize,
+    pub batch: usize,
+    rng: Pcg32,
+}
+
+impl CopyTask {
+    pub fn new(t_blank: usize, batch: usize, seed: u64) -> CopyTask {
+        CopyTask { t_blank, batch, rng: Pcg32::new(seed, 101) }
+    }
+
+    pub fn t_total(&self) -> usize {
+        self.t_blank + 20
+    }
+
+    /// The paper's memoryless-baseline cross entropy: 10 log 8 / (T + 20).
+    pub fn baseline_ce(&self) -> f32 {
+        10.0 * (8.0f32).ln() / (self.t_blank as f32 + 20.0)
+    }
+
+    pub fn next_batch(&mut self) -> CopyBatch {
+        let t_total = self.t_total();
+        let mut tokens = vec![0i32; self.batch * t_total];
+        let mut targets = vec![0i32; self.batch * t_total];
+        for b in 0..self.batch {
+            let row = b * t_total;
+            let digits: Vec<i32> =
+                (0..10).map(|_| 1 + self.rng.below(8) as i32).collect();
+            for (i, &d) in digits.iter().enumerate() {
+                tokens[row + i] = d;
+            }
+            // positions 10 .. 10+t_blank are blanks (already 0)
+            tokens[row + 10 + self.t_blank] = 9; // start marker
+            // final 9 positions blank
+            for (i, &d) in digits.iter().enumerate() {
+                targets[row + self.t_blank + 10 + i] = d;
+            }
+        }
+        CopyBatch { tokens, targets, batch: self.batch, t_total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let mut task = CopyTask::new(30, 4, 7);
+        let b = task.next_batch();
+        assert_eq!(b.t_total, 50);
+        for r in 0..4 {
+            let row = &b.tokens[r * 50..(r + 1) * 50];
+            let tgt = &b.targets[r * 50..(r + 1) * 50];
+            // first ten are digits 1..8
+            assert!(row[..10].iter().all(|&t| (1..=8).contains(&t)));
+            // blanks until the marker
+            assert!(row[10..40].iter().all(|&t| t == 0));
+            assert_eq!(row[40], 9);
+            assert!(row[41..].iter().all(|&t| t == 0));
+            // targets: blanks then the digits
+            assert!(tgt[..40].iter().all(|&t| t == 0));
+            assert_eq!(&tgt[40..], &row[..10]);
+        }
+    }
+
+    #[test]
+    fn baseline_matches_paper_formula() {
+        let task = CopyTask::new(1000, 1, 0);
+        let expect = 10.0 * (8.0f32).ln() / 1020.0;
+        assert!((task.baseline_ce() - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = CopyTask::new(10, 2, 5).next_batch();
+        let b = CopyTask::new(10, 2, 5).next_batch();
+        assert_eq!(a.tokens, b.tokens);
+        let c = CopyTask::new(10, 2, 6).next_batch();
+        assert_ne!(a.tokens, c.tokens);
+    }
+}

@@ -1,0 +1,160 @@
+//! Synthetic bilingual corpus — the Tatoeba stand-in for the NMT experiment
+//! (paper §4.2; DESIGN.md §4.3).
+//!
+//! A toy source grammar generates subject-verb-object(-modifier) sentences;
+//! the "translation" applies a deterministic lexicon plus a systematic
+//! reordering (adjective-noun swap and verb-final order), so the model must
+//! learn both token mapping and alignment — exactly what attention is for.
+//! Vocabulary is a fixed 64-token space shared with the exported artifacts
+//! (NMT_CFG.vocab): 0 = pad, 1 = BOS, 2 = EOS.
+
+use crate::util::rng::Pcg32;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// First content-token id; source and target use disjoint content ranges.
+const SRC_BASE: i32 = 3;
+const TGT_BASE: i32 = 32;
+
+const N_SUBJ: u32 = 6;
+const N_VERB: u32 = 6;
+const N_OBJ: u32 = 8;
+const N_ADJ: u32 = 6;
+
+/// One aligned sentence pair (unpadded token ids).
+#[derive(Clone, Debug)]
+pub struct Pair {
+    pub src: Vec<i32>,
+    pub tgt: Vec<i32>,
+}
+
+pub struct CorpusGen {
+    rng: Pcg32,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64) -> CorpusGen {
+        CorpusGen { rng: Pcg32::new(seed, 303) }
+    }
+
+    /// Sample one sentence pair from the toy grammar.
+    ///
+    /// Source:  SUBJ VERB [ADJ] OBJ          (English-like order)
+    /// Target:  subj [obj adj-swapped] verb  (verb-final, adj after noun)
+    pub fn pair(&mut self) -> Pair {
+        let subj = self.rng.below(N_SUBJ) as i32;
+        let verb = self.rng.below(N_VERB) as i32;
+        let obj = self.rng.below(N_OBJ) as i32;
+        let has_adj = self.rng.uniform() < 0.5;
+        let adj = self.rng.below(N_ADJ) as i32;
+
+        let s_subj = SRC_BASE + subj;
+        let s_verb = SRC_BASE + N_SUBJ as i32 + verb;
+        let s_obj = SRC_BASE + (N_SUBJ + N_VERB) as i32 + obj;
+        let s_adj = SRC_BASE + (N_SUBJ + N_VERB + N_OBJ) as i32 + adj;
+
+        let t_subj = TGT_BASE + subj;
+        let t_verb = TGT_BASE + N_SUBJ as i32 + verb;
+        let t_obj = TGT_BASE + (N_SUBJ + N_VERB) as i32 + obj;
+        let t_adj = TGT_BASE + (N_SUBJ + N_VERB + N_OBJ) as i32 + adj;
+
+        let mut src = vec![s_subj, s_verb];
+        if has_adj {
+            src.push(s_adj);
+        }
+        src.push(s_obj);
+        src.push(EOS);
+
+        // Target: verb-final, noun-adjective order swapped.
+        let mut tgt = vec![t_subj, t_obj];
+        if has_adj {
+            tgt.push(t_adj);
+        }
+        tgt.push(t_verb);
+        tgt.push(EOS);
+
+        Pair { src, tgt }
+    }
+
+    /// A padded batch for the AOT artifact shapes (B, ts) / (B, tt).
+    pub fn batch(&mut self, b: usize, ts: usize, tt: usize) -> NmtBatch {
+        let mut src = vec![PAD; b * ts];
+        let mut tgt_in = vec![PAD; b * tt];
+        let mut tgt_out = vec![PAD; b * tt];
+        for r in 0..b {
+            let p = self.pair();
+            for (i, &tok) in p.src.iter().take(ts).enumerate() {
+                src[r * ts + i] = tok;
+            }
+            // decoder input = BOS + tgt[..-1], output = tgt
+            tgt_in[r * tt] = BOS;
+            for (i, &tok) in p.tgt.iter().take(tt - 1).enumerate() {
+                tgt_in[r * tt + i + 1] = tok;
+            }
+            for (i, &tok) in p.tgt.iter().take(tt).enumerate() {
+                tgt_out[r * tt + i] = tok;
+            }
+        }
+        NmtBatch { src, tgt_in, tgt_out, batch: b, ts, tt }
+    }
+}
+
+/// Padded NMT batch matching the artifact input layout.
+pub struct NmtBatch {
+    pub src: Vec<i32>,
+    pub tgt_in: Vec<i32>,
+    pub tgt_out: Vec<i32>,
+    pub batch: usize,
+    pub ts: usize,
+    pub tt: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_bounds() {
+        let mut g = CorpusGen::new(1);
+        for _ in 0..200 {
+            let p = g.pair();
+            assert!(p.src.iter().all(|&t| t == EOS || (SRC_BASE..TGT_BASE).contains(&t)));
+            assert!(p.tgt.iter().all(|&t| t == EOS || (TGT_BASE..64).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn translation_is_deterministic_reordering() {
+        let mut g = CorpusGen::new(2);
+        for _ in 0..100 {
+            let p = g.pair();
+            // token counts must match (same content words + EOS)
+            assert_eq!(p.src.len(), p.tgt.len());
+            // verb-final property: last content token of tgt is a verb id
+            let verb_range = TGT_BASE + N_SUBJ as i32
+                ..TGT_BASE + (N_SUBJ + N_VERB) as i32;
+            let last_content = p.tgt[p.tgt.len() - 2];
+            assert!(verb_range.contains(&last_content));
+        }
+    }
+
+    #[test]
+    fn batch_layout() {
+        let mut g = CorpusGen::new(3);
+        let b = g.batch(4, 12, 12);
+        assert_eq!(b.src.len(), 48);
+        // decoder input starts with BOS
+        for r in 0..4 {
+            assert_eq!(b.tgt_in[r * 12], BOS);
+        }
+        // shifted alignment: tgt_in[i+1] == tgt_out[i] for content tokens
+        for r in 0..4 {
+            for i in 0..11 {
+                if b.tgt_out[r * 12 + i] != PAD && b.tgt_in[r * 12 + i + 1] != PAD {
+                    assert_eq!(b.tgt_in[r * 12 + i + 1], b.tgt_out[r * 12 + i]);
+                }
+            }
+        }
+    }
+}

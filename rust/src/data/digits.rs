@@ -1,0 +1,153 @@
+//! Procedural pixel-digit dataset — the MNIST stand-in for the
+//! pixel-by-pixel classification experiment (paper §4.1; DESIGN.md §4.3).
+//!
+//! Each sample is a 14x14 grayscale glyph of a digit 0-9 drawn from stroke
+//! segments, jittered in position/thickness/noise, flattened to a length-196
+//! pixel sequence (optionally under a fixed random permutation, matching the
+//! "permuted MNIST" variant of Fig. 4b).
+
+use crate::util::rng::Pcg32;
+
+pub const SIDE: usize = 14;
+pub const SEQ_LEN: usize = SIDE * SIDE;
+
+/// Stroke segments per digit in a 0..=6 coordinate grid (x0,y0,x1,y1).
+const STROKES: [&[(i32, i32, i32, i32)]; 10] = [
+    // 0
+    &[(1, 0, 5, 0), (5, 0, 5, 6), (5, 6, 1, 6), (1, 6, 1, 0)],
+    // 1
+    &[(3, 0, 3, 6), (2, 1, 3, 0)],
+    // 2
+    &[(1, 1, 5, 0), (5, 0, 5, 3), (5, 3, 1, 6), (1, 6, 5, 6)],
+    // 3
+    &[(1, 0, 5, 0), (5, 0, 5, 6), (5, 6, 1, 6), (2, 3, 5, 3)],
+    // 4
+    &[(1, 0, 1, 3), (1, 3, 5, 3), (4, 0, 4, 6)],
+    // 5
+    &[(5, 0, 1, 0), (1, 0, 1, 3), (1, 3, 5, 3), (5, 3, 5, 6), (5, 6, 1, 6)],
+    // 6
+    &[(5, 0, 1, 2), (1, 2, 1, 6), (1, 6, 5, 6), (5, 6, 5, 3), (5, 3, 1, 3)],
+    // 7
+    &[(1, 0, 5, 0), (5, 0, 2, 6)],
+    // 8
+    &[(1, 0, 5, 0), (5, 0, 5, 6), (5, 6, 1, 6), (1, 6, 1, 0), (1, 3, 5, 3)],
+    // 9
+    &[(5, 3, 1, 3), (1, 3, 1, 0), (1, 0, 5, 0), (5, 0, 5, 6), (5, 6, 2, 6)],
+];
+
+/// One batch: pixels (batch, SEQ_LEN) in [0,1], labels (batch,).
+pub struct DigitBatch {
+    pub pixels: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+}
+
+pub struct DigitTask {
+    pub batch: usize,
+    permutation: Option<Vec<usize>>,
+    rng: Pcg32,
+}
+
+impl DigitTask {
+    pub fn new(batch: usize, seed: u64, permuted: bool) -> DigitTask {
+        let permutation = if permuted {
+            // Fixed permutation drawn from an independent stream so the
+            // train/val/test splits share it (as in permuted MNIST).
+            let mut prng = Pcg32::new(0xfeed, 9);
+            Some(prng.permutation(SEQ_LEN))
+        } else {
+            None
+        };
+        DigitTask { batch, permutation, rng: Pcg32::new(seed, 202) }
+    }
+
+    /// Render a digit glyph into a SIDE x SIDE image with jitter + noise.
+    fn render(&mut self, digit: usize) -> Vec<f32> {
+        let mut img = vec![0.0f32; SEQ_LEN];
+        let ox = self.rng.below(3) as i32 + 1; // offset 1..3
+        let oy = self.rng.below(3) as i32 + 1;
+        let scale = 1.5 + self.rng.uniform() * 0.4; // grid 0..6 -> ~0..10 px
+        for &(x0, y0, x1, y1) in STROKES[digit] {
+            // Bresenham-ish dense sampling of the segment.
+            let steps = 24;
+            for s in 0..=steps {
+                let t = s as f32 / steps as f32;
+                let x = (x0 as f32 + t * (x1 - x0) as f32) * scale + ox as f32;
+                let y = (y0 as f32 + t * (y1 - y0) as f32) * scale + oy as f32;
+                let (xi, yi) = (x.round() as i32, y.round() as i32);
+                for (dx, dy, w) in [(0, 0, 1.0f32), (1, 0, 0.35), (0, 1, 0.35)] {
+                    let (px, py) = (xi + dx, yi + dy);
+                    if (0..SIDE as i32).contains(&px) && (0..SIDE as i32).contains(&py) {
+                        let idx = py as usize * SIDE + px as usize;
+                        img[idx] = (img[idx] + w).min(1.0);
+                    }
+                }
+            }
+        }
+        // Light pixel noise.
+        for p in img.iter_mut() {
+            *p = (*p + self.rng.normal() * 0.02).clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    pub fn next_batch(&mut self) -> DigitBatch {
+        let mut pixels = Vec::with_capacity(self.batch * SEQ_LEN);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let digit = self.rng.below(10) as usize;
+            let img = self.render(digit);
+            match &self.permutation {
+                Some(p) => pixels.extend(p.iter().map(|&i| img[i])),
+                None => pixels.extend_from_slice(&img),
+            }
+            labels.push(digit as i32);
+        }
+        DigitBatch { pixels, labels, batch: self.batch }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_range() {
+        let mut t = DigitTask::new(8, 3, false);
+        let b = t.next_batch();
+        assert_eq!(b.pixels.len(), 8 * SEQ_LEN);
+        assert_eq!(b.labels.len(), 8);
+        assert!(b.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        assert!(b.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn digits_are_distinguishable() {
+        // Mean image of distinct digits should differ substantially.
+        let mut t = DigitTask::new(1, 0, false);
+        let a = t.render(0);
+        let b = t.render(1);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 5.0, "digits 0 and 1 too similar: {diff}");
+    }
+
+    #[test]
+    fn glyphs_have_ink() {
+        let mut t = DigitTask::new(1, 1, false);
+        for d in 0..10 {
+            let img = t.render(d);
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 3.0, "digit {d} nearly blank: ink={ink}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_shared_and_applied() {
+        let mut a = DigitTask::new(4, 9, true);
+        let mut b = DigitTask::new(4, 9, true);
+        assert_eq!(a.next_batch().pixels, b.next_batch().pixels);
+        // permuted differs from unpermuted stream with the same seed
+        let mut c = DigitTask::new(4, 9, false);
+        assert_ne!(a.next_batch().pixels, c.next_batch().pixels);
+    }
+}

@@ -1,0 +1,7 @@
+//! Dataset generators (all procedural — DESIGN.md §4.3 documents the
+//! substitutions for MNIST / Tatoeba / KTH).
+
+pub mod copying;
+pub mod corpus;
+pub mod digits;
+pub mod video;

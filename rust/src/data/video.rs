@@ -1,0 +1,178 @@
+//! Moving-shapes video generator — the KTH stand-in for the video-prediction
+//! experiment (paper §4.3; DESIGN.md §4.3).
+//!
+//! KTH's structure is a static camera with one actor performing one of six
+//! motion classes.  The generator mirrors that: one bright shape on a dark
+//! background following a class-specific dynamic:
+//!   Walk  — slow horizontal translation
+//!   Jog   — medium translation
+//!   Run   — fast translation
+//!   Box   — small-amplitude horizontal oscillation (punching)
+//!   Wave  — vertical-arm oscillation (shape sways up/down)
+//!   Clap  — two shapes meeting periodically
+//! Learning to predict the next frame requires exactly the temporal state
+//! ConvNERU's recurrence provides, and the translation-vs-oscillation split
+//! mirrors KTH's per-class difficulty ordering.
+
+use crate::util::rng::Pcg32;
+
+pub const CLASSES: [&str; 6] = ["walk", "jog", "run", "box", "wave", "clap"];
+
+/// One clip: frames (t, h, w, 1) flattened row-major, values in [0,1].
+pub struct Clip {
+    pub frames: Vec<f32>,
+    pub t: usize,
+    pub hw: usize,
+}
+
+pub struct VideoTask {
+    pub hw: usize,
+    pub t: usize,
+    pub batch: usize,
+    rng: Pcg32,
+}
+
+impl VideoTask {
+    pub fn new(hw: usize, t: usize, batch: usize, seed: u64) -> VideoTask {
+        VideoTask { hw, t, batch, rng: Pcg32::new(seed, 404) }
+    }
+
+    fn draw_blob(&self, frame: &mut [f32], cx: f32, cy: f32, r: f32) {
+        let hw = self.hw as i32;
+        for y in 0..hw {
+            for x in 0..hw {
+                let dx = x as f32 - cx;
+                let dy = y as f32 - cy;
+                let d2 = dx * dx + dy * dy;
+                let v = (-d2 / (r * r)).exp();
+                let idx = (y * hw + x) as usize;
+                frame[idx] = (frame[idx] + v).min(1.0);
+            }
+        }
+    }
+
+    /// Render one clip of the given class (0..6).
+    pub fn clip(&mut self, class: usize) -> Clip {
+        let hw = self.hw;
+        let n = hw * hw;
+        let mut frames = vec![0.0f32; self.t * n];
+        let cy0 = hw as f32 * (0.35 + 0.3 * self.rng.uniform());
+        let cx0 = hw as f32 * (0.2 + 0.2 * self.rng.uniform());
+        let phase = self.rng.uniform() * std::f32::consts::TAU;
+        let r = hw as f32 * 0.12;
+
+        for t in 0..self.t {
+            let tf = t as f32;
+            let frame = &mut frames[t * n..(t + 1) * n];
+            match class {
+                0 | 1 | 2 => {
+                    // walk/jog/run: translation at increasing speed
+                    let speed = [0.4, 0.8, 1.4][class];
+                    let cx = (cx0 + speed * tf) % hw as f32;
+                    let bob = (tf * 1.3 + phase).sin() * 0.5;
+                    self.draw_blob(frame, cx, cy0 + bob, r);
+                }
+                3 => {
+                    // box: fast small horizontal oscillation
+                    let cx = cx0 + 2.0 * (tf * 2.1 + phase).sin();
+                    self.draw_blob(frame, cx, cy0, r);
+                }
+                4 => {
+                    // wave: vertical oscillation
+                    let cy = cy0 + 2.5 * (tf * 1.1 + phase).sin();
+                    self.draw_blob(frame, cx0, cy, r);
+                }
+                5 => {
+                    // clap: two blobs meeting periodically
+                    let sep = 3.0 + 2.5 * (tf * 1.7 + phase).cos();
+                    self.draw_blob(frame, cx0 - sep, cy0, r * 0.8);
+                    self.draw_blob(frame, cx0 + sep, cy0, r * 0.8);
+                }
+                _ => panic!("class out of range"),
+            }
+            // sensor noise
+            for p in frame.iter_mut() {
+                *p = (*p + self.rng.normal() * 0.01).clamp(0.0, 1.0);
+            }
+        }
+        Clip { frames, t: self.t, hw }
+    }
+
+    /// A batch for the artifact input (batch, t, hw, hw, 1), single class.
+    pub fn batch_of_class(&mut self, class: usize) -> Vec<f32> {
+        let n = self.t * self.hw * self.hw;
+        let mut out = Vec::with_capacity(self.batch * n);
+        for _ in 0..self.batch {
+            out.extend(self.clip(class).frames);
+        }
+        out
+    }
+
+    /// A mixed-class batch (uniform over the six classes).
+    pub fn batch_mixed(&mut self) -> Vec<f32> {
+        let n = self.t * self.hw * self.hw;
+        let mut out = Vec::with_capacity(self.batch * n);
+        for _ in 0..self.batch {
+            let class = self.rng.below(6) as usize;
+            out.extend(self.clip(class).frames);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_shape_and_range() {
+        let mut v = VideoTask::new(16, 8, 2, 1);
+        let c = v.clip(0);
+        assert_eq!(c.frames.len(), 8 * 256);
+        assert!(c.frames.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn every_frame_has_signal() {
+        let mut v = VideoTask::new(16, 8, 1, 2);
+        for class in 0..6 {
+            let c = v.clip(class);
+            for t in 0..8 {
+                let e: f32 = c.frames[t * 256..(t + 1) * 256].iter().sum();
+                assert!(e > 1.0, "class {class} frame {t} empty: {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn translation_classes_move() {
+        // centroid of the run class must displace much more than box.
+        let centroid = |frame: &[f32], hw: usize| -> f32 {
+            let total: f32 = frame.iter().sum();
+            let mut cx = 0.0;
+            for y in 0..hw {
+                for x in 0..hw {
+                    cx += x as f32 * frame[y * hw + x];
+                }
+            }
+            cx / total.max(1e-6)
+        };
+        let mut v = VideoTask::new(16, 6, 1, 3);
+        let run = v.clip(2);
+        let boxc = v.clip(3);
+        let drun = (centroid(&run.frames[5 * 256..], 16)
+            - centroid(&run.frames[..256], 16))
+        .abs();
+        let dbox = (centroid(&boxc.frames[5 * 256..], 16)
+            - centroid(&boxc.frames[..256], 16))
+        .abs();
+        assert!(drun > dbox, "run moved {drun}, box moved {dbox}");
+    }
+
+    #[test]
+    fn batch_sizes() {
+        let mut v = VideoTask::new(16, 8, 3, 4);
+        assert_eq!(v.batch_of_class(0).len(), 3 * 8 * 256);
+        assert_eq!(v.batch_mixed().len(), 3 * 8 * 256);
+    }
+}

@@ -1,0 +1,23 @@
+//! # cwy — CWY / T-CWY orthogonal-optimization framework
+//!
+//! Rust + JAX + Pallas reproduction of *"CWY Parametrization: a Solution for
+//! Parallelized Optimization of Orthogonal and Stiefel Matrices"*
+//! (Likhosherstov, Davis, Choromanski, Weller; AISTATS 2021).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** Pallas kernels and **L2** JAX models live under `python/compile/`
+//!   and are lowered once (`make artifacts`) to HLO text.
+//! * **L3** (this crate) is the coordinator: it loads the artifacts through
+//!   [`runtime::Engine`], trains with [`coordinator::Trainer`] /
+//!   [`coordinator::DataParallel`], generates data with [`data`], and
+//!   cross-checks everything against the native implementations in
+//!   [`orthogonal`] + [`linalg`].
+
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod optim;
+pub mod orthogonal;
+pub mod report;
+pub mod runtime;
+pub mod util;

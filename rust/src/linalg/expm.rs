@@ -1,0 +1,102 @@
+//! Matrix exponential and Cayley transform (native baselines for EXPRNN /
+//! SCORNN and the Figure 1c harness).
+
+use super::matrix::Matrix;
+use super::qr::gauss_jordan_inv;
+
+/// exp(A) via Taylor scaling-and-squaring — mirrors `linalg_hlo.expm_taylor`
+/// so the native and AOT paths are numerically comparable.
+pub fn expm(a: &Matrix, order: usize, squarings: usize) -> Matrix {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    let scaled = a.scale(1.0 / (1u64 << squarings) as f32);
+    let mut term = Matrix::eye(n);
+    let mut acc = Matrix::eye(n);
+    for k in 1..=order {
+        term = term.matmul(&scaled).scale(1.0 / k as f32);
+        acc = acc.add(&term);
+    }
+    for _ in 0..squarings {
+        acc = acc.matmul(&acc);
+    }
+    acc
+}
+
+/// Default accuracy settings used across the repo.
+pub fn expm_default(a: &Matrix) -> Matrix {
+    expm(a, 12, 6)
+}
+
+/// Cayley transform (I + A/2)^{-1}(I - A/2); maps Skew(N) into O^{+1}(N).
+pub fn cayley(a: &Matrix) -> Matrix {
+    let n = a.rows;
+    let eye = Matrix::eye(n);
+    let plus = eye.add(&a.scale(0.5));
+    let minus = eye.sub(&a.scale(0.5));
+    gauss_jordan_inv(&plus).matmul(&minus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn expm_zero_is_identity() {
+        let e = expm_default(&Matrix::zeros(5, 5));
+        assert!(e.max_abs_diff(&Matrix::eye(5)) < 1e-6);
+    }
+
+    #[test]
+    fn expm_rotation_2x2() {
+        // exp([[0, -t], [t, 0]]) = [[cos t, -sin t], [sin t, cos t]]
+        let t = 0.7f32;
+        let a = Matrix::from_rows(2, 2, vec![0.0, -t, t, 0.0]);
+        let e = expm_default(&a);
+        assert!((e[(0, 0)] - t.cos()).abs() < 1e-5);
+        assert!((e[(0, 1)] + t.sin()).abs() < 1e-5);
+        assert!((e[(1, 0)] - t.sin()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn expm_of_skew_is_orthogonal() {
+        forall(
+            12,
+            |rng| {
+                let n = 2 + rng.below(10) as usize;
+                Matrix::random_normal(rng, n, n, 0.5).skew()
+            },
+            |a| {
+                let q = expm_default(a);
+                let d = q.orthogonality_defect();
+                if d < 1e-3 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn cayley_of_skew_is_orthogonal() {
+        forall(
+            12,
+            |rng| {
+                let n = 2 + rng.below(10) as usize;
+                Matrix::random_normal(rng, n, n, 0.7).skew()
+            },
+            |a| {
+                let q = cayley(a);
+                let d = q.orthogonality_defect();
+                if d < 1e-3 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn cayley_determinant_positive_branch() {
+        // Cayley hits O^{+1}(N): check det > 0 via QR-free 2x2 case.
+        let a = Matrix::from_rows(2, 2, vec![0.0, 1.0, -1.0, 0.0]);
+        let q = cayley(&a);
+        let det = q[(0, 0)] * q[(1, 1)] - q[(0, 1)] * q[(1, 0)];
+        assert!(det > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Pure-Rust dense linear algebra substrate.
+//!
+//! Used by the native baseline implementations in `crate::orthogonal`
+//! (Tables 1-2 harness, property tests) and by the coordinator for
+//! orthogonality verification of artifact outputs.  Mirrors the
+//! custom-call-free algorithms exported at L2 (`python/compile/linalg_hlo.py`)
+//! so both sides can be cross-checked.
+
+pub mod expm;
+pub mod matrix;
+pub mod qr;
+pub mod tri;
+
+pub use expm::{cayley, expm, expm_default};
+pub use matrix::Matrix;
+pub use qr::{gauss_jordan_inv, householder_qr};
+pub use tri::{triu_inv, triu_inv_neumann, triu_solve, triu_solve_vec};

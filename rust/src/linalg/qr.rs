@@ -1,0 +1,180 @@
+//! Householder QR (thin) and Gauss-Jordan dense inverse.
+
+use super::matrix::Matrix;
+
+/// Thin QR of A (n x m, n >= m): A = Q R with Q in St(n, m) and
+/// diag(R) > 0 (the `qf` convention of the paper's QR retraction).
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (n, m) = (a.rows, a.cols);
+    assert!(n >= m, "thin QR needs n >= m");
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(m);
+
+    for k in 0..m {
+        // Householder vector for column k below the diagonal.
+        let mut x = vec![0.0f32; n];
+        for i in k..n {
+            x[i] = r[(i, k)];
+        }
+        let normx = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if normx < 1e-12 {
+            vs.push(x);
+            continue;
+        }
+        let alpha = if x[k] >= 0.0 { -normx } else { normx };
+        x[k] -= alpha;
+        let vnorm2: f32 = x.iter().map(|v| v * v).sum::<f32>().max(1e-24);
+        // R <- H R, H = I - 2 v v^T / ||v||^2
+        for j in 0..m {
+            let dot: f32 = (k..n).map(|i| x[i] * r[(i, j)]).sum();
+            let c = 2.0 * dot / vnorm2;
+            for i in k..n {
+                r[(i, j)] -= c * x[i];
+            }
+        }
+        vs.push(x);
+    }
+
+    // Q = H_1 ... H_m [I; 0]
+    let mut q = Matrix::eye_rect(n, m);
+    for (k, v) in vs.iter().enumerate().rev() {
+        let vnorm2: f32 = v.iter().map(|x| x * x).sum::<f32>().max(1e-24);
+        for j in 0..m {
+            let dot: f32 = (k..n).map(|i| v[i] * q[(i, j)]).sum();
+            let c = 2.0 * dot / vnorm2;
+            for i in k..n {
+                q[(i, j)] -= c * v[i];
+            }
+        }
+    }
+
+    // Sign-fix so diag(R) >= 0.
+    let mut r_out = Matrix::zeros(m, m);
+    for i in 0..m {
+        let s = if r[(i, i)] < 0.0 { -1.0 } else { 1.0 };
+        for j in 0..m {
+            r_out[(i, j)] = s * r[(i, j)];
+        }
+        for row in 0..n {
+            q[(row, i)] *= s;
+        }
+    }
+    (q, r_out)
+}
+
+/// Dense inverse by Gauss-Jordan with partial pivoting.
+pub fn gauss_jordan_inv(a: &Matrix) -> Matrix {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    let mut aug = Matrix::zeros(n, 2 * n);
+    for i in 0..n {
+        for j in 0..n {
+            aug[(i, j)] = a[(i, j)];
+        }
+        aug[(i, n + i)] = 1.0;
+    }
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        for row in col + 1..n {
+            if aug[(row, col)].abs() > aug[(piv, col)].abs() {
+                piv = row;
+            }
+        }
+        if piv != col {
+            for j in 0..2 * n {
+                let tmp = aug[(col, j)];
+                aug[(col, j)] = aug[(piv, j)];
+                aug[(piv, j)] = tmp;
+            }
+        }
+        let d = aug[(col, col)];
+        assert!(d.abs() > 1e-12, "singular matrix in gauss_jordan_inv");
+        for j in 0..2 * n {
+            aug[(col, j)] /= d;
+        }
+        for row in 0..n {
+            if row == col {
+                continue;
+            }
+            let f = aug[(row, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..2 * n {
+                aug[(row, j)] -= f * aug[(col, j)];
+            }
+        }
+    }
+    let mut out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            out[(i, j)] = aug[(i, n + j)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn qr_reconstructs() {
+        forall(
+            16,
+            |rng| {
+                let n = 4 + rng.below(12) as usize;
+                let m = 1 + rng.below(n as u32 - 1) as usize;
+                Matrix::random_normal(rng, n, m, 1.0)
+            },
+            |a| {
+                let (q, r) = householder_qr(a);
+                let back = q.matmul(&r);
+                let d = back.max_abs_diff(a);
+                if d < 1e-3 { Ok(()) } else { Err(format!("recon diff {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn qr_orthogonal_positive_diag() {
+        forall(
+            16,
+            |rng| Matrix::random_normal(rng, 10, 6, 1.0),
+            |a| {
+                let (q, r) = householder_qr(a);
+                if q.orthogonality_defect() > 1e-3 {
+                    return Err("Q not orthogonal".into());
+                }
+                for i in 0..r.rows {
+                    if r[(i, i)] < 0.0 {
+                        return Err(format!("R[{i},{i}] negative"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gj_inverse() {
+        forall(
+            16,
+            |rng| {
+                let n = 1 + rng.below(10) as usize;
+                let mut m = Matrix::random_normal(rng, n, n, 1.0);
+                for i in 0..n {
+                    m[(i, i)] += 4.0; // keep well-conditioned
+                }
+                m
+            },
+            |a| {
+                let inv = gauss_jordan_inv(a);
+                let d = inv.matmul(a).max_abs_diff(&Matrix::eye(a.rows));
+                if d < 1e-3 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+}

@@ -1,0 +1,138 @@
+//! Triangular solves and inverses (native mirror of `linalg_hlo.triu_inv`).
+
+use super::matrix::Matrix;
+
+/// Back-substitution solve of U x = b for upper-triangular U.
+pub fn triu_solve_vec(u: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = u.rows;
+    assert_eq!(u.cols, n);
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for j in i + 1..n {
+            s -= u[(i, j)] * x[j];
+        }
+        x[i] = s / u[(i, i)];
+    }
+    x
+}
+
+/// Solve U X = B column-by-column (B is n x m).
+pub fn triu_solve(u: &Matrix, b: &Matrix) -> Matrix {
+    let n = u.rows;
+    assert_eq!(b.rows, n);
+    let mut out = Matrix::zeros(n, b.cols);
+    for c in 0..b.cols {
+        let col: Vec<f32> = (0..n).map(|r| b[(r, c)]).collect();
+        let x = triu_solve_vec(u, &col);
+        for r in 0..n {
+            out[(r, c)] = x[r];
+        }
+    }
+    out
+}
+
+/// Inverse of an upper-triangular matrix; costs ~n^3/3 FLOPs (Hunger 2005),
+/// which is the count the paper's Table 2 credits T-CWY for.
+pub fn triu_inv(u: &Matrix) -> Matrix {
+    triu_solve(u, &Matrix::eye(u.rows))
+}
+
+/// Inverse via the log-depth nilpotent Neumann product — the exact same
+/// algorithm the exported HLO uses (linalg_hlo.triu_inv), for parity tests.
+pub fn triu_inv_neumann(s: &Matrix) -> Matrix {
+    let n = s.rows;
+    // D^{-1} and X = -(D^{-1} S - I)
+    let mut x = Matrix::zeros(n, n);
+    let dinv: Vec<f32> = (0..n).map(|i| 1.0 / s[(i, i)]).collect();
+    for i in 0..n {
+        for j in 0..n {
+            let v = dinv[i] * s[(i, j)] - if i == j { 1.0 } else { 0.0 };
+            x[(i, j)] = -v;
+        }
+    }
+    let eye = Matrix::eye(n);
+    let mut acc = eye.add(&x);
+    let mut p = x;
+    let steps = usize::BITS - (n.max(2) - 1).leading_zeros();
+    for _ in 0..steps.saturating_sub(1) {
+        p = p.matmul(&p);
+        acc = acc.matmul(&eye.add(&p));
+    }
+    // (I+M)^{-1} D^{-1}
+    let mut out = acc;
+    for i in 0..n {
+        for j in 0..n {
+            out[(i, j)] *= dinv[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    fn random_triu(rng: &mut Pcg32, n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                m[(i, j)] = rng.normal();
+            }
+            m[(i, i)] += if m[(i, i)] >= 0.0 { 2.0 } else { -2.0 };
+        }
+        m
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let mut rng = Pcg32::seeded(11);
+        let u = random_triu(&mut rng, 8);
+        let x: Vec<f32> = rng.normal_vec(8, 1.0);
+        let b = u.matvec(&x);
+        let got = triu_solve_vec(&u, &b);
+        for (a, b) in got.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn inv_property() {
+        forall(
+            24,
+            |rng| {
+                let n = 1 + rng.below(12) as usize;
+                random_triu(rng, n)
+            },
+            |u| {
+                let inv = triu_inv(u);
+                let defect = inv.matmul(u).max_abs_diff(&Matrix::eye(u.rows));
+                if defect < 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("defect {defect} at n={}", u.rows))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn neumann_matches_backsub() {
+        forall(
+            16,
+            |rng| {
+                let n = 1 + rng.below(10) as usize;
+                random_triu(rng, n)
+            },
+            |u| {
+                let a = triu_inv(u);
+                let b = triu_inv_neumann(u);
+                let d = a.max_abs_diff(&b);
+                if d < 1e-3 { Ok(()) } else { Err(format!("diff {d}")) }
+            },
+        );
+    }
+}

@@ -1,0 +1,278 @@
+//! `cwy` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   list                               show artifacts in the manifest
+//!   train  --artifact copy_cwy_step    train a step artifact
+//!   train-dp --base copy_cwy           data-parallel (grad + all-reduce + apply)
+//!   tables --t 1000 --n 1024 --l 128   print the analytical Tables 1-2
+//!   verify                             orthogonality cross-checks vs native
+
+use anyhow::{bail, Result};
+use cwy::coordinator::{checkpoint, Schedule, Trainer};
+use cwy::data::{copying::CopyTask, corpus::CorpusGen, digits::DigitTask, video::VideoTask};
+use cwy::orthogonal::flops;
+use cwy::report::Table;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => cmd_list(&args),
+        "train" => cmd_train(&args),
+        "train-dp" => cmd_train_dp(&args),
+        "tables" => cmd_tables(&args),
+        "verify" => cmd_verify(&args),
+        _ => {
+            eprintln!(
+                "usage: cwy <list|train|train-dp|tables|verify> [--artifacts DIR] ...\n\
+                 train:    --artifact NAME --steps N --schedule constant:1e-3 [--seed S] [--ckpt PATH]\n\
+                 train-dp: --base NAME --workers W --steps N\n\
+                 tables:   [--t 1000 --n 1024 --l 128 --m 128]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts")
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let engine = Engine::open(artifacts_dir(args))?;
+    let mut t = Table::new(&["artifact", "kind", "task", "method", "params"]);
+    for (name, spec) in &engine.manifest.artifacts {
+        t.row(&[
+            name.clone(),
+            spec.kind.clone(),
+            spec.meta_str("task").unwrap_or("-").to_string(),
+            spec.meta_str("method").unwrap_or("-").to_string(),
+            spec.meta_str("param_count").unwrap_or("-").to_string(),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    Ok(())
+}
+
+/// Build the right data provider for a task given the artifact meta.
+fn make_provider(
+    task: &str,
+    spec: &cwy::runtime::ArtifactSpec,
+    seed: u64,
+) -> Result<Box<dyn FnMut() -> Vec<HostTensor>>> {
+    match task {
+        "copy" => {
+            let t_blank: usize = spec.meta_str("t_blank").unwrap_or("64").parse()?;
+            let batch: usize = spec.meta_str("batch").unwrap_or("32").parse()?;
+            let mut gen = CopyTask::new(t_blank, batch, seed);
+            let t_total = gen.t_total();
+            Ok(Box::new(move || {
+                let b = gen.next_batch();
+                vec![
+                    HostTensor::i32(vec![b.batch, t_total], b.tokens),
+                    HostTensor::i32(vec![b.batch, t_total], b.targets),
+                ]
+            }))
+        }
+        "smnist" => {
+            let batch: usize = spec.meta_str("batch").unwrap_or("32").parse()?;
+            let t: usize = spec.meta_str("t").unwrap_or("196").parse()?;
+            let mut gen = DigitTask::new(batch, seed, false);
+            Ok(Box::new(move || {
+                let b = gen.next_batch();
+                vec![
+                    HostTensor::f32(vec![b.batch, t], b.pixels),
+                    HostTensor::i32(vec![b.batch], b.labels),
+                ]
+            }))
+        }
+        "nmt" => {
+            let batch: usize = spec.meta_str("batch").unwrap_or("16").parse()?;
+            let ts: usize = spec.meta_str("ts").unwrap_or("12").parse()?;
+            let tt: usize = spec.meta_str("tt").unwrap_or("12").parse()?;
+            let mut gen = CorpusGen::new(seed);
+            Ok(Box::new(move || {
+                let b = gen.batch(batch, ts, tt);
+                vec![
+                    HostTensor::i32(vec![batch, ts], b.src),
+                    HostTensor::i32(vec![batch, tt], b.tgt_in),
+                    HostTensor::i32(vec![batch, tt], b.tgt_out),
+                ]
+            }))
+        }
+        "video" => {
+            let batch: usize = spec.meta_str("batch").unwrap_or("4").parse()?;
+            let t: usize = spec.meta_str("t").unwrap_or("8").parse()?;
+            let hw: usize = spec.meta_str("hw").unwrap_or("16").parse()?;
+            let mut gen = VideoTask::new(hw, t, batch, seed);
+            Ok(Box::new(move || {
+                vec![HostTensor::f32(vec![batch, t, hw, hw, 1], gen.batch_mixed())]
+            }))
+        }
+        other => bail!("unknown task '{other}'"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = Engine::open(artifacts_dir(args))?;
+    let name = args
+        .get("artifact")
+        .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
+    let steps = args.get_usize("steps", 100);
+    let seed = args.get_usize("seed", 0) as u64;
+    let schedule = Schedule::parse(&args.get_or("schedule", "constant:0.001"))
+        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
+    let log_every = args.get_usize("log-every", 10);
+
+    let mut trainer = Trainer::new(&engine, name, schedule)?;
+    let task = trainer
+        .artifact
+        .spec
+        .meta_str("task")
+        .unwrap_or("copy")
+        .to_string();
+    let mut provider = make_provider(&task, &trainer.artifact.spec, seed)?;
+
+    println!("# training {name} for {steps} steps (task={task})");
+    trainer.train(&mut provider, steps, |step, loss, metrics| {
+        if step % log_every == 0 || step + 1 == steps {
+            println!("step {step:>5}  loss {loss:.5}  metrics {metrics:?}");
+        }
+    })?;
+    println!(
+        "# done: final loss {:.5}, total wall {:.2}s",
+        trainer.history.last_loss().unwrap_or(f32::NAN),
+        trainer.history.total_wall_s()
+    );
+    if let Some(path) = args.get("ckpt") {
+        checkpoint::save(path, trainer.step, &trainer.state)?;
+        println!("# checkpoint -> {path}");
+    }
+    if let Some(path) = args.get("curve") {
+        std::fs::write(path, trainer.history.to_csv())?;
+        println!("# curve -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train_dp(args: &Args) -> Result<()> {
+    let engine = Engine::open(artifacts_dir(args))?;
+    let base = args
+        .get("base")
+        .ok_or_else(|| anyhow::anyhow!("--base required (e.g. copy_cwy)"))?;
+    let workers = args.get_usize("workers", 4);
+    let steps = args.get_usize("steps", 50);
+    let seed = args.get_usize("seed", 0) as u64;
+    let schedule = Schedule::parse(&args.get_or("schedule", "constant:0.001"))
+        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
+
+    let mut dp = cwy::coordinator::DataParallel::new(&engine, base, workers, schedule)?;
+    let step_spec = engine.manifest.get(&format!("{base}_step"))?.clone();
+    let task = step_spec.meta_str("task").unwrap_or("copy").to_string();
+
+    println!("# data-parallel training {base}: {workers} workers, {steps} steps");
+    let mut providers: Vec<Box<dyn FnMut() -> Vec<HostTensor>>> = (0..workers)
+        .map(|w| make_provider(&task, &step_spec, seed + 1000 * w as u64))
+        .collect::<Result<_>>()?;
+    for s in 0..steps {
+        let batches: Vec<Vec<HostTensor>> =
+            providers.iter_mut().map(|p| p()).collect();
+        let loss = dp.train_step(batches)?;
+        if s % 10 == 0 || s + 1 == steps {
+            println!("step {s:>5}  mean worker loss {loss:.5}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let t = args.get_usize("t", 1000);
+    let n = args.get_usize("n", 1024);
+    let l = args.get_usize("l", 128);
+    let m = args.get_usize("m", 128);
+
+    println!("## Table 1 (forward-pass complexity; FLOPs at T={t}, N={n}, L={l})\n");
+    let mut t1 = Table::new(&["METHOD", "SERIAL", "PARALLEL", "DOMAIN", "FLOPs"]);
+    for r in flops::table1(t, n, l) {
+        t1.row(&[
+            r.method.to_string(),
+            r.serial.to_string(),
+            r.parallel.to_string(),
+            r.domain.to_string(),
+            format!("{:.3e}", r.flops),
+        ]);
+    }
+    print!("{}", t1.to_markdown());
+
+    println!("\n## Table 2 (Stiefel step; FLOPs at N={n}, M={m})\n");
+    let mut t2 = Table::new(&["APPROACH", "PARALLEL TIME", "INVERTED MATRIX", "FLOPs expr", "FLOPs"]);
+    for r in flops::table2(n, m) {
+        t2.row(&[
+            r.method.to_string(),
+            r.parallel.to_string(),
+            r.inverted.to_string(),
+            r.flops_expr.to_string(),
+            format!("{:.3e}", r.flops),
+        ]);
+    }
+    print!("{}", t2.to_markdown());
+    Ok(())
+}
+
+/// Cross-check artifact constructions against the native implementations.
+fn cmd_verify(args: &Args) -> Result<()> {
+    use cwy::linalg::Matrix;
+    use cwy::util::rng::Pcg32;
+
+    let engine = Engine::open(artifacts_dir(args))?;
+    let mut failures = 0;
+
+    // CWY: artifact param_cwy_n64 vs native construction.
+    for n in [64usize, 128] {
+        let name = format!("param_cwy_n{n}");
+        if engine.manifest.get(&name).is_err() {
+            continue;
+        }
+        let art = engine.load(&name)?;
+        let mut rng = Pcg32::seeded(123);
+        let v = Matrix::random_normal(&mut rng, n, n, 1.0);
+        let out = art.run(&[HostTensor::f32(vec![n, n], v.data.clone())])?;
+        let q_art = Matrix::from_rows(n, n, out[0].as_f32()?.to_vec());
+        let q_nat = cwy::orthogonal::cwy::matrix(&v);
+        let diff = q_art.max_abs_diff(&q_nat);
+        let defect = q_art.orthogonality_defect();
+        let ok = diff < 2e-3 && defect < 2e-3;
+        println!("{name}: |art-native|={diff:.2e} defect={defect:.2e} {}",
+                 if ok { "OK" } else { "FAIL" });
+        if !ok {
+            failures += 1;
+        }
+    }
+
+    // T-CWY Stiefel check.
+    if engine.manifest.get("stiefel_tcwy_construct").is_ok() {
+        let art = engine.load("stiefel_tcwy_construct")?;
+        let (n, m) = (256usize, 32usize);
+        let mut rng = Pcg32::seeded(5);
+        let v = Matrix::random_normal(&mut rng, m, n, 1.0);
+        let out = art.run(&[HostTensor::f32(vec![m, n], v.data.clone())])?;
+        let omega = Matrix::from_rows(n, m, out[0].as_f32()?.to_vec());
+        let native = cwy::orthogonal::tcwy::matrix(&v);
+        let diff = omega.max_abs_diff(&native);
+        let defect = omega.orthogonality_defect();
+        let ok = diff < 2e-3 && defect < 2e-3;
+        println!("stiefel_tcwy_construct: |art-native|={diff:.2e} defect={defect:.2e} {}",
+                 if ok { "OK" } else { "FAIL" });
+        if !ok {
+            failures += 1;
+        }
+    }
+
+    if failures > 0 {
+        bail!("{failures} verification failures");
+    }
+    println!("all verifications passed");
+    Ok(())
+}

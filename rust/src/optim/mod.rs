@@ -1,0 +1,77 @@
+//! Native optimizers for the pure-rust baselines (the AOT path fuses its
+//! optimizer into the step artifact; these drive `crate::orthogonal`'s
+//! native implementations in the table harnesses and property tests).
+
+use crate::linalg::Matrix;
+
+/// Plain SGD on a dense matrix parameter.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn step(&self, param: &mut Matrix, grad: &Matrix) {
+        for (p, g) in param.data.iter_mut().zip(&grad.data) {
+            *p -= self.lr * g;
+        }
+    }
+}
+
+/// Adam (Kingma & Ba 2015) on a dense matrix parameter.
+pub struct Adam {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(lr: f32, n: usize) -> Adam {
+        Adam { lr, b1: 0.9, b2: 0.999, eps: 1e-8, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    pub fn step(&mut self, param: &mut Matrix, grad: &Matrix) {
+        assert_eq!(param.data.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t as i32);
+        let bc2 = 1.0 - self.b2.powi(self.t as i32);
+        for i in 0..param.data.len() {
+            let g = grad.data[i];
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g;
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g * g;
+            param.data[i] -=
+                self.lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Both optimizers should minimize f(x) = ||x - c||^2 / 2.
+    fn quadratic_descent(mut stepper: impl FnMut(&mut Matrix, &Matrix)) -> f32 {
+        let target = Matrix::from_rows(2, 2, vec![1.0, -2.0, 0.5, 3.0]);
+        let mut x = Matrix::zeros(2, 2);
+        for _ in 0..300 {
+            let grad = x.sub(&target);
+            stepper(&mut x, &grad);
+        }
+        x.sub(&target).frobenius()
+    }
+
+    #[test]
+    fn sgd_converges() {
+        let opt = Sgd { lr: 0.1 };
+        assert!(quadratic_descent(|p, g| opt.step(p, g)) < 1e-3);
+    }
+
+    #[test]
+    fn adam_converges() {
+        let mut opt = Adam::new(0.05, 4);
+        assert!(quadratic_descent(|p, g| opt.step(p, g)) < 1e-2);
+    }
+}

@@ -1,0 +1,139 @@
+//! Native CWY transform (paper Thm 2): Q = I - U S^{-1} U^T.
+//!
+//! This is the rust mirror of `python/compile/kernels/cwy.py`, used for
+//! Table 1/2 harnesses, orthogonality property tests, and cross-checking
+//! artifact outputs.
+
+use crate::linalg::{triu_inv, Matrix};
+
+/// Precomputed CWY operands for a rollout.
+pub struct CwyOperator {
+    /// Column-normalized reflection vectors, (N, L).
+    pub u: Matrix,
+    /// Inverse of S = 0.5 I + striu(U^T U), (L, L).
+    pub sinv: Matrix,
+}
+
+/// Normalize rows of V (L, N) into columns of U (N, L).
+pub fn normalize(v: &Matrix) -> Matrix {
+    let (l, n) = (v.rows, v.cols);
+    let mut u = Matrix::zeros(n, l);
+    for i in 0..l {
+        let row = v.row(i);
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        for j in 0..n {
+            u[(j, i)] = row[j] / norm;
+        }
+    }
+    u
+}
+
+/// S = 0.5 I + striu(U^T U).
+pub fn build_s(u: &Matrix) -> Matrix {
+    let l = u.cols;
+    let gram = u.t().matmul(u);
+    let mut s = Matrix::zeros(l, l);
+    for i in 0..l {
+        s[(i, i)] = 0.5;
+        for j in i + 1..l {
+            s[(i, j)] = gram[(i, j)];
+        }
+    }
+    s
+}
+
+impl CwyOperator {
+    /// Precompute from raw reflection vectors V (L, N).
+    pub fn new(v: &Matrix) -> CwyOperator {
+        let u = normalize(v);
+        let sinv = triu_inv(&build_s(&u));
+        CwyOperator { u, sinv }
+    }
+
+    /// Apply to a batch (B, N) of row-vector hidden states: `out = h @ Q`,
+    /// matching the kernels' convention and the sequential HR chain.
+    pub fn apply(&self, batch: &Matrix) -> Matrix {
+        let t = batch.matmul(&self.u);      // (B, L)
+        let v = t.matmul(&self.sinv);       // (B, L)
+        batch.sub(&v.matmul(&self.u.t()))
+    }
+
+    /// Materialize Q = I - U S^{-1} U^T.
+    pub fn matrix(&self) -> Matrix {
+        let n = self.u.rows;
+        Matrix::eye(n).sub(&self.u.matmul(&self.sinv).matmul(&self.u.t()))
+    }
+}
+
+/// Convenience: Q from raw vectors.
+pub fn matrix(v: &Matrix) -> Matrix {
+    CwyOperator::new(v).matrix()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orthogonal::householder;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn equals_householder_product() {
+        // Thm 2: CWY == explicit sequential reflections in exact arithmetic.
+        forall(
+            16,
+            |rng| {
+                let l = 1 + rng.below(8) as usize;
+                let n = l + rng.below(12) as usize + 1;
+                Matrix::random_normal(rng, l, n, 1.0)
+            },
+            |v| {
+                let q_cwy = matrix(v);
+                let q_hr = householder::matrix(v);
+                let d = q_cwy.max_abs_diff(&q_hr);
+                if d < 5e-4 { Ok(()) } else { Err(format!("cwy vs hr diff {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn is_orthogonal() {
+        forall(
+            16,
+            |rng| {
+                let l = 1 + rng.below(10) as usize;
+                let n = l + 4;
+                Matrix::random_normal(rng, l, n, 1.0)
+            },
+            |v| {
+                let d = matrix(v).orthogonality_defect();
+                if d < 1e-3 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn apply_matches_matrix() {
+        let mut rng = Pcg32::seeded(31);
+        let v = Matrix::random_normal(&mut rng, 6, 16, 1.0);
+        let op = CwyOperator::new(&v);
+        let h = Matrix::random_normal(&mut rng, 4, 16, 1.0);
+        let direct = h.matmul(&op.matrix());
+        let fused = op.apply(&h);
+        assert!(direct.max_abs_diff(&fused) < 1e-4);
+    }
+
+    #[test]
+    fn norm_preserving() {
+        let mut rng = Pcg32::seeded(32);
+        let v = Matrix::random_normal(&mut rng, 8, 24, 1.0);
+        let op = CwyOperator::new(&v);
+        let h = Matrix::random_normal(&mut rng, 5, 24, 1.0);
+        let out = op.apply(&h);
+        for b in 0..5 {
+            let n0: f32 = h.row(b).iter().map(|x| x * x).sum::<f32>().sqrt();
+            let n1: f32 = out.row(b).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n0 - n1).abs() / n0 < 1e-3, "row {b}: {n0} vs {n1}");
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Analytical complexity model — regenerates the paper's Table 1 and the
+//! FLOP column of Table 2 from the same counting rules the paper cites
+//! (Hunger 2005; Hammarling & Lucas 2008; Trefethen & Bau 1997):
+//!   * (d1 x d2)(d2 x d3) matmul: 2 d1 d2 d3 FLOPs
+//!   * dense d x d inverse: d^3; upper-triangular: d^3 / 3
+//!   * thin QR of d1 x d2: 2 d2^2 (d1 - d2/3)
+//!   * SPD eigendecomposition (= SVD): (8/3) d^3
+
+/// A Table-1 row: serial / parallel forward-pass complexity (symbolic
+/// strings) plus a concrete FLOP estimate for given (T, N, L).
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub method: &'static str,
+    pub serial: &'static str,
+    pub parallel: &'static str,
+    pub domain: &'static str,
+    pub flops: f64,
+}
+
+pub fn table1(t: usize, n: usize, l: usize) -> Vec<Table1Row> {
+    let (t, n, l) = (t as f64, n as f64, l as f64);
+    vec![
+        Table1Row {
+            method: "RNN",
+            serial: "T N^2",
+            parallel: "T log N",
+            domain: "-",
+            flops: 2.0 * t * n * n,
+        },
+        Table1Row {
+            method: "SCORNN",
+            serial: "T N^2 + N^3",
+            parallel: "T log N + N^2 log N",
+            domain: "O^{+1}(N) \\ Theta",
+            flops: 2.0 * t * n * n + n * n * n,
+        },
+        Table1Row {
+            method: "RGD (U(N))",
+            serial: "T N^2 + N^3",
+            parallel: "T log N + N^2 log N",
+            domain: "U(N)",
+            flops: 2.0 * t * n * n + n * n * n,
+        },
+        Table1Row {
+            method: "EXPRNN",
+            serial: "T N^2 + N^3",
+            parallel: "T log N + N^3",
+            domain: "O^{+1}(N)",
+            flops: 2.0 * t * n * n + n * n * n,
+        },
+        Table1Row {
+            method: "EURNN (L iter.)",
+            serial: "T L N",
+            parallel: "T L",
+            domain: "U(N) when L=N",
+            flops: 4.0 * t * l * n,
+        },
+        Table1Row {
+            method: "HR (L refl.)",
+            serial: "T L N",
+            parallel: "T L log N",
+            domain: "O_L(N)",
+            flops: 4.0 * t * l * n,
+        },
+        Table1Row {
+            method: "CWY (L refl., ours)",
+            serial: "T L N + L^2 N + L^3",
+            parallel: "T log(L N) + L^2 log L",
+            domain: "O_L(N)",
+            flops: 4.0 * t * l * n + 2.0 * l * l * n + l * l * l / 3.0,
+        },
+    ]
+}
+
+/// A Table-2 row: Stiefel step cost for (N, M).
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub method: &'static str,
+    pub parallel: &'static str,
+    pub inverted: &'static str,
+    /// Symbolic leading-term expression from the paper.
+    pub flops_expr: &'static str,
+    /// Evaluated at the given (N, M).
+    pub flops: f64,
+}
+
+pub fn table2(n: usize, m: usize) -> Vec<Table2Row> {
+    let (nf, mf) = (n as f64, m as f64);
+    let m3 = mf * mf * mf;
+    vec![
+        Table2Row {
+            method: "RGD-C-QR",
+            parallel: "M log(MN)",
+            inverted: "-",
+            flops_expr: "10 N M^2 - 2 M^3 / 3",
+            flops: 10.0 * nf * mf * mf - 2.0 * m3 / 3.0,
+        },
+        Table2Row {
+            method: "RGD-E-QR",
+            parallel: "M log(MN)",
+            inverted: "-",
+            flops_expr: "14 N M^2 - 2 M^3 / 3",
+            flops: 14.0 * nf * mf * mf - 2.0 * m3 / 3.0,
+        },
+        Table2Row {
+            method: "RGD-C-C",
+            parallel: "log(MN) + M^2 log M",
+            inverted: "2M x 2M dense",
+            flops_expr: "28 N M^2 + 16 M^3",
+            flops: 28.0 * nf * mf * mf + 16.0 * m3,
+        },
+        Table2Row {
+            method: "RGD-E-C",
+            parallel: "log(MN) + M^2 log M",
+            inverted: "3M x 3M dense",
+            flops_expr: "72 N M^2 + 25 M^3",
+            flops: 72.0 * nf * mf * mf + 25.0 * m3,
+        },
+        Table2Row {
+            method: "OWN",
+            parallel: "log(MN) + M^3",
+            inverted: "- (eigendecomposition)",
+            flops_expr: "4 N M^2 + 14 M^3 / 3",
+            flops: 4.0 * nf * mf * mf + 14.0 * m3 / 3.0,
+        },
+        Table2Row {
+            method: "T-CWY (ours)",
+            parallel: "log(MN) + M^2 log M",
+            inverted: "M x M upper-triangular",
+            flops_expr: "4 N M^2 + 7 M^3 / 3",
+            flops: 4.0 * nf * mf * mf + 7.0 * m3 / 3.0,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcwy_has_fewest_flops() {
+        // The paper's headline claim for Table 2: with N >= M, T-CWY needs
+        // the smallest FLOP count of all Stiefel methods.
+        for (n, m) in [(64, 8), (256, 32), (1024, 128), (4096, 64)] {
+            let rows = table2(n, m);
+            let tcwy = rows.iter().find(|r| r.method.starts_with("T-CWY")).unwrap();
+            for r in &rows {
+                assert!(
+                    tcwy.flops <= r.flops,
+                    "N={n} M={m}: T-CWY {} > {} {}",
+                    tcwy.flops,
+                    r.method,
+                    r.flops
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cwy_beats_cubic_methods_for_small_l() {
+        // For L << N the CWY rollout cost is far below the N^3 methods.
+        let rows = table1(1000, 1024, 128);
+        let cwy = rows.iter().find(|r| r.method.contains("CWY")).unwrap();
+        let exprnn = rows.iter().find(|r| r.method == "EXPRNN").unwrap();
+        assert!(cwy.flops < exprnn.flops);
+    }
+
+    #[test]
+    fn table_shapes() {
+        assert_eq!(table1(10, 16, 4).len(), 7);
+        assert_eq!(table2(16, 4).len(), 6);
+    }
+}

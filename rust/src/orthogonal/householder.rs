@@ -1,0 +1,94 @@
+//! Sequential Householder reflections (Mhammedi et al. 2017) — the native
+//! baseline CWY is measured against (paper Fig. 2).
+
+use crate::linalg::Matrix;
+
+/// Apply H(v) = I - 2 v v^T / ||v||^2 to a vector in place.
+pub fn reflect_vec(v: &[f32], h: &mut [f32]) {
+    let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+    let dot: f32 = v.iter().zip(h.iter()).map(|(a, b)| a * b).sum();
+    let c = 2.0 * dot / vnorm2;
+    for (hi, vi) in h.iter_mut().zip(v) {
+        *hi -= c * vi;
+    }
+}
+
+/// h <- (H(v_1) ... H(v_L))^T h applied row-wise to a batch (B, N);
+/// the chain is inherently sequential in L — the bottleneck the paper fixes.
+pub fn apply_chain(vs: &Matrix, batch: &mut Matrix) {
+    for l in 0..vs.rows {
+        let v = vs.row(l).to_vec();
+        for b in 0..batch.rows {
+            reflect_vec(&v, batch.row_mut(b));
+        }
+    }
+}
+
+/// Materialize Q = H(v_1) ... H(v_L) (O(L N^2), sequential).
+pub fn matrix(vs: &Matrix) -> Matrix {
+    let n = vs.cols;
+    let mut q = Matrix::eye(n);
+    // Q <- Q H(v): subtract 2 (Q v) v^T / ||v||^2
+    for l in 0..vs.rows {
+        let v = vs.row(l);
+        let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+        let qv = q.matvec(v);
+        for i in 0..n {
+            let c = 2.0 * qv[i] / vnorm2;
+            for j in 0..n {
+                q[(i, j)] -= c * v[j];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn reflection_is_involution() {
+        let mut rng = Pcg32::seeded(21);
+        let v: Vec<f32> = rng.normal_vec(8, 1.0);
+        let orig: Vec<f32> = rng.normal_vec(8, 1.0);
+        let mut h = orig.clone();
+        reflect_vec(&v, &mut h);
+        reflect_vec(&v, &mut h);
+        for (a, b) in h.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn product_is_orthogonal() {
+        forall(
+            12,
+            |rng| {
+                let l = 1 + rng.below(6) as usize;
+                let n = l + 2 + rng.below(8) as usize;
+                Matrix::random_normal(rng, l, n, 1.0)
+            },
+            |vs| {
+                let q = matrix(vs);
+                let d = q.orthogonality_defect();
+                if d < 1e-4 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn chain_matches_matrix() {
+        let mut rng = Pcg32::seeded(5);
+        let vs = Matrix::random_normal(&mut rng, 4, 10, 1.0);
+        let q = matrix(&vs);
+        let h0 = Matrix::random_normal(&mut rng, 3, 10, 1.0);
+        // rows mapped by Q^T == batch @ Q
+        let expect = h0.matmul(&q);
+        let mut got = h0.clone();
+        apply_chain(&vs, &mut got);
+        assert!(expect.max_abs_diff(&got) < 1e-4);
+    }
+}

@@ -1,0 +1,51 @@
+//! Native implementations of every orthogonal / Stiefel optimization method
+//! the paper compares (§2.2), plus the analytical complexity model behind
+//! Tables 1-2.
+//!
+//! These mirror the L2 exports in `python/compile/{parametrize,stiefel}.py`;
+//! the integration tests cross-check artifact outputs against this module.
+
+pub mod cwy;
+pub mod flops;
+pub mod householder;
+pub mod own;
+pub mod rgd;
+pub mod tcwy;
+
+use crate::linalg::{cayley, expm_default, Matrix};
+
+/// EXPRNN parametrization: Q = expm(skew(A)).
+pub fn exprnn_matrix(a: &Matrix) -> Matrix {
+    expm_default(&a.skew())
+}
+
+/// SCORNN parametrization: Q = Cayley(skew(A)) (D-tilde = I, as in §2.2.1).
+pub fn scornn_matrix(a: &Matrix) -> Matrix {
+    cayley(&a.skew())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn exprnn_scornn_orthogonal() {
+        forall(
+            8,
+            |rng| {
+                let n = 2 + rng.below(10) as usize;
+                Matrix::random_normal(rng, n, n, 0.5)
+            },
+            |a| {
+                let d1 = exprnn_matrix(a).orthogonality_defect();
+                let d2 = scornn_matrix(a).orthogonality_defect();
+                if d1 < 1e-3 && d2 < 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("exprnn {d1}, scornn {d2}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Orthogonal Weight Normalization (Huang et al. 2018) — native baseline.
+//!
+//! Omega = V~ (V~^T V~)^{-1/2}, V~ = V - mean(V).  The inverse square root
+//! uses the same coupled Newton-Schulz iteration as the exported HLO
+//! (`linalg_hlo.newton_schulz_invsqrt`) so both sides agree numerically.
+
+use crate::linalg::Matrix;
+
+/// Coupled Newton-Schulz (G/tr)^{-1/2}; requires SPD G.
+pub fn newton_schulz_invsqrt(g: &Matrix, iters: usize) -> Matrix {
+    let m = g.rows;
+    let tr: f32 = (0..m).map(|i| g[(i, i)]).sum();
+    let eye = Matrix::eye(m);
+    let mut y = g.scale(1.0 / tr);
+    let mut z = eye.clone();
+    for _ in 0..iters {
+        let t = eye.scale(3.0).sub(&z.matmul(&y)).scale(0.5);
+        y = y.matmul(&t);
+        z = t.matmul(&z);
+    }
+    z.scale(1.0 / tr.sqrt())
+}
+
+/// OWN map: V (N, M) -> Omega in St(N, M).
+pub fn matrix(v: &Matrix) -> Matrix {
+    let (n, m) = (v.rows, v.cols);
+    // Center columns (subtract the column mean, i.e. 1 1^T V / N).
+    let mut vc = v.clone();
+    for j in 0..m {
+        let mean: f32 = (0..n).map(|i| v[(i, j)]).sum::<f32>() / n as f32;
+        for i in 0..n {
+            vc[(i, j)] -= mean;
+        }
+    }
+    let mut g = vc.t().matmul(&vc);
+    for i in 0..m {
+        g[(i, i)] += 1e-5;
+    }
+    vc.matmul(&newton_schulz_invsqrt(&g, 30))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn invsqrt_property() {
+        forall(
+            10,
+            |rng| {
+                let m = 2 + rng.below(6) as usize;
+                let a = Matrix::random_normal(rng, m + 4, m, 1.0);
+                a.t().matmul(&a) // SPD
+            },
+            |g| {
+                let zi = newton_schulz_invsqrt(g, 40);
+                // zi * G * zi should be I
+                let back = zi.matmul(g).matmul(&zi);
+                let d = back.max_abs_diff(&Matrix::eye(g.rows));
+                if d < 5e-2 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn own_lands_on_stiefel() {
+        forall(
+            10,
+            |rng| {
+                let m = 2 + rng.below(5) as usize;
+                let n = m + 6 + rng.below(10) as usize;
+                Matrix::random_normal(rng, n, m, 0.3)
+            },
+            |v| {
+                let omega = matrix(v);
+                let d = omega.orthogonality_defect();
+                if d < 5e-2 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+}

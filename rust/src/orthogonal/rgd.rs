@@ -1,0 +1,157 @@
+//! Riemannian gradient descent on St(N, M) — native baselines for the four
+//! RGD variants of the paper's Table 2 (Appendix A, SMW low-rank form).
+
+use crate::linalg::{gauss_jordan_inv, householder_qr, Matrix};
+
+/// Inner-product choice for the tangent projection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inner {
+    Canonical,
+    Euclidean,
+}
+
+/// Retraction choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Retraction {
+    Cayley,
+    Qr,
+}
+
+/// Low-rank factors B, C with lr * A = B C^T (paper Appendix A).
+fn bc_factors(omega: &Matrix, grad: &Matrix, lr: f32, inner: Inner) -> (Matrix, Matrix) {
+    let (n, m) = (omega.rows, omega.cols);
+    match inner {
+        Inner::Canonical => {
+            let mut b = Matrix::zeros(n, 2 * m);
+            let mut c = Matrix::zeros(n, 2 * m);
+            for i in 0..n {
+                for j in 0..m {
+                    b[(i, j)] = lr * grad[(i, j)];
+                    b[(i, m + j)] = lr * omega[(i, j)];
+                    c[(i, j)] = omega[(i, j)];
+                    c[(i, m + j)] = -grad[(i, j)];
+                }
+            }
+            (b, c)
+        }
+        Inner::Euclidean => {
+            let e = grad.t().matmul(omega).sub(&omega.t().matmul(grad)); // (M, M)
+            let oe = omega.matmul(&e).scale(0.5);
+            let mut b = Matrix::zeros(n, 3 * m);
+            let mut c = Matrix::zeros(n, 3 * m);
+            for i in 0..n {
+                for j in 0..m {
+                    b[(i, j)] = lr * grad[(i, j)];
+                    b[(i, m + j)] = lr * omega[(i, j)];
+                    b[(i, 2 * m + j)] = lr * oe[(i, j)];
+                    c[(i, j)] = omega[(i, j)];
+                    c[(i, m + j)] = -grad[(i, j)];
+                    c[(i, 2 * m + j)] = omega[(i, j)];
+                }
+            }
+            (b, c)
+        }
+    }
+}
+
+/// One RGD step with Cayley retraction via Sherman-Morrison-Woodbury:
+/// Omega' = Cayley(lr A) Omega = Omega - B (I + C^T B / 2)^{-1} (C^T Omega).
+/// Note Cayley(eta A) ~ I - eta A, so a *positive* step size descends.
+pub fn cayley_step(omega: &Matrix, grad: &Matrix, lr: f32, inner: Inner) -> Matrix {
+    let (b, c) = bc_factors(omega, grad, lr, inner);
+    let d = b.cols;
+    let inner_mat = Matrix::eye(d).add(&c.t().matmul(&b).scale(0.5));
+    let rhs = c.t().matmul(omega);
+    omega.sub(&b.matmul(&gauss_jordan_inv(&inner_mat).matmul(&rhs)))
+}
+
+/// One RGD step with QR retraction: Omega' = qf(Omega - lr * A Omega).
+pub fn qr_step(omega: &Matrix, grad: &Matrix, lr: f32, inner: Inner) -> Matrix {
+    let a_omega = match inner {
+        Inner::Canonical => {
+            let oto = omega.t().matmul(omega);
+            grad.matmul(&oto).sub(&omega.matmul(&grad.t().matmul(omega)))
+        }
+        Inner::Euclidean => {
+            let ghat = grad.sub(&omega.matmul(&omega.t().matmul(grad)).scale(0.5));
+            let oto = omega.t().matmul(omega);
+            ghat.matmul(&oto).sub(&omega.matmul(&ghat.t().matmul(omega)))
+        }
+    };
+    let (q, _r) = householder_qr(&omega.sub(&a_omega.scale(lr)));
+    q
+}
+
+/// Dispatch over the paper's RGD-A-B naming.
+pub fn step(omega: &Matrix, grad: &Matrix, lr: f32, inner: Inner, retr: Retraction) -> Matrix {
+    match retr {
+        Retraction::Cayley => cayley_step(omega, grad, lr, inner),
+        Retraction::Qr => qr_step(omega, grad, lr, inner),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    fn random_stiefel(rng: &mut Pcg32, n: usize, m: usize) -> Matrix {
+        let a = Matrix::random_normal(rng, n, m, 1.0);
+        householder_qr(&a).0
+    }
+
+    #[test]
+    fn steps_stay_on_manifold() {
+        for inner in [Inner::Canonical, Inner::Euclidean] {
+            for retr in [Retraction::Cayley, Retraction::Qr] {
+                forall(
+                    6,
+                    |rng| {
+                        let m = 2 + rng.below(4) as usize;
+                        let n = m + 4 + rng.below(8) as usize;
+                        let omega = random_stiefel(rng, n, m);
+                        let grad = Matrix::random_normal(rng, n, m, 0.2);
+                        (omega, grad)
+                    },
+                    |(omega, grad)| {
+                        let next = step(omega, grad, 0.1, inner, retr);
+                        let d = next.orthogonality_defect();
+                        if d < 5e-3 {
+                            Ok(())
+                        } else {
+                            Err(format!("{inner:?}/{retr:?} defect {d}"))
+                        }
+                    },
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // f(Omega) = ||Omega - Target||_F^2 / 2, grad = Omega - Target.
+        let mut rng = Pcg32::seeded(77);
+        let target = random_stiefel(&mut rng, 12, 3);
+        let mut omega = random_stiefel(&mut rng, 12, 3);
+        let f = |o: &Matrix| o.sub(&target).frobenius();
+        let before = f(&omega);
+        for _ in 0..50 {
+            let grad = omega.sub(&target);
+            omega = step(&omega, &grad, 0.2, Inner::Canonical, Retraction::Cayley);
+        }
+        let after = f(&omega);
+        assert!(after < before, "no descent: {before} -> {after}");
+    }
+
+    #[test]
+    fn zero_grad_is_fixed_point() {
+        let mut rng = Pcg32::seeded(78);
+        let omega = random_stiefel(&mut rng, 10, 4);
+        let zero = Matrix::zeros(10, 4);
+        for inner in [Inner::Canonical, Inner::Euclidean] {
+            let next = cayley_step(&omega, &zero, 0.5, inner);
+            assert!(omega.max_abs_diff(&next) < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Native T-CWY Stiefel parametrization (paper Thm 3):
+//! Omega = [I; 0] - U S^{-1} U_1^T in St(N, M).
+
+use super::cwy::{build_s, normalize};
+use crate::linalg::{triu_inv, Matrix};
+
+/// Construct Omega from raw vectors V (M, N), M <= N.
+pub fn matrix(v: &Matrix) -> Matrix {
+    let (m, n) = (v.rows, v.cols);
+    assert!(m <= n, "T-CWY needs M <= N");
+    let u = normalize(v); // (N, M)
+    let sinv = triu_inv(&build_s(&u));
+    // U_1 = top M x M block of U.
+    let mut u1t = Matrix::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            u1t[(i, j)] = u[(j, i)];
+        }
+    }
+    let w = sinv.matmul(&u1t); // (M, M)
+    Matrix::eye_rect(n, m).sub(&u.matmul(&w))
+}
+
+/// Check Thm 3's claim Omega = (H(v_1)...H(v_M))[:, :M] without forming the
+/// N x N product — used by tests against the explicit product.
+pub fn first_columns_of_product(v: &Matrix) -> Matrix {
+    let q = super::householder::matrix(v);
+    let (m, n) = (v.rows, v.cols);
+    let mut out = Matrix::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            out[(i, j)] = q[(i, j)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn lands_on_stiefel() {
+        forall(
+            16,
+            |rng| {
+                let m = 1 + rng.below(6) as usize;
+                let n = m + 1 + rng.below(12) as usize;
+                Matrix::random_normal(rng, m, n, 1.0)
+            },
+            |v| {
+                let omega = matrix(v);
+                let d = omega.orthogonality_defect();
+                if d < 1e-3 { Ok(()) } else { Err(format!("defect {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn equals_truncated_cwy_product() {
+        // Thm 3: Omega equals the first M columns of the full reflection
+        // product — verified against the explicit sequential product.
+        forall(
+            12,
+            |rng| {
+                let m = 1 + rng.below(5) as usize;
+                let n = m + 2 + rng.below(8) as usize;
+                Matrix::random_normal(rng, m, n, 1.0)
+            },
+            |v| {
+                let direct = matrix(v);
+                let via_product = first_columns_of_product(v);
+                let d = direct.max_abs_diff(&via_product);
+                if d < 5e-4 { Ok(()) } else { Err(format!("diff {d}")) }
+            },
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Report emitters: markdown tables and CSV series in the exact shapes the
+//! paper's tables/figures use (benches print through these).
+
+/// A markdown table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+}
+
+/// A CSV series (figure curves).
+pub struct Series {
+    pub name: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn new(name: &str, columns: &[&str]) -> Series {
+        Series {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row.to_vec());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(
+                &r.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `reports/<name>.csv` under the given directory.
+    pub fn save(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new(&["method", "ms"]);
+        t.row(&["cwy".into(), "1.5".into()]);
+        t.row(&["expm".into(), "120.0".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| method |"));
+        assert_eq!(md.lines().count(), 4);
+    }
+
+    #[test]
+    fn series_csv() {
+        let mut s = Series::new("fig1c", &["n", "cwy_ms"]);
+        s.push(&[64.0, 0.5]);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("n,cwy_ms\n64,0.5\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into(), "y".into()]);
+    }
+}

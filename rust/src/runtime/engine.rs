@@ -1,0 +1,129 @@
+//! PJRT execution engine: load HLO text artifacts, compile once, execute
+//! from the rust hot path.  Adapted from /opt/xla-example/load_hlo.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+/// A compiled artifact bound to its manifest spec.
+pub struct Compiled {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Compiled {
+    /// Execute with host tensors; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute from borrowed tensors — the trainer hot path uses this to
+    /// avoid cloning the whole state vector every step (EXPERIMENTS.md
+    /// §Perf records the before/after).
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, artifact expects {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != s.shape {
+                bail!(
+                    "{}: input '{}' shape {:?} != manifest {:?}",
+                    self.spec.name,
+                    s.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{}: execute failed: {e}", self.spec.name))?;
+        let mut tup = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: readback failed: {e}", self.spec.name))?;
+        let parts = tup
+            .decompose_tuple()
+            .map_err(|e| anyhow!("{}: decompose failed: {e}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, s)| HostTensor::from_literal(lit, &s.shape, s.dtype))
+            .collect()
+    }
+}
+
+/// Engine: one PJRT CPU client + an executable cache over the manifest.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Compiled>>>,
+}
+
+impl Engine {
+    /// Open the artifacts directory (compiles lazily, caches per name).
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Engine { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("{name}: parsing HLO text: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("{name}: XLA compile: {e}"))?;
+        let compiled = Rc::new(Compiled { spec, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Initial training state for a step artifact, from its state.bin.
+    pub fn initial_state(&self, name: &str) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name)?;
+        self.manifest
+            .load_state(spec)
+            .with_context(|| format!("loading initial state for {name}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,248 @@
+//! Manifest parsing: the machine-readable index `python/compile/aot.py`
+//! writes next to the HLO artifacts.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::Dtype;
+use crate::util::json::{parse, Json};
+
+/// Role of an artifact input/output in the calling convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    State,
+    Data,
+    Hyper,
+    Output,
+}
+
+/// Shape/dtype spec for one tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub role: Role,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub state_bin: Option<String>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactSpec {
+    pub fn n_state(&self) -> usize {
+        self.inputs.iter().filter(|s| s.role == Role::State).count()
+    }
+
+    pub fn n_data(&self) -> usize {
+        self.inputs.iter().filter(|s| s.role == Role::Data).count()
+    }
+
+    pub fn has_lr(&self) -> bool {
+        self.inputs.iter().any(|s| s.role == Role::Hyper)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(|s| s.as_str())
+    }
+}
+
+/// The parsed manifest: artifact name -> spec.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_spec(j: &Json, role_override: Option<Role>) -> Result<TensorSpec> {
+    let name = j
+        .path(&["name"])
+        .as_str()
+        .ok_or_else(|| anyhow!("tensor spec missing name"))?
+        .to_string();
+    let shape = j
+        .path(&["shape"])
+        .as_arr()
+        .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(j.path(&["dtype"]).as_str().unwrap_or("float32"))?;
+    let role = match role_override {
+        Some(r) => r,
+        None => match j.path(&["kind"]).as_str() {
+            Some("state") => Role::State,
+            Some("hyper") => Role::Hyper,
+            _ => Role::Data,
+        },
+    };
+    Ok(TensorSpec { name, shape, dtype, role })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse_str(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse_str(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let doc = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arts = doc
+            .path(&["artifacts"])
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = BTreeMap::new();
+        for a in arts {
+            let name = a
+                .path(&["name"])
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .path(&["file"])
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let kind = a.path(&["kind"]).as_str().unwrap_or("micro").to_string();
+            let inputs = a
+                .path(&["inputs"])
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|j| tensor_spec(j, None))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .path(&["outputs"])
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|j| tensor_spec(j, Some(Role::Output)))
+                .collect::<Result<Vec<_>>>()?;
+            let state_bin = a
+                .path(&["state_bin"])
+                .as_str()
+                .map(|s| s.to_string());
+            let mut meta = BTreeMap::new();
+            if let Json::Obj(m) = a.path(&["meta"]) {
+                for (k, v) in m {
+                    if let Some(s) = v.as_str() {
+                        meta.insert(k.clone(), s.to_string());
+                    } else if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), format!("{x}"));
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name, file, kind, inputs, outputs, state_bin, meta },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Artifact names matching a predicate on (name, spec).
+    pub fn select<'a>(
+        &'a self,
+        mut pred: impl FnMut(&str, &ArtifactSpec) -> bool + 'a,
+    ) -> Vec<&'a ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|(n, s)| pred(n, s))
+            .map(|(_, s)| s)
+            .collect()
+    }
+
+    /// Read the initial flat state tensors recorded for a step artifact.
+    pub fn load_state(&self, spec: &ArtifactSpec) -> Result<Vec<crate::runtime::tensor::HostTensor>> {
+        let bin = spec
+            .state_bin
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact {} has no state_bin", spec.name))?;
+        let bytes = fs::read(self.dir.join(bin))
+            .with_context(|| format!("reading {bin}"))?;
+        let state_specs: Vec<&TensorSpec> =
+            spec.inputs.iter().filter(|s| s.role == Role::State).collect();
+        let mut out = Vec::with_capacity(state_specs.len());
+        let mut off = 0usize;
+        for ts in state_specs {
+            if off + 8 > bytes.len() {
+                bail!("state_bin truncated at tensor {}", ts.name);
+            }
+            let count =
+                u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+            off += 8;
+            let expect: usize = ts.shape.iter().product();
+            if count != expect {
+                bail!(
+                    "state_bin tensor {}: recorded {count} elems, manifest says {expect}",
+                    ts.name
+                );
+            }
+            let nbytes = count * 4;
+            if off + nbytes > bytes.len() {
+                bail!("state_bin truncated in tensor {}", ts.name);
+            }
+            let vals: Vec<f32> = bytes[off..off + nbytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            off += nbytes;
+            out.push(crate::runtime::tensor::HostTensor::f32(ts.shape.clone(), vals));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"artifacts":[
+      {"name":"toy_step","file":"toy_step.hlo.txt","kind":"step",
+       "inputs":[{"name":"w","shape":[2,2],"dtype":"float32","kind":"state"},
+                 {"name":"x","shape":[4],"dtype":"int32","kind":"data"},
+                 {"name":"lr","shape":[],"dtype":"float32","kind":"hyper"}],
+       "outputs":[{"name":"w","shape":[2,2],"dtype":"float32"},
+                  {"name":"loss","shape":[],"dtype":"float32"}],
+       "meta":{"task":"toy","n":"2"}}]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let a = m.get("toy_step").unwrap();
+        assert_eq!(a.n_state(), 1);
+        assert_eq!(a.n_data(), 1);
+        assert!(a.has_lr());
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.meta_str("task"), Some("toy"));
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse_str(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

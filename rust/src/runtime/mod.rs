@@ -1,0 +1,14 @@
+//! Runtime layer: the `xla` crate (PJRT CPU) wrapped behind the artifact
+//! manifest.  `Engine::open` -> `load(name)` -> `Compiled::run(inputs)`.
+//!
+//! Python never appears here: artifacts are HLO text produced once by
+//! `make artifacts`, and every training/bench step is a single PJRT
+//! execution of a fused loss+grad+update module.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Compiled, Engine};
+pub use manifest::{ArtifactSpec, Manifest, Role, TensorSpec};
+pub use tensor::{Data, Dtype, HostTensor};

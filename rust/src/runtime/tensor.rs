@@ -1,0 +1,165 @@
+//! Host-side tensors marshalled in and out of PJRT literals.
+
+use anyhow::{bail, Result};
+
+/// Element type of a host tensor (the artifact pipeline emits f32/i32 only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" | "f32" => Ok(Dtype::F32),
+            "int32" | "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape + typed buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: Vec<usize>, dtype: Dtype) -> HostTensor {
+        let n = shape.iter().product();
+        match dtype {
+            Dtype::F32 => HostTensor::f32(shape, vec![0.0; n]),
+            Dtype::I32 => HostTensor::i32(shape, vec![0; n]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Data::F32(_) => Dtype::F32,
+            Data::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Scalar extraction (loss / metric outputs).
+    pub fn scalar(&self) -> Result<f32> {
+        match &self.data {
+            Data::F32(v) if v.len() == 1 => Ok(v[0]),
+            Data::I32(v) if v.len() == 1 => Ok(v[0] as f32),
+            _ => bail!("tensor is not a scalar (len={})", self.len()),
+        }
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => {
+                if dims.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+            Data::I32(v) => {
+                if dims.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from a PJRT literal given the expected shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: Dtype) -> Result<HostTensor> {
+        Ok(match dtype {
+            Dtype::F32 => HostTensor::f32(shape.to_vec(), lit.to_vec::<f32>()?),
+            Dtype::I32 => HostTensor::i32(shape.to_vec(), lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        assert!(HostTensor::f32(vec![2], vec![0.0; 2]).scalar().is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+}

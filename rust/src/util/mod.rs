@@ -1,0 +1,9 @@
+//! In-repo substrates replacing unvendored crates: PRNG (rand), JSON
+//! (serde_json), bench harness (criterion), CLI parsing (clap), plus a
+//! mini property-testing helper (proptest).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timing;

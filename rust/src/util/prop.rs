@@ -1,0 +1,84 @@
+//! Mini property-testing helper (proptest is not vendored).
+//!
+//! `forall(cases, gen, check)` runs `check` over `cases` generated inputs,
+//! reporting the seed of the first failing case so it can be replayed with
+//! `replay(seed, gen, check)`.
+
+use crate::util::rng::Pcg32;
+
+/// Run `check` on `cases` inputs produced by `gen`; panic with the failing
+/// seed on the first counterexample.
+pub fn forall<T, G, C>(cases: usize, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Pcg32) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x9e3779b97f4a7c15u64.wrapping_mul(case as u64 + 1);
+        let mut rng = Pcg32::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<T, G, C>(seed: u64, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Pcg32) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seeded(seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = check(&input) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two slices agree to absolute tolerance, reporting the worst index.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = (0usize, 0f32);
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let d = (x - y).abs();
+        if d > worst.1 {
+            worst = (i, d);
+        }
+    }
+    if worst.1 > tol {
+        return Err(format!(
+            "max |a-b| = {} at index {} (a={}, b={}, tol={tol})",
+            worst.1, worst.0, a[worst.0], b[worst.0]
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes() {
+        forall(32, |r| r.uniform(), |x| {
+            if (0.0..1.0).contains(x) { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(8, |r| r.uniform(), |x| {
+            if *x < 0.5 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.5], 0.1).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.00001], 0.1).is_ok());
+    }
+}

@@ -1,0 +1,154 @@
+//! Deterministic PCG32 pseudo-random generator.
+//!
+//! The `rand` crate is not vendored in this environment, and the dataset
+//! generators need *reproducible* streams anyway (every experiment in
+//! EXPERIMENTS.md records its seed), so a small PCG32 (O'Neill 2014) is a
+//! better fit than a platform RNG.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seeded generator; `stream` selects an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience single-stream constructor.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) using Lemire's rejection-free-ish method.
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-9 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fill a vector with standard normals scaled by `scale`.
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * scale).collect()
+    }
+
+    /// Random permutation of 0..n (Fisher-Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Pcg32::seeded(7);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_half() {
+        let mut r = Pcg32::seeded(3);
+        let mean: f32 = (0..20000).map(|_| r.uniform()).sum::<f32>() / 20000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(9);
+        let xs: Vec<f32> = (0..20000).map(|_| r.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.08, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg32::seeded(1);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Pcg32::seeded(5);
+        let p = r.permutation(50);
+        let mut seen = vec![false; 50];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+}

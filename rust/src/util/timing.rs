@@ -1,0 +1,109 @@
+//! Benchmark timing harness (criterion is not vendored; this is the
+//! in-repo substitute used by `benches/*` and the perf pass).
+
+use std::time::Instant;
+
+/// Result of one benchmark: wall-clock statistics in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<36} {:>10.3} ms  ±{:>8.3} ms  (min {:.3}, max {:.3}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup, adapting the iteration count to `target_s` total.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, target_s: f64, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    // Estimate a single-shot time to size the measured run.
+    let probe = Instant::now();
+    f();
+    let once = probe.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once).ceil() as usize).clamp(3, 1000);
+
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    stats(name, &times)
+}
+
+/// Summarize a set of raw timings.
+pub fn stats(name: &str, times: &[f64]) -> BenchStats {
+    let n = times.len().max(1) as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Simple scoped stopwatch for coarse phase timing.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let s = bench("noop", 1, 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s + 1e-12);
+    }
+
+    #[test]
+    fn stats_math() {
+        let s = stats("x", &[1.0, 3.0]);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert!((s.std_s - 1.0).abs() < 1e-12);
+    }
+}

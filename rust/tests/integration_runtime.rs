@@ -1,0 +1,132 @@
+//! Integration: manifest -> compile -> execute, cross-checked against the
+//! native linalg/orthogonal implementations.  Requires `make artifacts`.
+
+use cwy::linalg::Matrix;
+use cwy::orthogonal;
+use cwy::runtime::{Engine, HostTensor};
+use cwy::util::rng::Pcg32;
+
+fn engine() -> Engine {
+    Engine::open("artifacts").expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_is_populated() {
+    let e = engine();
+    assert!(e.manifest.artifacts.len() > 40, "expected a full artifact set");
+    // every artifact file must exist
+    for spec in e.manifest.artifacts.values() {
+        assert!(e.manifest.dir.join(&spec.file).exists(), "{} missing", spec.file);
+    }
+}
+
+#[test]
+fn cwy_artifact_matches_native_and_is_orthogonal() {
+    let e = engine();
+    let art = e.load("param_cwy_n64").unwrap();
+    let n = 64;
+    let mut rng = Pcg32::seeded(1);
+    let v = Matrix::random_normal(&mut rng, n, n, 1.0);
+    let out = art.run(&[HostTensor::f32(vec![n, n], v.data.clone())]).unwrap();
+    let q = Matrix::from_rows(n, n, out[0].as_f32().unwrap().to_vec());
+    assert!(q.orthogonality_defect() < 1e-3);
+    assert!(q.max_abs_diff(&orthogonal::cwy::matrix(&v)) < 1e-3);
+}
+
+#[test]
+fn expm_cayley_artifacts_are_orthogonal() {
+    let e = engine();
+    for name in ["param_expm_n64", "param_cayley_n64"] {
+        let art = e.load(name).unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let a = Matrix::random_normal(&mut rng, 64, 64, 0.5);
+        let out = art.run(&[HostTensor::f32(vec![64, 64], a.data.clone())]).unwrap();
+        let q = Matrix::from_rows(64, 64, out[0].as_f32().unwrap().to_vec());
+        assert!(q.orthogonality_defect() < 1e-3, "{name}");
+    }
+}
+
+#[test]
+fn expm_artifact_matches_native_expm() {
+    let e = engine();
+    let art = e.load("param_expm_n64").unwrap();
+    let mut rng = Pcg32::seeded(3);
+    let a = Matrix::random_normal(&mut rng, 64, 64, 0.5);
+    let out = art.run(&[HostTensor::f32(vec![64, 64], a.data.clone())]).unwrap();
+    let q = Matrix::from_rows(64, 64, out[0].as_f32().unwrap().to_vec());
+    let native = orthogonal::exprnn_matrix(&a);
+    assert!(q.max_abs_diff(&native) < 1e-3);
+}
+
+#[test]
+fn rollout_artifacts_cwy_equals_hr() {
+    // The Fig. 2 numerical-equivalence claim, across the exported L sweep.
+    let e = engine();
+    for l in [4usize, 16, 64] {
+        let cwy_art = e.load(&format!("rollout_cwy_l{l}")).unwrap();
+        let hr_art = e.load(&format!("rollout_hr_l{l}")).unwrap();
+        let mut rng = Pcg32::seeded(l as u64);
+        let v = HostTensor::f32(vec![l, 64], rng.normal_vec(l * 64, 1.0));
+        let h = HostTensor::f32(vec![16, 64], rng.normal_vec(16 * 64, 1.0));
+        let a = cwy_art.run(&[v.clone(), h.clone()]).unwrap();
+        let b = hr_art.run(&[v, h]).unwrap();
+        let diff = a[0]
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(b[0].as_f32().unwrap())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-2, "L={l}: cwy vs hr diff {diff}");
+    }
+}
+
+#[test]
+fn tcwy_artifact_lands_on_stiefel() {
+    let e = engine();
+    let art = e.load("stiefel_tcwy_construct").unwrap();
+    let (n, m) = (256, 32);
+    let mut rng = Pcg32::seeded(4);
+    let v = Matrix::random_normal(&mut rng, m, n, 1.0);
+    let out = art.run(&[HostTensor::f32(vec![m, n], v.data.clone())]).unwrap();
+    let omega = Matrix::from_rows(n, m, out[0].as_f32().unwrap().to_vec());
+    assert!(omega.orthogonality_defect() < 1e-3);
+    assert!(omega.max_abs_diff(&orthogonal::tcwy::matrix(&v)) < 1e-3);
+}
+
+#[test]
+fn rgd_step_artifacts_stay_on_manifold() {
+    let e = engine();
+    let (n, m) = (256, 32);
+    let mut rng = Pcg32::seeded(5);
+    let omega = cwy::linalg::householder_qr(&Matrix::random_normal(&mut rng, n, m, 1.0)).0;
+    let grad = Matrix::random_normal(&mut rng, n, m, 0.1);
+    for variant in ["cc", "ec", "cqr", "eqr"] {
+        let art = e.load(&format!("stiefel_rgd_{variant}_step")).unwrap();
+        let out = art
+            .run(&[
+                HostTensor::f32(vec![n, m], omega.data.clone()),
+                HostTensor::f32(vec![n, m], grad.data.clone()),
+                HostTensor::scalar_f32(0.1),
+            ])
+            .unwrap();
+        let next = Matrix::from_rows(n, m, out[0].as_f32().unwrap().to_vec());
+        let defect = next.orthogonality_defect();
+        assert!(defect < 5e-2, "rgd_{variant}: defect {defect}");
+    }
+}
+
+#[test]
+fn bad_input_shape_is_rejected() {
+    let e = engine();
+    let art = e.load("param_cwy_n64").unwrap();
+    let wrong = HostTensor::f32(vec![8, 8], vec![0.0; 64]);
+    assert!(art.run(&[wrong]).is_err());
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let e = engine();
+    let art = e.load("param_cwy_n64").unwrap();
+    assert!(art.run(&[]).is_err());
+}

@@ -1,0 +1,205 @@
+//! Cross-module property tests: the theorems the paper proves, checked on
+//! the native implementations over randomized inputs.
+
+use cwy::linalg::{householder_qr, Matrix};
+use cwy::orthogonal::{cwy as cwy_t, householder, own, rgd, tcwy};
+use cwy::util::prop::forall;
+use cwy::util::rng::Pcg32;
+
+/// Theorem 2: CWY == product of Householder reflections, exactly.
+#[test]
+fn thm2_cwy_equals_reflection_product() {
+    forall(
+        32,
+        |rng| {
+            let l = 1 + rng.below(10) as usize;
+            let n = l + 1 + rng.below(24) as usize;
+            Matrix::random_normal(rng, l, n, 1.0)
+        },
+        |v| {
+            let d = cwy_t::matrix(v).max_abs_diff(&householder::matrix(v));
+            if d < 1e-3 { Ok(()) } else { Err(format!("diff {d}")) }
+        },
+    );
+}
+
+/// Theorem 3: T-CWY == first M columns of the reflection product, and lands
+/// exactly on St(N, M).
+#[test]
+fn thm3_tcwy_is_truncated_product_on_stiefel() {
+    forall(
+        24,
+        |rng| {
+            let m = 1 + rng.below(6) as usize;
+            let n = m + 2 + rng.below(16) as usize;
+            Matrix::random_normal(rng, m, n, 1.0)
+        },
+        |v| {
+            let omega = tcwy::matrix(v);
+            let trunc = tcwy::first_columns_of_product(v);
+            let d1 = omega.max_abs_diff(&trunc);
+            let d2 = omega.orthogonality_defect();
+            if d1 < 1e-3 && d2 < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("trunc {d1}, defect {d2}"))
+            }
+        },
+    );
+}
+
+/// Theorem 1 direction: QR of a random matrix gives a reflection-product
+/// representation whose CWY form reproduces Q.
+#[test]
+fn qr_q_factor_is_orthogonal_and_reachable() {
+    forall(
+        16,
+        |rng| {
+            let n = 3 + rng.below(12) as usize;
+            Matrix::random_normal(rng, n, n, 1.0)
+        },
+        |a| {
+            let (q, r) = householder_qr(a);
+            let defect = q.orthogonality_defect();
+            let recon = q.matmul(&r).max_abs_diff(a);
+            if defect < 1e-3 && recon < 1e-2 {
+                Ok(())
+            } else {
+                Err(format!("defect {defect}, recon {recon}"))
+            }
+        },
+    );
+}
+
+/// Norm preservation: ||Q h|| == ||h|| for every parametrization.
+#[test]
+fn all_parametrizations_preserve_norm() {
+    forall(
+        16,
+        |rng| {
+            let n = 4 + rng.below(12) as usize;
+            let l = 1 + rng.below(n as u32 / 2) as usize;
+            let v = Matrix::random_normal(rng, l, n, 1.0);
+            let a = Matrix::random_normal(rng, n, n, 0.5);
+            let h: Vec<f32> = rng.normal_vec(n, 1.0);
+            (v, a, h)
+        },
+        |(v, a, h)| {
+            let n0: f32 = h.iter().map(|x| x * x).sum::<f32>().sqrt();
+            for (name, q) in [
+                ("cwy", cwy_t::matrix(v)),
+                ("hr", householder::matrix(v)),
+                ("exprnn", cwy::orthogonal::exprnn_matrix(a)),
+                ("scornn", cwy::orthogonal::scornn_matrix(a)),
+            ] {
+                let n1: f32 = q
+                    .matvec(h)
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>()
+                    .sqrt();
+                if ((n0 - n1) / n0.max(1e-6)).abs() > 1e-3 {
+                    return Err(format!("{name}: {n0} -> {n1}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// RGD on a quadratic over St(N, M): every variant descends and stays on
+/// the manifold over a 30-step trajectory.
+#[test]
+fn rgd_trajectories_descend_on_manifold() {
+    for inner in [rgd::Inner::Canonical, rgd::Inner::Euclidean] {
+        for retr in [rgd::Retraction::Cayley, rgd::Retraction::Qr] {
+            let mut rng = Pcg32::seeded(99);
+            let target = householder_qr(&Matrix::random_normal(&mut rng, 16, 4, 1.0)).0;
+            let mut omega = householder_qr(&Matrix::random_normal(&mut rng, 16, 4, 1.0)).0;
+            let f0 = omega.sub(&target).frobenius();
+            for _ in 0..30 {
+                let grad = omega.sub(&target);
+                omega = rgd::step(&omega, &grad, 0.1, inner, retr);
+                assert!(
+                    omega.orthogonality_defect() < 1e-2,
+                    "{inner:?}/{retr:?} left the manifold"
+                );
+            }
+            let f1 = omega.sub(&target).frobenius();
+            assert!(f1 < f0, "{inner:?}/{retr:?}: {f0} -> {f1}");
+        }
+    }
+}
+
+/// OWN and T-CWY produce comparable Stiefel points from the same seed
+/// (different parametrizations, same manifold).
+#[test]
+fn own_and_tcwy_both_reach_stiefel() {
+    forall(
+        10,
+        |rng| {
+            let m = 2 + rng.below(4) as usize;
+            let n = m + 8 + rng.below(16) as usize;
+            (
+                Matrix::random_normal(rng, m, n, 1.0),
+                Matrix::random_normal(rng, n, m, 0.3),
+            )
+        },
+        |(v_tcwy, v_own)| {
+            let d1 = tcwy::matrix(v_tcwy).orthogonality_defect();
+            let d2 = own::matrix(v_own).orthogonality_defect();
+            if d1 < 1e-3 && d2 < 5e-2 {
+                Ok(())
+            } else {
+                Err(format!("tcwy {d1}, own {d2}"))
+            }
+        },
+    );
+}
+
+/// The paper's Lemma-2 invariant: a gradient step on v never shrinks ||v||
+/// below its initial norm (the gradient is tangent to the sphere direction).
+#[test]
+fn reflection_vector_norm_nondecreasing_under_tangent_steps() {
+    // For H(v) = H(v/||v||), grad wrt v is orthogonal to v; check the
+    // geometric consequence ||v - eta g||^2 = ||v||^2 + ||eta g||^2 >= ||v||^2
+    // with a finite-difference tangent gradient of a test functional.
+    forall(
+        12,
+        |rng| {
+            let n = 4 + rng.below(8) as usize;
+            let v: Vec<f32> = rng.normal_vec(n, 1.0);
+            let w: Vec<f32> = rng.normal_vec(n, 1.0);
+            (v, w)
+        },
+        |(v, w)| {
+            let n = v.len();
+            // f(v) = w^T H(v) w; compute grad numerically then project check
+            let f = |v: &[f32]| -> f32 {
+                let vn2: f32 = v.iter().map(|x| x * x).sum();
+                let dot: f32 = v.iter().zip(w).map(|(a, b)| a * b).sum();
+                let wn2: f32 = w.iter().map(|x| x * x).sum();
+                wn2 - 2.0 * dot * dot / vn2
+            };
+            let mut grad = vec![0.0f32; n];
+            let eps = 1e-3;
+            for i in 0..n {
+                let mut vp = v.clone();
+                vp[i] += eps;
+                let mut vm = v.clone();
+                vm[i] -= eps;
+                grad[i] = (f(&vp) - f(&vm)) / (2.0 * eps);
+            }
+            // v . grad should be ~0 (H(v) scale-invariant in v)
+            let vdotg: f32 = v.iter().zip(&grad).map(|(a, b)| a * b).sum();
+            let vnorm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let gnorm: f32 = grad.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let cos = (vdotg / (vnorm * gnorm + 1e-9)).abs();
+            if cos < 5e-2 {
+                Ok(())
+            } else {
+                Err(format!("grad not tangent: cos={cos}"))
+            }
+        },
+    );
+}
