@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     // Measured: native rust implementations.
     println!("\n## Table 2 — measured, native rust\n");
     let mut tn = Table::new(&["METHOD", "mean ms"]);
-    let entries: Vec<(&str, Box<dyn Fn()>)> = vec![
+    let entries: Vec<(&str, Box<dyn Fn() + '_>)> = vec![
         ("T-CWY construct", Box::new(|| {
             std::hint::black_box(tcwy::matrix(&v));
         })),

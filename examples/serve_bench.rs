@@ -1,0 +1,65 @@
+//! Serve-path smoke benchmark: spin an in-process micro-batching server on
+//! the fake backend and drive it with the closed-loop load client, then
+//! print both client-side latency and server-side occupancy tables.
+//!
+//! Needs no artifacts, so it runs anywhere the crate builds:
+//!
+//!   cargo run --release --example serve_bench -- \
+//!       --requests 2000 --concurrency 16 --workers 2 --max-batch 8
+
+use std::sync::Arc;
+
+use cwy::serve::{
+    run_load, serve, BatchCfg, ClientCfg, FakeModel, ModelFactory, ServeCfg, ServeModel,
+    SessionCfg,
+};
+use cwy::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.get_usize("requests", 2_000);
+    let concurrency = args.get_usize("concurrency", 16);
+    let workers = args.get_usize("workers", 2);
+    let max_batch = args.get_usize("max-batch", 8);
+    let max_wait_us = args.get_usize("max-wait-us", 2_000) as u64;
+    let delay_us = args.get_usize("fake-delay-us", 300) as u64;
+
+    let factory: Arc<ModelFactory> = {
+        let batch = max_batch;
+        Arc::new(move || Ok(Box::new(FakeModel::new(batch, 16, delay_us)) as Box<dyn ServeModel>))
+    };
+    let server = serve(
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            batch: BatchCfg { max_batch, max_wait_us, queue_cap: 4_096 },
+            session: SessionCfg::default(),
+            lr: 0.0,
+        },
+        factory,
+    )?;
+    let addr = server.local_addr().to_string();
+    println!(
+        "# serve_bench: {requests} requests x {concurrency} connections -> {addr} \
+         ({workers} workers, max-batch {max_batch}, max-wait {max_wait_us}us)"
+    );
+
+    let report = run_load(&ClientCfg {
+        addr,
+        requests,
+        concurrency,
+        deadline_us: None,
+        use_sessions: args.has_flag("sessions"),
+    })?;
+    println!("\n## client\n");
+    print!("{}", report.to_table().to_markdown());
+
+    let snap = server.snapshot();
+    println!("\n## server\n");
+    print!("{}", snap.to_table().to_markdown());
+    server.stop();
+
+    anyhow::ensure!(report.dropped() == 0, "{} requests dropped", report.dropped());
+    println!("\nserve_bench OK (mean server batch {:.2})", report.mean_batch);
+    Ok(())
+}

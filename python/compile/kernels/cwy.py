@@ -13,7 +13,7 @@ the compute hot-spots of a CWY-parametrized RNN:
   i.e. rows of `h` mapped by `Q^T` (the transition `W h` of eq. (1) in
   row-major batch form).
 
-TPU adaptation (DESIGN.md §6): the kernels tile `U` into (BLK_N, L) VMEM
+TPU adaptation (DESIGN.md §2.5): the kernels tile `U` into (BLK_N, L) VMEM
 panels; both panel products are MXU-shaped matmuls, and the grid walks the
 N dimension so the full N x L panel never has to be VMEM-resident.  On this
 testbed kernels are lowered with ``interpret=True`` (CPU PJRT cannot run

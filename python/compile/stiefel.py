@@ -39,7 +39,7 @@ def own_matrix(V: jax.Array) -> jax.Array:
     V is (N, M).  The paper centers V then whitens with the eigendecomposition
     P Lambda^{-1/2} P^T; the Newton–Schulz inverse square root computes the
     identical map with matmuls only (eigh is a LAPACK custom call we cannot
-    export — DESIGN.md §4.2).
+    export — DESIGN.md §2.5).
     """
     n = V.shape[0]
     Vc = V - jnp.mean(V, axis=0, keepdims=True)

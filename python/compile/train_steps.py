@@ -1,6 +1,6 @@
 """Build AOT-exportable train-step functions over flattened state.
 
-Artifact calling convention (DESIGN.md §5):
+Artifact calling convention (DESIGN.md §2.2):
 
     step  :  state...,  data...,  lr  ->  state'...,  metrics...
     grad  :  params..., data...       ->  grads...,   loss, metrics...

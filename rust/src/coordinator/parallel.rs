@@ -17,6 +17,49 @@ use crate::runtime::engine::{Compiled, Engine};
 use crate::runtime::tensor::HostTensor;
 use crate::util::timing::Stopwatch;
 
+/// Split a global batch along the leading axis into `workers` contiguous
+/// shards; the first `rows % workers` shards take one extra row.
+///
+/// Rejects `workers > rows`: that would hand some workers an empty shard,
+/// silently skewing the all-reduce average (DESIGN.md §5).
+pub fn shard_batch(batch: &[HostTensor], workers: usize) -> Result<Vec<Vec<HostTensor>>> {
+    if workers == 0 {
+        bail!("need at least one worker");
+    }
+    let Some(first) = batch.first() else {
+        bail!("cannot shard an empty batch");
+    };
+    if first.shape.is_empty() {
+        bail!("batch tensors must have a leading batch axis");
+    }
+    let rows = first.shape[0];
+    for t in batch {
+        if t.shape.first() != Some(&rows) {
+            bail!("batch tensors disagree on the leading dim: {:?} vs {rows}", t.shape);
+        }
+    }
+    if workers > rows {
+        bail!(
+            "workers ({workers}) exceed batch rows ({rows}): \
+             every worker needs a non-empty shard"
+        );
+    }
+    let base = rows / workers;
+    let extra = rows % workers;
+    let mut shards = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    for w in 0..workers {
+        let take = base + usize::from(w < extra);
+        let shard: Vec<HostTensor> = batch
+            .iter()
+            .map(|t| t.slice_rows(start, take))
+            .collect::<Result<_>>()?;
+        shards.push(shard);
+        start += take;
+    }
+    Ok(shards)
+}
+
 pub struct DataParallel {
     grad_art: Rc<Compiled>,
     apply_art: Rc<Compiled>,
@@ -58,6 +101,28 @@ impl DataParallel {
 
     pub fn params(&self) -> &[HostTensor] {
         &self.state[..self.n_params]
+    }
+
+    /// One data-parallel step from a single global batch: shard along the
+    /// leading axis (rejecting `workers > rows`) and fan the shards out.
+    ///
+    /// The grad artifact's input shapes are fixed at export, so the
+    /// global batch must split evenly — uneven shards could never match
+    /// the compiled shapes and would fail with an opaque shape error.
+    pub fn train_step_global(&mut self, batch: Vec<HostTensor>) -> Result<f32> {
+        if let Some(first) = batch.first() {
+            if let Some(&rows) = first.shape.first() {
+                if rows % self.workers != 0 {
+                    bail!(
+                        "global batch of {rows} rows does not split evenly over \
+                         {} workers (grad artifact shapes are fixed at export)",
+                        self.workers
+                    );
+                }
+            }
+        }
+        let shards = shard_batch(&batch, self.workers)?;
+        self.train_step(shards)
     }
 
     /// One data-parallel step over per-worker batches; returns mean loss.
@@ -120,5 +185,67 @@ impl DataParallel {
         self.history.push(self.step, loss, vec![], watch.elapsed_s());
         self.step += 1;
         Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(rows: usize) -> Vec<HostTensor> {
+        vec![
+            HostTensor::f32(vec![rows, 2], (0..rows * 2).map(|i| i as f32).collect()),
+            HostTensor::i32(vec![rows], (0..rows as i32).collect()),
+        ]
+    }
+
+    #[test]
+    fn even_split_preserves_rows() {
+        let shards = shard_batch(&batch(6), 3).unwrap();
+        assert_eq!(shards.len(), 3);
+        for (w, shard) in shards.iter().enumerate() {
+            assert_eq!(shard[0].shape, vec![2, 2]);
+            assert_eq!(shard[1].shape, vec![2]);
+            let want: Vec<f32> = (w * 4..w * 4 + 4).map(|i| i as f32).collect();
+            assert_eq!(shard[0].as_f32().unwrap(), &want[..]);
+            assert_eq!(shard[1].as_i32().unwrap(), &[2 * w as i32, 2 * w as i32 + 1][..]);
+        }
+    }
+
+    #[test]
+    fn remainder_rows_go_to_leading_shards() {
+        let shards = shard_batch(&batch(5), 2).unwrap();
+        assert_eq!(shards[0][0].shape, vec![3, 2]);
+        assert_eq!(shards[1][0].shape, vec![2, 2]);
+        // No row lost or duplicated.
+        let total: usize = shards.iter().map(|s| s[1].shape[0]).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn workers_equal_rows_is_the_limit() {
+        let shards = shard_batch(&batch(4), 4).unwrap();
+        assert!(shards.iter().all(|s| s[0].shape[0] == 1));
+    }
+
+    /// Regression: `workers > batch` used to be representable only as
+    /// silently empty shards; it must be a hard error instead.
+    #[test]
+    fn workers_exceeding_batch_rows_is_rejected() {
+        let err = shard_batch(&batch(2), 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("exceed batch rows"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn degenerate_inputs_are_rejected() {
+        assert!(shard_batch(&batch(4), 0).is_err());
+        assert!(shard_batch(&[], 2).is_err());
+        assert!(shard_batch(&[HostTensor::scalar_f32(1.0)], 1).is_err());
+        let mismatched = vec![
+            HostTensor::f32(vec![4, 2], vec![0.0; 8]),
+            HostTensor::f32(vec![3, 2], vec![0.0; 6]),
+        ];
+        assert!(shard_batch(&mismatched, 2).is_err());
     }
 }

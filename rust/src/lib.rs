@@ -12,6 +12,9 @@
 //!   [`coordinator::DataParallel`], generates data with [`data`], and
 //!   cross-checks everything against the native implementations in
 //!   [`orthogonal`] + [`linalg`].
+//! * **L4** is the serving fabric: [`serve`] turns the runtime into a
+//!   multi-threaded, micro-batching inference server (`cwy serve`) with a
+//!   matching load generator (`cwy client`).
 
 pub mod coordinator;
 pub mod data;
@@ -20,4 +23,5 @@ pub mod optim;
 pub mod orthogonal;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -6,6 +6,8 @@
 //!   train-dp --base copy_cwy           data-parallel (grad + all-reduce + apply)
 //!   tables --t 1000 --n 1024 --l 128   print the analytical Tables 1-2
 //!   verify                             orthogonality cross-checks vs native
+//!   serve  --artifact copy_cwy_step    micro-batching inference server
+//!   client --requests 1000             closed-loop load generator
 
 use anyhow::{bail, Result};
 use cwy::coordinator::{checkpoint, Schedule, Trainer};
@@ -24,12 +26,17 @@ fn main() -> Result<()> {
         "train-dp" => cmd_train_dp(&args),
         "tables" => cmd_tables(&args),
         "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         _ => {
             eprintln!(
-                "usage: cwy <list|train|train-dp|tables|verify> [--artifacts DIR] ...\n\
+                "usage: cwy <list|train|train-dp|tables|verify|serve|client> [--artifacts DIR] ...\n\
                  train:    --artifact NAME --steps N --schedule constant:1e-3 [--seed S] [--ckpt PATH]\n\
                  train-dp: --base NAME --workers W --steps N\n\
-                 tables:   [--t 1000 --n 1024 --l 128 --m 128]"
+                 tables:   [--t 1000 --n 1024 --l 128 --m 128]\n\
+                 serve:    --addr HOST:PORT --artifact NAME --workers W --max-batch B --max-wait-us U\n\
+                 \x20         [--backend pjrt|fake --queue-cap N --lr F]\n\
+                 client:   --addr HOST:PORT --requests N --concurrency C [--deadline-us U --sessions]"
             );
             Ok(())
         }
@@ -274,5 +281,86 @@ fn cmd_verify(args: &Args) -> Result<()> {
         bail!("{failures} verification failures");
     }
     println!("all verifications passed");
+    Ok(())
+}
+
+/// Micro-batching inference server over the PJRT runtime (DESIGN.md §6).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use cwy::serve::{
+        serve, BatchCfg, EngineModel, FakeModel, ModelFactory, ServeCfg, ServeModel, SessionCfg,
+    };
+    use std::sync::Arc;
+
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let workers = args.get_usize("workers", 2);
+    let max_batch = args.get_usize("max-batch", 8);
+    let max_wait_us = args.get_usize("max-wait-us", 2_000) as u64;
+    let queue_cap = args.get_usize("queue-cap", 1_024);
+    let lr = args.get_f32("lr", 0.0);
+    let default_backend = if args.get("artifact").is_some() { "pjrt" } else { "fake" };
+    let backend = args.get_or("backend", default_backend);
+
+    let factory: Arc<ModelFactory> = match backend.as_str() {
+        "fake" => {
+            let batch = max_batch;
+            let dim = args.get_usize("fake-dim", 16);
+            let delay_us = args.get_usize("fake-delay-us", 200) as u64;
+            Arc::new(move || Ok(Box::new(FakeModel::new(batch, dim, delay_us)) as Box<dyn ServeModel>))
+        }
+        "pjrt" => {
+            let dir = artifacts_dir(args);
+            let name = args
+                .get("artifact")
+                .ok_or_else(|| anyhow::anyhow!("--artifact required with --backend pjrt"))?
+                .to_string();
+            Arc::new(move || Ok(Box::new(EngineModel::open(&dir, &name)?) as Box<dyn ServeModel>))
+        }
+        other => bail!("unknown backend '{other}' (expected fake|pjrt)"),
+    };
+
+    let cfg = ServeCfg {
+        addr,
+        workers,
+        batch: BatchCfg { max_batch, max_wait_us, queue_cap },
+        session: SessionCfg::default(),
+        lr,
+    };
+    let server = serve(cfg, factory)?;
+    println!(
+        "# cwy serve: {} backend on {} ({} workers, max-batch {}, max-wait {}us)",
+        backend,
+        server.local_addr(),
+        workers,
+        max_batch,
+        max_wait_us
+    );
+    server.join();
+    Ok(())
+}
+
+/// Closed-loop load generator; exits non-zero on any dropped
+/// (non-deadline) request so CI can assert serving health.
+fn cmd_client(args: &Args) -> Result<()> {
+    use cwy::serve::{fetch_stats, run_load, ClientCfg};
+
+    let cfg = ClientCfg {
+        addr: args.get_or("addr", "127.0.0.1:7070"),
+        requests: args.get_usize("requests", 1_000),
+        concurrency: args.get_usize("concurrency", 32),
+        deadline_us: args.get("deadline-us").and_then(|v| v.parse().ok()),
+        use_sessions: args.has_flag("sessions"),
+    };
+    println!(
+        "# cwy client: {} requests over {} connections -> {}",
+        cfg.requests, cfg.concurrency, cfg.addr
+    );
+    let report = run_load(&cfg)?;
+    print!("{}", report.to_table().to_markdown());
+    if let Ok(stats) = fetch_stats(&cfg.addr) {
+        println!("# server stats: {stats}");
+    }
+    if report.dropped() > 0 {
+        bail!("{} requests dropped without a deadline excuse", report.dropped());
+    }
     Ok(())
 }

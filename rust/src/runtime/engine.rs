@@ -115,6 +115,24 @@ impl Engine {
         Ok(compiled)
     }
 
+    /// Per-worker bootstrap for the serve pool (DESIGN.md §6.5).
+    ///
+    /// `Compiled` holds `Rc`/`RefCell` state and is not `Send`, so the
+    /// serve subsystem shards by engine instance: every worker thread
+    /// calls this once to get a private engine with the artifacts it will
+    /// serve already compiled, then never shares either across threads.
+    pub fn open_worker(
+        dir: impl AsRef<std::path::Path>,
+        artifacts: &[&str],
+    ) -> Result<(Engine, Vec<Rc<Compiled>>)> {
+        let engine = Engine::open(dir)?;
+        let compiled = artifacts
+            .iter()
+            .map(|name| engine.load(name))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((engine, compiled))
+    }
+
     /// Initial training state for a step artifact, from its state.bin.
     pub fn initial_state(&self, name: &str) -> Result<Vec<HostTensor>> {
         let spec = self.manifest.get(name)?;

@@ -92,6 +92,26 @@ impl HostTensor {
         }
     }
 
+    /// Rows `start..start+count` along the leading axis as a new tensor
+    /// (used by batch sharding and the serve row scatter).
+    pub fn slice_rows(&self, start: usize, count: usize) -> Result<HostTensor> {
+        if self.shape.is_empty() {
+            bail!("cannot slice a scalar by rows");
+        }
+        let rows = self.shape[0];
+        if start + count > rows {
+            bail!("rows {start}..{} out of bounds (leading dim {rows})", start + count);
+        }
+        let row_len: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        let (a, b) = (start * row_len, (start + count) * row_len);
+        Ok(match &self.data {
+            Data::F32(v) => HostTensor::f32(shape, v[a..b].to_vec()),
+            Data::I32(v) => HostTensor::i32(shape, v[a..b].to_vec()),
+        })
+    }
+
     /// Scalar extraction (loss / metric outputs).
     pub fn scalar(&self) -> Result<f32> {
         match &self.data {
@@ -161,5 +181,15 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn slice_rows_bounds_and_content() {
+        let t = HostTensor::i32(vec![3, 2], vec![1, 2, 3, 4, 5, 6]);
+        let mid = t.slice_rows(1, 2).unwrap();
+        assert_eq!(mid.shape, vec![2, 2]);
+        assert_eq!(mid.as_i32().unwrap(), &[3, 4, 5, 6]);
+        assert!(t.slice_rows(2, 2).is_err());
+        assert!(HostTensor::scalar_f32(1.0).slice_rows(0, 1).is_err());
     }
 }

@@ -1,0 +1,476 @@
+//! Micro-batching request queue: coalesce up to `max_batch` compatible
+//! requests within `max_wait_us` into one fused execution, with bounded-
+//! queue backpressure and shed-on-deadline (DESIGN.md §6.3).
+//!
+//! Split in two layers so the policy is deterministic under test:
+//!
+//! * [`BatchQueue`] — the pure state machine.  Every method takes `now_us`
+//!   explicitly, so unit tests drive it with a fake clock and no threads.
+//! * [`Batcher`] — the thread-safe wrapper (`Mutex` + `Condvar`) the
+//!   server submits into and worker threads block on.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::serve::protocol::{ErrCode, InferRequest, Response};
+use crate::serve::stats::{Clock, ServeStats};
+
+/// A queued request plus its response channel and timing bookkeeping.
+pub struct Pending {
+    pub req: InferRequest,
+    pub enqueued_us: u64,
+    /// Absolute shed time on the server clock (enqueue + deadline budget).
+    pub expiry_us: Option<u64>,
+    tx: mpsc::Sender<Response>,
+}
+
+impl Pending {
+    pub fn new(req: InferRequest, now_us: u64, tx: mpsc::Sender<Response>) -> Pending {
+        let expiry_us = req.deadline_us.map(|d| now_us.saturating_add(d));
+        Pending { req, enqueued_us: now_us, expiry_us, tx }
+    }
+
+    pub fn expired(&self, now_us: u64) -> bool {
+        self.expiry_us.is_some_and(|e| now_us >= e)
+    }
+
+    /// Send a response frame; a disconnected client is not an error.
+    pub fn reply(&self, resp: Response) {
+        let _ = self.tx.send(resp);
+    }
+
+    fn deadline_error(&self) -> Response {
+        Response::Err {
+            id: self.req.id,
+            code: ErrCode::Deadline,
+            msg: "deadline budget elapsed while queued".to_string(),
+        }
+    }
+}
+
+/// Why [`BatchQueue::poll`] decided to flush.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// `max_batch` compatible requests are waiting.
+    Full,
+    /// The oldest request has waited `max_wait_us`.
+    Timeout,
+}
+
+/// What a worker should do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushDecision {
+    Flush(FlushReason),
+    /// Nothing to flush yet; re-poll after at most this many microseconds
+    /// (capped by the earliest request expiry so sheds happen on time).
+    WaitUs(u64),
+    /// Queue is empty.
+    Idle,
+}
+
+/// Pure micro-batching state machine over a bounded FIFO.
+pub struct BatchQueue {
+    cap: usize,
+    items: VecDeque<Pending>,
+}
+
+impl BatchQueue {
+    pub fn new(cap: usize) -> BatchQueue {
+        BatchQueue { cap: cap.max(1), items: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Enqueue, or hand the request back when the queue is full
+    /// (backpressure: the caller sheds it with an `overloaded` frame).
+    pub fn push(&mut self, p: Pending) -> Result<(), Pending> {
+        if self.items.len() >= self.cap {
+            return Err(p);
+        }
+        self.items.push_back(p);
+        Ok(())
+    }
+
+    /// Remove and return every request whose deadline has passed,
+    /// preserving the relative order of the survivors.
+    pub fn shed_expired(&mut self, now_us: u64) -> Vec<Pending> {
+        let mut shed = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.items.len());
+        while let Some(p) = self.items.pop_front() {
+            if p.expired(now_us) {
+                shed.push(p);
+            } else {
+                keep.push_back(p);
+            }
+        }
+        self.items = keep;
+        shed
+    }
+
+    /// Decide whether a batch is ready.  Compatible = same artifact as the
+    /// oldest request (they fuse into one execution).
+    pub fn poll(&self, max_batch: usize, max_wait_us: u64, now_us: u64) -> FlushDecision {
+        let Some(front) = self.items.front() else {
+            return FlushDecision::Idle;
+        };
+        let group = self
+            .items
+            .iter()
+            .filter(|p| p.req.artifact == front.req.artifact)
+            .count();
+        if group >= max_batch.max(1) {
+            return FlushDecision::Flush(FlushReason::Full);
+        }
+        let waited = now_us.saturating_sub(front.enqueued_us);
+        if waited >= max_wait_us {
+            return FlushDecision::Flush(FlushReason::Timeout);
+        }
+        let mut wait = max_wait_us - waited;
+        for p in &self.items {
+            if let Some(e) = p.expiry_us {
+                wait = wait.min(e.saturating_sub(now_us));
+            }
+        }
+        FlushDecision::WaitUs(wait)
+    }
+
+    /// Dequeue the next batch: up to `max_batch` requests sharing the
+    /// oldest request's artifact, in FIFO order.  Requests for other
+    /// artifacts keep their relative order for the next flush.
+    pub fn take_batch(&mut self, max_batch: usize) -> Vec<Pending> {
+        let Some(front) = self.items.front() else {
+            return Vec::new();
+        };
+        let artifact = front.req.artifact.clone();
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.items.len());
+        while let Some(p) = self.items.pop_front() {
+            if batch.len() < max_batch.max(1) && p.req.artifact == artifact {
+                batch.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        self.items = rest;
+        batch
+    }
+}
+
+/// Batcher configuration (`cwy serve` flags map 1:1 onto these).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCfg {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub queue_cap: usize,
+}
+
+impl Default for BatchCfg {
+    fn default() -> BatchCfg {
+        BatchCfg { max_batch: 8, max_wait_us: 2_000, queue_cap: 1_024 }
+    }
+}
+
+/// Thread-safe micro-batching queue shared by connections and workers.
+pub struct Batcher {
+    cfg: BatchCfg,
+    queue: Mutex<BatchQueue>,
+    notify: Condvar,
+    clock: Arc<Clock>,
+    stats: Arc<ServeStats>,
+    stop: AtomicBool,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatchCfg, clock: Arc<Clock>, stats: Arc<ServeStats>) -> Batcher {
+        Batcher {
+            queue: Mutex::new(BatchQueue::new(cfg.queue_cap)),
+            notify: Condvar::new(),
+            cfg,
+            clock,
+            stats,
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    pub fn cfg(&self) -> &BatchCfg {
+        &self.cfg
+    }
+
+    /// Submit one request.  On a full queue the request is answered
+    /// immediately with an `overloaded` error frame and `false` returned.
+    pub fn submit(&self, req: InferRequest, tx: mpsc::Sender<Response>) -> bool {
+        let now = self.clock.now_us();
+        let pending = Pending::new(req, now, tx);
+        let mut q = self.queue.lock().unwrap();
+        // Checked under the queue lock: shutdown() sets the flag before
+        // draining, so a request either lands pre-drain (and is answered
+        // by the drain) or sees the flag here — never a silent hang.
+        if self.stop.load(Ordering::Acquire) {
+            drop(q);
+            pending.reply(Response::Err {
+                id: pending.req.id,
+                code: ErrCode::Unavailable,
+                msg: "server shutting down".to_string(),
+            });
+            return false;
+        }
+        match q.push(pending) {
+            Ok(()) => {
+                self.stats.record_submit(q.len());
+                drop(q);
+                self.notify.notify_one();
+                true
+            }
+            Err(p) => {
+                drop(q);
+                self.stats.record_rejected_full();
+                p.reply(Response::Err {
+                    id: p.req.id,
+                    code: ErrCode::Overloaded,
+                    msg: "queue full".to_string(),
+                });
+                false
+            }
+        }
+    }
+
+    /// Block until a batch is ready (or shutdown).  Expired requests are
+    /// answered with `deadline` error frames as they are discovered.
+    pub fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                return None;
+            }
+            let now = self.clock.now_us();
+            for p in q.shed_expired(now) {
+                self.stats.record_shed_deadline();
+                p.reply(p.deadline_error());
+            }
+            match q.poll(self.cfg.max_batch, self.cfg.max_wait_us, now) {
+                FlushDecision::Flush(_) => {
+                    return Some(q.take_batch(self.cfg.max_batch));
+                }
+                FlushDecision::WaitUs(us) => {
+                    let dur = Duration::from_micros(us.clamp(100, 50_000));
+                    q = self.notify.wait_timeout(q, dur).unwrap().0;
+                }
+                FlushDecision::Idle => {
+                    q = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Ask workers to exit; pending requests are answered `unavailable`.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            let batch = q.take_batch(usize::MAX);
+            if batch.is_empty() {
+                break;
+            }
+            for p in batch {
+                p.reply(Response::Err {
+                    id: p.req.id,
+                    code: ErrCode::Unavailable,
+                    msg: "server shutting down".to_string(),
+                });
+            }
+        }
+        drop(q);
+        self.notify.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, artifact: &str, deadline_us: Option<u64>) -> InferRequest {
+        InferRequest {
+            id,
+            artifact: artifact.to_string(),
+            session: None,
+            deadline_us,
+            inputs: vec![],
+        }
+    }
+
+    fn pend(id: u64, artifact: &str, now: u64, deadline: Option<u64>) -> (Pending, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (Pending::new(req(id, artifact, deadline), now, tx), rx)
+    }
+
+    fn ids(batch: &[Pending]) -> Vec<u64> {
+        batch.iter().map(|p| p.req.id).collect()
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut q = BatchQueue::new(16);
+        for i in 0..3 {
+            let (p, _rx) = pend(i, "a", 0, None);
+            q.push(p).ok().unwrap();
+        }
+        assert_eq!(q.poll(3, 10_000, 1), FlushDecision::Flush(FlushReason::Full));
+        let batch = q.take_batch(3);
+        assert_eq!(ids(&batch), vec![0, 1, 2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_timeout() {
+        let mut q = BatchQueue::new(16);
+        let (p, _rx) = pend(7, "a", 100, None);
+        q.push(p).ok().unwrap();
+        // At t=600 the request has waited 500us of its 2000us budget.
+        assert_eq!(q.poll(8, 2_000, 600), FlushDecision::WaitUs(1_500));
+        // At t=2100 the budget is spent: flush a batch of one.
+        assert_eq!(q.poll(8, 2_000, 2_100), FlushDecision::Flush(FlushReason::Timeout));
+        assert_eq!(ids(&q.take_batch(8)), vec![7]);
+    }
+
+    #[test]
+    fn coalesces_to_occupancy_above_one() {
+        // The micro-batching claim itself: 5 compatible requests queued
+        // while a worker is busy come out as ONE batch of 5.
+        let mut q = BatchQueue::new(16);
+        for i in 0..5 {
+            let (p, _rx) = pend(i, "a", i * 10, None);
+            q.push(p).ok().unwrap();
+        }
+        let batch = q.take_batch(8);
+        assert_eq!(batch.len(), 5);
+        assert_eq!(ids(&batch), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sheds_expired_requests_only() {
+        let mut q = BatchQueue::new(16);
+        let (p1, rx1) = pend(1, "a", 0, Some(100));
+        let (p2, _rx2) = pend(2, "a", 0, None);
+        let (p3, rx3) = pend(3, "a", 0, Some(10_000));
+        q.push(p1).ok().unwrap();
+        q.push(p2).ok().unwrap();
+        q.push(p3).ok().unwrap();
+
+        assert!(q.shed_expired(50).is_empty());
+        let shed = q.shed_expired(150);
+        assert_eq!(ids(&shed), vec![1]);
+        assert_eq!(q.len(), 2);
+
+        // The shed path emits a deadline error frame on the reply channel.
+        shed[0].reply(shed[0].deadline_error());
+        match rx1.try_recv().unwrap() {
+            Response::Err { id, code, .. } => {
+                assert_eq!((id, code), (1, ErrCode::Deadline));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        drop(rx3);
+    }
+
+    #[test]
+    fn poll_wait_is_capped_by_earliest_expiry() {
+        let mut q = BatchQueue::new(16);
+        let (p, _rx) = pend(1, "a", 0, Some(500));
+        q.push(p).ok().unwrap();
+        // Flush timeout would be 2000us away, but the deadline is at 500.
+        assert_eq!(q.poll(8, 2_000, 0), FlushDecision::WaitUs(500));
+    }
+
+    #[test]
+    fn interleaved_artifacts_preserve_order() {
+        let mut q = BatchQueue::new(16);
+        for (id, art) in [(1, "a"), (2, "b"), (3, "a"), (4, "b"), (5, "a")] {
+            let (p, _rx) = pend(id, art, 0, None);
+            q.push(p).ok().unwrap();
+        }
+        // First flush fuses every queued "a" request, skipping over "b"s
+        // without reordering them.
+        assert_eq!(ids(&q.take_batch(8)), vec![1, 3, 5]);
+        assert_eq!(ids(&q.take_batch(8)), vec![2, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let mut q = BatchQueue::new(2);
+        let (p1, _r1) = pend(1, "a", 0, None);
+        let (p2, _r2) = pend(2, "a", 0, None);
+        let (p3, _r3) = pend(3, "a", 0, None);
+        assert!(q.push(p1).is_ok());
+        assert!(q.push(p2).is_ok());
+        let back = q.push(p3).err().unwrap();
+        assert_eq!(back.req.id, 3);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn max_batch_splits_large_groups() {
+        let mut q = BatchQueue::new(64);
+        for i in 0..10 {
+            let (p, _rx) = pend(i, "a", 0, None);
+            q.push(p).ok().unwrap();
+        }
+        assert_eq!(q.poll(4, 1_000, 0), FlushDecision::Flush(FlushReason::Full));
+        assert_eq!(ids(&q.take_batch(4)), vec![0, 1, 2, 3]);
+        assert_eq!(ids(&q.take_batch(4)), vec![4, 5, 6, 7]);
+        assert_eq!(ids(&q.take_batch(4)), vec![8, 9]);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_answered_unavailable() {
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let b = Batcher::new(BatchCfg::default(), clock, stats);
+        b.shutdown();
+        let (tx, rx) = mpsc::channel();
+        assert!(!b.submit(req(9, "a", None), tx));
+        match rx.try_recv().unwrap() {
+            Response::Err { id, code, .. } => {
+                assert_eq!((id, code), (9, ErrCode::Unavailable));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn threaded_batcher_round_trip() {
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let b = Batcher::new(
+            BatchCfg { max_batch: 2, max_wait_us: 200_000, queue_cap: 8 },
+            clock,
+            stats.clone(),
+        );
+        let (tx, _rx) = mpsc::channel();
+        assert!(b.submit(req(1, "a", None), tx.clone()));
+        assert!(b.submit(req(2, "a", None), tx));
+        // Two submissions reach max_batch, so next_batch returns without
+        // waiting out the flush timer.
+        let batch = b.next_batch().unwrap();
+        assert_eq!(ids(&batch), vec![1, 2]);
+        assert_eq!(stats.snapshot().submitted, 2);
+        b.shutdown();
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,377 @@
+//! Closed-loop load generator for `cwy client` and the serve tests.
+//!
+//! Each of `concurrency` threads opens its own connection and keeps one
+//! request in flight (send, wait, repeat).  The server's micro-batcher
+//! coalesces across connections, so client-side latency plus server-side
+//! occupancy together demonstrate the fusing the paper's parametrization
+//! makes cheap.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::report::Table;
+use crate::runtime::tensor::{Dtype, HostTensor};
+use crate::serve::protocol::{self, ErrCode, InferRequest, Request, Response};
+use crate::util::json::Json;
+
+/// Load-run configuration (`cwy client` flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct ClientCfg {
+    pub addr: String,
+    /// Total requests across all connections.
+    pub requests: usize,
+    pub concurrency: usize,
+    /// Per-request relative deadline budget.
+    pub deadline_us: Option<u64>,
+    /// Attach a per-connection session key to every request, exercising
+    /// the server-side recurrent-state path.
+    pub use_sessions: bool,
+}
+
+impl Default for ClientCfg {
+    fn default() -> ClientCfg {
+        ClientCfg {
+            addr: "127.0.0.1:7070".to_string(),
+            requests: 1_000,
+            concurrency: 32,
+            deadline_us: None,
+            use_sessions: false,
+        }
+    }
+}
+
+/// What the server says it serves (decoded `spec` frame).
+#[derive(Clone, Debug)]
+pub struct SpecInfo {
+    pub artifact: String,
+    pub batch: usize,
+    /// (shape, dtype) per client-supplied input row.
+    pub inputs: Vec<(Vec<usize>, Dtype)>,
+}
+
+/// Aggregated results of one load run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub err_deadline: u64,
+    pub err_overloaded: u64,
+    pub err_other: u64,
+    pub wall_s: f64,
+    pub lat_p50_us: u64,
+    pub lat_p95_us: u64,
+    pub lat_p99_us: u64,
+    /// Mean server-side batch occupancy observed in `ok` frames.
+    pub mean_batch: f64,
+}
+
+impl LoadReport {
+    pub fn dropped(&self) -> u64 {
+        self.err_overloaded + self.err_other
+    }
+
+    pub fn rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.ok as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]);
+        let rows: Vec<(&str, String)> = vec![
+            ("requests sent", self.sent.to_string()),
+            ("ok", self.ok.to_string()),
+            ("err deadline", self.err_deadline.to_string()),
+            ("err overloaded", self.err_overloaded.to_string()),
+            ("err other", self.err_other.to_string()),
+            ("wall (s)", format!("{:.3}", self.wall_s)),
+            ("throughput (req/s)", format!("{:.1}", self.rps())),
+            ("latency p50 (us)", self.lat_p50_us.to_string()),
+            ("latency p95 (us)", self.lat_p95_us.to_string()),
+            ("latency p99 (us)", self.lat_p99_us.to_string()),
+            ("mean server batch", format!("{:.2}", self.mean_batch)),
+        ];
+        for (k, v) in rows {
+            t.row(&[k.to_string(), v]);
+        }
+        t
+    }
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn open(addr: &str) -> Result<Conn> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().context("cloning stream")?;
+        Ok(Conn { reader: BufReader::new(stream), writer })
+    }
+
+    fn send(&mut self, req: &Request) -> Result<()> {
+        let line = protocol::encode_request(req);
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                bail!("server closed the connection");
+            }
+            if !line.trim().is_empty() {
+                return protocol::decode_response(&line);
+            }
+        }
+    }
+}
+
+/// Ask a server what it serves.
+pub fn fetch_spec(addr: &str) -> Result<SpecInfo> {
+    let mut conn = Conn::open(addr)?;
+    conn.send(&Request::Spec)?;
+    match conn.recv()? {
+        Response::Spec(j) => spec_from_json(&j),
+        other => bail!("expected spec frame, got {other:?}"),
+    }
+}
+
+fn spec_from_json(j: &Json) -> Result<SpecInfo> {
+    let artifact = j
+        .path(&["artifact"])
+        .as_str()
+        .ok_or_else(|| anyhow!("spec missing artifact"))?
+        .to_string();
+    let batch = j
+        .path(&["batch"])
+        .as_usize()
+        .ok_or_else(|| anyhow!("spec missing batch"))?;
+    let mut inputs = Vec::new();
+    for p in j
+        .path(&["inputs"])
+        .as_arr()
+        .ok_or_else(|| anyhow!("spec missing inputs"))?
+    {
+        let shape: Vec<usize> = p
+            .path(&["shape"])
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec input missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<Result<_>>()?;
+        let dtype = Dtype::parse(p.path(&["dtype"]).as_str().unwrap_or("f32"))?;
+        inputs.push((shape, dtype));
+    }
+    Ok(SpecInfo { artifact, batch, inputs })
+}
+
+/// Deterministic payload row for input `i` of request `n`.
+fn payload(spec: &SpecInfo, n: u64) -> Vec<HostTensor> {
+    spec.inputs
+        .iter()
+        .map(|(shape, dtype)| {
+            let len: usize = shape.iter().product();
+            match dtype {
+                Dtype::F32 => HostTensor::f32(
+                    shape.clone(),
+                    (0..len).map(|j| ((n as usize + j) % 13) as f32 * 0.125).collect(),
+                ),
+                Dtype::I32 => HostTensor::i32(
+                    shape.clone(),
+                    (0..len).map(|j| ((n as usize + j) % 7) as i32).collect(),
+                ),
+            }
+        })
+        .collect()
+}
+
+fn exact_percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let rank = ((p * sorted_us.len() as f64).ceil() as usize).clamp(1, sorted_us.len());
+    sorted_us[rank - 1]
+}
+
+struct ThreadOutcome {
+    ok: u64,
+    err_deadline: u64,
+    err_overloaded: u64,
+    err_other: u64,
+    latencies_us: Vec<u64>,
+    batch_sum: u64,
+}
+
+fn run_thread(
+    cfg: &ClientCfg,
+    spec: &SpecInfo,
+    thread_idx: usize,
+    count: usize,
+) -> ThreadOutcome {
+    let mut out = ThreadOutcome {
+        ok: 0,
+        err_deadline: 0,
+        err_overloaded: 0,
+        err_other: 0,
+        latencies_us: Vec::with_capacity(count),
+        batch_sum: 0,
+    };
+    let mut conn = match Conn::open(&cfg.addr) {
+        Ok(c) => c,
+        Err(_) => {
+            out.err_other += count as u64;
+            return out;
+        }
+    };
+    let session = cfg.use_sessions.then(|| format!("load-{thread_idx}"));
+    for i in 0..count {
+        let id = ((thread_idx as u64) << 32) | i as u64;
+        let req = Request::Infer(InferRequest {
+            id,
+            artifact: spec.artifact.clone(),
+            session: session.clone(),
+            deadline_us: cfg.deadline_us,
+            inputs: payload(spec, id),
+        });
+        let t0 = Instant::now();
+        if conn.send(&req).is_err() {
+            out.err_other += (count - i) as u64;
+            break;
+        }
+        match conn.recv() {
+            Ok(Response::Ok { id: rid, batch, .. }) => {
+                out.latencies_us.push(t0.elapsed().as_micros() as u64);
+                if rid == id {
+                    out.ok += 1;
+                    out.batch_sum += batch as u64;
+                } else {
+                    out.err_other += 1;
+                }
+            }
+            Ok(Response::Err { code, .. }) => match code {
+                ErrCode::Deadline => out.err_deadline += 1,
+                ErrCode::Overloaded => out.err_overloaded += 1,
+                _ => out.err_other += 1,
+            },
+            Ok(_) => out.err_other += 1,
+            Err(_) => {
+                out.err_other += (count - i) as u64;
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Run a closed-loop load test; returns aggregate counters + latency
+/// percentiles.  Never fails on per-request errors — those are counted.
+pub fn run_load(cfg: &ClientCfg) -> Result<LoadReport> {
+    let spec = fetch_spec(&cfg.addr)?;
+    let threads = cfg.concurrency.max(1);
+    let base = cfg.requests / threads;
+    let extra = cfg.requests % threads;
+
+    let t0 = Instant::now();
+    let outcomes: Vec<ThreadOutcome> = thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let cfg = &*cfg;
+            let spec = &spec;
+            let count = base + usize::from(w < extra);
+            handles.push(s.spawn(move || run_thread(cfg, spec, w, count)));
+        }
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut report = LoadReport { sent: cfg.requests as u64, wall_s, ..Default::default() };
+    let mut all_lat: Vec<u64> = Vec::with_capacity(cfg.requests);
+    let mut batch_sum = 0u64;
+    for o in outcomes {
+        report.ok += o.ok;
+        report.err_deadline += o.err_deadline;
+        report.err_overloaded += o.err_overloaded;
+        report.err_other += o.err_other;
+        batch_sum += o.batch_sum;
+        all_lat.extend(o.latencies_us);
+    }
+    all_lat.sort_unstable();
+    report.lat_p50_us = exact_percentile(&all_lat, 0.50);
+    report.lat_p95_us = exact_percentile(&all_lat, 0.95);
+    report.lat_p99_us = exact_percentile(&all_lat, 0.99);
+    report.mean_batch = if report.ok > 0 {
+        batch_sum as f64 / report.ok as f64
+    } else {
+        0.0
+    };
+    Ok(report)
+}
+
+/// One ping round-trip; returns the measured latency.
+pub fn ping(addr: &str) -> Result<f64> {
+    let mut conn = Conn::open(addr)?;
+    let t0 = Instant::now();
+    conn.send(&Request::Ping { id: 1 })?;
+    match conn.recv()? {
+        Response::Pong { id: 1 } => Ok(t0.elapsed().as_secs_f64()),
+        other => bail!("expected pong, got {other:?}"),
+    }
+}
+
+/// Fetch a server-side stats snapshot as JSON.
+pub fn fetch_stats(addr: &str) -> Result<Json> {
+    let mut conn = Conn::open(addr)?;
+    conn.send(&Request::Stats)?;
+    match conn.recv()? {
+        Response::Stats(j) => Ok(j),
+        other => bail!("expected stats frame, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_exact_on_small_sets() {
+        let v = vec![10, 20, 30, 40];
+        assert_eq!(exact_percentile(&v, 0.50), 20);
+        assert_eq!(exact_percentile(&v, 0.95), 40);
+        assert_eq!(exact_percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn payload_matches_spec_shapes() {
+        let spec = SpecInfo {
+            artifact: "a".into(),
+            batch: 4,
+            inputs: vec![(vec![3], Dtype::F32), (vec![2, 2], Dtype::I32)],
+        };
+        let p = payload(&spec, 5);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].shape, vec![3]);
+        assert_eq!(p[1].shape, vec![2, 2]);
+        assert_eq!(p[1].dtype(), Dtype::I32);
+    }
+
+    #[test]
+    fn report_renders() {
+        let r = LoadReport { sent: 10, ok: 10, wall_s: 1.0, ..Default::default() };
+        assert_eq!(r.dropped(), 0);
+        assert!(r.to_table().to_markdown().contains("requests sent"));
+    }
+}

@@ -1,0 +1,36 @@
+//! L4 serving subsystem: a multi-threaded, micro-batching inference
+//! server over the PJRT runtime (DESIGN.md §6).
+//!
+//! The paper's point is that CWY/T-CWY turn sequential Householder
+//! products into one fused, parallelism-friendly computation; serving
+//! exploits the same shape at the other end of the stack by folding many
+//! clients' requests into a single fused artifact execution:
+//!
+//! ```text
+//! TCP clients ── protocol (JSON lines) ── Batcher (coalesce/shed)
+//!                                             │ fused batches
+//!                workers (one Engine each) ◄──┘
+//!                   │ stack rows → execute → split rows
+//!                sessions (per-client RNN state)   stats (p50/p95/p99)
+//! ```
+//!
+//! Module map: [`protocol`] wire format · [`batcher`] coalescing queue ·
+//! [`session`] recurrent-state cache · [`worker`] pool + fused execution ·
+//! [`server`] TCP front end · [`client`] load generator · [`stats`]
+//! latency/occupancy accounting.
+
+pub mod batcher;
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod session;
+pub mod stats;
+pub mod worker;
+
+pub use batcher::{BatchCfg, Batcher};
+pub use client::{fetch_spec, fetch_stats, ping, run_load, ClientCfg, LoadReport};
+pub use protocol::{ErrCode, InferRequest, Request, Response};
+pub use server::{serve, ServeCfg, Server};
+pub use session::{SessionCfg, SessionStore};
+pub use stats::{Clock, ServeStats, Snapshot};
+pub use worker::{EngineModel, FakeModel, ModelFactory, ServeModel, ServeSpec, WorkerPool};

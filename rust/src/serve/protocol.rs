@@ -1,0 +1,428 @@
+//! Wire protocol for `cwy serve`: JSON objects, one per line, over TCP.
+//!
+//! Transport-agnostic by construction — encode/decode work on single
+//! lines, so unit tests exercise the full grammar without sockets.  The
+//! frame format is specified in DESIGN.md §6.1; in short:
+//!
+//! ```text
+//! -> {"type":"infer","id":7,"artifact":"copy_cwy_step","session":"s1",
+//!     "deadline_us":500000,"inputs":[{"shape":[4],"dtype":"f32",
+//!     "data":[1,2,3,4]}]}
+//! <- {"type":"ok","id":7,"batch":5,"queue_us":210,"exec_us":850,
+//!     "outputs":[{"shape":[4],"dtype":"f32","data":[2,4,6,8]}]}
+//! <- {"type":"err","id":7,"code":"deadline","msg":"expired in queue"}
+//! ```
+//!
+//! `deadline_us` is a *relative* budget measured from server enqueue time,
+//! so client and server clocks never need to agree.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::tensor::{Data, Dtype, HostTensor};
+use crate::util::json::{parse, Json};
+
+/// One inference call: the client supplies a row per data input of the
+/// served artifact (DESIGN.md §6.2).
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub artifact: String,
+    /// Session key for streaming models: per-row recurrent state is kept
+    /// server-side between calls carrying the same key.
+    pub session: Option<String>,
+    /// Relative deadline budget in microseconds; requests still queued
+    /// past the budget are shed with an `err/deadline` frame.
+    pub deadline_us: Option<u64>,
+    pub inputs: Vec<HostTensor>,
+}
+
+/// Client -> server frames.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Infer(InferRequest),
+    Ping { id: u64 },
+    /// Ask for the served artifact's signature (batch size, row shapes).
+    Spec,
+    /// Ask for a server statistics snapshot.
+    Stats,
+}
+
+/// Machine-readable error classes in `err` frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Shed: the deadline budget elapsed while queued.
+    Deadline,
+    /// Backpressure: the bounded queue was full at submit time.
+    Overloaded,
+    /// The frame did not parse or did not match the artifact signature.
+    BadRequest,
+    /// The fused execution failed.
+    Exec,
+    /// The server is shutting down.
+    Unavailable,
+}
+
+impl ErrCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrCode::Deadline => "deadline",
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::Exec => "exec",
+            ErrCode::Unavailable => "unavailable",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ErrCode> {
+        Ok(match s {
+            "deadline" => ErrCode::Deadline,
+            "overloaded" => ErrCode::Overloaded,
+            "bad_request" => ErrCode::BadRequest,
+            "exec" => ErrCode::Exec,
+            "unavailable" => ErrCode::Unavailable,
+            other => bail!("unknown error code '{other}'"),
+        })
+    }
+}
+
+/// Server -> client frames.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Ok {
+        id: u64,
+        outputs: Vec<HostTensor>,
+        /// Time spent queued before the fused execution started.
+        queue_us: u64,
+        /// Wall time of the fused execution that served this request.
+        exec_us: u64,
+        /// How many requests were coalesced into that execution.
+        batch: usize,
+    },
+    Err {
+        id: u64,
+        code: ErrCode,
+        msg: String,
+    },
+    Pong {
+        id: u64,
+    },
+    Spec(Json),
+    Stats(Json),
+}
+
+impl Response {
+    /// The request id this frame answers, when it answers one.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Response::Ok { id, .. } | Response::Err { id, .. } | Response::Pong { id } => {
+                Some(*id)
+            }
+            Response::Spec(_) | Response::Stats(_) => None,
+        }
+    }
+}
+
+fn dtype_str(d: Dtype) -> &'static str {
+    match d {
+        Dtype::F32 => "f32",
+        Dtype::I32 => "i32",
+    }
+}
+
+/// Tensor -> `{"shape":[..],"dtype":"f32","data":[..]}`.
+pub fn tensor_to_json(t: &HostTensor) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "shape".to_string(),
+        Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    m.insert("dtype".to_string(), Json::Str(dtype_str(t.dtype()).to_string()));
+    let data = match &t.data {
+        Data::F32(v) => Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()),
+        Data::I32(v) => Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()),
+    };
+    m.insert("data".to_string(), data);
+    Json::Obj(m)
+}
+
+/// Inverse of [`tensor_to_json`]; validates shape/data consistency.
+pub fn tensor_from_json(j: &Json) -> Result<HostTensor> {
+    let shape: Vec<usize> = j
+        .path(&["shape"])
+        .as_arr()
+        .ok_or_else(|| anyhow!("tensor missing 'shape'"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect::<Result<_>>()?;
+    let dtype = Dtype::parse(
+        j.path(&["dtype"])
+            .as_str()
+            .ok_or_else(|| anyhow!("tensor missing 'dtype'"))?,
+    )?;
+    let data = j
+        .path(&["data"])
+        .as_arr()
+        .ok_or_else(|| anyhow!("tensor missing 'data'"))?;
+    let want: usize = shape.iter().product();
+    if data.len() != want {
+        bail!("tensor data has {} values, shape {:?} needs {want}", data.len(), shape);
+    }
+    let nums: Vec<f64> = data
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-numeric tensor data")))
+        .collect::<Result<_>>()?;
+    Ok(match dtype {
+        Dtype::F32 => HostTensor::f32(shape, nums.iter().map(|&x| x as f32).collect()),
+        Dtype::I32 => HostTensor::i32(shape, nums.iter().map(|&x| x as i32).collect()),
+    })
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Encode one request frame (no trailing newline; the transport adds it).
+pub fn encode_request(req: &Request) -> String {
+    match req {
+        Request::Infer(r) => {
+            let mut pairs = vec![
+                ("type", Json::Str("infer".into())),
+                ("id", Json::Num(r.id as f64)),
+                ("artifact", Json::Str(r.artifact.clone())),
+                (
+                    "inputs",
+                    Json::Arr(r.inputs.iter().map(tensor_to_json).collect()),
+                ),
+            ];
+            if let Some(s) = &r.session {
+                pairs.push(("session", Json::Str(s.clone())));
+            }
+            if let Some(d) = r.deadline_us {
+                pairs.push(("deadline_us", Json::Num(d as f64)));
+            }
+            obj(pairs).dump()
+        }
+        Request::Ping { id } => {
+            obj(vec![("type", Json::Str("ping".into())), ("id", Json::Num(*id as f64))]).dump()
+        }
+        Request::Spec => obj(vec![("type", Json::Str("spec".into()))]).dump(),
+        Request::Stats => obj(vec![("type", Json::Str("stats".into()))]).dump(),
+    }
+}
+
+/// Decode one request line.
+pub fn decode_request(line: &str) -> Result<Request> {
+    let j = parse(line.trim()).map_err(|e| anyhow!("bad frame: {e}"))?;
+    let ty = j
+        .path(&["type"])
+        .as_str()
+        .ok_or_else(|| anyhow!("frame missing 'type'"))?;
+    match ty {
+        "infer" => {
+            let id = j
+                .path(&["id"])
+                .as_f64()
+                .ok_or_else(|| anyhow!("infer frame missing 'id'"))? as u64;
+            let artifact = j
+                .path(&["artifact"])
+                .as_str()
+                .ok_or_else(|| anyhow!("infer frame missing 'artifact'"))?
+                .to_string();
+            let session = j.path(&["session"]).as_str().map(|s| s.to_string());
+            let deadline_us = j.path(&["deadline_us"]).as_f64().map(|x| x as u64);
+            let inputs = j
+                .path(&["inputs"])
+                .as_arr()
+                .ok_or_else(|| anyhow!("infer frame missing 'inputs'"))?
+                .iter()
+                .map(tensor_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Request::Infer(InferRequest { id, artifact, session, deadline_us, inputs }))
+        }
+        "ping" => Ok(Request::Ping {
+            id: j.path(&["id"]).as_f64().unwrap_or(0.0) as u64,
+        }),
+        "spec" => Ok(Request::Spec),
+        "stats" => Ok(Request::Stats),
+        other => bail!("unknown request type '{other}'"),
+    }
+}
+
+/// Encode one response frame (no trailing newline).
+pub fn encode_response(resp: &Response) -> String {
+    match resp {
+        Response::Ok { id, outputs, queue_us, exec_us, batch } => obj(vec![
+            ("type", Json::Str("ok".into())),
+            ("id", Json::Num(*id as f64)),
+            ("batch", Json::Num(*batch as f64)),
+            ("queue_us", Json::Num(*queue_us as f64)),
+            ("exec_us", Json::Num(*exec_us as f64)),
+            (
+                "outputs",
+                Json::Arr(outputs.iter().map(tensor_to_json).collect()),
+            ),
+        ])
+        .dump(),
+        Response::Err { id, code, msg } => obj(vec![
+            ("type", Json::Str("err".into())),
+            ("id", Json::Num(*id as f64)),
+            ("code", Json::Str(code.as_str().into())),
+            ("msg", Json::Str(msg.clone())),
+        ])
+        .dump(),
+        Response::Pong { id } => {
+            obj(vec![("type", Json::Str("pong".into())), ("id", Json::Num(*id as f64))]).dump()
+        }
+        Response::Spec(s) => {
+            obj(vec![("type", Json::Str("spec".into())), ("spec", s.clone())]).dump()
+        }
+        Response::Stats(s) => {
+            obj(vec![("type", Json::Str("stats".into())), ("stats", s.clone())]).dump()
+        }
+    }
+}
+
+/// Decode one response line.
+pub fn decode_response(line: &str) -> Result<Response> {
+    let j = parse(line.trim()).map_err(|e| anyhow!("bad frame: {e}"))?;
+    let ty = j
+        .path(&["type"])
+        .as_str()
+        .ok_or_else(|| anyhow!("frame missing 'type'"))?;
+    let id = j.path(&["id"]).as_f64().unwrap_or(0.0) as u64;
+    match ty {
+        "ok" => {
+            let outputs = j
+                .path(&["outputs"])
+                .as_arr()
+                .ok_or_else(|| anyhow!("ok frame missing 'outputs'"))?
+                .iter()
+                .map(tensor_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Response::Ok {
+                id,
+                outputs,
+                queue_us: j.path(&["queue_us"]).as_f64().unwrap_or(0.0) as u64,
+                exec_us: j.path(&["exec_us"]).as_f64().unwrap_or(0.0) as u64,
+                batch: j.path(&["batch"]).as_f64().unwrap_or(0.0) as usize,
+            })
+        }
+        "err" => Ok(Response::Err {
+            id,
+            code: ErrCode::parse(j.path(&["code"]).as_str().unwrap_or(""))?,
+            msg: j.path(&["msg"]).as_str().unwrap_or("").to_string(),
+        }),
+        "pong" => Ok(Response::Pong { id }),
+        "spec" => Ok(Response::Spec(j.path(&["spec"]).clone())),
+        "stats" => Ok(Response::Stats(j.path(&["stats"]).clone())),
+        other => bail!("unknown response type '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn infer_req() -> Request {
+        Request::Infer(InferRequest {
+            id: 42,
+            artifact: "copy_cwy_step".into(),
+            session: Some("s1".into()),
+            deadline_us: Some(500_000),
+            inputs: vec![
+                HostTensor::f32(vec![2, 2], vec![1.0, 2.5, -3.0, 0.0]),
+                HostTensor::i32(vec![3], vec![7, -8, 9]),
+            ],
+        })
+    }
+
+    #[test]
+    fn infer_roundtrip() {
+        let line = encode_request(&infer_req());
+        assert!(!line.contains('\n'));
+        match decode_request(&line).unwrap() {
+            Request::Infer(r) => {
+                assert_eq!(r.id, 42);
+                assert_eq!(r.artifact, "copy_cwy_step");
+                assert_eq!(r.session.as_deref(), Some("s1"));
+                assert_eq!(r.deadline_us, Some(500_000));
+                assert_eq!(r.inputs[0], HostTensor::f32(vec![2, 2], vec![1.0, 2.5, -3.0, 0.0]));
+                assert_eq!(r.inputs[1], HostTensor::i32(vec![3], vec![7, -8, 9]));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response::Ok {
+            id: 42,
+            outputs: vec![HostTensor::f32(vec![2], vec![0.5, -0.25])],
+            queue_us: 210,
+            exec_us: 850,
+            batch: 5,
+        };
+        let line = encode_response(&resp);
+        match decode_response(&line).unwrap() {
+            Response::Ok { id, outputs, queue_us, exec_us, batch } => {
+                assert_eq!((id, queue_us, exec_us, batch), (42, 210, 850, 5));
+                assert_eq!(outputs[0], HostTensor::f32(vec![2], vec![0.5, -0.25]));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_frame_roundtrip() {
+        let line = encode_response(&Response::Err {
+            id: 9,
+            code: ErrCode::Deadline,
+            msg: "expired in queue".into(),
+        });
+        match decode_response(&line).unwrap() {
+            Response::Err { id, code, msg } => {
+                assert_eq!(id, 9);
+                assert_eq!(code, ErrCode::Deadline);
+                assert_eq!(msg, "expired in queue");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ping_and_meta_frames() {
+        match decode_request(&encode_request(&Request::Ping { id: 3 })).unwrap() {
+            Request::Ping { id } => assert_eq!(id, 3),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert!(matches!(decode_request(&encode_request(&Request::Spec)).unwrap(), Request::Spec));
+        assert!(matches!(
+            decode_request(&encode_request(&Request::Stats)).unwrap(),
+            Request::Stats
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_frames() {
+        assert!(decode_request("not json").is_err());
+        assert!(decode_request(r#"{"id":1}"#).is_err());
+        assert!(decode_request(r#"{"type":"infer","id":1}"#).is_err());
+        assert!(decode_request(r#"{"type":"launch_rockets"}"#).is_err());
+        // shape/data mismatch
+        let bad = r#"{"type":"infer","id":1,"artifact":"a",
+                      "inputs":[{"shape":[3],"dtype":"f32","data":[1,2]}]}"#;
+        assert!(decode_request(bad).is_err());
+    }
+
+    #[test]
+    fn tensor_json_preserves_exact_f32() {
+        // f32 -> f64 -> text -> f64 -> f32 must be exact for any f32.
+        for v in [1.0e-20f32, 3.333_333_3, -1.5e20, f32::MIN_POSITIVE] {
+            let t = HostTensor::f32(vec![1], vec![v]);
+            let back = tensor_from_json(&parse(&tensor_to_json(&t).dump()).unwrap()).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! TCP front end for `cwy serve` (DESIGN.md §6.6).
+//!
+//! One acceptor thread; per connection, a reader thread (decode frames,
+//! feed the batcher) and a writer thread (drain the connection's response
+//! channel back onto the socket).  Worker replies travel through the same
+//! per-connection channel, so a request's response can arrive after the
+//! client has pipelined more requests — frames carry ids for matching.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::{self, JoinHandle};
+
+use anyhow::{Context, Result};
+
+use crate::serve::batcher::{BatchCfg, Batcher};
+use crate::serve::protocol::{self, ErrCode, Request, Response};
+use crate::serve::session::{SessionCfg, SessionStore};
+use crate::serve::stats::{Clock, ServeStats, Snapshot};
+use crate::serve::worker::{ModelFactory, ServeSpec, WorkerPool};
+
+/// Server configuration (`cwy serve` flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub addr: String,
+    pub workers: usize,
+    pub batch: BatchCfg,
+    pub session: SessionCfg,
+    /// Learning rate injected into hyper inputs of step artifacts; 0.0
+    /// serves without moving the resident parameters.
+    pub lr: f32,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            addr: "127.0.0.1:7070".to_string(),
+            workers: 2,
+            batch: BatchCfg::default(),
+            session: SessionCfg::default(),
+            lr: 0.0,
+        }
+    }
+}
+
+/// Running server handle.
+pub struct Server {
+    addr: SocketAddr,
+    stats: Arc<ServeStats>,
+    batcher: Arc<Batcher>,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    pool: Option<WorkerPool>,
+}
+
+/// Bind, spawn the worker pool and acceptor, and return immediately.
+///
+/// `factory` is invoked once on the calling thread to probe the served
+/// signature, then once per worker thread (each worker owns its model —
+/// see `worker`).
+pub fn serve(cfg: ServeCfg, factory: Arc<ModelFactory>) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+
+    let clock = Arc::new(Clock::new());
+    let stats = Arc::new(ServeStats::new());
+    let batcher = Arc::new(Batcher::new(cfg.batch, clock.clone(), stats.clone()));
+    let sessions = Arc::new(SessionStore::new(cfg.session));
+    let spec: ServeSpec = factory().context("initializing model")?.spec().clone();
+
+    let pool = WorkerPool::spawn(
+        cfg.workers,
+        factory,
+        batcher.clone(),
+        sessions,
+        stats.clone(),
+        clock.clone(),
+        cfg.lr,
+    );
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let shutdown = shutdown.clone();
+        let batcher = batcher.clone();
+        let stats = stats.clone();
+        thread::Builder::new()
+            .name("cwy-serve-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            spawn_connection(s, batcher.clone(), stats.clone(), spec.clone());
+                        }
+                        Err(e) => {
+                            eprintln!("serve: accept failed: {e}");
+                        }
+                    }
+                }
+            })
+            .expect("spawning acceptor thread")
+    };
+
+    Ok(Server {
+        addr,
+        stats,
+        batcher,
+        shutdown,
+        acceptor: Some(acceptor),
+        pool: Some(pool),
+    })
+}
+
+fn spawn_connection(
+    stream: TcpStream,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    spec: ServeSpec,
+) {
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: cloning connection failed: {e}");
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::channel::<Response>();
+
+    // Writer: drains until every sender (reader + in-flight requests) is
+    // gone, so responses still land after the client stops sending.
+    let writer = thread::Builder::new().name("cwy-serve-write".to_string()).spawn(move || {
+        let mut out = write_half;
+        for resp in rx {
+            let line = protocol::encode_response(&resp);
+            if out.write_all(line.as_bytes()).is_err()
+                || out.write_all(b"\n").is_err()
+                || out.flush().is_err()
+            {
+                break;
+            }
+        }
+    });
+    if writer.is_err() {
+        eprintln!("serve: spawning writer thread failed");
+        return;
+    }
+
+    let reader = thread::Builder::new().name("cwy-serve-read".to_string()).spawn(move || {
+        let buf = BufReader::new(stream);
+        for line in buf.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match protocol::decode_request(&line) {
+                Ok(Request::Infer(req)) => {
+                    // submit() answers overloaded/deadline internally.
+                    batcher.submit(req, tx.clone());
+                }
+                Ok(Request::Ping { id }) => {
+                    let _ = tx.send(Response::Pong { id });
+                }
+                Ok(Request::Spec) => {
+                    let _ = tx.send(Response::Spec(spec.to_json()));
+                }
+                Ok(Request::Stats) => {
+                    let _ = tx.send(Response::Stats(stats.snapshot().to_json()));
+                }
+                Err(e) => {
+                    stats.record_bad_request();
+                    let _ = tx.send(Response::Err {
+                        id: 0,
+                        code: ErrCode::BadRequest,
+                        msg: format!("{e:#}"),
+                    });
+                }
+            }
+        }
+        // tx drops here; the writer exits once in-flight replies land.
+    });
+    if reader.is_err() {
+        eprintln!("serve: spawning reader thread failed");
+    }
+}
+
+impl Server {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.stats.snapshot()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Block on the acceptor (the `cwy serve` foreground mode).
+    pub fn join(mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.join();
+        }
+    }
+
+    /// Graceful-enough stop for tests and embedders: stop accepting,
+    /// shed the queue, and join the worker pool.  Existing connection
+    /// threads exit as their clients disconnect.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.batcher.shutdown();
+        // Unblock the acceptor with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.join();
+        }
+    }
+}

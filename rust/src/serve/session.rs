@@ -1,0 +1,144 @@
+//! Session store: per-client recurrent state kept server-side between
+//! `infer` calls, so streaming models (copying/NMT/video RNNs) consume one
+//! token per request without resending their hidden state (DESIGN.md §6.4).
+//!
+//! Handoff is exclusive: [`SessionStore::take`] removes the state for the
+//! duration of the fused execution and the worker [`SessionStore::put`]s
+//! the updated state back.  Two in-flight requests on one session
+//! therefore never race — the second simply starts from the initial state,
+//! which is the documented client contract (serialize your own session).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::runtime::tensor::HostTensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SessionCfg {
+    /// Max live sessions; least-recently-used entries are evicted beyond.
+    pub capacity: usize,
+    /// Idle time after which a session's state is dropped.
+    pub ttl_us: u64,
+}
+
+impl Default for SessionCfg {
+    fn default() -> SessionCfg {
+        SessionCfg { capacity: 4_096, ttl_us: 300_000_000 }
+    }
+}
+
+struct Entry {
+    state: Vec<HostTensor>,
+    last_used_us: u64,
+}
+
+/// Thread-safe map from session key to stored recurrent state.
+pub struct SessionStore {
+    cfg: SessionCfg,
+    inner: Mutex<HashMap<String, Entry>>,
+}
+
+impl SessionStore {
+    pub fn new(cfg: SessionCfg) -> SessionStore {
+        SessionStore { cfg, inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Remove and return the session's state; `None` if absent or idle
+    /// past the TTL (expired state must not leak into a new conversation).
+    pub fn take(&self, key: &str, now_us: u64) -> Option<Vec<HostTensor>> {
+        let mut m = self.inner.lock().unwrap();
+        let entry = m.remove(key)?;
+        if now_us.saturating_sub(entry.last_used_us) >= self.cfg.ttl_us {
+            return None;
+        }
+        Some(entry.state)
+    }
+
+    /// Store updated state, evicting expired entries first and then the
+    /// least-recently-used entry if still at capacity.
+    pub fn put(&self, key: &str, state: Vec<HostTensor>, now_us: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.retain(|_, e| now_us.saturating_sub(e.last_used_us) < self.cfg.ttl_us);
+        if m.len() >= self.cfg.capacity && !m.contains_key(key) {
+            if let Some(lru) = m
+                .iter()
+                .min_by_key(|(_, e)| e.last_used_us)
+                .map(|(k, _)| k.clone())
+            {
+                m.remove(&lru);
+            }
+        }
+        m.insert(key.to_string(), Entry { state, last_used_us: now_us });
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every expired session; returns how many were removed.
+    pub fn purge(&self, now_us: u64) -> usize {
+        let mut m = self.inner.lock().unwrap();
+        let before = m.len();
+        m.retain(|_, e| now_us.saturating_sub(e.last_used_us) < self.cfg.ttl_us);
+        before - m.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(v: f32) -> Vec<HostTensor> {
+        vec![HostTensor::f32(vec![2], vec![v, v])]
+    }
+
+    fn store(capacity: usize, ttl_us: u64) -> SessionStore {
+        SessionStore::new(SessionCfg { capacity, ttl_us })
+    }
+
+    #[test]
+    fn take_is_exclusive() {
+        let s = store(8, 1_000_000);
+        s.put("a", h(1.0), 10);
+        let got = s.take("a", 20).unwrap();
+        assert_eq!(got, h(1.0));
+        // Second take sees nothing until the state is put back.
+        assert!(s.take("a", 30).is_none());
+        s.put("a", h(2.0), 40);
+        assert_eq!(s.take("a", 50).unwrap(), h(2.0));
+    }
+
+    #[test]
+    fn ttl_expires_idle_sessions() {
+        let s = store(8, 100);
+        s.put("a", h(1.0), 0);
+        assert!(s.take("a", 99).is_some());
+        s.put("b", h(2.0), 0);
+        assert!(s.take("b", 100).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let s = store(2, 1_000_000);
+        s.put("old", h(1.0), 10);
+        s.put("mid", h(2.0), 20);
+        s.put("new", h(3.0), 30);
+        assert_eq!(s.len(), 2);
+        assert!(s.take("old", 40).is_none());
+        assert!(s.take("mid", 40).is_some());
+        assert!(s.take("new", 40).is_some());
+    }
+
+    #[test]
+    fn purge_counts_expired() {
+        let s = store(8, 100);
+        s.put("a", h(1.0), 0);
+        s.put("b", h(2.0), 50);
+        assert_eq!(s.purge(120), 1);
+        assert_eq!(s.len(), 1);
+    }
+}

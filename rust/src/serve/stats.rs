@@ -1,0 +1,335 @@
+//! Serving statistics: latency/queue-time percentiles, batch-occupancy
+//! histogram, queue depth, and shed/reject counters.
+//!
+//! Follows the `coordinator::metrics` idiom — plain data + cheap record
+//! calls on the hot path, presentation (markdown table via
+//! [`crate::report::Table`], JSON for the `stats` protocol frame) computed
+//! from an immutable [`Snapshot`].
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::report::Table;
+use crate::util::json::Json;
+
+/// Monotonic microsecond clock anchored at construction.  All serve-side
+/// timestamps (enqueue, expiry, batch start) are `now_us()` values from one
+/// shared clock, so deadlines need no wall-clock agreement with clients.
+pub struct Clock {
+    t0: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { t0: Instant::now() }
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::new()
+    }
+}
+
+/// Power-of-two-bucketed histogram over microsecond values.  Bucket `i`
+/// covers `[2^i, 2^(i+1))` (bucket 0 also absorbs 0); percentiles report
+/// the upper bound of the containing bucket, which is exact enough for
+/// p50/p95/p99 latency reporting.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; 40],
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: [0; 40], total: 0 }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        let b = (64 - us.max(1).leading_zeros() as usize) - 1;
+        b.min(39)
+    }
+
+    pub fn record(&mut self, us: u64) {
+        self.counts[Self::bucket_of(us)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bound (in us) of the bucket containing the `p`-quantile;
+    /// 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = (p * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return (1u64 << (i + 1)) - 1;
+            }
+        }
+        (1u64 << 40) - 1
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    exec_errors: u64,
+    shed_deadline: u64,
+    rejected_full: u64,
+    bad_requests: u64,
+    batches: u64,
+    /// occupancy[b] = number of batches that fused exactly `b+1` requests.
+    occupancy: Vec<u64>,
+    queue_depth_peak: usize,
+    latency_us: Histogram,
+    queue_us: Histogram,
+    exec_us: Histogram,
+}
+
+/// Shared, thread-safe statistics sink for the whole serve subsystem.
+#[derive(Default)]
+pub struct ServeStats {
+    inner: Mutex<Inner>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    pub fn record_submit(&self, queue_depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.submitted += 1;
+        g.queue_depth_peak = g.queue_depth_peak.max(queue_depth);
+    }
+
+    pub fn record_rejected_full(&self) {
+        self.inner.lock().unwrap().rejected_full += 1;
+    }
+
+    pub fn record_shed_deadline(&self) {
+        self.inner.lock().unwrap().shed_deadline += 1;
+    }
+
+    pub fn record_bad_request(&self) {
+        self.inner.lock().unwrap().bad_requests += 1;
+    }
+
+    /// One fused execution: `occupancy` requests coalesced, per-request
+    /// queue waits, and the execution wall time.
+    pub fn record_batch(&self, occupancy: usize, queue_waits_us: &[u64], exec_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        if g.occupancy.len() < occupancy {
+            g.occupancy.resize(occupancy, 0);
+        }
+        if occupancy > 0 {
+            g.occupancy[occupancy - 1] += 1;
+        }
+        for &w in queue_waits_us {
+            g.queue_us.record(w);
+        }
+        g.exec_us.record(exec_us);
+    }
+
+    pub fn record_completed(&self, latency_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.latency_us.record(latency_us);
+    }
+
+    pub fn record_exec_error(&self, n_requests: u64) {
+        self.inner.lock().unwrap().exec_errors += n_requests;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let fused: u64 = g
+            .occupancy
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i as u64 + 1) * c)
+            .sum();
+        Snapshot {
+            submitted: g.submitted,
+            completed: g.completed,
+            exec_errors: g.exec_errors,
+            shed_deadline: g.shed_deadline,
+            rejected_full: g.rejected_full,
+            bad_requests: g.bad_requests,
+            batches: g.batches,
+            occupancy: g.occupancy.clone(),
+            mean_occupancy: if g.batches == 0 {
+                0.0
+            } else {
+                fused as f64 / g.batches as f64
+            },
+            queue_depth_peak: g.queue_depth_peak,
+            latency_p50_us: g.latency_us.percentile(0.50),
+            latency_p95_us: g.latency_us.percentile(0.95),
+            latency_p99_us: g.latency_us.percentile(0.99),
+            queue_p50_us: g.queue_us.percentile(0.50),
+            queue_p99_us: g.queue_us.percentile(0.99),
+            exec_p50_us: g.exec_us.percentile(0.50),
+        }
+    }
+}
+
+/// Immutable view of the counters, used for reporting and assertions.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub exec_errors: u64,
+    pub shed_deadline: u64,
+    pub rejected_full: u64,
+    pub bad_requests: u64,
+    pub batches: u64,
+    pub occupancy: Vec<u64>,
+    pub mean_occupancy: f64,
+    pub queue_depth_peak: usize,
+    pub latency_p50_us: u64,
+    pub latency_p95_us: u64,
+    pub latency_p99_us: u64,
+    pub queue_p50_us: u64,
+    pub queue_p99_us: u64,
+    pub exec_p50_us: u64,
+}
+
+impl Snapshot {
+    /// Largest batch size that actually occurred.
+    pub fn max_occupancy(&self) -> usize {
+        self.occupancy
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0)
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]);
+        let rows: Vec<(&str, String)> = vec![
+            ("requests submitted", self.submitted.to_string()),
+            ("requests completed", self.completed.to_string()),
+            ("exec errors", self.exec_errors.to_string()),
+            ("shed (deadline)", self.shed_deadline.to_string()),
+            ("rejected (queue full)", self.rejected_full.to_string()),
+            ("bad requests", self.bad_requests.to_string()),
+            ("fused batches", self.batches.to_string()),
+            ("mean batch occupancy", format!("{:.2}", self.mean_occupancy)),
+            ("max batch occupancy", self.max_occupancy().to_string()),
+            ("queue depth peak", self.queue_depth_peak.to_string()),
+            ("latency p50 (us)", self.latency_p50_us.to_string()),
+            ("latency p95 (us)", self.latency_p95_us.to_string()),
+            ("latency p99 (us)", self.latency_p99_us.to_string()),
+            ("queue wait p50 (us)", self.queue_p50_us.to_string()),
+            ("queue wait p99 (us)", self.queue_p99_us.to_string()),
+            ("exec p50 (us)", self.exec_p50_us.to_string()),
+        ];
+        for (k, v) in rows {
+            t.row(&[k.to_string(), v]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let num = |k: &str, v: f64, m: &mut BTreeMap<String, Json>| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("submitted", self.submitted as f64, &mut m);
+        num("completed", self.completed as f64, &mut m);
+        num("exec_errors", self.exec_errors as f64, &mut m);
+        num("shed_deadline", self.shed_deadline as f64, &mut m);
+        num("rejected_full", self.rejected_full as f64, &mut m);
+        num("bad_requests", self.bad_requests as f64, &mut m);
+        num("batches", self.batches as f64, &mut m);
+        num("mean_occupancy", self.mean_occupancy, &mut m);
+        num("max_occupancy", self.max_occupancy() as f64, &mut m);
+        num("queue_depth_peak", self.queue_depth_peak as f64, &mut m);
+        num("latency_p50_us", self.latency_p50_us as f64, &mut m);
+        num("latency_p95_us", self.latency_p95_us as f64, &mut m);
+        num("latency_p99_us", self.latency_p99_us as f64, &mut m);
+        num("queue_p50_us", self.queue_p50_us as f64, &mut m);
+        num("queue_p99_us", self.queue_p99_us as f64, &mut m);
+        num("exec_p50_us", self.exec_p50_us as f64, &mut m);
+        m.insert(
+            "occupancy".to_string(),
+            Json::Arr(self.occupancy.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let mut h = Histogram::new();
+        for us in [1u64, 2, 4, 8] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 4);
+        // Quantiles land on bucket upper bounds: 1->[1,2), 2->[2,4), etc.
+        assert_eq!(h.percentile(0.25), 1);
+        assert_eq!(h.percentile(0.5), 3);
+        assert_eq!(h.percentile(1.0), 15);
+        assert_eq!(Histogram::new().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.percentile(0.25), 1);
+        assert!(h.percentile(1.0) >= (1u64 << 40) - 1);
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let s = ServeStats::new();
+        s.record_batch(1, &[10], 100);
+        s.record_batch(4, &[10, 20, 30, 40], 100);
+        s.record_batch(4, &[10, 20, 30, 40], 100);
+        let snap = s.snapshot();
+        assert_eq!(snap.batches, 3);
+        assert_eq!(snap.occupancy, vec![1, 0, 0, 2]);
+        assert_eq!(snap.max_occupancy(), 4);
+        assert!((snap.mean_occupancy - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_renders() {
+        let s = ServeStats::new();
+        s.record_submit(3);
+        s.record_completed(500);
+        let snap = s.snapshot();
+        let md = snap.to_table().to_markdown();
+        assert!(md.contains("requests completed"));
+        let j = snap.to_json();
+        assert_eq!(j.path(&["completed"]).as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,1133 @@
+//! Worker pool and fused-batch execution (DESIGN.md §6.5).
+//!
+//! `runtime::Compiled` holds `Rc`/`RefCell` state and is not `Send`, so
+//! the pool shards by engine instance: each worker thread builds its own
+//! model through a `Send + Sync` factory and owns it for life.  Workers
+//! pull coalesced batches from the shared [`Batcher`], stack request rows
+//! into the artifact's fused batch dimension, execute once, and scatter
+//! the outputs back to the per-request response channels.
+
+use std::rc::Rc;
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::engine::{Compiled, Engine};
+use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::tensor::{Dtype, HostTensor};
+use crate::serve::batcher::{Batcher, Pending};
+use crate::serve::protocol::{ErrCode, InferRequest, Response};
+use crate::serve::session::SessionStore;
+use crate::serve::stats::{Clock, ServeStats};
+use crate::util::json::Json;
+
+/// One input or output of the served signature, in fused-batch shape.
+#[derive(Clone, Debug)]
+pub struct PortSpec {
+    pub name: String,
+    /// Fused shape as the artifact sees it (e.g. `[32, 84]`).
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub role: Role,
+    /// Leading dim equals the fused batch: requests each contribute one
+    /// row (the `tail()` shape); otherwise the tensor is shared whole.
+    pub per_row: bool,
+}
+
+impl PortSpec {
+    /// The per-request row shape (full shape for shared ports).
+    pub fn tail(&self) -> &[usize] {
+        if self.per_row {
+            &self.shape[1..]
+        } else {
+            &self.shape
+        }
+    }
+}
+
+/// Servable signature derived from an [`ArtifactSpec`] (or synthesized by
+/// [`FakeModel`]): which ports are per-row, and how outputs map back to
+/// state (DESIGN.md §6.2).
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    pub artifact: String,
+    /// Fused batch size — the micro-batcher's natural `max_batch`.
+    pub batch: usize,
+    pub inputs: Vec<PortSpec>,
+    pub outputs: Vec<PortSpec>,
+    /// The first `n_state_out` outputs are updated values for the state
+    /// inputs, in order (the step-artifact convention).
+    pub n_state_out: usize,
+}
+
+impl ServeSpec {
+    /// Derive the serving signature from a manifest entry.  The fused
+    /// batch comes from the `batch` meta key, falling back to the leading
+    /// dim of the first data input; a port is per-row when its leading dim
+    /// equals that batch (a heuristic — params that happen to have a
+    /// leading dim equal to the batch would be misclassified, which the
+    /// manifest can override by recording `batch` explicitly).
+    pub fn from_artifact(spec: &ArtifactSpec) -> Result<ServeSpec> {
+        let batch = spec
+            .meta_str("batch")
+            .and_then(|s| s.parse::<usize>().ok())
+            .or_else(|| {
+                spec.inputs
+                    .iter()
+                    .find(|s| s.role == Role::Data && !s.shape.is_empty())
+                    .map(|s| s.shape[0])
+            })
+            .ok_or_else(|| {
+                anyhow!("{}: cannot infer fused batch size (no batch meta, no data inputs)", spec.name)
+            })?;
+        if batch == 0 {
+            bail!("{}: fused batch size is zero", spec.name);
+        }
+        let port = |s: &crate::runtime::manifest::TensorSpec, role: Role| PortSpec {
+            name: s.name.clone(),
+            shape: s.shape.clone(),
+            dtype: s.dtype,
+            role,
+            per_row: s.shape.first() == Some(&batch),
+        };
+        let inputs: Vec<PortSpec> = spec.inputs.iter().map(|s| port(s, s.role)).collect();
+        let outputs: Vec<PortSpec> = spec.outputs.iter().map(|s| port(s, Role::Output)).collect();
+        let n_state_out = if spec.kind == "step" {
+            spec.n_state().min(outputs.len())
+        } else {
+            0
+        };
+        Ok(ServeSpec { artifact: spec.name.clone(), batch, inputs, outputs, n_state_out })
+    }
+
+    pub fn data_ports(&self) -> Vec<&PortSpec> {
+        self.inputs.iter().filter(|p| p.role == Role::Data).collect()
+    }
+
+    pub fn state_ports(&self) -> Vec<&PortSpec> {
+        self.inputs.iter().filter(|p| p.role == Role::State).collect()
+    }
+
+    /// Signature description for the protocol `spec` frame: what a client
+    /// must send (data ports, row shapes) and what it gets back.
+    pub fn to_json(&self) -> Json {
+        let port_json = |p: &PortSpec| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(p.name.clone()));
+            m.insert(
+                "shape".to_string(),
+                Json::Arr(p.tail().iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            m.insert(
+                "dtype".to_string(),
+                Json::Str(
+                    match p.dtype {
+                        Dtype::F32 => "f32",
+                        Dtype::I32 => "i32",
+                    }
+                    .to_string(),
+                ),
+            );
+            m.insert("per_row".to_string(), Json::Bool(p.per_row));
+            Json::Obj(m)
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("artifact".to_string(), Json::Str(self.artifact.clone()));
+        m.insert("batch".to_string(), Json::Num(self.batch as f64));
+        m.insert(
+            "inputs".to_string(),
+            Json::Arr(self.data_ports().into_iter().map(port_json).collect()),
+        );
+        m.insert(
+            "outputs".to_string(),
+            Json::Arr(
+                self.outputs[self.n_state_out..].iter().map(port_json).collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Check a request against the served signature before it joins a fused
+/// batch: one tensor per data port, row shapes and dtypes matching.
+pub fn validate_request(spec: &ServeSpec, req: &InferRequest) -> Result<()> {
+    if req.artifact != spec.artifact {
+        bail!("artifact '{}' is not served (serving '{}')", req.artifact, spec.artifact);
+    }
+    let ports = spec.data_ports();
+    if req.inputs.len() != ports.len() {
+        bail!("got {} input tensors, artifact takes {}", req.inputs.len(), ports.len());
+    }
+    for (t, p) in req.inputs.iter().zip(&ports) {
+        let want: &[usize] = if p.per_row { p.tail() } else { &p.shape };
+        if t.shape != want {
+            bail!("input '{}': shape {:?} != expected {:?}", p.name, t.shape, want);
+        }
+        if t.dtype() != p.dtype {
+            bail!("input '{}': dtype mismatch", p.name);
+        }
+    }
+    Ok(())
+}
+
+/// Stack `rows` (each of shape `tail`) into `[fused_batch] + tail`,
+/// zero-padding the unused trailing rows.
+pub fn stack_rows(
+    rows: &[&HostTensor],
+    fused_batch: usize,
+    tail: &[usize],
+    dtype: Dtype,
+) -> Result<HostTensor> {
+    if rows.len() > fused_batch {
+        bail!("{} rows exceed fused batch {fused_batch}", rows.len());
+    }
+    let row_len: usize = tail.iter().product();
+    let mut shape = Vec::with_capacity(tail.len() + 1);
+    shape.push(fused_batch);
+    shape.extend_from_slice(tail);
+    match dtype {
+        Dtype::F32 => {
+            let mut data = Vec::with_capacity(fused_batch * row_len);
+            for r in rows {
+                data.extend_from_slice(r.as_f32()?);
+            }
+            data.resize(fused_batch * row_len, 0.0);
+            Ok(HostTensor::f32(shape, data))
+        }
+        Dtype::I32 => {
+            let mut data = Vec::with_capacity(fused_batch * row_len);
+            for r in rows {
+                data.extend_from_slice(r.as_i32()?);
+            }
+            data.resize(fused_batch * row_len, 0);
+            Ok(HostTensor::i32(shape, data))
+        }
+    }
+}
+
+/// Split the first `k` rows of a fused tensor back into per-request
+/// tensors of the tail shape.
+pub fn split_rows(t: &HostTensor, k: usize) -> Result<Vec<HostTensor>> {
+    if t.shape.is_empty() {
+        bail!("cannot split a scalar into rows");
+    }
+    if k > t.shape[0] {
+        bail!("asked for {k} rows, tensor has {}", t.shape[0]);
+    }
+    (0..k)
+        .map(|j| {
+            let mut row = t.slice_rows(j, 1)?;
+            row.shape.remove(0);
+            Ok(row)
+        })
+        .collect()
+}
+
+/// A servable model: a signature plus fused-batch execution.  Implementors
+/// need not be `Send` — each worker thread builds its own instance.
+pub trait ServeModel {
+    fn spec(&self) -> &ServeSpec;
+
+    /// Execute one fused batch; `inputs` follow `spec().inputs` order and
+    /// fused shapes, outputs follow `spec().outputs`.
+    fn run(&mut self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>>;
+
+    /// Initial values for the worker-resident (non-per-row) state inputs,
+    /// in port order.
+    fn initial_resident(&self) -> Result<Vec<HostTensor>>;
+
+    /// Initial per-row state for a fresh session, one tensor per per-row
+    /// state port in order; empty means "start from zeros".
+    fn initial_session_rows(&self) -> Vec<HostTensor> {
+        Vec::new()
+    }
+}
+
+/// Thread-safe constructor for per-worker models.
+pub type ModelFactory = dyn Fn() -> Result<Box<dyn ServeModel>> + Send + Sync;
+
+/// PJRT-backed model: one `Engine` + compiled artifact per worker.
+pub struct EngineModel {
+    // The engine owns the PJRT client the executable runs on; it must
+    // outlive `artifact`.
+    _engine: Engine,
+    artifact: Rc<Compiled>,
+    spec: ServeSpec,
+    resident_init: Vec<HostTensor>,
+    /// Row 0 of each per-row state tensor in state.bin — the state a
+    /// fresh session starts from (the model's trained initial state).
+    session_init: Vec<HostTensor>,
+}
+
+impl EngineModel {
+    pub fn open(artifacts_dir: &str, artifact: &str) -> Result<EngineModel> {
+        let (engine, mut compiled) = Engine::open_worker(artifacts_dir, &[artifact])?;
+        let compiled = compiled.pop().expect("one artifact requested");
+        let spec = ServeSpec::from_artifact(&compiled.spec)?;
+        let state_ports = spec.state_ports();
+        let full_state = if compiled.spec.state_bin.is_some() {
+            engine.initial_state(artifact)?
+        } else {
+            Vec::new()
+        };
+        let mut resident_init = Vec::new();
+        let mut session_init = Vec::new();
+        if full_state.len() == state_ports.len() {
+            for (t, p) in full_state.into_iter().zip(&state_ports) {
+                if p.per_row {
+                    let mut row = t.slice_rows(0, 1)?;
+                    row.shape.remove(0);
+                    session_init.push(row);
+                } else {
+                    resident_init.push(t);
+                }
+            }
+        } else {
+            // No recorded initial state: serve from zeros.
+            for p in &state_ports {
+                if !p.per_row {
+                    resident_init.push(HostTensor::zeros(p.shape.clone(), p.dtype));
+                }
+            }
+        }
+        Ok(EngineModel { _engine: engine, artifact: compiled, spec, resident_init, session_init })
+    }
+}
+
+impl ServeModel for EngineModel {
+    fn spec(&self) -> &ServeSpec {
+        &self.spec
+    }
+
+    fn run(&mut self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        self.artifact.run(&inputs)
+    }
+
+    fn initial_resident(&self) -> Result<Vec<HostTensor>> {
+        Ok(self.resident_init.clone())
+    }
+
+    fn initial_session_rows(&self) -> Vec<HostTensor> {
+        self.session_init.clone()
+    }
+}
+
+/// Deterministic in-process model for tests, `examples/serve_bench`, and
+/// `cwy serve --backend fake`: per-row recurrent state `h' = h + x` and
+/// output `y = 2x + h`, with an optional artificial execution delay so
+/// load tests exercise queue buildup.
+pub struct FakeModel {
+    spec: ServeSpec,
+    exec_delay_us: u64,
+}
+
+impl FakeModel {
+    pub const ARTIFACT: &'static str = "fake_affine";
+
+    pub fn new(batch: usize, dim: usize, exec_delay_us: u64) -> FakeModel {
+        let shape = vec![batch, dim];
+        let spec = ServeSpec {
+            artifact: Self::ARTIFACT.to_string(),
+            batch,
+            inputs: vec![
+                PortSpec {
+                    name: "h".into(),
+                    shape: shape.clone(),
+                    dtype: Dtype::F32,
+                    role: Role::State,
+                    per_row: true,
+                },
+                PortSpec {
+                    name: "x".into(),
+                    shape: shape.clone(),
+                    dtype: Dtype::F32,
+                    role: Role::Data,
+                    per_row: true,
+                },
+            ],
+            outputs: vec![
+                PortSpec {
+                    name: "h_next".into(),
+                    shape: shape.clone(),
+                    dtype: Dtype::F32,
+                    role: Role::Output,
+                    per_row: true,
+                },
+                PortSpec {
+                    name: "y".into(),
+                    shape,
+                    dtype: Dtype::F32,
+                    role: Role::Output,
+                    per_row: true,
+                },
+            ],
+            n_state_out: 1,
+        };
+        FakeModel { spec, exec_delay_us }
+    }
+}
+
+impl ServeModel for FakeModel {
+    fn spec(&self) -> &ServeSpec {
+        &self.spec
+    }
+
+    fn run(&mut self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        if self.exec_delay_us > 0 {
+            thread::sleep(std::time::Duration::from_micros(self.exec_delay_us));
+        }
+        if inputs.len() != 2 {
+            bail!("fake model takes (h, x), got {} inputs", inputs.len());
+        }
+        let h = inputs[0].as_f32()?;
+        let x = inputs[1].as_f32()?;
+        let h_next: Vec<f32> = h.iter().zip(x).map(|(a, b)| a + b).collect();
+        let y: Vec<f32> = h.iter().zip(x).map(|(a, b)| 2.0 * b + a).collect();
+        Ok(vec![
+            HostTensor::f32(inputs[0].shape.clone(), h_next),
+            HostTensor::f32(inputs[1].shape.clone(), y),
+        ])
+    }
+
+    fn initial_resident(&self) -> Result<Vec<HostTensor>> {
+        Ok(Vec::new())
+    }
+}
+
+/// Execute one coalesced batch end-to-end: validate, gather session rows,
+/// stack, run, scatter state + outputs, reply.
+pub fn execute_batch(
+    model: &mut dyn ServeModel,
+    resident: &mut Vec<HostTensor>,
+    batch: Vec<Pending>,
+    sessions: &SessionStore,
+    stats: &ServeStats,
+    clock: &Clock,
+    lr: f32,
+) {
+    let spec = model.spec().clone();
+    let mut good = Vec::new();
+    for p in batch {
+        match validate_request(&spec, &p.req) {
+            Ok(()) => good.push(p),
+            Err(e) => {
+                stats.record_bad_request();
+                p.reply(Response::Err {
+                    id: p.req.id,
+                    code: ErrCode::BadRequest,
+                    msg: format!("{e:#}"),
+                });
+            }
+        }
+    }
+    let cap = spec.batch.max(1);
+    let mut rest = good;
+    while !rest.is_empty() {
+        // A fused chunk may hold at most one request per session key: a
+        // second would read state the first has not written yet.  Cutting
+        // the chunk at the duplicate keeps FIFO order, and the duplicate
+        // runs in the next sequential chunk, after the state lands.
+        let mut seen = std::collections::HashSet::new();
+        let mut chunk_len = 0usize;
+        for p in rest.iter() {
+            if chunk_len >= cap {
+                break;
+            }
+            if let Some(s) = &p.req.session {
+                if !seen.insert(s.as_str()) {
+                    break;
+                }
+            }
+            chunk_len += 1;
+        }
+        drop(seen);
+        let remainder = rest.split_off(chunk_len);
+        run_chunk(model, &spec, resident, rest, sessions, stats, clock, lr);
+        rest = remainder;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_chunk(
+    model: &mut dyn ServeModel,
+    spec: &ServeSpec,
+    resident: &mut Vec<HostTensor>,
+    chunk: Vec<Pending>,
+    sessions: &SessionStore,
+    stats: &ServeStats,
+    clock: &Clock,
+    lr: f32,
+) {
+    let start_us = clock.now_us();
+
+    // Shared (non-per-row) data inputs are fed once for the whole fused
+    // execution; requests whose values differ from the chunk head's would
+    // silently be served with the head's data, so reject them instead.
+    let shared_data_idx: Vec<usize> = spec
+        .inputs
+        .iter()
+        .filter(|p| p.role == Role::Data)
+        .enumerate()
+        .filter(|(_, p)| !p.per_row)
+        .map(|(i, _)| i)
+        .collect();
+    let chunk = if shared_data_idx.is_empty() {
+        chunk
+    } else {
+        let head_shared: Vec<HostTensor> = shared_data_idx
+            .iter()
+            .map(|&i| chunk[0].req.inputs[i].clone())
+            .collect();
+        let mut kept = Vec::with_capacity(chunk.len());
+        for p in chunk {
+            let compatible = shared_data_idx
+                .iter()
+                .zip(&head_shared)
+                .all(|(&i, h)| p.req.inputs[i] == *h);
+            if compatible {
+                kept.push(p);
+            } else {
+                stats.record_bad_request();
+                p.reply(Response::Err {
+                    id: p.req.id,
+                    code: ErrCode::BadRequest,
+                    msg: "shared (non-batched) input conflicts with the fused batch; \
+                          retry to land in a fresh batch"
+                        .to_string(),
+                });
+            }
+        }
+        kept
+    };
+    if chunk.is_empty() {
+        return;
+    }
+    let k = chunk.len();
+    let per_row_state: Vec<&PortSpec> =
+        spec.inputs.iter().filter(|p| p.role == Role::State && p.per_row).collect();
+    let init_rows = model.initial_session_rows();
+
+    // Exclusive session handoff: take state rows for the whole chunk.
+    let taken: Vec<Option<Vec<HostTensor>>> = chunk
+        .iter()
+        .map(|p| {
+            p.req
+                .session
+                .as_ref()
+                .and_then(|key| sessions.take(key, start_us))
+                // A stale/mismatched state vector falls back to fresh.
+                .filter(|state| {
+                    state.len() == per_row_state.len()
+                        && state
+                            .iter()
+                            .zip(&per_row_state)
+                            .all(|(t, p)| t.shape == p.tail() && t.dtype() == p.dtype)
+                })
+        })
+        .collect();
+
+    // Assemble fused inputs in port order.
+    let mut inputs: Vec<HostTensor> = Vec::with_capacity(spec.inputs.len());
+    let mut resident_idx = 0usize;
+    let mut row_state_idx = 0usize;
+    let mut data_idx = 0usize;
+    let mut assembly: Result<()> = Ok(());
+    for port in &spec.inputs {
+        let tensor = match (port.role, port.per_row) {
+            (Role::State, false) => {
+                let t = resident.get(resident_idx).cloned().ok_or_else(|| {
+                    anyhow!("resident state missing for port '{}'", port.name)
+                });
+                resident_idx += 1;
+                t
+            }
+            (Role::State, true) => {
+                // Fresh sessions start from the model's recorded initial
+                // row when it matches the port, else zeros.
+                let fresh = init_rows
+                    .get(row_state_idx)
+                    .filter(|t| t.shape == port.tail() && t.dtype() == port.dtype)
+                    .cloned()
+                    .unwrap_or_else(|| HostTensor::zeros(port.tail().to_vec(), port.dtype));
+                let rows: Vec<HostTensor> = taken
+                    .iter()
+                    .map(|s| {
+                        s.as_ref()
+                            .map(|v| v[row_state_idx].clone())
+                            .unwrap_or_else(|| fresh.clone())
+                    })
+                    .collect();
+                row_state_idx += 1;
+                let refs: Vec<&HostTensor> = rows.iter().collect();
+                stack_rows(&refs, spec.batch, port.tail(), port.dtype)
+            }
+            (Role::Data, true) => {
+                let rows: Vec<&HostTensor> =
+                    chunk.iter().map(|p| &p.req.inputs[data_idx]).collect();
+                data_idx += 1;
+                stack_rows(&rows, spec.batch, port.tail(), port.dtype)
+            }
+            (Role::Data, false) => {
+                // Shared (non-batched) data input: first request's value.
+                let t = Ok(chunk[0].req.inputs[data_idx].clone());
+                data_idx += 1;
+                t
+            }
+            (Role::Hyper, _) => Ok(HostTensor::scalar_f32(lr)),
+            (Role::Output, _) => Err(anyhow!("output port '{}' in inputs", port.name)),
+        };
+        match tensor {
+            Ok(t) => inputs.push(t),
+            Err(e) => {
+                assembly = Err(e);
+                break;
+            }
+        }
+    }
+
+    let outputs = match assembly {
+        Ok(()) => model.run(inputs),
+        Err(e) => Err(e),
+    };
+    let end_us = clock.now_us();
+    let exec_us = end_us.saturating_sub(start_us);
+
+    let outputs = match outputs {
+        Ok(o) => o,
+        Err(e) => {
+            stats.record_exec_error(k as u64);
+            // Put the taken session states back — a transient execution
+            // failure must not reset every conversation in the batch.
+            for (p, state) in chunk.iter().zip(taken) {
+                if let (Some(key), Some(state)) = (&p.req.session, state) {
+                    sessions.put(key, state, end_us);
+                }
+            }
+            for p in &chunk {
+                p.reply(Response::Err {
+                    id: p.req.id,
+                    code: ErrCode::Exec,
+                    msg: format!("{e:#}"),
+                });
+            }
+            return;
+        }
+    };
+
+    // Scatter updated state: outputs[..n_state_out] align with the state
+    // input ports in order.
+    let state_ports = spec.state_ports();
+    let mut new_session_rows: Vec<Vec<HostTensor>> = vec![Vec::new(); k];
+    let mut resident_idx = 0usize;
+    for (out, port) in outputs.iter().take(spec.n_state_out).zip(&state_ports) {
+        if port.per_row {
+            if let Ok(rows) = split_rows(out, k) {
+                for (j, row) in rows.into_iter().enumerate() {
+                    new_session_rows[j].push(row);
+                }
+            }
+        } else {
+            if let Some(slot) = resident.get_mut(resident_idx) {
+                *slot = out.clone();
+            }
+            resident_idx += 1;
+        }
+    }
+    if !per_row_state.is_empty() {
+        for (j, p) in chunk.iter().enumerate() {
+            if let Some(key) = &p.req.session {
+                if new_session_rows[j].len() == per_row_state.len() {
+                    sessions.put(key, std::mem::take(&mut new_session_rows[j]), end_us);
+                }
+            }
+        }
+    }
+
+    // Scatter user-facing outputs and reply.
+    let user_ports = &spec.outputs[spec.n_state_out..];
+    let user_outputs = &outputs[spec.n_state_out..];
+    let mut rows_by_port: Vec<Option<Vec<HostTensor>>> = Vec::with_capacity(user_ports.len());
+    for (out, port) in user_outputs.iter().zip(user_ports) {
+        if port.per_row {
+            rows_by_port.push(split_rows(out, k).ok());
+        } else {
+            rows_by_port.push(None);
+        }
+    }
+    let mut queue_waits = Vec::with_capacity(k);
+    for (j, p) in chunk.iter().enumerate() {
+        let outs: Vec<HostTensor> = user_outputs
+            .iter()
+            .enumerate()
+            .map(|(oi, full)| match &rows_by_port[oi] {
+                Some(rows) => rows[j].clone(),
+                None => full.clone(),
+            })
+            .collect();
+        let queue_us = start_us.saturating_sub(p.enqueued_us);
+        queue_waits.push(queue_us);
+        p.reply(Response::Ok {
+            id: p.req.id,
+            outputs: outs,
+            queue_us,
+            exec_us,
+            batch: k,
+        });
+        stats.record_completed(end_us.saturating_sub(p.enqueued_us));
+    }
+    stats.record_batch(k, &queue_waits, exec_us);
+}
+
+/// The worker pool: `n` threads, each owning a private model instance.
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        n: usize,
+        factory: Arc<ModelFactory>,
+        batcher: Arc<Batcher>,
+        sessions: Arc<SessionStore>,
+        stats: Arc<ServeStats>,
+        clock: Arc<Clock>,
+        lr: f32,
+    ) -> WorkerPool {
+        let mut handles = Vec::with_capacity(n.max(1));
+        for w in 0..n.max(1) {
+            let factory = factory.clone();
+            let batcher = batcher.clone();
+            let sessions = sessions.clone();
+            let stats = stats.clone();
+            let clock = clock.clone();
+            let handle = thread::Builder::new()
+                .name(format!("cwy-serve-worker-{w}"))
+                .spawn(move || {
+                    // A worker that cannot build its model would leave a
+                    // pool that accepts work nobody serves; fail the whole
+                    // batcher instead so queued and future requests get
+                    // `unavailable` frames rather than silence.
+                    let mut model = match factory() {
+                        Ok(m) => m,
+                        Err(e) => {
+                            eprintln!("worker {w}: model init failed: {e:#}");
+                            batcher.shutdown();
+                            return;
+                        }
+                    };
+                    let mut resident = match model.initial_resident() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("worker {w}: initial state failed: {e:#}");
+                            batcher.shutdown();
+                            return;
+                        }
+                    };
+                    while let Some(batch) = batcher.next_batch() {
+                        execute_batch(
+                            model.as_mut(),
+                            &mut resident,
+                            batch,
+                            &sessions,
+                            &stats,
+                            &clock,
+                            lr,
+                        );
+                    }
+                })
+                .expect("spawning worker thread");
+            handles.push(handle);
+        }
+        WorkerPool { handles }
+    }
+
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::session::SessionCfg;
+    use std::sync::mpsc;
+
+    fn t(v: &[f32]) -> HostTensor {
+        HostTensor::f32(vec![v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn stack_pads_and_split_inverts() {
+        let a = t(&[1.0, 2.0]);
+        let b = t(&[3.0, 4.0]);
+        let fused = stack_rows(&[&a, &b], 4, &[2], Dtype::F32).unwrap();
+        assert_eq!(fused.shape, vec![4, 2]);
+        assert_eq!(fused.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        let rows = split_rows(&fused, 2).unwrap();
+        assert_eq!(rows, vec![a, b]);
+    }
+
+    #[test]
+    fn stack_rejects_overflow_and_split_scalars() {
+        let a = t(&[1.0]);
+        assert!(stack_rows(&[&a, &a, &a], 2, &[1], Dtype::F32).is_err());
+        assert!(split_rows(&HostTensor::scalar_f32(1.0), 1).is_err());
+    }
+
+    fn pending(
+        id: u64,
+        session: Option<&str>,
+        x: &[f32],
+    ) -> (Pending, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest {
+            id,
+            artifact: FakeModel::ARTIFACT.to_string(),
+            session: session.map(|s| s.to_string()),
+            deadline_us: None,
+            inputs: vec![t(x)],
+        };
+        (Pending::new(req, 0, tx), rx)
+    }
+
+    fn harness() -> (FakeModel, SessionStore, ServeStats, Clock) {
+        (
+            FakeModel::new(4, 2, 0),
+            SessionStore::new(SessionCfg::default()),
+            ServeStats::new(),
+            Clock::new(),
+        )
+    }
+
+    #[test]
+    fn fused_batch_serves_every_request() {
+        let (mut model, sessions, stats, clock) = harness();
+        let mut resident = model.initial_resident().unwrap();
+        let (p1, r1) = pending(1, None, &[1.0, 2.0]);
+        let (p2, r2) = pending(2, None, &[10.0, 20.0]);
+        execute_batch(&mut model, &mut resident, vec![p1, p2], &sessions, &stats, &clock, 0.0);
+
+        // y = 2x + h with h = 0.
+        match r1.try_recv().unwrap() {
+            Response::Ok { id, outputs, batch, .. } => {
+                assert_eq!(id, 1);
+                assert_eq!(batch, 2);
+                assert_eq!(outputs, vec![t(&[2.0, 4.0])]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match r2.try_recv().unwrap() {
+            Response::Ok { id, outputs, .. } => {
+                assert_eq!(id, 2);
+                assert_eq!(outputs, vec![t(&[20.0, 40.0])]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.batches, 1);
+        assert_eq!(snap.max_occupancy(), 2);
+    }
+
+    #[test]
+    fn session_state_streams_across_calls() {
+        let (mut model, sessions, stats, clock) = harness();
+        let mut resident = model.initial_resident().unwrap();
+
+        let (p1, r1) = pending(1, Some("s"), &[1.0, 1.0]);
+        execute_batch(&mut model, &mut resident, vec![p1], &sessions, &stats, &clock, 0.0);
+        match r1.try_recv().unwrap() {
+            Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[2.0, 2.0])]),
+            other => panic!("wrong frame: {other:?}"),
+        }
+
+        // Second call on the same session sees h = 1: y = 2*1 + 1 = 3.
+        let (p2, r2) = pending(2, Some("s"), &[1.0, 1.0]);
+        execute_batch(&mut model, &mut resident, vec![p2], &sessions, &stats, &clock, 0.0);
+        match r2.try_recv().unwrap() {
+            Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[3.0, 3.0])]),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert_eq!(sessions.len(), 1);
+    }
+
+    #[test]
+    fn bad_request_is_rejected_without_poisoning_batch() {
+        let (mut model, sessions, stats, clock) = harness();
+        let mut resident = model.initial_resident().unwrap();
+        let (good, rg) = pending(1, None, &[1.0, 1.0]);
+        let (bad, rb) = pending(2, None, &[1.0, 1.0, 1.0]); // wrong row shape
+        execute_batch(&mut model, &mut resident, vec![good, bad], &sessions, &stats, &clock, 0.0);
+        assert!(matches!(rg.try_recv().unwrap(), Response::Ok { .. }));
+        match rb.try_recv().unwrap() {
+            Response::Err { code, .. } => assert_eq!(code, ErrCode::BadRequest),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert_eq!(stats.snapshot().bad_requests, 1);
+    }
+
+    #[test]
+    fn same_session_requests_in_one_batch_run_sequentially() {
+        // Two pipelined requests on one session must not share a fused
+        // chunk: the second reads the state the first writes.
+        let (mut model, sessions, stats, clock) = harness();
+        let mut resident = model.initial_resident().unwrap();
+        let (p1, r1) = pending(1, Some("s"), &[1.0, 1.0]);
+        let (p2, r2) = pending(2, Some("s"), &[1.0, 1.0]);
+        execute_batch(&mut model, &mut resident, vec![p1, p2], &sessions, &stats, &clock, 0.0);
+
+        match r1.try_recv().unwrap() {
+            Response::Ok { outputs, batch, .. } => {
+                assert_eq!(outputs, vec![t(&[2.0, 2.0])]); // h = 0
+                assert_eq!(batch, 1);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match r2.try_recv().unwrap() {
+            Response::Ok { outputs, .. } => {
+                assert_eq!(outputs, vec![t(&[3.0, 3.0])]); // h = 1, not 0
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert_eq!(stats.snapshot().batches, 2);
+    }
+
+    #[test]
+    fn exec_failure_returns_taken_session_state() {
+        // A model that fails on demand: wrong input count triggers the
+        // fake model's arity error only via a poisoned wrapper instead.
+        struct Failing {
+            inner: FakeModel,
+            fail: bool,
+        }
+        impl ServeModel for Failing {
+            fn spec(&self) -> &ServeSpec {
+                self.inner.spec()
+            }
+            fn run(&mut self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+                if self.fail {
+                    bail!("injected exec failure");
+                }
+                self.inner.run(inputs)
+            }
+            fn initial_resident(&self) -> Result<Vec<HostTensor>> {
+                self.inner.initial_resident()
+            }
+        }
+        let sessions = SessionStore::new(SessionCfg::default());
+        let stats = ServeStats::new();
+        let clock = Clock::new();
+        let mut model = Failing { inner: FakeModel::new(4, 2, 0), fail: false };
+        let mut resident = model.initial_resident().unwrap();
+
+        // Seed the session with h = 1.
+        let (p1, _r1) = pending(1, Some("s"), &[1.0, 1.0]);
+        execute_batch(&mut model, &mut resident, vec![p1], &sessions, &stats, &clock, 0.0);
+
+        // Failing execution must not wipe the stored state.
+        model.fail = true;
+        let (p2, r2) = pending(2, Some("s"), &[1.0, 1.0]);
+        execute_batch(&mut model, &mut resident, vec![p2], &sessions, &stats, &clock, 0.0);
+        assert!(matches!(r2.try_recv().unwrap(), Response::Err { code: ErrCode::Exec, .. }));
+
+        // Next successful call still sees h = 1: y = 2*1 + 1 = 3.
+        model.fail = false;
+        let (p3, r3) = pending(3, Some("s"), &[1.0, 1.0]);
+        execute_batch(&mut model, &mut resident, vec![p3], &sessions, &stats, &clock, 0.0);
+        match r3.try_recv().unwrap() {
+            Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[3.0, 3.0])]),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_batch_splits_into_chunks() {
+        let (mut model, sessions, stats, clock) = harness(); // fused batch 4
+        let mut resident = model.initial_resident().unwrap();
+        let mut rxs = Vec::new();
+        let mut batch = Vec::new();
+        for i in 0..6 {
+            let (p, r) = pending(i, None, &[1.0, 1.0]);
+            batch.push(p);
+            rxs.push(r);
+        }
+        execute_batch(&mut model, &mut resident, batch, &sessions, &stats, &clock, 0.0);
+        for r in &rxs {
+            assert!(matches!(r.try_recv().unwrap(), Response::Ok { .. }));
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.occupancy, vec![0, 1, 0, 1]); // one of 2, one of 4
+    }
+
+    /// Model with a shared (non-per-row) data input: y = x * c.
+    struct ScaledModel {
+        spec: ServeSpec,
+    }
+
+    impl ScaledModel {
+        fn new() -> ScaledModel {
+            ScaledModel {
+                spec: ServeSpec {
+                    artifact: "scaled".to_string(),
+                    batch: 4,
+                    inputs: vec![
+                        PortSpec {
+                            name: "x".into(),
+                            shape: vec![4, 1],
+                            dtype: Dtype::F32,
+                            role: Role::Data,
+                            per_row: true,
+                        },
+                        PortSpec {
+                            name: "c".into(),
+                            shape: vec![1],
+                            dtype: Dtype::F32,
+                            role: Role::Data,
+                            per_row: false,
+                        },
+                    ],
+                    outputs: vec![PortSpec {
+                        name: "y".into(),
+                        shape: vec![4, 1],
+                        dtype: Dtype::F32,
+                        role: Role::Output,
+                        per_row: true,
+                    }],
+                    n_state_out: 0,
+                },
+            }
+        }
+    }
+
+    impl ServeModel for ScaledModel {
+        fn spec(&self) -> &ServeSpec {
+            &self.spec
+        }
+
+        fn run(&mut self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            let x = inputs[0].as_f32()?;
+            let c = inputs[1].as_f32()?[0];
+            Ok(vec![HostTensor::f32(vec![4, 1], x.iter().map(|v| v * c).collect())])
+        }
+
+        fn initial_resident(&self) -> Result<Vec<HostTensor>> {
+            Ok(Vec::new())
+        }
+    }
+
+    #[test]
+    fn conflicting_shared_inputs_are_rejected_not_substituted() {
+        let mut model = ScaledModel::new();
+        let sessions = SessionStore::new(SessionCfg::default());
+        let stats = ServeStats::new();
+        let clock = Clock::new();
+        let mut resident = Vec::new();
+        let mk = |id: u64, xv: f32, cv: f32| {
+            let (tx, rx) = mpsc::channel();
+            let req = InferRequest {
+                id,
+                artifact: "scaled".to_string(),
+                session: None,
+                deadline_us: None,
+                inputs: vec![
+                    HostTensor::f32(vec![1], vec![xv]),
+                    HostTensor::f32(vec![1], vec![cv]),
+                ],
+            };
+            (Pending::new(req, 0, tx), rx)
+        };
+        let (p1, r1) = mk(1, 3.0, 2.0);
+        let (p2, r2) = mk(2, 4.0, 2.0);
+        let (p3, r3) = mk(3, 5.0, 7.0); // conflicting shared input c
+        execute_batch(&mut model, &mut resident, vec![p1, p2, p3], &sessions, &stats, &clock, 0.0);
+
+        match r1.try_recv().unwrap() {
+            Response::Ok { outputs, batch, .. } => {
+                assert_eq!(outputs, vec![HostTensor::f32(vec![1], vec![6.0])]);
+                assert_eq!(batch, 2);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match r2.try_recv().unwrap() {
+            Response::Ok { outputs, .. } => {
+                assert_eq!(outputs, vec![HostTensor::f32(vec![1], vec![8.0])]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match r3.try_recv().unwrap() {
+            Response::Err { code, .. } => assert_eq!(code, ErrCode::BadRequest),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fresh_sessions_start_from_model_initial_rows() {
+        // FakeModel has no recorded rows (zeros); wrap it so one exists.
+        struct Seeded(FakeModel);
+        impl ServeModel for Seeded {
+            fn spec(&self) -> &ServeSpec {
+                self.0.spec()
+            }
+            fn run(&mut self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+                self.0.run(inputs)
+            }
+            fn initial_resident(&self) -> Result<Vec<HostTensor>> {
+                self.0.initial_resident()
+            }
+            fn initial_session_rows(&self) -> Vec<HostTensor> {
+                vec![t(&[10.0, 10.0])]
+            }
+        }
+        let mut model = Seeded(FakeModel::new(4, 2, 0));
+        let sessions = SessionStore::new(SessionCfg::default());
+        let stats = ServeStats::new();
+        let clock = Clock::new();
+        let mut resident = Vec::new();
+        // y = 2x + h with seeded h = 10 -> 12, not 2.
+        let (p, r) = pending(1, None, &[1.0, 1.0]);
+        execute_batch(&mut model, &mut resident, vec![p], &sessions, &stats, &clock, 0.0);
+        match r.try_recv().unwrap() {
+            Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[12.0, 12.0])]),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_json_describes_client_contract() {
+        let model = FakeModel::new(8, 3, 0);
+        let j = model.spec().to_json();
+        assert_eq!(j.path(&["batch"]).as_f64(), Some(8.0));
+        let inputs = j.path(&["inputs"]).as_arr().unwrap();
+        assert_eq!(inputs.len(), 1); // only the data port is client-supplied
+        assert_eq!(inputs[0].path(&["name"]).as_str(), Some("x"));
+    }
+
+    #[test]
+    fn serve_spec_from_artifact_manifest() {
+        use crate::runtime::manifest::Manifest;
+        use std::path::PathBuf;
+        let m = Manifest::parse_str(
+            r#"{"artifacts":[{"name":"toy_step","file":"f.hlo","kind":"step",
+                "inputs":[{"name":"w","shape":[8,8],"dtype":"float32","kind":"state"},
+                          {"name":"x","shape":[4,10],"dtype":"int32"},
+                          {"name":"lr","shape":[],"dtype":"float32","kind":"hyper"}],
+                "outputs":[{"name":"w","shape":[8,8],"dtype":"float32"},
+                           {"name":"loss","shape":[],"dtype":"float32"}],
+                "meta":{"batch":"4"}}]}"#,
+            PathBuf::from("/tmp"),
+        )
+        .unwrap();
+        let spec = ServeSpec::from_artifact(m.get("toy_step").unwrap()).unwrap();
+        assert_eq!(spec.batch, 4);
+        assert_eq!(spec.n_state_out, 1);
+        assert!(!spec.inputs[0].per_row); // w: [8,8] is worker-resident
+        assert!(spec.inputs[1].per_row); // x: [4,10] is one row per request
+        assert_eq!(spec.inputs[1].tail(), &[10]);
+        assert!(!spec.outputs[1].per_row); // loss: scalar broadcast
+    }
+}

@@ -1,8 +1,9 @@
-//! Minimal JSON parser for `artifacts/manifest.json`.
+//! Minimal JSON parser + serializer for `artifacts/manifest.json` and the
+//! serve wire protocol (`serve::protocol`).
 //!
-//! serde is not vendored in this environment; the manifest grammar is plain
-//! JSON (objects, arrays, strings, numbers, booleans, null), so a ~200-line
-//! recursive-descent parser is the honest substrate.
+//! serde is not vendored in this environment; the grammar is plain JSON
+//! (objects, arrays, strings, numbers, booleans, null), so a recursive-
+//! descent parser and a direct writer are the honest substrate.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -58,6 +59,80 @@ impl Json {
         }
         cur
     }
+
+    /// Serialize to compact JSON text; `parse(dump(x)) == x` for all values
+    /// whose numbers are finite (non-finite numbers render as `null`).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => write_num(*x, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.dump())
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if !x.is_finite() {
+        // JSON has no NaN/Inf; null is the least-surprising encoding.
+        out.push_str("null");
+    } else if x.fract() == 0.0 && x.abs() < 9.0e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else {
+        // `{}` on f64 prints the shortest representation that round-trips.
+        out.push_str(&format!("{x}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[derive(Debug)]
@@ -301,6 +376,25 @@ mod tests {
         assert!(parse("{,}").is_err());
         assert!(parse("[1 2]").is_err());
         assert!(parse("{\"a\":1} x").is_err());
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let src = r#"{"a":[1,2.5,{"b":"c\nd"}],"e":null,"f":true,"g":-3}"#;
+        let j = parse(src).unwrap();
+        assert_eq!(j.dump(), src);
+        assert_eq!(parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn dump_escapes_and_specials() {
+        let j = Json::Arr(vec![
+            Json::Str("q\"\\\u{1}".into()),
+            Json::Num(f64::NAN),
+            Json::Num(1.0),
+        ]);
+        assert_eq!(j.dump(), r#"["q\"\\\u0001",null,1]"#);
+        assert_eq!(parse(&j.dump()).unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Integration: the serve subsystem end-to-end over real TCP — protocol,
+//! micro-batching, sessions, deadlines, backpressure, stats — using the
+//! fake backend, so no artifacts or PJRT bindings are needed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use cwy::runtime::{Dtype, HostTensor};
+use cwy::serve::{
+    fetch_spec, fetch_stats, ping, protocol, run_load, serve, BatchCfg, ClientCfg, ErrCode,
+    FakeModel, InferRequest, ModelFactory, Request, Response, ServeCfg, ServeModel, Server,
+    SessionCfg,
+};
+
+fn start_server(
+    workers: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    exec_delay_us: u64,
+    queue_cap: usize,
+) -> Server {
+    let factory: Arc<ModelFactory> = Arc::new(move || {
+        Ok(Box::new(FakeModel::new(max_batch, 4, exec_delay_us)) as Box<dyn ServeModel>)
+    });
+    serve(
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            batch: BatchCfg { max_batch, max_wait_us, queue_cap },
+            session: SessionCfg::default(),
+            lr: 0.0,
+        },
+        factory,
+    )
+    .expect("server start")
+}
+
+struct RawConn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RawConn {
+    fn open(addr: &str) -> RawConn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let writer = stream.try_clone().expect("clone");
+        RawConn { writer, reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, req: &Request) {
+        let line = protocol::encode_request(req);
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> Response {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        protocol::decode_response(&line).expect("valid response frame")
+    }
+}
+
+fn infer(id: u64, session: Option<&str>, deadline_us: Option<u64>, x: [f32; 4]) -> Request {
+    Request::Infer(InferRequest {
+        id,
+        artifact: FakeModel::ARTIFACT.to_string(),
+        session: session.map(|s| s.to_string()),
+        deadline_us,
+        inputs: vec![HostTensor::f32(vec![4], x.to_vec())],
+    })
+}
+
+#[test]
+fn ping_and_spec_roundtrip() {
+    let server = start_server(1, 4, 1_000, 0, 64);
+    let addr = server.local_addr().to_string();
+    assert!(ping(&addr).unwrap() >= 0.0);
+    let spec = fetch_spec(&addr).unwrap();
+    assert_eq!(spec.artifact, FakeModel::ARTIFACT);
+    assert_eq!(spec.batch, 4);
+    assert_eq!(spec.inputs, vec![(vec![4usize], Dtype::F32)]);
+    server.stop();
+}
+
+#[test]
+fn sustains_concurrent_load_with_zero_drops_and_coalesces() {
+    // 16 closed-loop clients against 2 workers with a visible exec cost:
+    // requests pile up while workers are busy, so fused batches form.
+    let server = start_server(2, 8, 20_000, 500, 1_024);
+    let addr = server.local_addr().to_string();
+    let report = run_load(&ClientCfg {
+        addr: addr.clone(),
+        requests: 300,
+        concurrency: 16,
+        deadline_us: None,
+        use_sessions: false,
+    })
+    .unwrap();
+    assert_eq!(report.ok, 300, "every request must succeed: {report:?}");
+    assert_eq!(report.dropped(), 0);
+
+    let snap = server.snapshot();
+    assert_eq!(snap.completed, 300);
+    assert!(
+        snap.max_occupancy() > 1,
+        "micro-batching must coalesce under concurrent load: {snap:?}"
+    );
+
+    // The same numbers are visible over the wire.
+    let j = fetch_stats(&addr).unwrap();
+    assert_eq!(j.path(&["completed"]).as_f64(), Some(300.0));
+    server.stop();
+}
+
+#[test]
+fn session_state_streams_across_requests() {
+    let server = start_server(1, 4, 200, 0, 64);
+    let addr = server.local_addr().to_string();
+    let mut conn = RawConn::open(&addr);
+
+    // y = 2x + h: first call h=0 -> 2, second call h=1 -> 3.
+    conn.send(&infer(1, Some("veda"), None, [1.0; 4]));
+    match conn.recv() {
+        Response::Ok { id, outputs, .. } => {
+            assert_eq!(id, 1);
+            assert_eq!(outputs, vec![HostTensor::f32(vec![4], vec![2.0; 4])]);
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+    conn.send(&infer(2, Some("veda"), None, [1.0; 4]));
+    match conn.recv() {
+        Response::Ok { id, outputs, .. } => {
+            assert_eq!(id, 2);
+            assert_eq!(outputs, vec![HostTensor::f32(vec![4], vec![3.0; 4])]);
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+    // A different session starts fresh.
+    conn.send(&infer(3, Some("other"), None, [1.0; 4]));
+    match conn.recv() {
+        Response::Ok { outputs, .. } => {
+            assert_eq!(outputs, vec![HostTensor::f32(vec![4], vec![2.0; 4])]);
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+    server.stop();
+}
+
+#[test]
+fn queued_requests_past_deadline_are_shed() {
+    // One worker busy for 50ms; a 1ms-deadline request queued behind it
+    // must come back as an err/deadline frame, not hold the line.
+    let server = start_server(1, 1, 100, 50_000, 64);
+    let addr = server.local_addr().to_string();
+    let mut conn = RawConn::open(&addr);
+    conn.send(&infer(1, None, None, [1.0; 4]));
+    conn.send(&infer(2, None, Some(1_000), [1.0; 4]));
+
+    let mut ok_ids = Vec::new();
+    let mut shed_ids = Vec::new();
+    for _ in 0..2 {
+        match conn.recv() {
+            Response::Ok { id, .. } => ok_ids.push(id),
+            Response::Err { id, code, .. } => {
+                assert_eq!(code, ErrCode::Deadline);
+                shed_ids.push(id);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+    assert_eq!(ok_ids, vec![1]);
+    assert_eq!(shed_ids, vec![2]);
+    assert_eq!(server.snapshot().shed_deadline, 1);
+    server.stop();
+}
+
+#[test]
+fn full_queue_applies_backpressure() {
+    // Worker busy 50ms, queue capacity 1: the third request must be
+    // rejected immediately with err/overloaded.
+    let server = start_server(1, 1, 100, 50_000, 1);
+    let addr = server.local_addr().to_string();
+    let mut conn = RawConn::open(&addr);
+    conn.send(&infer(1, None, None, [1.0; 4]));
+    // Give the worker a moment to dequeue request 1 before filling the
+    // queue, so exactly one slot decides the outcome.
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    conn.send(&infer(2, None, None, [1.0; 4]));
+    conn.send(&infer(3, None, None, [1.0; 4]));
+
+    let mut ok_ids = Vec::new();
+    let mut rejected_ids = Vec::new();
+    for _ in 0..3 {
+        match conn.recv() {
+            Response::Ok { id, .. } => ok_ids.push(id),
+            Response::Err { id, code, .. } => {
+                assert_eq!(code, ErrCode::Overloaded);
+                rejected_ids.push(id);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+    ok_ids.sort_unstable();
+    assert_eq!(ok_ids, vec![1, 2]);
+    assert_eq!(rejected_ids, vec![3]);
+    assert_eq!(server.snapshot().rejected_full, 1);
+    server.stop();
+}
+
+#[test]
+fn malformed_lines_get_error_frames_not_disconnects() {
+    let server = start_server(1, 4, 200, 0, 64);
+    let addr = server.local_addr().to_string();
+    let mut conn = RawConn::open(&addr);
+    conn.writer.write_all(b"this is not json\n").unwrap();
+    conn.writer.flush().unwrap();
+    match conn.recv() {
+        Response::Err { code, .. } => assert_eq!(code, ErrCode::BadRequest),
+        other => panic!("wrong frame: {other:?}"),
+    }
+    // The connection survives and still serves.
+    conn.send(&infer(9, None, None, [0.0; 4]));
+    match conn.recv() {
+        Response::Ok { id, .. } => assert_eq!(id, 9),
+        other => panic!("wrong frame: {other:?}"),
+    }
+    server.stop();
+}

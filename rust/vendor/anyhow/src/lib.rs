@@ -1,0 +1,236 @@
+//! Offline subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no crates.io access, so the workspace vendors
+//! the small slice of anyhow the codebase actually uses (DESIGN.md §2.4):
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.  Errors are stored as a chain of
+//! rendered messages — enough for CLI diagnostics and test assertions; no
+//! downcasting or backtraces.
+
+use std::fmt::{self, Display};
+
+/// Error type: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` alias, with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = self.cause.as_deref();
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, outermost first.
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our message chain.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, cause: err.map(Box::new) });
+        }
+        err.expect("chain is never empty")
+    }
+}
+
+mod ext {
+    use super::*;
+
+    /// Private dispatch trait so `Context` works both for std errors and
+    /// for `anyhow::Error` itself (which must not implement
+    /// `std::error::Error`, or the blanket `From` above would conflict
+    /// with `impl From<T> for T`).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad {} of {}", 1, "x");
+        assert_eq!(format!("{e}"), "bad 1 of x");
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_results() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(e.root_cause(), "gone");
+
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "step 3: inner");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).is_err());
+        assert!(f(11).is_err());
+    }
+}

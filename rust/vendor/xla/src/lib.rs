@@ -1,0 +1,211 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the XLA/PJRT native library and executes the HLO
+//! artifacts under `artifacts/`.  That native library is not present in
+//! this build environment, so this stub keeps the exact API surface the
+//! `cwy` crate compiles against (DESIGN.md §2.4): host-side [`Literal`]
+//! construction works for real (it is pure Rust), while anything that
+//! needs a device — [`PjRtClient::cpu`] onward — returns a clear runtime
+//! error.  Swapping the workspace path dependency back to the real `xla`
+//! crate re-enables execution with no source changes in `cwy`.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (string-rendered) errors.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT native bindings are not vendored in this build; \
+         artifacts cannot execute (swap rust/vendor/xla for the real xla \
+         crate — DESIGN.md §2.4)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold (the artifact pipeline emits
+/// f32/i32 only).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Marker trait for element types accepted by [`Literal`] constructors.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> LiteralData
+    where
+        Self: Sized;
+    fn slice(d: &LiteralData) -> Option<&[Self]>
+    where
+        Self: Sized;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn slice(d: &LiteralData) -> Option<&[f32]> {
+        match d {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn slice(d: &LiteralData) -> Option<&[i32]> {
+        match d {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: dims + typed buffer.  Fully functional in the stub.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len() as i64,
+            LiteralData::I32(v) => v.len() as i64,
+        };
+        if want != have {
+            return Err(Error(format!(
+                "reshape: {have} elements cannot view as {dims:?}"
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+}
+
+/// Device buffer handle — never constructible through the stub.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// PJRT client handle — `cpu()` fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle — never constructible through the stub.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Parsed HLO module (the stub only checks the file is readable).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation wrapper over a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("not vendored"));
+    }
+}
