@@ -1,0 +1,58 @@
+//! Native-backend GEMM: blocked/cache-tiled/multithreaded kernel vs the
+//! naive reference triple loop (`linalg::gemm`).  The blocked kernel is
+//! the hot path under every native-op execution (CWY construction,
+//! rollouts, linreg SGD), so the speedup here bounds native serve/train
+//! throughput.
+//!
+//!   cargo bench --bench gemm_native            # default size sweep
+//!   cargo bench --bench gemm_native -- --max-n 1024
+
+use cwy::linalg::gemm::{matmul_blocked, matmul_naive};
+use cwy::linalg::Matrix;
+use cwy::report::Table;
+use cwy::util::cli::Args;
+use cwy::util::rng::Pcg32;
+use cwy::util::timing::bench;
+
+fn main() {
+    let args = Args::from_env();
+    let max_n = args.get_usize("max-n", 512);
+    let sizes: Vec<usize> = [64usize, 128, 192, 256, 384, 512, 768, 1024]
+        .into_iter()
+        .filter(|&n| n <= max_n)
+        .collect();
+
+    let mut table = Table::new(&["N", "naive ms", "blocked ms", "speedup", "max |diff|"]);
+    println!("# gemm_native: square f32 GEMM, naive vs blocked+threaded\n");
+    for &n in &sizes {
+        let mut rng = Pcg32::seeded(n as u64);
+        let a = Matrix::random_normal(&mut rng, n, n, 1.0);
+        let b = Matrix::random_normal(&mut rng, n, n, 1.0);
+
+        // Parity first: a bench that measures the wrong answer is noise.
+        let diff = matmul_blocked(&a, &b).max_abs_diff(&matmul_naive(&a, &b));
+        assert!(diff < 1e-3 * n as f32, "N={n}: kernels disagree by {diff}");
+
+        let s_naive = bench("naive", 1, 0.2, || {
+            std::hint::black_box(matmul_naive(&a, &b));
+        });
+        let s_blocked = bench("blocked", 1, 0.2, || {
+            std::hint::black_box(matmul_blocked(&a, &b));
+        });
+        let speedup = s_naive.mean_s / s_blocked.mean_s.max(1e-12);
+        println!(
+            "N={n:<5} naive {:>9.3} ms   blocked {:>9.3} ms   {speedup:.2}x   diff {diff:.2e}",
+            s_naive.mean_ms(),
+            s_blocked.mean_ms()
+        );
+        table.row(&[
+            n.to_string(),
+            format!("{:.3}", s_naive.mean_ms()),
+            format!("{:.3}", s_blocked.mean_ms()),
+            format!("{speedup:.2}x"),
+            format!("{diff:.2e}"),
+        ]);
+    }
+    println!("\n## GEMM kernels (f32, square N)\n");
+    print!("{}", table.to_markdown());
+}

@@ -1,17 +1,24 @@
-//! Serve-path smoke benchmark: spin an in-process micro-batching server on
-//! the fake backend and drive it with the closed-loop load client, then
-//! print both client-side latency and server-side occupancy tables.
+//! Serve-path smoke benchmark: spin an in-process micro-batching server
+//! and drive it with the closed-loop load client, then print both
+//! client-side latency and server-side occupancy tables.
 //!
-//! Needs no artifacts, so it runs anywhere the crate builds:
+//! By default the server executes the toy CWY-cell artifact on the
+//! **native** backend (DESIGN.md §2.6) — a real `Engine` →
+//! `Compiled::run` request/response cycle with per-session recurrent
+//! state, no Python AOT artifacts and no PJRT bindings needed.
+//! `--backend fake` switches to the deterministic in-process model with
+//! an artificial execution delay (useful for queueing experiments).
 //!
 //!   cargo run --release --example serve_bench -- \
-//!       --requests 2000 --concurrency 16 --workers 2 --max-batch 8
+//!       --requests 2000 --concurrency 16 --workers 2 [--backend native|fake]
 
 use std::sync::Arc;
 
+use cwy::runtime::fixture::TempDir;
+use cwy::runtime::Backend;
 use cwy::serve::{
-    run_load, serve, BatchCfg, ClientCfg, FakeModel, ModelFactory, ServeCfg, ServeModel,
-    SessionCfg,
+    probe_serve_spec, run_load, serve, BatchCfg, ClientCfg, EngineModel, FakeModel, ModelFactory,
+    ServeCfg, ServeModel, SessionCfg,
 };
 use cwy::util::cli::Args;
 
@@ -20,14 +27,43 @@ fn main() -> anyhow::Result<()> {
     let requests = args.get_usize("requests", 2_000);
     let concurrency = args.get_usize("concurrency", 16);
     let workers = args.get_usize("workers", 2);
-    let max_batch = args.get_usize("max-batch", 8);
+    let mut max_batch = args.get_usize("max-batch", 8);
     let max_wait_us = args.get_usize("max-wait-us", 2_000) as u64;
-    let delay_us = args.get_usize("fake-delay-us", 300) as u64;
+    let backend = args.get_or("backend", "native");
 
-    let factory: Arc<ModelFactory> = {
-        let batch = max_batch;
-        Arc::new(move || Ok(Box::new(FakeModel::new(batch, 16, delay_us)) as Box<dyn ServeModel>))
+    // Keeps the fixture directory alive until the run completes.
+    let mut _fixture_guard: Option<TempDir> = None;
+    let factory: Arc<ModelFactory> = match backend.as_str() {
+        "native" => {
+            let tmp = TempDir::with_toy_artifacts("serve-bench")?;
+            let dir = tmp.path().display().to_string();
+            _fixture_guard = Some(tmp);
+            // The artifact's fused batch is the coalescing ceiling and the
+            // default; an explicit smaller --max-batch is honored.
+            let fused = probe_serve_spec(&dir, "toy_cell_step")?.0.batch;
+            max_batch = match args.get("max-batch") {
+                None => fused,
+                Some(_) if max_batch > fused => {
+                    println!("# --max-batch {max_batch} exceeds the fused batch; using {fused}");
+                    fused
+                }
+                Some(_) => max_batch,
+            };
+            Arc::new(move || {
+                Ok(Box::new(EngineModel::open_with(&dir, "toy_cell_step", Backend::Native)?)
+                    as Box<dyn ServeModel>)
+            })
+        }
+        "fake" => {
+            let batch = max_batch;
+            let delay_us = args.get_usize("fake-delay-us", 300) as u64;
+            Arc::new(move || {
+                Ok(Box::new(FakeModel::new(batch, 16, delay_us)) as Box<dyn ServeModel>)
+            })
+        }
+        other => anyhow::bail!("unknown backend '{other}' (expected native|fake)"),
     };
+
     let server = serve(
         ServeCfg {
             addr: "127.0.0.1:0".to_string(),
@@ -41,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     let addr = server.local_addr().to_string();
     println!(
         "# serve_bench: {requests} requests x {concurrency} connections -> {addr} \
-         ({workers} workers, max-batch {max_batch}, max-wait {max_wait_us}us)"
+         ({backend} backend, {workers} workers, max-batch {max_batch}, max-wait {max_wait_us}us)"
     );
 
     let report = run_load(&ClientCfg {
@@ -59,6 +95,7 @@ fn main() -> anyhow::Result<()> {
     print!("{}", snap.to_table().to_markdown());
     server.stop();
 
+    anyhow::ensure!(report.ok > 0, "no request completed a full cycle");
     anyhow::ensure!(report.dropped() == 0, "{} requests dropped", report.dropped());
     println!("\nserve_bench OK (mean server batch {:.2})", report.mean_batch);
     Ok(())

@@ -1,0 +1,218 @@
+//! Blocked, cache-tiled, multithreaded GEMM — the hot path under the
+//! native execution backend (DESIGN.md §3.1).
+//!
+//! Two kernels share one accumulation order (k ascending per output
+//! element), so they agree bitwise and the property suite can compare
+//! them tightly:
+//!
+//! * [`matmul_naive`] — the reference (i, k, j) triple loop, kept as the
+//!   parity baseline for tests and `benches/gemm_native`;
+//! * [`matmul_blocked`] — tiles the reduction axis in [`TILE_K`] panels
+//!   and the output columns in [`TILE_J`] strips so each `B` panel stays
+//!   cache-resident across a whole row band, then splits the row bands
+//!   over `std::thread::scope` workers (no extra dependencies).
+//!
+//! `Matrix::matmul` routes everything here; small products take the
+//! single-threaded tiled path (spawning threads under
+//! [`PARALLEL_FLOP_CUTOFF`] multiply-adds costs more than it saves).
+
+use crate::linalg::Matrix;
+
+/// Rows of `B` (reduction-axis panel) kept hot while a row band runs.
+pub const TILE_K: usize = 64;
+/// Output-column strip width: one strip of an output row plus the
+/// matching `B` panel columns fit in L1 together.
+pub const TILE_J: usize = 256;
+/// Multiply-add count below which thread spawn overhead dominates and
+/// the single-threaded tiled kernel wins.
+pub const PARALLEL_FLOP_CUTOFF: usize = 1 << 18;
+
+/// Reference kernel: straightforward (i, k, j) loop, inner loop
+/// contiguous in both `b` and `out` rows.
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * n..(k + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Tiled kernel over one band of output rows (`i0..i0 + rows`).
+///
+/// Loop order (kb, jb, i, kk) walks the reduction axis in ascending
+/// order for every output element, so results match [`matmul_naive`]
+/// bitwise while the `TILE_K x TILE_J` panel of `b` is reused across
+/// all rows of the band.
+fn band_kernel(a: &[f32], k: usize, n: usize, i0: usize, out_band: &mut [f32], b: &[f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = out_band.len() / n;
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + TILE_K).min(k);
+        let mut jb = 0;
+        while jb < n {
+            let jend = (jb + TILE_J).min(n);
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+                let orow = &mut out_band[i * n + jb..i * n + jend];
+                for (kk, &aik) in arow[kb..kend].iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(kb + kk) * n + jb..(kb + kk) * n + jend];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+            jb = jend;
+        }
+        kb = kend;
+    }
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+/// GEMMs currently executing on this process.  Concurrent callers (e.g.
+/// serve worker threads each running a fused batch) split the hardware
+/// thread budget instead of each spawning `available_parallelism()`
+/// threads and oversubscribing the CPU.
+static ACTIVE_GEMMS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// RAII registration in [`ACTIVE_GEMMS`] (panic-safe decrement).
+struct GemmSlot {
+    budget: usize,
+}
+
+impl GemmSlot {
+    fn acquire() -> GemmSlot {
+        use std::sync::atomic::Ordering;
+        let active = ACTIVE_GEMMS.fetch_add(1, Ordering::Relaxed) + 1;
+        GemmSlot { budget: (hardware_threads() / active).max(1) }
+    }
+}
+
+impl Drop for GemmSlot {
+    fn drop(&mut self) {
+        ACTIVE_GEMMS.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// Blocked, multithreaded matmul: `out = a @ b`.
+///
+/// Output rows are split into contiguous bands, one scoped thread per
+/// band; bands are disjoint `&mut` slices of the output buffer, so no
+/// synchronization is needed beyond the scope join.
+pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    if m * k * n < PARALLEL_FLOP_CUTOFF {
+        band_kernel(&a.data, k, n, 0, &mut out.data, &b.data);
+        return out;
+    }
+    let slot = GemmSlot::acquire();
+    let threads = slot.budget.min(m);
+    if threads <= 1 {
+        band_kernel(&a.data, k, n, 0, &mut out.data, &b.data);
+        return out;
+    }
+    let rows_per = m.div_ceil(threads);
+    let (a_data, b_data) = (&a.data[..], &b.data[..]);
+    std::thread::scope(|s| {
+        for (band_idx, out_band) in out.data.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || {
+                band_kernel(a_data, k, n, band_idx * rows_per, out_band, b_data);
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, forall};
+
+    /// The acceptance property: blocked/threaded output equals the naive
+    /// reference across ragged shapes, including dims smaller than a tile
+    /// and bands that do not divide the thread count evenly.
+    #[test]
+    fn blocked_matches_naive_on_ragged_shapes() {
+        forall(
+            24,
+            |rng| {
+                let m = 1 + rng.below(TILE_K as u32 + 13) as usize;
+                let k = 1 + rng.below(TILE_K as u32 + 29) as usize;
+                let n = 1 + rng.below(TILE_J as u32 + 17) as usize;
+                let a = Matrix::random_normal(rng, m, k, 1.0);
+                let b = Matrix::random_normal(rng, k, n, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let fast = matmul_blocked(a, b);
+                let slow = matmul_naive(a, b);
+                assert_close(&fast.data, &slow.data, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_matches_naive_above_parallel_cutoff() {
+        // 97 * 83 * 101 multiply-adds exceed PARALLEL_FLOP_CUTOFF — force
+        // the threaded band path plus a ragged last band.
+        forall(
+            3,
+            |rng| {
+                let a = Matrix::random_normal(rng, 97, 83, 1.0);
+                let b = Matrix::random_normal(rng, 83, 101, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let fast = matmul_blocked(a, b);
+                let slow = matmul_naive(a, b);
+                assert_close(&fast.data, &slow.data, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn degenerate_dims_produce_zero_shapes() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let c = matmul_blocked(&a, &b);
+        assert_eq!((c.rows, c.cols), (3, 4));
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn rows_smaller_than_thread_count_still_correct() {
+        // m = 1 with a wide reduction exceeds the cutoff but cannot be
+        // split into more than one band.
+        let mut rng = crate::util::rng::Pcg32::seeded(7);
+        let a = Matrix::random_normal(&mut rng, 1, 700, 1.0);
+        let b = Matrix::random_normal(&mut rng, 700, 600, 1.0);
+        let fast = matmul_blocked(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert_close(&fast.data, &slow.data, 1e-4).unwrap();
+    }
+}

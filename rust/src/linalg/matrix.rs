@@ -59,26 +59,12 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Blocked matmul; the panel loop order (i, k, j) keeps the inner loop
-    /// contiguous in both `other` and `out` rows (the L3 hot path for the
-    /// native baselines — see EXPERIMENTS.md §Perf).
+    /// Matrix product (the L3/native-backend hot path).  Delegates to the
+    /// blocked, cache-tiled, multithreaded kernel in [`crate::linalg::gemm`];
+    /// small products stay single-threaded there, and both paths keep the
+    /// reference accumulation order (see `gemm::matmul_naive`).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
-            for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += aik * b;
-                }
-            }
-        }
-        out
+        super::gemm::matmul_blocked(self, other)
     }
 
     /// y = A x for a vector x.

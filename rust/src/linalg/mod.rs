@@ -7,11 +7,13 @@
 //! so both sides can be cross-checked.
 
 pub mod expm;
+pub mod gemm;
 pub mod matrix;
 pub mod qr;
 pub mod tri;
 
 pub use expm::{cayley, expm, expm_default};
+pub use gemm::{matmul_blocked, matmul_naive};
 pub use matrix::Matrix;
 pub use qr::{gauss_jordan_inv, householder_qr};
 pub use tri::{triu_inv, triu_inv_neumann, triu_solve, triu_solve_vec};

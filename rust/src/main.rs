@@ -14,7 +14,7 @@ use cwy::coordinator::{checkpoint, Schedule, Trainer};
 use cwy::data::{copying::CopyTask, corpus::CorpusGen, digits::DigitTask, video::VideoTask};
 use cwy::orthogonal::flops;
 use cwy::report::Table;
-use cwy::runtime::{Engine, HostTensor};
+use cwy::runtime::{Backend, Engine, HostTensor};
 use cwy::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -30,13 +30,16 @@ fn main() -> Result<()> {
         "client" => cmd_client(&args),
         _ => {
             eprintln!(
-                "usage: cwy <list|train|train-dp|tables|verify|serve|client> [--artifacts DIR] ...\n\
+                "usage: cwy <list|train|train-dp|tables|verify|serve|client> \
+                 [--artifacts DIR] [--backend auto|native|pjrt] ...\n\
                  train:    --artifact NAME --steps N --schedule constant:1e-3 [--seed S] [--ckpt PATH]\n\
                  train-dp: --base NAME --workers W --steps N\n\
                  tables:   [--t 1000 --n 1024 --l 128 --m 128]\n\
                  serve:    --addr HOST:PORT --artifact NAME --workers W --max-batch B --max-wait-us U\n\
-                 \x20         [--backend pjrt|fake --queue-cap N --lr F]\n\
-                 client:   --addr HOST:PORT --requests N --concurrency C [--deadline-us U --sessions]"
+                 \x20         [--backend auto|native|pjrt|fake --queue-cap N --lr F]\n\
+                 \x20         (--backend native with no --artifact serves the toy fixture)\n\
+                 client:   --addr HOST:PORT --requests N --concurrency C [--deadline-us U --sessions]\n\
+                 --backend auto (default) prefers PJRT and falls back to the native rust backend."
             );
             Ok(())
         }
@@ -47,8 +50,14 @@ fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts")
 }
 
+/// Open the engine honoring the global `--backend` flag (DESIGN.md §2.6).
+fn open_engine(args: &Args) -> Result<Engine> {
+    let backend = Backend::parse(&args.get_or("backend", "auto"))?;
+    Engine::open_with(artifacts_dir(args), backend)
+}
+
 fn cmd_list(args: &Args) -> Result<()> {
-    let engine = Engine::open(artifacts_dir(args))?;
+    let engine = open_engine(args)?;
     let mut t = Table::new(&["artifact", "kind", "task", "method", "params"]);
     for (name, spec) in &engine.manifest.artifacts {
         t.row(&[
@@ -123,7 +132,7 @@ fn make_provider(
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let engine = Engine::open(artifacts_dir(args))?;
+    let engine = open_engine(args)?;
     let name = args
         .get("artifact")
         .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
@@ -142,7 +151,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         .to_string();
     let mut provider = make_provider(&task, &trainer.artifact.spec, seed)?;
 
-    println!("# training {name} for {steps} steps (task={task})");
+    println!(
+        "# training {name} for {steps} steps (task={task}, backend={})",
+        engine.platform()
+    );
     trainer.train(&mut provider, steps, |step, loss, metrics| {
         if step % log_every == 0 || step + 1 == steps {
             println!("step {step:>5}  loss {loss:.5}  metrics {metrics:?}");
@@ -165,7 +177,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_train_dp(args: &Args) -> Result<()> {
-    let engine = Engine::open(artifacts_dir(args))?;
+    let engine = open_engine(args)?;
     let base = args
         .get("base")
         .ok_or_else(|| anyhow::anyhow!("--base required (e.g. copy_cwy)"))?;
@@ -233,7 +245,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
     use cwy::linalg::Matrix;
     use cwy::util::rng::Pcg32;
 
-    let engine = Engine::open(artifacts_dir(args))?;
+    let engine = open_engine(args)?;
     let mut failures = 0;
 
     // CWY: artifact param_cwy_n64 vs native construction.
@@ -284,22 +296,28 @@ fn cmd_verify(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Micro-batching inference server over the PJRT runtime (DESIGN.md §6).
+/// Micro-batching inference server over the runtime backend seam
+/// (DESIGN.md §2.6, §6): engine-backed workers (`auto|native|pjrt`) or
+/// the deterministic in-process `fake` model.
 fn cmd_serve(args: &Args) -> Result<()> {
     use cwy::serve::{
-        serve, BatchCfg, EngineModel, FakeModel, ModelFactory, ServeCfg, ServeModel, SessionCfg,
+        probe_serve_spec, serve, BatchCfg, EngineModel, FakeModel, ModelFactory, ServeCfg,
+        ServeModel, SessionCfg,
     };
     use std::sync::Arc;
 
     let addr = args.get_or("addr", "127.0.0.1:7070");
     let workers = args.get_usize("workers", 2);
-    let max_batch = args.get_usize("max-batch", 8);
+    let mut max_batch = args.get_usize("max-batch", 8);
     let max_wait_us = args.get_usize("max-wait-us", 2_000) as u64;
     let queue_cap = args.get_usize("queue-cap", 1_024);
     let lr = args.get_f32("lr", 0.0);
-    let default_backend = if args.get("artifact").is_some() { "pjrt" } else { "fake" };
+    let default_backend = if args.get("artifact").is_some() { "auto" } else { "fake" };
     let backend = args.get_or("backend", default_backend);
 
+    // Keeps a demo fixture directory alive for the server's lifetime
+    // (dropped — and cleaned up — only after `join` returns).
+    let mut _fixture_guard: Option<cwy::runtime::fixture::TempDir> = None;
     let factory: Arc<ModelFactory> = match backend.as_str() {
         "fake" => {
             let batch = max_batch;
@@ -307,15 +325,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let delay_us = args.get_usize("fake-delay-us", 200) as u64;
             Arc::new(move || Ok(Box::new(FakeModel::new(batch, dim, delay_us)) as Box<dyn ServeModel>))
         }
-        "pjrt" => {
-            let dir = artifacts_dir(args);
-            let name = args
-                .get("artifact")
-                .ok_or_else(|| anyhow::anyhow!("--artifact required with --backend pjrt"))?
-                .to_string();
-            Arc::new(move || Ok(Box::new(EngineModel::open(&dir, &name)?) as Box<dyn ServeModel>))
+        engine_backend => {
+            let chosen = Backend::parse(engine_backend)?;
+            let (dir, name) = match args.get("artifact") {
+                Some(n) => (artifacts_dir(args), n.to_string()),
+                None if chosen == Backend::Native => {
+                    // Zero-setup demo: serve the toy fixture's CWY cell.
+                    let tmp = cwy::runtime::fixture::TempDir::with_toy_artifacts("serve-demo")?;
+                    let dir = tmp.path().display().to_string();
+                    _fixture_guard = Some(tmp);
+                    println!("# no --artifact: serving toy_cell_step from fixture {dir}");
+                    (dir, "toy_cell_step".to_string())
+                }
+                None => bail!("--artifact required with --backend {engine_backend}"),
+            };
+            // Probe the manifest (no compile): the artifact's fused batch
+            // is the ceiling (the worker chunks at it regardless) and the
+            // default when no --max-batch is given; an explicit smaller
+            // --max-batch still limits coalescing.
+            let (serve_spec, art_spec) = probe_serve_spec(&dir, &name)?;
+            let fused = serve_spec.batch;
+            max_batch = match args.get("max-batch") {
+                None => fused,
+                Some(_) if max_batch > fused => {
+                    println!(
+                        "# --max-batch {max_batch} exceeds the artifact's fused batch; \
+                         using {fused}"
+                    );
+                    fused
+                }
+                Some(_) => max_batch,
+            };
+            // The native cell_* ops serve frozen parameters (V' = V), so a
+            // nonzero --lr would be a silent no-op — say so up front.
+            if lr != 0.0
+                && art_spec.meta_str("op").is_some_and(|op| op.starts_with("cell_"))
+            {
+                println!(
+                    "# note: --lr {lr} has no effect on native op '{}': \
+                     recurrent cells serve frozen parameters (DESIGN.md §2.6)",
+                    art_spec.meta_str("op").unwrap_or("?")
+                );
+            }
+            Arc::new(move || {
+                Ok(Box::new(EngineModel::open_with(&dir, &name, chosen)?) as Box<dyn ServeModel>)
+            })
         }
-        other => bail!("unknown backend '{other}' (expected fake|pjrt)"),
     };
 
     let cfg = ServeCfg {

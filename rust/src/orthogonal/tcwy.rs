@@ -58,6 +58,43 @@ mod tests {
     }
 
     #[test]
+    fn frame_gram_is_identity() {
+        // Stiefel membership stated explicitly: Omega^T Omega = I_k for
+        // the truncated k-column frame (not just the defect scalar).
+        forall(
+            16,
+            |rng| {
+                let m = 1 + rng.below(6) as usize;
+                let n = m + 1 + rng.below(12) as usize;
+                Matrix::random_normal(rng, m, n, 1.0)
+            },
+            |v| {
+                let omega = matrix(v);
+                let gram = omega.t().matmul(&omega);
+                let d = gram.max_abs_diff(&Matrix::eye(v.rows));
+                if d < 1e-3 { Ok(()) } else { Err(format!("|Q^T Q - I| = {d}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn equals_full_cwy_when_square() {
+        // With k = n the `[I; 0]` slab is the full identity and U_1 = U,
+        // so Thm 3's Omega degenerates to Thm 2's full CWY transform.
+        forall(
+            12,
+            |rng| {
+                let n = 2 + rng.below(10) as usize;
+                Matrix::random_normal(rng, n, n, 1.0)
+            },
+            |v| {
+                let d = matrix(v).max_abs_diff(&crate::orthogonal::cwy::matrix(v));
+                if d < 5e-4 { Ok(()) } else { Err(format!("tcwy vs cwy diff {d}")) }
+            },
+        );
+    }
+
+    #[test]
     fn equals_truncated_cwy_product() {
         // Thm 3: Omega equals the first M columns of the full reflection
         // product — verified against the explicit sequential product.

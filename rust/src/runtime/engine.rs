@@ -1,5 +1,17 @@
-//! PJRT execution engine: load HLO text artifacts, compile once, execute
-//! from the rust hot path.  Adapted from /opt/xla-example/load_hlo.
+//! Execution engine: load manifest artifacts, compile once, execute from
+//! the rust hot path — on either side of the backend seam (DESIGN.md §2.6).
+//!
+//! Two backends implement the same artifact contract behind [`Compiled`]:
+//!
+//! * **PJRT** — parse the HLO text and hand it to the `xla` crate
+//!   (adapted from /opt/xla-example/load_hlo).  Requires the real PJRT
+//!   bindings; with the offline stub, client construction errors.
+//! * **Native** — interpret the artifact's registered `meta.op` directly
+//!   in Rust ([`crate::runtime::native`]), built on `linalg`/`orthogonal`.
+//!
+//! [`Backend::Auto`] (the default) prefers PJRT and falls back to native
+//! when the bindings are unavailable, so the trainer, serve workers, and
+//! CLI run end-to-end in every environment.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -8,12 +20,43 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::native::NativeExec;
 use crate::runtime::tensor::HostTensor;
+
+/// Which execution backend an [`Engine`] opens (DESIGN.md §2.6).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Prefer PJRT, fall back to native when the bindings are the stub.
+    #[default]
+    Auto,
+    /// Interpret registered native ops in Rust; never touches PJRT.
+    Native,
+    /// Require the real PJRT bindings; error when they are unavailable.
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse a CLI flag value (`auto|native|pjrt`).
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => bail!("unknown backend '{other}' (expected auto|native|pjrt)"),
+        }
+    }
+}
+
+/// Backend-specific executable for one artifact.
+enum Exec {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Native(NativeExec),
+}
 
 /// A compiled artifact bound to its manifest spec.
 pub struct Compiled {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exec: Exec,
 }
 
 impl Compiled {
@@ -45,13 +88,43 @@ impl Compiled {
                     s.shape
                 );
             }
+            if t.dtype() != s.dtype {
+                bail!(
+                    "{}: input '{}' dtype {:?} != manifest {:?}",
+                    self.spec.name,
+                    s.name,
+                    t.dtype(),
+                    s.dtype
+                );
+            }
         }
+        match &self.exec {
+            Exec::Pjrt(exe) => self.run_pjrt(exe, inputs),
+            Exec::Native(exec) => {
+                let outputs = exec.run(&self.spec, inputs)?;
+                if outputs.len() != self.spec.outputs.len() {
+                    bail!(
+                        "{}: native op yielded {} outputs, manifest says {}",
+                        self.spec.name,
+                        outputs.len(),
+                        self.spec.outputs.len()
+                    );
+                }
+                Ok(outputs)
+            }
+        }
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(|t| t.to_literal())
             .collect::<Result<_>>()?;
-        let bufs = self
-            .exe
+        let bufs = exe
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow!("{}: execute failed: {e}", self.spec.name))?;
         let mut tup = bufs[0][0]
@@ -76,20 +149,49 @@ impl Compiled {
     }
 }
 
-/// Engine: one PJRT CPU client + an executable cache over the manifest.
+/// Resolved backend client: a PJRT device or the in-process interpreter.
+enum Client {
+    Pjrt(xla::PjRtClient),
+    Native,
+}
+
+/// Engine: one backend client + an executable cache over the manifest.
 pub struct Engine {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
+    client: Client,
     cache: RefCell<HashMap<String, Rc<Compiled>>>,
 }
 
 impl Engine {
-    /// Open the artifacts directory (compiles lazily, caches per name).
+    /// Open the artifacts directory with backend auto-selection (PJRT
+    /// when the real bindings are present, native otherwise); compiles
+    /// lazily, caches per name.
     pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Self::open_with(dir, Backend::Auto)
+    }
+
+    /// Open with an explicit backend choice.
+    pub fn open_with(dir: impl AsRef<std::path::Path>, backend: Backend) -> Result<Engine> {
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let client = match backend {
+            Backend::Pjrt => Client::Pjrt(
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?,
+            ),
+            Backend::Native => Client::Native,
+            Backend::Auto => match xla::PjRtClient::cpu() {
+                Ok(c) => Client::Pjrt(c),
+                Err(_) => Client::Native,
+            },
+        };
         Ok(Engine { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The backend this engine resolved to (never [`Backend::Auto`]).
+    pub fn backend(&self) -> Backend {
+        match self.client {
+            Client::Pjrt(_) => Backend::Pjrt,
+            Client::Native => Backend::Native,
+        }
     }
 
     /// Load + compile an artifact (cached).
@@ -98,17 +200,22 @@ impl Engine {
             return Ok(c.clone());
         }
         let spec = self.manifest.get(name)?.clone();
-        let path = self.manifest.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("{name}: parsing HLO text: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("{name}: XLA compile: {e}"))?;
-        let compiled = Rc::new(Compiled { spec, exe });
+        let exec = match &self.client {
+            Client::Pjrt(client) => {
+                let path = self.manifest.dir.join(&spec.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("{name}: parsing HLO text: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("{name}: XLA compile: {e}"))?;
+                Exec::Pjrt(exe)
+            }
+            Client::Native => Exec::Native(NativeExec::compile(&spec)?),
+        };
+        let compiled = Rc::new(Compiled { spec, exec });
         self.cache
             .borrow_mut()
             .insert(name.to_string(), compiled.clone());
@@ -125,7 +232,16 @@ impl Engine {
         dir: impl AsRef<std::path::Path>,
         artifacts: &[&str],
     ) -> Result<(Engine, Vec<Rc<Compiled>>)> {
-        let engine = Engine::open(dir)?;
+        Self::open_worker_with(dir, Backend::Auto, artifacts)
+    }
+
+    /// [`Engine::open_worker`] with an explicit backend choice.
+    pub fn open_worker_with(
+        dir: impl AsRef<std::path::Path>,
+        backend: Backend,
+        artifacts: &[&str],
+    ) -> Result<(Engine, Vec<Rc<Compiled>>)> {
+        let engine = Engine::open_with(dir, backend)?;
         let compiled = artifacts
             .iter()
             .map(|name| engine.load(name))
@@ -142,6 +258,9 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.client {
+            Client::Pjrt(c) => c.platform_name(),
+            Client::Native => "native-cpu".to_string(),
+        }
     }
 }

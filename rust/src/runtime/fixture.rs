@@ -1,0 +1,397 @@
+//! Toy artifact fixture for the native backend (DESIGN.md §2.6).
+//!
+//! `make artifacts` needs the Python layer; the native backend does not.
+//! This module writes a complete, self-contained artifacts directory —
+//! `manifest.json` plus `state_bin` dumps in the §2.3 format — whose
+//! entries name registered native ops, so the full execution path
+//! (`Engine::open` → `load` → `Compiled::run`, trainer, data-parallel,
+//! serve workers) runs for real with no Python and no PJRT bindings.
+//!
+//! Used by `rust/tests/integration_{runtime,trainer,serve}.rs`,
+//! `examples/serve_bench`, and `cwy serve --backend native` when no
+//! artifacts directory exists.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Matrix;
+use crate::runtime::tensor::HostTensor;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Reflection count of the forward/rollout artifacts.
+pub const FWD_L: usize = 4;
+/// Hidden width of the forward/rollout artifacts.
+pub const FWD_N: usize = 12;
+/// Rollout batch rows.
+pub const FWD_B: usize = 2;
+/// T-CWY frame: St(TCWY_N, TCWY_M).
+pub const TCWY_M: usize = 3;
+pub const TCWY_N: usize = 10;
+
+/// Recurrent cell: L reflections over width N, fused batch B.
+/// L != B on purpose — the serve per-row heuristic (DESIGN.md §6.2)
+/// classifies V as worker-resident only because its leading dim differs
+/// from the fused batch.
+pub const CELL_L: usize = 6;
+pub const CELL_N: usize = 12;
+pub const CELL_B: usize = 4;
+
+/// Linear-regression family: y = x W, W in (IN, OUT), batches of B rows.
+pub const LINREG_IN: usize = 6;
+pub const LINREG_OUT: usize = 3;
+pub const LINREG_B: usize = 8;
+
+/// The cell's recorded reflection parameters (state_bin tensor 0).
+pub fn toy_cell_v0() -> Matrix {
+    Matrix::random_normal(&mut Pcg32::seeded(2024), CELL_L, CELL_N, 1.0)
+}
+
+/// The cell's recorded initial hidden row: every fused row starts from
+/// this vector, and fresh serve sessions inherit row 0 (§6.2).
+/// Deliberately non-zero so tests can tell "state_bin was read" from
+/// "fell back to zeros".
+pub fn toy_cell_h0_row() -> Vec<f32> {
+    vec![0.25; CELL_N]
+}
+
+/// Ground-truth teacher weights the linreg data is generated from.
+pub fn linreg_teacher() -> Matrix {
+    Matrix::random_normal(&mut Pcg32::seeded(77), LINREG_IN, LINREG_OUT, 1.0)
+}
+
+/// Noise-free data provider for the linreg family: fresh `x`, `y = x W*`
+/// per call.  SGD from the recorded zero init drives the loss to ~0.
+pub fn linreg_provider(seed: u64) -> impl FnMut() -> Vec<HostTensor> {
+    let teacher = linreg_teacher();
+    let mut rng = Pcg32::seeded(seed);
+    move || {
+        let x = Matrix::random_normal(&mut rng, LINREG_B, LINREG_IN, 1.0);
+        let y = x.matmul(&teacher);
+        vec![
+            HostTensor::f32(vec![LINREG_B, LINREG_IN], x.data),
+            HostTensor::f32(vec![LINREG_B, LINREG_OUT], y.data),
+        ]
+    }
+}
+
+/// Serialize tensors in the `state_bin` format (§2.3): per tensor,
+/// little-endian `u64 count | f32 data...`, in state order.
+pub fn state_bin_bytes(tensors: &[HostTensor]) -> Result<Vec<u8>> {
+    let mut bytes = Vec::new();
+    for t in tensors {
+        let data = t.as_f32().context("state_bin tensors are f32")?;
+        bytes.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        for &v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    Ok(bytes)
+}
+
+fn tensor_json(name: &str, shape: &[usize], kind: Option<&str>) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert(
+        "shape".to_string(),
+        Json::Arr(shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    m.insert("dtype".to_string(), Json::Str("float32".to_string()));
+    if let Some(k) = kind {
+        m.insert("kind".to_string(), Json::Str(k.to_string()));
+    }
+    Json::Obj(m)
+}
+
+struct Art {
+    name: &'static str,
+    kind: &'static str,
+    inputs: Vec<Json>,
+    outputs: Vec<Json>,
+    state_bin: Option<&'static str>,
+    meta: Vec<(&'static str, String)>,
+}
+
+impl Art {
+    fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.to_string()));
+        m.insert("file".to_string(), Json::Str(format!("{}.hlo.txt", self.name)));
+        m.insert("kind".to_string(), Json::Str(self.kind.to_string()));
+        m.insert("inputs".to_string(), Json::Arr(self.inputs.clone()));
+        m.insert("outputs".to_string(), Json::Arr(self.outputs.clone()));
+        if let Some(sb) = self.state_bin {
+            m.insert("state_bin".to_string(), Json::Str(sb.to_string()));
+        }
+        let mut meta = std::collections::BTreeMap::new();
+        for (k, v) in &self.meta {
+            meta.insert(k.to_string(), Json::Str(v.clone()));
+        }
+        m.insert("meta".to_string(), Json::Obj(meta));
+        Json::Obj(m)
+    }
+}
+
+/// Write the toy artifacts directory: manifest + state bins.
+///
+/// Artifact inventory (all executable natively except `hlo_only`, which
+/// exists to exercise the "needs PJRT" error path):
+///
+/// * `param_cwy` / `param_hr` — V → Q, the Thm 2 pair;
+/// * `stiefel_tcwy` — V → Ω on St(N, M);
+/// * `rollout_cwy` / `rollout_hr` — (V, H) → H Q, the Fig. 2 pair;
+/// * `toy_cell_step` — recurrent CWY cell with recorded initial state;
+/// * `linreg_{step,grad,apply,eval}` — fused SGD family for the trainer
+///   and data-parallel suites, zero-initialized weights;
+/// * `hlo_only` — no `meta.op`.
+pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+
+    let arts = vec![
+        Art {
+            name: "param_cwy",
+            kind: "micro",
+            inputs: vec![tensor_json("v", &[FWD_L, FWD_N], None)],
+            outputs: vec![tensor_json("q", &[FWD_N, FWD_N], None)],
+            state_bin: None,
+            meta: vec![("op", "cwy".into()), ("method", "cwy".into())],
+        },
+        Art {
+            name: "param_hr",
+            kind: "micro",
+            inputs: vec![tensor_json("v", &[FWD_L, FWD_N], None)],
+            outputs: vec![tensor_json("q", &[FWD_N, FWD_N], None)],
+            state_bin: None,
+            meta: vec![("op", "hr".into()), ("method", "hr".into())],
+        },
+        Art {
+            name: "stiefel_tcwy",
+            kind: "micro",
+            inputs: vec![tensor_json("v", &[TCWY_M, TCWY_N], None)],
+            outputs: vec![tensor_json("omega", &[TCWY_N, TCWY_M], None)],
+            state_bin: None,
+            meta: vec![("op", "tcwy".into()), ("method", "tcwy".into())],
+        },
+        Art {
+            name: "rollout_cwy",
+            kind: "micro",
+            inputs: vec![
+                tensor_json("v", &[FWD_L, FWD_N], None),
+                tensor_json("h", &[FWD_B, FWD_N], None),
+            ],
+            outputs: vec![tensor_json("out", &[FWD_B, FWD_N], None)],
+            state_bin: None,
+            meta: vec![("op", "rollout_cwy".into())],
+        },
+        Art {
+            name: "rollout_hr",
+            kind: "micro",
+            inputs: vec![
+                tensor_json("v", &[FWD_L, FWD_N], None),
+                tensor_json("h", &[FWD_B, FWD_N], None),
+            ],
+            outputs: vec![tensor_json("out", &[FWD_B, FWD_N], None)],
+            state_bin: None,
+            meta: vec![("op", "rollout_hr".into())],
+        },
+        Art {
+            name: "toy_cell_step",
+            kind: "step",
+            inputs: vec![
+                tensor_json("v", &[CELL_L, CELL_N], Some("state")),
+                tensor_json("h", &[CELL_B, CELL_N], Some("state")),
+                tensor_json("x", &[CELL_B, CELL_N], None),
+                tensor_json("lr", &[], Some("hyper")),
+            ],
+            outputs: vec![
+                tensor_json("v", &[CELL_L, CELL_N], None),
+                tensor_json("h", &[CELL_B, CELL_N], None),
+                tensor_json("y", &[CELL_B, CELL_N], None),
+            ],
+            state_bin: Some("toy_cell.state.bin"),
+            meta: vec![
+                ("op", "cell_cwy".into()),
+                ("task", "toy_cell".into()),
+                ("batch", CELL_B.to_string()),
+            ],
+        },
+        Art {
+            name: "linreg_step",
+            kind: "step",
+            inputs: vec![
+                tensor_json("w", &[LINREG_IN, LINREG_OUT], Some("state")),
+                tensor_json("x", &[LINREG_B, LINREG_IN], None),
+                tensor_json("y", &[LINREG_B, LINREG_OUT], None),
+                tensor_json("lr", &[], Some("hyper")),
+            ],
+            outputs: vec![
+                tensor_json("w", &[LINREG_IN, LINREG_OUT], None),
+                tensor_json("loss", &[], None),
+            ],
+            state_bin: Some("linreg.state.bin"),
+            meta: vec![
+                ("op", "linreg_step".into()),
+                ("task", "linreg".into()),
+                ("batch", LINREG_B.to_string()),
+                ("n_params", "1".into()),
+            ],
+        },
+        Art {
+            name: "linreg_grad",
+            kind: "grad",
+            inputs: vec![
+                tensor_json("w", &[LINREG_IN, LINREG_OUT], Some("state")),
+                tensor_json("x", &[LINREG_B, LINREG_IN], None),
+                tensor_json("y", &[LINREG_B, LINREG_OUT], None),
+            ],
+            outputs: vec![
+                tensor_json("g", &[LINREG_IN, LINREG_OUT], None),
+                tensor_json("loss", &[], None),
+            ],
+            state_bin: None,
+            meta: vec![("op", "linreg_grad".into()), ("n_params", "1".into())],
+        },
+        Art {
+            name: "linreg_apply",
+            kind: "apply",
+            inputs: vec![
+                tensor_json("w", &[LINREG_IN, LINREG_OUT], Some("state")),
+                tensor_json("g", &[LINREG_IN, LINREG_OUT], None),
+                tensor_json("lr", &[], Some("hyper")),
+            ],
+            outputs: vec![tensor_json("w", &[LINREG_IN, LINREG_OUT], None)],
+            state_bin: None,
+            meta: vec![("op", "linreg_apply".into())],
+        },
+        Art {
+            name: "linreg_eval",
+            kind: "eval",
+            inputs: vec![
+                tensor_json("w", &[LINREG_IN, LINREG_OUT], None),
+                tensor_json("x", &[LINREG_B, LINREG_IN], None),
+                tensor_json("y", &[LINREG_B, LINREG_OUT], None),
+            ],
+            outputs: vec![tensor_json("loss", &[], None)],
+            state_bin: None,
+            meta: vec![("op", "linreg_eval".into())],
+        },
+        Art {
+            name: "hlo_only",
+            kind: "micro",
+            inputs: vec![tensor_json("x", &[2, 2], None)],
+            outputs: vec![tensor_json("y", &[2, 2], None)],
+            state_bin: None,
+            meta: vec![],
+        },
+    ];
+
+    let manifest = {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "artifacts".to_string(),
+            Json::Arr(arts.iter().map(|a| a.json()).collect()),
+        );
+        Json::Obj(m)
+    };
+    fs::write(dir.join("manifest.json"), manifest.dump())
+        .context("writing manifest.json")?;
+
+    // toy_cell_step state: V0 then h0 (every row = the recorded row).
+    let v0 = toy_cell_v0();
+    let h0: Vec<f32> = (0..CELL_B).flat_map(|_| toy_cell_h0_row()).collect();
+    let cell_state = [
+        HostTensor::f32(vec![CELL_L, CELL_N], v0.data),
+        HostTensor::f32(vec![CELL_B, CELL_N], h0),
+    ];
+    fs::write(dir.join("toy_cell.state.bin"), state_bin_bytes(&cell_state)?)
+        .context("writing toy_cell.state.bin")?;
+
+    // linreg state: W0 = 0 (the teacher is deliberately not the init).
+    let w0 = [HostTensor::f32(
+        vec![LINREG_IN, LINREG_OUT],
+        vec![0.0; LINREG_IN * LINREG_OUT],
+    )];
+    fs::write(dir.join("linreg.state.bin"), state_bin_bytes(&w0)?)
+        .context("writing linreg.state.bin")?;
+
+    Ok(())
+}
+
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Self-cleaning unique temp directory (no tempfile crate vendored).
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(tag: &str) -> Result<TempDir> {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!(
+            "cwy-{tag}-{}-{}-{nanos}",
+            std::process::id(),
+            TEMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        fs::create_dir_all(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(TempDir { path })
+    }
+
+    /// Create a temp directory already populated by [`write_toy_artifacts`].
+    pub fn with_toy_artifacts(tag: &str) -> Result<TempDir> {
+        let dir = TempDir::new(tag)?;
+        write_toy_artifacts(dir.path())?;
+        Ok(dir)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn fixture_round_trips_through_manifest_loader() {
+        let dir = TempDir::with_toy_artifacts("fixture-test").unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert!(m.artifacts.len() >= 10);
+        let cell = m.get("toy_cell_step").unwrap();
+        assert_eq!(cell.n_state(), 2);
+        assert_eq!(cell.n_data(), 1);
+        assert!(cell.has_lr());
+        let state = m.load_state(cell).unwrap();
+        assert_eq!(state.len(), 2);
+        assert_eq!(state[0].shape, vec![CELL_L, CELL_N]);
+        assert_eq!(state[1].shape, vec![CELL_B, CELL_N]);
+        assert_eq!(state[1].as_f32().unwrap()[0], 0.25);
+        let lin = m.get("linreg_step").unwrap();
+        assert_eq!(m.load_state(lin).unwrap()[0].len(), LINREG_IN * LINREG_OUT);
+    }
+
+    #[test]
+    fn temp_dirs_are_unique_and_cleaned() {
+        let a = TempDir::new("uniq").unwrap();
+        let b = TempDir::new("uniq").unwrap();
+        assert_ne!(a.path(), b.path());
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists());
+        assert!(b.path().exists());
+    }
+}

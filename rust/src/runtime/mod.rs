@@ -1,14 +1,20 @@
-//! Runtime layer: the `xla` crate (PJRT CPU) wrapped behind the artifact
-//! manifest.  `Engine::open` -> `load(name)` -> `Compiled::run(inputs)`.
+//! Runtime layer: manifest artifacts behind the backend seam.
+//! `Engine::open` -> `load(name)` -> `Compiled::run(inputs)`.
 //!
-//! Python never appears here: artifacts are HLO text produced once by
-//! `make artifacts`, and every training/bench step is a single PJRT
-//! execution of a fused loss+grad+update module.
+//! Python never appears here: artifacts are either HLO text produced
+//! once by `make artifacts` and executed through PJRT, or registered
+//! native ops ([`native`]) interpreted directly in Rust — the [`Backend`]
+//! selector (DESIGN.md §2.6) picks per engine, defaulting to PJRT with a
+//! native fallback.  Either way a training/bench step is one fused
+//! execution of a loss+grad+update module.
 
 pub mod engine;
+pub mod fixture;
 pub mod manifest;
+pub mod native;
 pub mod tensor;
 
-pub use engine::{Compiled, Engine};
+pub use engine::{Backend, Compiled, Engine};
 pub use manifest::{ArtifactSpec, Manifest, Role, TensorSpec};
+pub use native::{NativeExec, NativeOp};
 pub use tensor::{Data, Dtype, HostTensor};

@@ -1,0 +1,475 @@
+//! Native CPU execution backend (DESIGN.md §2.6, §3.1).
+//!
+//! The PJRT path executes HLO text through the `xla` crate; when those
+//! bindings are the offline stub, nothing downstream of `Engine::open`
+//! used to run.  This module closes that gap: the paper's point is that
+//! the CWY/T-CWY parametrizations reduce to a handful of fused matmuls,
+//! which is exactly the computation `linalg` + `orthogonal` already
+//! implement — cheap enough to evaluate directly on the CPU without an
+//! external compiler stack.
+//!
+//! A native artifact is a manifest entry whose `meta.op` names one of
+//! the registered ops below.  `NativeExec::compile` resolves the op and
+//! validates the manifest signature against the op's contract (the
+//! native analogue of an XLA compile error); `run` then executes the
+//! artifact contract — shapes, calling convention, `state_bin` initial
+//! state — identically to the PJRT path, so `Trainer`, `DataParallel`,
+//! and the serve worker pool run unchanged on either backend.
+//!
+//! Registered ops:
+//!
+//! | `meta.op`      | kind  | signature (roles)                              | computation |
+//! |----------------|-------|------------------------------------------------|-------------|
+//! | `cwy`          | micro | V `[l,n]` → Q `[n,n]`                          | Thm 2: `I - U S^-1 U^T` |
+//! | `hr`           | micro | V `[l,n]` → Q `[n,n]`                          | sequential Householder product |
+//! | `tcwy`         | micro | V `[m,n]` → Ω `[n,m]`                          | Thm 3 Stiefel frame |
+//! | `rollout_cwy`  | micro | V `[l,n]`, H `[b,n]` → `[b,n]`                 | fused `H @ Q` |
+//! | `rollout_hr`   | micro | V `[l,n]`, H `[b,n]` → `[b,n]`                 | sequential reflection chain |
+//! | `cell_cwy`     | step  | V `[l,n]` state, h `[b,n]` state, x `[b,n]` data, lr hyper → V', h', y | `h' = h Q(V) + x`, `y = h'` |
+//! | `cell_hr`      | step  | same as `cell_cwy`                             | same recurrence, HR chain |
+//! | `cell_tcwy`    | step  | V `[m,n]` state, h `[b,m]` state, x `[b,n]` data, lr hyper → V', h', y | `h' = h + x Ω(V)`, `y = h'` |
+//! | `linreg_step`  | step  | W `[k,m]` state, x `[b,k]`, y `[b,m]` data, lr hyper → W', loss | fused SGD: `W - lr · ∇` |
+//! | `linreg_grad`  | grad  | W, x, y → ∇ `[k,m]`, loss                      | per-shard gradient |
+//! | `linreg_apply` | apply | W state, ∇ data, lr hyper → W'                 | all-reduced update |
+//! | `linreg_eval`  | eval  | W, x, y → loss                                 | pure forward |
+//!
+//! The recurrent cells treat V as frozen parameters (`V' = V`): serving
+//! runs step artifacts with `lr = 0` by convention (DESIGN.md §6.2), and
+//! the SGD path proper is exercised by the `linreg_*` family, whose
+//! gradient is exact.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::linalg::Matrix;
+use crate::orthogonal::{cwy, householder, tcwy};
+use crate::runtime::manifest::{ArtifactSpec, Role, TensorSpec};
+use crate::runtime::tensor::{Dtype, HostTensor};
+
+/// Manifest meta key naming the registered native op.
+pub const OP_META_KEY: &str = "op";
+
+/// Which orthogonal construction a recurrent cell uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellKind {
+    Cwy,
+    Hr,
+    Tcwy,
+}
+
+/// A registered native computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativeOp {
+    CwyMatrix,
+    HrMatrix,
+    TcwyMatrix,
+    RolloutCwy,
+    RolloutHr,
+    Cell(CellKind),
+    LinregStep,
+    LinregGrad,
+    LinregApply,
+    LinregEval,
+}
+
+impl NativeOp {
+    pub fn parse(s: &str) -> Option<NativeOp> {
+        Some(match s {
+            "cwy" => NativeOp::CwyMatrix,
+            "hr" => NativeOp::HrMatrix,
+            "tcwy" => NativeOp::TcwyMatrix,
+            "rollout_cwy" => NativeOp::RolloutCwy,
+            "rollout_hr" => NativeOp::RolloutHr,
+            "cell_cwy" => NativeOp::Cell(CellKind::Cwy),
+            "cell_hr" => NativeOp::Cell(CellKind::Hr),
+            "cell_tcwy" => NativeOp::Cell(CellKind::Tcwy),
+            "linreg_step" => NativeOp::LinregStep,
+            "linreg_grad" => NativeOp::LinregGrad,
+            "linreg_apply" => NativeOp::LinregApply,
+            "linreg_eval" => NativeOp::LinregEval,
+            _ => return None,
+        })
+    }
+}
+
+/// A "compiled" native artifact: the resolved op, signature-checked
+/// against the manifest entry.
+pub struct NativeExec {
+    op: NativeOp,
+}
+
+impl NativeExec {
+    /// Resolve `meta.op` and validate the artifact signature against the
+    /// op's contract.  Errors here mirror XLA compile-time failures.
+    pub fn compile(spec: &ArtifactSpec) -> Result<NativeExec> {
+        let op_str = spec.meta_str(OP_META_KEY).ok_or_else(|| {
+            anyhow!(
+                "{}: no '{}' meta key — the native backend executes registered ops, \
+                 not HLO text; this artifact needs the PJRT backend (DESIGN.md §2.6)",
+                spec.name,
+                OP_META_KEY
+            )
+        })?;
+        let op = NativeOp::parse(op_str).ok_or_else(|| {
+            anyhow!("{}: unknown native op '{op_str}'", spec.name)
+        })?;
+        validate(spec, op).map_err(|e| anyhow!("{}: bad native signature: {e:#}", spec.name))?;
+        Ok(NativeExec { op })
+    }
+
+    pub fn op(&self) -> NativeOp {
+        self.op
+    }
+
+    /// Execute one artifact call.  `inputs` are already checked against
+    /// the manifest shapes/dtypes by `Compiled::run_refs`.
+    pub fn run(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        match self.op {
+            NativeOp::CwyMatrix => {
+                let v = mat(inputs[0])?;
+                Ok(vec![tensor(cwy::matrix(&v))])
+            }
+            NativeOp::HrMatrix => {
+                let v = mat(inputs[0])?;
+                Ok(vec![tensor(householder::matrix(&v))])
+            }
+            NativeOp::TcwyMatrix => {
+                let v = mat(inputs[0])?;
+                Ok(vec![tensor(tcwy::matrix(&v))])
+            }
+            NativeOp::RolloutCwy => {
+                let v = mat(inputs[0])?;
+                let h = mat(inputs[1])?;
+                Ok(vec![tensor(cwy::CwyOperator::new(&v).apply(&h))])
+            }
+            NativeOp::RolloutHr => {
+                let v = mat(inputs[0])?;
+                let mut h = mat(inputs[1])?;
+                householder::apply_chain(&v, &mut h);
+                Ok(vec![tensor(h)])
+            }
+            NativeOp::Cell(kind) => {
+                let v = mat(inputs[0])?;
+                let h = mat(inputs[1])?;
+                let x = mat(inputs[2])?;
+                let h_next = match kind {
+                    CellKind::Cwy => cwy::CwyOperator::new(&v).apply(&h).add(&x),
+                    CellKind::Hr => {
+                        let mut rotated = h;
+                        householder::apply_chain(&v, &mut rotated);
+                        rotated.add(&x)
+                    }
+                    CellKind::Tcwy => h.add(&x.matmul(&tcwy::matrix(&v))),
+                };
+                // V is frozen (see module docs); state outputs come first,
+                // in state-input order, per the step convention (§2.2).
+                Ok(vec![inputs[0].clone(), tensor(h_next.clone()), tensor(h_next)])
+            }
+            NativeOp::LinregStep => {
+                let w = mat(inputs[0])?;
+                let x = mat(inputs[1])?;
+                let y = mat(inputs[2])?;
+                let lr = inputs[3].scalar()?;
+                let (resid, loss) = linreg_forward(&w, &x, &y);
+                let grad = linreg_gradient(&x, &resid);
+                let w_next = w.sub(&grad.scale(lr));
+                Ok(vec![tensor(w_next), HostTensor::scalar_f32(loss)])
+            }
+            NativeOp::LinregGrad => {
+                let w = mat(inputs[0])?;
+                let x = mat(inputs[1])?;
+                let y = mat(inputs[2])?;
+                let (resid, loss) = linreg_forward(&w, &x, &y);
+                Ok(vec![tensor(linreg_gradient(&x, &resid)), HostTensor::scalar_f32(loss)])
+            }
+            NativeOp::LinregApply => {
+                let w = mat(inputs[0])?;
+                let g = mat(inputs[1])?;
+                let lr = inputs[2].scalar()?;
+                Ok(vec![tensor(w.sub(&g.scale(lr)))])
+            }
+            NativeOp::LinregEval => {
+                let w = mat(inputs[0])?;
+                let x = mat(inputs[1])?;
+                let y = mat(inputs[2])?;
+                let (_, loss) = linreg_forward(&w, &x, &y);
+                Ok(vec![HostTensor::scalar_f32(loss)])
+            }
+        }
+        .map_err(|e: anyhow::Error| anyhow!("{} (native {:?}): {e:#}", spec.name, self.op))
+    }
+}
+
+/// Mean-squared-error forward pass: residual `xW - y` and scalar loss.
+fn linreg_forward(w: &Matrix, x: &Matrix, y: &Matrix) -> (Matrix, f32) {
+    let resid = x.matmul(w).sub(y);
+    let b = x.rows.max(1) as f32;
+    let loss = resid.data.iter().map(|r| r * r).sum::<f32>() / b;
+    (resid, loss)
+}
+
+/// Exact MSE gradient: `(2 / b) x^T (xW - y)`.
+fn linreg_gradient(x: &Matrix, resid: &Matrix) -> Matrix {
+    let b = x.rows.max(1) as f32;
+    x.t().matmul(resid).scale(2.0 / b)
+}
+
+fn mat(t: &HostTensor) -> Result<Matrix> {
+    if t.shape.len() != 2 {
+        bail!("expected a rank-2 tensor, got shape {:?}", t.shape);
+    }
+    Ok(Matrix::from_rows(t.shape[0], t.shape[1], t.as_f32()?.to_vec()))
+}
+
+fn tensor(m: Matrix) -> HostTensor {
+    HostTensor::f32(vec![m.rows, m.cols], m.data)
+}
+
+fn dims2(ts: &TensorSpec) -> Result<(usize, usize)> {
+    if ts.shape.len() != 2 {
+        bail!("port '{}': expected rank 2, got shape {:?}", ts.name, ts.shape);
+    }
+    Ok((ts.shape[0], ts.shape[1]))
+}
+
+fn expect_shape(ts: &TensorSpec, want: &[usize]) -> Result<()> {
+    if ts.shape != want {
+        bail!("port '{}': shape {:?}, op expects {:?}", ts.name, ts.shape, want);
+    }
+    Ok(())
+}
+
+fn expect_arity(spec: &ArtifactSpec, inputs: usize, outputs: usize) -> Result<()> {
+    if spec.inputs.len() != inputs {
+        bail!("op takes {inputs} inputs, manifest lists {}", spec.inputs.len());
+    }
+    if spec.outputs.len() != outputs {
+        bail!("op yields {outputs} outputs, manifest lists {}", spec.outputs.len());
+    }
+    for ts in spec.inputs.iter().chain(&spec.outputs) {
+        if ts.dtype != Dtype::F32 {
+            bail!("port '{}': native ops are f32-only", ts.name);
+        }
+    }
+    Ok(())
+}
+
+fn expect_roles(spec: &ArtifactSpec, roles: &[Role]) -> Result<()> {
+    for (ts, want) in spec.inputs.iter().zip(roles) {
+        if ts.role != *want {
+            bail!("port '{}': role {:?}, op expects {:?}", ts.name, ts.role, want);
+        }
+    }
+    Ok(())
+}
+
+/// Check the manifest signature against the op contract (shapes must be
+/// mutually consistent; the actual numbers are the manifest's choice).
+fn validate(spec: &ArtifactSpec, op: NativeOp) -> Result<()> {
+    match op {
+        NativeOp::CwyMatrix | NativeOp::HrMatrix => {
+            expect_arity(spec, 1, 1)?;
+            let (_, n) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.outputs[0], &[n, n])
+        }
+        NativeOp::TcwyMatrix => {
+            expect_arity(spec, 1, 1)?;
+            let (m, n) = dims2(&spec.inputs[0])?;
+            if m > n {
+                bail!("T-CWY needs M <= N, got V {:?}", spec.inputs[0].shape);
+            }
+            expect_shape(&spec.outputs[0], &[n, m])
+        }
+        NativeOp::RolloutCwy | NativeOp::RolloutHr => {
+            expect_arity(spec, 2, 1)?;
+            let (_, n) = dims2(&spec.inputs[0])?;
+            let (b, n2) = dims2(&spec.inputs[1])?;
+            if n2 != n {
+                bail!("V cols {n} != H cols {n2}");
+            }
+            expect_shape(&spec.outputs[0], &[b, n])
+        }
+        NativeOp::Cell(kind) => {
+            expect_arity(spec, 4, 3)?;
+            expect_roles(spec, &[Role::State, Role::State, Role::Data, Role::Hyper])?;
+            let (l, n) = dims2(&spec.inputs[0])?;
+            let (b, hn) = dims2(&spec.inputs[1])?;
+            let (bx, xn) = dims2(&spec.inputs[2])?;
+            if bx != b {
+                bail!("h rows {b} != x rows {bx}");
+            }
+            let h_cols = match kind {
+                CellKind::Cwy | CellKind::Hr => n,
+                CellKind::Tcwy => {
+                    if l > n {
+                        bail!("T-CWY cell needs M <= N, got V {:?}", spec.inputs[0].shape);
+                    }
+                    l
+                }
+            };
+            if hn != h_cols {
+                bail!("h cols {hn}, cell expects {h_cols}");
+            }
+            if xn != n {
+                bail!("x cols {xn}, cell expects {n}");
+            }
+            expect_shape(&spec.outputs[0], &[l, n])?;
+            expect_shape(&spec.outputs[1], &[b, hn])?;
+            expect_shape(&spec.outputs[2], &[b, hn])
+        }
+        NativeOp::LinregStep => {
+            expect_arity(spec, 4, 2)?;
+            expect_roles(spec, &[Role::State, Role::Data, Role::Data, Role::Hyper])?;
+            validate_linreg_core(spec)?;
+            let (k, m) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.outputs[0], &[k, m])?;
+            expect_shape(&spec.outputs[1], &[])
+        }
+        NativeOp::LinregGrad => {
+            expect_arity(spec, 3, 2)?;
+            expect_roles(spec, &[Role::State, Role::Data, Role::Data])?;
+            validate_linreg_core(spec)?;
+            let (k, m) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.outputs[0], &[k, m])?;
+            expect_shape(&spec.outputs[1], &[])
+        }
+        NativeOp::LinregApply => {
+            expect_arity(spec, 3, 1)?;
+            expect_roles(spec, &[Role::State, Role::Data, Role::Hyper])?;
+            let (k, m) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.inputs[1], &[k, m])?;
+            expect_shape(&spec.inputs[2], &[])?;
+            expect_shape(&spec.outputs[0], &[k, m])
+        }
+        NativeOp::LinregEval => {
+            expect_arity(spec, 3, 1)?;
+            // Eval artifacts are pure functions of (params..., data...)
+            // (§2.2): every input is data, nothing persists.
+            expect_roles(spec, &[Role::Data, Role::Data, Role::Data])?;
+            validate_linreg_core(spec)?;
+            expect_shape(&spec.outputs[0], &[])
+        }
+    }
+}
+
+/// Shared (W, x, y) consistency for the linreg family.
+fn validate_linreg_core(spec: &ArtifactSpec) -> Result<()> {
+    let (k, m) = dims2(&spec.inputs[0])?;
+    let (b, xk) = dims2(&spec.inputs[1])?;
+    let (by, ym) = dims2(&spec.inputs[2])?;
+    if xk != k {
+        bail!("x cols {xk} != W rows {k}");
+    }
+    if by != b {
+        bail!("x rows {b} != y rows {by}");
+    }
+    if ym != m {
+        bail!("y cols {ym} != W cols {m}");
+    }
+    if spec.inputs.len() == 4 {
+        expect_shape(&spec.inputs[3], &[])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Pcg32;
+    use std::path::PathBuf;
+
+    fn manifest(extra: &str) -> Manifest {
+        Manifest::parse_str(
+            &format!(r#"{{"artifacts":[{extra}]}}"#),
+            PathBuf::from("/tmp"),
+        )
+        .unwrap()
+    }
+
+    const CWY_ART: &str = r#"{"name":"q","file":"q.hlo","kind":"micro",
+        "inputs":[{"name":"v","shape":[3,8],"dtype":"float32"}],
+        "outputs":[{"name":"q","shape":[8,8],"dtype":"float32"}],
+        "meta":{"op":"cwy"}}"#;
+
+    #[test]
+    fn compile_resolves_and_validates() {
+        let m = manifest(CWY_ART);
+        let exec = NativeExec::compile(m.get("q").unwrap()).unwrap();
+        assert_eq!(exec.op(), NativeOp::CwyMatrix);
+    }
+
+    #[test]
+    fn compile_rejects_missing_and_unknown_ops() {
+        let m = manifest(
+            r#"{"name":"a","file":"a.hlo","kind":"micro",
+               "inputs":[],"outputs":[],"meta":{}},
+              {"name":"b","file":"b.hlo","kind":"micro",
+               "inputs":[],"outputs":[],"meta":{"op":"warp_drive"}}"#,
+        );
+        let err = NativeExec::compile(m.get("a").unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("no 'op' meta"), "{err:#}");
+        let err = NativeExec::compile(m.get("b").unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown native op"), "{err:#}");
+    }
+
+    #[test]
+    fn compile_rejects_inconsistent_shapes() {
+        let m = manifest(
+            r#"{"name":"q","file":"q.hlo","kind":"micro",
+               "inputs":[{"name":"v","shape":[3,8],"dtype":"float32"}],
+               "outputs":[{"name":"q","shape":[7,7],"dtype":"float32"}],
+               "meta":{"op":"cwy"}}"#,
+        );
+        assert!(NativeExec::compile(m.get("q").unwrap()).is_err());
+    }
+
+    #[test]
+    fn cwy_op_matches_native_construction() {
+        let m = manifest(CWY_ART);
+        let spec = m.get("q").unwrap();
+        let exec = NativeExec::compile(spec).unwrap();
+        let mut rng = Pcg32::seeded(11);
+        let v = Matrix::random_normal(&mut rng, 3, 8, 1.0);
+        let vt = tensor(v.clone());
+        let out = exec.run(spec, &[&vt]).unwrap();
+        assert_eq!(out[0].shape, vec![8, 8]);
+        assert_close(out[0].as_f32().unwrap(), &cwy::matrix(&v).data, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn linreg_step_descends() {
+        let m = manifest(
+            r#"{"name":"s","file":"s.hlo","kind":"step",
+               "inputs":[{"name":"w","shape":[4,2],"dtype":"float32","kind":"state"},
+                         {"name":"x","shape":[8,4],"dtype":"float32"},
+                         {"name":"y","shape":[8,2],"dtype":"float32"},
+                         {"name":"lr","shape":[],"dtype":"float32","kind":"hyper"}],
+               "outputs":[{"name":"w","shape":[4,2],"dtype":"float32"},
+                          {"name":"loss","shape":[],"dtype":"float32"}],
+               "meta":{"op":"linreg_step"}}"#,
+        );
+        let spec = m.get("s").unwrap();
+        let exec = NativeExec::compile(spec).unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let w_true = Matrix::random_normal(&mut rng, 4, 2, 1.0);
+        let x = Matrix::random_normal(&mut rng, 8, 4, 1.0);
+        let y = x.matmul(&w_true);
+        let mut w = HostTensor::f32(vec![4, 2], vec![0.0; 8]);
+        let (xt, yt) = (tensor(x), tensor(y));
+        let lr = HostTensor::scalar_f32(0.05);
+        let mut losses = Vec::new();
+        for _ in 0..60 {
+            let out = exec.run(spec, &[&w, &xt, &yt, &lr]).unwrap();
+            losses.push(out[1].scalar().unwrap());
+            w = out[0].clone();
+        }
+        assert!(losses[0] > 0.1, "first loss {} too small to mean anything", losses[0]);
+        assert!(
+            *losses.last().unwrap() < losses[0] * 0.01,
+            "no descent: {} -> {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+}

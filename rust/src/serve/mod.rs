@@ -33,4 +33,6 @@ pub use protocol::{ErrCode, InferRequest, Request, Response};
 pub use server::{serve, ServeCfg, Server};
 pub use session::{SessionCfg, SessionStore};
 pub use stats::{Clock, ServeStats, Snapshot};
-pub use worker::{EngineModel, FakeModel, ModelFactory, ServeModel, ServeSpec, WorkerPool};
+pub use worker::{
+    probe_serve_spec, EngineModel, FakeModel, ModelFactory, ServeModel, ServeSpec, WorkerPool,
+};

@@ -13,8 +13,8 @@ use std::thread::{self, JoinHandle};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::engine::{Compiled, Engine};
-use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::engine::{Backend, Compiled, Engine};
+use crate::runtime::manifest::{ArtifactSpec, Manifest, Role};
 use crate::runtime::tensor::{Dtype, HostTensor};
 use crate::serve::batcher::{Batcher, Pending};
 use crate::serve::protocol::{ErrCode, InferRequest, Response};
@@ -149,6 +149,19 @@ impl ServeSpec {
     }
 }
 
+/// Derive the served signature (plus the raw manifest entry) straight
+/// from `manifest.json` — no engine open, no artifact compile.  The CLI
+/// and benches use this to align batcher configuration with the
+/// artifact's fused batch before the worker pool builds real models.
+pub fn probe_serve_spec(
+    artifacts_dir: &str,
+    artifact: &str,
+) -> Result<(ServeSpec, ArtifactSpec)> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let spec = manifest.get(artifact)?.clone();
+    Ok((ServeSpec::from_artifact(&spec)?, spec))
+}
+
 /// Check a request against the served signature before it joins a fused
 /// batch: one tensor per data port, row shapes and dtypes matching.
 pub fn validate_request(spec: &ServeSpec, req: &InferRequest) -> Result<()> {
@@ -247,9 +260,10 @@ pub trait ServeModel {
 /// Thread-safe constructor for per-worker models.
 pub type ModelFactory = dyn Fn() -> Result<Box<dyn ServeModel>> + Send + Sync;
 
-/// PJRT-backed model: one `Engine` + compiled artifact per worker.
+/// Engine-backed model (PJRT or native — DESIGN.md §2.6): one `Engine` +
+/// compiled artifact per worker.
 pub struct EngineModel {
-    // The engine owns the PJRT client the executable runs on; it must
+    // The engine owns the backend client the executable runs on; it must
     // outlive `artifact`.
     _engine: Engine,
     artifact: Rc<Compiled>,
@@ -261,8 +275,20 @@ pub struct EngineModel {
 }
 
 impl EngineModel {
+    /// Open with backend auto-selection (PJRT when real bindings exist,
+    /// native otherwise).
     pub fn open(artifacts_dir: &str, artifact: &str) -> Result<EngineModel> {
-        let (engine, mut compiled) = Engine::open_worker(artifacts_dir, &[artifact])?;
+        Self::open_with(artifacts_dir, artifact, Backend::Auto)
+    }
+
+    /// Open on an explicit backend (`cwy serve --backend ...`).
+    pub fn open_with(
+        artifacts_dir: &str,
+        artifact: &str,
+        backend: Backend,
+    ) -> Result<EngineModel> {
+        let (engine, mut compiled) =
+            Engine::open_worker_with(artifacts_dir, backend, &[artifact])?;
         let compiled = compiled.pop().expect("one artifact requested");
         let spec = ServeSpec::from_artifact(&compiled.spec)?;
         let state_ports = spec.state_ports();

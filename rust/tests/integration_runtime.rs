@@ -1,141 +1,313 @@
-//! Integration: manifest -> compile -> execute, cross-checked against the
-//! native linalg/orthogonal implementations.  Requires `make artifacts`.
+//! Integration: manifest -> compile -> execute through the backend seam
+//! (DESIGN.md §2.6).
+//!
+//! The `native` module runs unconditionally: it writes the toy artifact
+//! fixture to a temp dir and executes it end-to-end on the native
+//! backend, so `cargo test` exercises the whole `Engine::open` →
+//! `load` → `Compiled::run` path with no Python AOT artifacts and no
+//! PJRT bindings.  The `pjrt` module keeps the original artifact
+//! cross-checks, skipping while the `xla` crate is the offline stub
+//! (DESIGN.md §2.4) — swap in the real bindings and they run again.
 
 use cwy::linalg::Matrix;
 use cwy::orthogonal;
-use cwy::runtime::{Engine, HostTensor};
+use cwy::runtime::fixture::{self, TempDir};
+use cwy::runtime::{Backend, Engine, HostTensor};
+use cwy::util::prop::assert_close;
 use cwy::util::rng::Pcg32;
 
-/// `None` (skip) when the artifacts are not built or the PJRT bindings
-/// are the offline stub — these tests only mean something against the
-/// real runtime (see DESIGN.md §2.4).
-fn engine() -> Option<Engine> {
-    match Engine::open("artifacts") {
-        Ok(e) => Some(e),
-        Err(e) => {
-            eprintln!("skipping: artifacts/PJRT unavailable ({e:#})");
-            None
+mod native {
+    use super::*;
+
+    fn engine() -> (TempDir, Engine) {
+        let dir = TempDir::with_toy_artifacts("runtime").expect("fixture");
+        // Pin the backend: these tests cover the native path and must
+        // keep doing so even after real PJRT bindings are swapped in
+        // (Auto would then resolve to Pjrt).
+        let engine = Engine::open_with(dir.path(), Backend::Native).expect("engine open");
+        (dir, engine)
+    }
+
+    #[test]
+    fn fixture_manifest_loads_and_reports_native_platform() {
+        let (_dir, e) = engine();
+        assert!(e.manifest.artifacts.len() >= 10);
+        assert_eq!(e.backend(), Backend::Native);
+        assert_eq!(e.platform(), "native-cpu");
+    }
+
+    #[test]
+    fn auto_backend_resolves_to_an_executing_engine() {
+        // Backend::Auto must always yield an engine that can execute the
+        // fixture: native while the PJRT bindings are the stub, PJRT once
+        // the real crate is swapped in.  Only the native resolution can
+        // actually run the registered-op artifacts, so gate the execution
+        // check on what Auto picked instead of hardcoding the outcome.
+        let dir = TempDir::with_toy_artifacts("runtime-auto").expect("fixture");
+        let e = Engine::open(dir.path()).expect("auto engine open");
+        if e.backend() == Backend::Native {
+            let art = e.load("param_cwy").unwrap();
+            let v = HostTensor::f32(
+                vec![fixture::FWD_L, fixture::FWD_N],
+                vec![0.5; fixture::FWD_L * fixture::FWD_N],
+            );
+            assert_eq!(art.run(&[v]).unwrap().len(), 1);
+        }
+    }
+
+    #[test]
+    fn cwy_artifact_is_orthogonal_and_matches_native_construction() {
+        let (_dir, e) = engine();
+        let art = e.load("param_cwy").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let v = Matrix::random_normal(&mut rng, fixture::FWD_L, fixture::FWD_N, 1.0);
+        let out = art
+            .run(&[HostTensor::f32(vec![fixture::FWD_L, fixture::FWD_N], v.data.clone())])
+            .unwrap();
+        let q = Matrix::from_rows(fixture::FWD_N, fixture::FWD_N, out[0].as_f32().unwrap().to_vec());
+        assert!(q.orthogonality_defect() < 1e-3);
+        assert!(q.max_abs_diff(&orthogonal::cwy::matrix(&v)) < 1e-5);
+    }
+
+    #[test]
+    fn cwy_and_hr_artifacts_agree() {
+        // Thm 2 through the engine: the fused CWY transform equals the
+        // sequential Householder product — two genuinely different
+        // algorithms behind the same artifact contract.
+        let (_dir, e) = engine();
+        let cwy_art = e.load("param_cwy").unwrap();
+        let hr_art = e.load("param_hr").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let v = HostTensor::f32(
+            vec![fixture::FWD_L, fixture::FWD_N],
+            rng.normal_vec(fixture::FWD_L * fixture::FWD_N, 1.0),
+        );
+        let a = cwy_art.run(std::slice::from_ref(&v)).unwrap();
+        let b = hr_art.run(&[v]).unwrap();
+        assert_close(a[0].as_f32().unwrap(), b[0].as_f32().unwrap(), 5e-4).unwrap();
+    }
+
+    #[test]
+    fn rollout_artifacts_cwy_equals_hr() {
+        // The Fig. 2 numerical-equivalence claim, natively executed.
+        let (_dir, e) = engine();
+        let cwy_art = e.load("rollout_cwy").unwrap();
+        let hr_art = e.load("rollout_hr").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let v = HostTensor::f32(
+            vec![fixture::FWD_L, fixture::FWD_N],
+            rng.normal_vec(fixture::FWD_L * fixture::FWD_N, 1.0),
+        );
+        let h = HostTensor::f32(
+            vec![fixture::FWD_B, fixture::FWD_N],
+            rng.normal_vec(fixture::FWD_B * fixture::FWD_N, 1.0),
+        );
+        let a = cwy_art.run(&[v.clone(), h.clone()]).unwrap();
+        let b = hr_art.run(&[v, h]).unwrap();
+        assert_close(a[0].as_f32().unwrap(), b[0].as_f32().unwrap(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn tcwy_artifact_lands_on_stiefel() {
+        let (_dir, e) = engine();
+        let art = e.load("stiefel_tcwy").unwrap();
+        let mut rng = Pcg32::seeded(4);
+        let v = Matrix::random_normal(&mut rng, fixture::TCWY_M, fixture::TCWY_N, 1.0);
+        let out = art
+            .run(&[HostTensor::f32(vec![fixture::TCWY_M, fixture::TCWY_N], v.data.clone())])
+            .unwrap();
+        let omega =
+            Matrix::from_rows(fixture::TCWY_N, fixture::TCWY_M, out[0].as_f32().unwrap().to_vec());
+        assert!(omega.orthogonality_defect() < 1e-3);
+        assert!(omega.max_abs_diff(&orthogonal::tcwy::matrix(&v)) < 1e-5);
+    }
+
+    #[test]
+    fn cell_step_runs_the_recorded_initial_state() {
+        // Execute the step artifact exactly as the trainer would: state
+        // from state_bin, then one fused step.
+        let (_dir, e) = engine();
+        let art = e.load("toy_cell_step").unwrap();
+        let state = e.initial_state("toy_cell_step").unwrap();
+        assert_eq!(state.len(), 2);
+        let x = HostTensor::f32(
+            vec![fixture::CELL_B, fixture::CELL_N],
+            vec![1.0; fixture::CELL_B * fixture::CELL_N],
+        );
+        let out = art
+            .run(&[state[0].clone(), state[1].clone(), x, HostTensor::scalar_f32(0.0)])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        // V is frozen; h' = h0 Q + x with the recorded h0 rows.
+        assert_eq!(out[0], state[0]);
+        let q = orthogonal::cwy::matrix(&fixture::toy_cell_v0());
+        let h0 = Matrix::from_rows(
+            fixture::CELL_B,
+            fixture::CELL_N,
+            state[1].as_f32().unwrap().to_vec(),
+        );
+        let expect: Vec<f32> = h0.matmul(&q).data.iter().map(|v| v + 1.0).collect();
+        assert_close(out[1].as_f32().unwrap(), &expect, 1e-4).unwrap();
+        assert_eq!(out[1], out[2]);
+    }
+
+    #[test]
+    fn bad_input_shape_is_rejected() {
+        let (_dir, e) = engine();
+        let art = e.load("param_cwy").unwrap();
+        let wrong = HostTensor::f32(vec![8, 8], vec![0.0; 64]);
+        assert!(art.run(&[wrong]).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_and_dtype_are_rejected() {
+        let (_dir, e) = engine();
+        let art = e.load("param_cwy").unwrap();
+        assert!(art.run(&[]).is_err());
+        let ints = HostTensor::i32(
+            vec![fixture::FWD_L, fixture::FWD_N],
+            vec![0; fixture::FWD_L * fixture::FWD_N],
+        );
+        assert!(art.run(&[ints]).is_err());
+    }
+
+    #[test]
+    fn artifact_without_native_op_needs_pjrt() {
+        let (_dir, e) = engine();
+        let err = e.load("hlo_only").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("PJRT"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn explicit_pjrt_backend_never_falls_back_silently() {
+        // `--backend pjrt` must mean PJRT: with the stub it fails loudly
+        // at open; with real bindings it resolves to Pjrt — never Native.
+        let dir = TempDir::with_toy_artifacts("runtime-pjrt").expect("fixture");
+        match Engine::open_with(dir.path(), Backend::Pjrt) {
+            Ok(e) => assert_eq!(e.backend(), Backend::Pjrt),
+            Err(e) => assert!(format!("{e:#}").contains("PJRT"), "unhelpful error: {e:#}"),
         }
     }
 }
 
-#[test]
-fn manifest_loads_and_is_populated() {
-    let Some(e) = engine() else { return };
-    assert!(e.manifest.artifacts.len() > 40, "expected a full artifact set");
-    // every artifact file must exist
-    for spec in e.manifest.artifacts.values() {
-        assert!(e.manifest.dir.join(&spec.file).exists(), "{} missing", spec.file);
+/// Original artifact cross-checks: only meaningful against the real PJRT
+/// runtime + `make artifacts` output; skip otherwise (DESIGN.md §2.4).
+mod pjrt {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        match Engine::open_with("artifacts", Backend::Pjrt) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("skipping: artifacts/PJRT unavailable ({e:#})");
+                None
+            }
+        }
     }
-}
 
-#[test]
-fn cwy_artifact_matches_native_and_is_orthogonal() {
-    let Some(e) = engine() else { return };
-    let art = e.load("param_cwy_n64").unwrap();
-    let n = 64;
-    let mut rng = Pcg32::seeded(1);
-    let v = Matrix::random_normal(&mut rng, n, n, 1.0);
-    let out = art.run(&[HostTensor::f32(vec![n, n], v.data.clone())]).unwrap();
-    let q = Matrix::from_rows(n, n, out[0].as_f32().unwrap().to_vec());
-    assert!(q.orthogonality_defect() < 1e-3);
-    assert!(q.max_abs_diff(&orthogonal::cwy::matrix(&v)) < 1e-3);
-}
+    #[test]
+    fn manifest_loads_and_is_populated() {
+        let Some(e) = engine() else { return };
+        assert!(e.manifest.artifacts.len() > 40, "expected a full artifact set");
+        for spec in e.manifest.artifacts.values() {
+            assert!(e.manifest.dir.join(&spec.file).exists(), "{} missing", spec.file);
+        }
+    }
 
-#[test]
-fn expm_cayley_artifacts_are_orthogonal() {
-    let Some(e) = engine() else { return };
-    for name in ["param_expm_n64", "param_cayley_n64"] {
-        let art = e.load(name).unwrap();
-        let mut rng = Pcg32::seeded(2);
+    #[test]
+    fn cwy_artifact_matches_native_and_is_orthogonal() {
+        let Some(e) = engine() else { return };
+        let art = e.load("param_cwy_n64").unwrap();
+        let n = 64;
+        let mut rng = Pcg32::seeded(1);
+        let v = Matrix::random_normal(&mut rng, n, n, 1.0);
+        let out = art.run(&[HostTensor::f32(vec![n, n], v.data.clone())]).unwrap();
+        let q = Matrix::from_rows(n, n, out[0].as_f32().unwrap().to_vec());
+        assert!(q.orthogonality_defect() < 1e-3);
+        assert!(q.max_abs_diff(&orthogonal::cwy::matrix(&v)) < 1e-3);
+    }
+
+    #[test]
+    fn expm_cayley_artifacts_are_orthogonal() {
+        let Some(e) = engine() else { return };
+        for name in ["param_expm_n64", "param_cayley_n64"] {
+            let art = e.load(name).unwrap();
+            let mut rng = Pcg32::seeded(2);
+            let a = Matrix::random_normal(&mut rng, 64, 64, 0.5);
+            let out = art.run(&[HostTensor::f32(vec![64, 64], a.data.clone())]).unwrap();
+            let q = Matrix::from_rows(64, 64, out[0].as_f32().unwrap().to_vec());
+            assert!(q.orthogonality_defect() < 1e-3, "{name}");
+        }
+    }
+
+    #[test]
+    fn expm_artifact_matches_native_expm() {
+        let Some(e) = engine() else { return };
+        let art = e.load("param_expm_n64").unwrap();
+        let mut rng = Pcg32::seeded(3);
         let a = Matrix::random_normal(&mut rng, 64, 64, 0.5);
         let out = art.run(&[HostTensor::f32(vec![64, 64], a.data.clone())]).unwrap();
         let q = Matrix::from_rows(64, 64, out[0].as_f32().unwrap().to_vec());
-        assert!(q.orthogonality_defect() < 1e-3, "{name}");
+        let native = orthogonal::exprnn_matrix(&a);
+        assert!(q.max_abs_diff(&native) < 1e-3);
     }
-}
 
-#[test]
-fn expm_artifact_matches_native_expm() {
-    let Some(e) = engine() else { return };
-    let art = e.load("param_expm_n64").unwrap();
-    let mut rng = Pcg32::seeded(3);
-    let a = Matrix::random_normal(&mut rng, 64, 64, 0.5);
-    let out = art.run(&[HostTensor::f32(vec![64, 64], a.data.clone())]).unwrap();
-    let q = Matrix::from_rows(64, 64, out[0].as_f32().unwrap().to_vec());
-    let native = orthogonal::exprnn_matrix(&a);
-    assert!(q.max_abs_diff(&native) < 1e-3);
-}
-
-#[test]
-fn rollout_artifacts_cwy_equals_hr() {
-    // The Fig. 2 numerical-equivalence claim, across the exported L sweep.
-    let Some(e) = engine() else { return };
-    for l in [4usize, 16, 64] {
-        let cwy_art = e.load(&format!("rollout_cwy_l{l}")).unwrap();
-        let hr_art = e.load(&format!("rollout_hr_l{l}")).unwrap();
-        let mut rng = Pcg32::seeded(l as u64);
-        let v = HostTensor::f32(vec![l, 64], rng.normal_vec(l * 64, 1.0));
-        let h = HostTensor::f32(vec![16, 64], rng.normal_vec(16 * 64, 1.0));
-        let a = cwy_art.run(&[v.clone(), h.clone()]).unwrap();
-        let b = hr_art.run(&[v, h]).unwrap();
-        let diff = a[0]
-            .as_f32()
-            .unwrap()
-            .iter()
-            .zip(b[0].as_f32().unwrap())
-            .map(|(x, y)| (x - y).abs())
-            .fold(0.0f32, f32::max);
-        assert!(diff < 1e-2, "L={l}: cwy vs hr diff {diff}");
+    #[test]
+    fn rollout_artifacts_cwy_equals_hr() {
+        // The Fig. 2 numerical-equivalence claim, across the exported L sweep.
+        let Some(e) = engine() else { return };
+        for l in [4usize, 16, 64] {
+            let cwy_art = e.load(&format!("rollout_cwy_l{l}")).unwrap();
+            let hr_art = e.load(&format!("rollout_hr_l{l}")).unwrap();
+            let mut rng = Pcg32::seeded(l as u64);
+            let v = HostTensor::f32(vec![l, 64], rng.normal_vec(l * 64, 1.0));
+            let h = HostTensor::f32(vec![16, 64], rng.normal_vec(16 * 64, 1.0));
+            let a = cwy_art.run(&[v.clone(), h.clone()]).unwrap();
+            let b = hr_art.run(&[v, h]).unwrap();
+            let diff = a[0]
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(b[0].as_f32().unwrap())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-2, "L={l}: cwy vs hr diff {diff}");
+        }
     }
-}
 
-#[test]
-fn tcwy_artifact_lands_on_stiefel() {
-    let Some(e) = engine() else { return };
-    let art = e.load("stiefel_tcwy_construct").unwrap();
-    let (n, m) = (256, 32);
-    let mut rng = Pcg32::seeded(4);
-    let v = Matrix::random_normal(&mut rng, m, n, 1.0);
-    let out = art.run(&[HostTensor::f32(vec![m, n], v.data.clone())]).unwrap();
-    let omega = Matrix::from_rows(n, m, out[0].as_f32().unwrap().to_vec());
-    assert!(omega.orthogonality_defect() < 1e-3);
-    assert!(omega.max_abs_diff(&orthogonal::tcwy::matrix(&v)) < 1e-3);
-}
-
-#[test]
-fn rgd_step_artifacts_stay_on_manifold() {
-    let Some(e) = engine() else { return };
-    let (n, m) = (256, 32);
-    let mut rng = Pcg32::seeded(5);
-    let omega = cwy::linalg::householder_qr(&Matrix::random_normal(&mut rng, n, m, 1.0)).0;
-    let grad = Matrix::random_normal(&mut rng, n, m, 0.1);
-    for variant in ["cc", "ec", "cqr", "eqr"] {
-        let art = e.load(&format!("stiefel_rgd_{variant}_step")).unwrap();
-        let out = art
-            .run(&[
-                HostTensor::f32(vec![n, m], omega.data.clone()),
-                HostTensor::f32(vec![n, m], grad.data.clone()),
-                HostTensor::scalar_f32(0.1),
-            ])
-            .unwrap();
-        let next = Matrix::from_rows(n, m, out[0].as_f32().unwrap().to_vec());
-        let defect = next.orthogonality_defect();
-        assert!(defect < 5e-2, "rgd_{variant}: defect {defect}");
+    #[test]
+    fn tcwy_artifact_lands_on_stiefel() {
+        let Some(e) = engine() else { return };
+        let art = e.load("stiefel_tcwy_construct").unwrap();
+        let (n, m) = (256, 32);
+        let mut rng = Pcg32::seeded(4);
+        let v = Matrix::random_normal(&mut rng, m, n, 1.0);
+        let out = art.run(&[HostTensor::f32(vec![m, n], v.data.clone())]).unwrap();
+        let omega = Matrix::from_rows(n, m, out[0].as_f32().unwrap().to_vec());
+        assert!(omega.orthogonality_defect() < 1e-3);
+        assert!(omega.max_abs_diff(&orthogonal::tcwy::matrix(&v)) < 1e-3);
     }
-}
 
-#[test]
-fn bad_input_shape_is_rejected() {
-    let Some(e) = engine() else { return };
-    let art = e.load("param_cwy_n64").unwrap();
-    let wrong = HostTensor::f32(vec![8, 8], vec![0.0; 64]);
-    assert!(art.run(&[wrong]).is_err());
-}
-
-#[test]
-fn wrong_arity_is_rejected() {
-    let Some(e) = engine() else { return };
-    let art = e.load("param_cwy_n64").unwrap();
-    assert!(art.run(&[]).is_err());
+    #[test]
+    fn rgd_step_artifacts_stay_on_manifold() {
+        let Some(e) = engine() else { return };
+        let (n, m) = (256, 32);
+        let mut rng = Pcg32::seeded(5);
+        let omega = cwy::linalg::householder_qr(&Matrix::random_normal(&mut rng, n, m, 1.0)).0;
+        let grad = Matrix::random_normal(&mut rng, n, m, 0.1);
+        for variant in ["cc", "ec", "cqr", "eqr"] {
+            let art = e.load(&format!("stiefel_rgd_{variant}_step")).unwrap();
+            let out = art
+                .run(&[
+                    HostTensor::f32(vec![n, m], omega.data.clone()),
+                    HostTensor::f32(vec![n, m], grad.data.clone()),
+                    HostTensor::scalar_f32(0.1),
+                ])
+                .unwrap();
+            let next = Matrix::from_rows(n, m, out[0].as_f32().unwrap().to_vec());
+            let defect = next.orthogonality_defect();
+            assert!(defect < 5e-2, "rgd_{variant}: defect {defect}");
+        }
+    }
 }

@@ -1,6 +1,11 @@
 //! Integration: the serve subsystem end-to-end over real TCP — protocol,
 //! micro-batching, sessions, deadlines, backpressure, stats — using the
-//! fake backend, so no artifacts or PJRT bindings are needed.
+//! fake backend, so no artifacts or PJRT bindings are needed.  The
+//! `native_backend` module at the bottom swaps in a real engine-backed
+//! worker pool (DESIGN.md §2.6): every worker owns an `Engine` on the
+//! native backend executing the toy CWY-cell step artifact, and the
+//! per-session recurrent state is checked against the closed-form
+//! recurrence `h' = h Q(V) + x`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -227,4 +232,129 @@ fn malformed_lines_get_error_frames_not_disconnects() {
         other => panic!("wrong frame: {other:?}"),
     }
     server.stop();
+}
+
+mod native_backend {
+    use super::*;
+    use cwy::linalg::Matrix;
+    use cwy::orthogonal;
+    use cwy::runtime::fixture::{self, TempDir};
+    use cwy::runtime::Backend;
+    use cwy::serve::EngineModel;
+    use cwy::util::prop::assert_close;
+
+    const N: usize = fixture::CELL_N;
+
+    fn start_native_server(workers: usize) -> (TempDir, Server) {
+        let dir = TempDir::with_toy_artifacts("serve-native").expect("fixture");
+        let path = dir.path().display().to_string();
+        let factory: Arc<ModelFactory> = Arc::new(move || {
+            Ok(Box::new(EngineModel::open_with(&path, "toy_cell_step", Backend::Native)?)
+                as Box<dyn ServeModel>)
+        });
+        let server = serve(
+            ServeCfg {
+                addr: "127.0.0.1:0".to_string(),
+                workers,
+                batch: BatchCfg {
+                    max_batch: fixture::CELL_B,
+                    max_wait_us: 500,
+                    queue_cap: 256,
+                },
+                session: SessionCfg::default(),
+                lr: 0.0,
+            },
+            factory,
+        )
+        .expect("native server start");
+        (dir, server)
+    }
+
+    fn infer_n(id: u64, session: Option<&str>, x: &[f32]) -> Request {
+        Request::Infer(InferRequest {
+            id,
+            artifact: "toy_cell_step".to_string(),
+            session: session.map(|s| s.to_string()),
+            deadline_us: None,
+            inputs: vec![HostTensor::f32(vec![N], x.to_vec())],
+        })
+    }
+
+    /// `h_next = h Q(V0) + x`, the cell recurrence in closed form.
+    fn expect_next(h: &[f32], x: &[f32]) -> Vec<f32> {
+        let q = orthogonal::cwy::matrix(&fixture::toy_cell_v0());
+        let hm = Matrix::from_rows(1, N, h.to_vec());
+        hm.matmul(&q).data.iter().zip(x).map(|(a, b)| a + b).collect()
+    }
+
+    fn recv_ok(conn: &mut RawConn, want_id: u64) -> Vec<f32> {
+        match conn.recv() {
+            Response::Ok { id, outputs, .. } => {
+                assert_eq!(id, want_id);
+                assert_eq!(outputs.len(), 1, "one user-facing output (y)");
+                assert_eq!(outputs[0].shape, vec![N]);
+                outputs[0].as_f32().unwrap().to_vec()
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn native_engine_serves_spec_over_tcp() {
+        let (_dir, server) = start_native_server(1);
+        let addr = server.local_addr().to_string();
+        let spec = fetch_spec(&addr).unwrap();
+        assert_eq!(spec.artifact, "toy_cell_step");
+        assert_eq!(spec.batch, fixture::CELL_B);
+        // Clients supply only the data port x; state is server-resident.
+        assert_eq!(spec.inputs, vec![(vec![N], Dtype::F32)]);
+        server.stop();
+    }
+
+    #[test]
+    fn session_state_streams_across_requests_through_the_engine() {
+        let (_dir, server) = start_native_server(2);
+        let addr = server.local_addr().to_string();
+        let mut conn = RawConn::open(&addr);
+
+        // Fresh sessions start from the state_bin's recorded h0 row —
+        // non-zero, so this fails if the initial state is not loaded.
+        let h0 = fixture::toy_cell_h0_row();
+        let x1: Vec<f32> = (0..N).map(|j| 1.0 + j as f32 * 0.125).collect();
+        conn.send(&infer_n(1, Some("veda"), &x1));
+        let y1 = recv_ok(&mut conn, 1);
+        assert_close(&y1, &expect_next(&h0, &x1), 1e-4).unwrap();
+
+        // Second request on the same session continues from y1.
+        let x2: Vec<f32> = (0..N).map(|j| -0.5 + j as f32 * 0.0625).collect();
+        conn.send(&infer_n(2, Some("veda"), &x2));
+        let y2 = recv_ok(&mut conn, 2);
+        assert_close(&y2, &expect_next(&y1, &x2), 1e-4).unwrap();
+
+        // A different session starts fresh from h0 again.
+        conn.send(&infer_n(3, Some("other"), &x1));
+        let y3 = recv_ok(&mut conn, 3);
+        assert_close(&y3, &expect_next(&h0, &x1), 1e-4).unwrap();
+
+        assert_eq!(server.snapshot().completed, 3);
+        server.stop();
+    }
+
+    #[test]
+    fn native_pool_sustains_the_load_client() {
+        let (_dir, server) = start_native_server(2);
+        let addr = server.local_addr().to_string();
+        let report = run_load(&ClientCfg {
+            addr,
+            requests: 120,
+            concurrency: 8,
+            deadline_us: None,
+            use_sessions: true,
+        })
+        .unwrap();
+        assert_eq!(report.ok, 120, "every request must succeed: {report:?}");
+        assert_eq!(report.dropped(), 0);
+        assert_eq!(server.snapshot().completed, 120);
+        server.stop();
+    }
 }

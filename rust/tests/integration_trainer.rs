@@ -1,173 +1,305 @@
-//! Integration: the coordinator trains real artifacts and losses descend;
-//! data-parallel matches the fused step; checkpoints restore exactly.
+//! Integration: the coordinator trains real artifacts end-to-end.
+//!
+//! The `native` module runs unconditionally against the toy linreg
+//! family on the native backend (DESIGN.md §2.6): fused SGD descends,
+//! data-parallel grad/all-reduce/apply matches the fused step, and
+//! checkpoints restore exactly — the full trainer path with no Python
+//! AOT artifacts.  The `pjrt` module keeps the original artifact suites,
+//! skipping while the `xla` crate is the offline stub (DESIGN.md §2.4).
 
 use cwy::coordinator::{checkpoint, evaluate, DataParallel, Schedule, Trainer};
-use cwy::data::copying::CopyTask;
-use cwy::data::corpus::CorpusGen;
-use cwy::runtime::{Engine, HostTensor};
+use cwy::runtime::fixture::{self, TempDir};
+use cwy::runtime::{Backend, Engine, HostTensor};
 
-/// `None` (skip) when the artifacts are not built or the PJRT bindings
-/// are the offline stub — these tests only mean something against the
-/// real runtime (see DESIGN.md §2.4).
-fn engine() -> Option<Engine> {
-    match Engine::open("artifacts") {
-        Ok(e) => Some(e),
-        Err(e) => {
-            eprintln!("skipping: artifacts/PJRT unavailable ({e:#})");
-            None
+mod native {
+    use super::*;
+
+    fn engine() -> (TempDir, Engine) {
+        let dir = TempDir::with_toy_artifacts("trainer").expect("fixture");
+        // Pinned to native so the suite keeps covering this backend even
+        // after real PJRT bindings make Backend::Auto resolve to Pjrt.
+        let engine = Engine::open_with(dir.path(), Backend::Native).expect("engine open");
+        (dir, engine)
+    }
+
+    #[test]
+    fn linreg_loss_descends_to_zero() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "linreg_step", Schedule::Constant(0.1)).unwrap();
+        let mut provider = fixture::linreg_provider(1);
+        let mut first = None;
+        for _ in 0..40 {
+            let (loss, _) = tr.train_step(provider()).unwrap();
+            first.get_or_insert(loss);
+        }
+        let first = first.unwrap();
+        let last = tr.history.recent_mean_loss(5).unwrap();
+        assert!(first > 1.0, "first loss {first} too small to mean anything");
+        assert!(last < first * 0.01, "no descent: {first} -> {last}");
+        assert_eq!(tr.step, 40);
+        assert_eq!(tr.params().len(), 1);
+    }
+
+    #[test]
+    fn zero_learning_rate_leaves_state_unchanged() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "linreg_step", Schedule::Constant(0.0)).unwrap();
+        let before = tr.state.clone();
+        let mut provider = fixture::linreg_provider(2);
+        tr.train_step(provider()).unwrap();
+        assert_eq!(tr.state, before);
+    }
+
+    #[test]
+    fn data_parallel_one_worker_matches_fused_step() {
+        // With W=1 the grad+apply composition must track the fused step.
+        let (_dir, e) = engine();
+        let mut fused = Trainer::new(&e, "linreg_step", Schedule::Constant(0.05)).unwrap();
+        let mut dp = DataParallel::new(&e, "linreg", 1, Schedule::Constant(0.05)).unwrap();
+        let mut p1 = fixture::linreg_provider(7);
+        let mut p2 = fixture::linreg_provider(7);
+        for _ in 0..5 {
+            let (loss_fused, _) = fused.train_step(p1()).unwrap();
+            let loss_dp = dp.train_step(vec![p2()]).unwrap();
+            assert!(
+                (loss_fused - loss_dp).abs() < 1e-5,
+                "fused {loss_fused} vs dp {loss_dp}"
+            );
+        }
+        for (a, b) in fused.params().iter().zip(dp.params()) {
+            let d = a
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(b.as_f32().unwrap())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d < 1e-5, "param divergence {d}");
         }
     }
-}
 
-fn copy_provider(spec: &cwy::runtime::ArtifactSpec, seed: u64) -> impl FnMut() -> Vec<HostTensor> {
-    let t_blank: usize = spec.meta_str("t_blank").unwrap().parse().unwrap();
-    let batch: usize = spec.meta_str("batch").unwrap().parse().unwrap();
-    let mut task = CopyTask::new(t_blank, batch, seed);
-    move || {
-        let b = task.next_batch();
-        vec![
-            HostTensor::i32(vec![b.batch, b.t_total], b.tokens),
-            HostTensor::i32(vec![b.batch, b.t_total], b.targets),
-        ]
+    #[test]
+    fn data_parallel_multi_worker_descends() {
+        let (_dir, e) = engine();
+        let mut dp = DataParallel::new(&e, "linreg", 4, Schedule::Constant(0.1)).unwrap();
+        let mut providers: Vec<_> = (0..4).map(|w| fixture::linreg_provider(w as u64)).collect();
+        let mut first = None;
+        for _ in 0..25 {
+            let batches: Vec<_> = providers.iter_mut().map(|p| p()).collect();
+            let loss = dp.train_step(batches).unwrap();
+            first.get_or_insert(loss);
+        }
+        let first = first.unwrap();
+        let last = dp.history.recent_mean_loss(3).unwrap();
+        assert!(last < first * 0.05, "no descent: {first} -> {last}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_identically() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "linreg_step", Schedule::Constant(0.1)).unwrap();
+        let mut provider = fixture::linreg_provider(3);
+        for _ in 0..5 {
+            tr.train_step(provider()).unwrap();
+        }
+        let ckpt_dir = TempDir::new("trainer-ckpt").unwrap();
+        let path = ckpt_dir.path().join("t.ckpt");
+        checkpoint::save(&path, tr.step, &tr.state).unwrap();
+
+        // Branch A: continue directly.
+        let batch = provider();
+        let (loss_a, _) = tr.train_step(batch.clone()).unwrap();
+
+        // Branch B: restore into a fresh trainer and replay the same batch.
+        let mut tr2 = Trainer::new(&e, "linreg_step", Schedule::Constant(0.1)).unwrap();
+        let (step, state) = checkpoint::load(&path).unwrap();
+        tr2.restore(step, state).unwrap();
+        let (loss_b, _) = tr2.train_step(batch).unwrap();
+        assert_eq!(loss_a, loss_b, "restored replay diverged");
+        assert_eq!(tr.state, tr2.state);
+    }
+
+    #[test]
+    fn eval_artifact_is_pure_and_matches_step_loss() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "linreg_step", Schedule::Constant(0.1)).unwrap();
+        let eval_art = e.load("linreg_eval").unwrap();
+        let mut provider = fixture::linreg_provider(9);
+        let batch = provider();
+        let a = evaluate(&eval_art, tr.params(), batch.clone()).unwrap();
+        let b = evaluate(&eval_art, tr.params(), batch.clone()).unwrap();
+        assert_eq!(a, b);
+        // The eval loss equals the fused step's reported (pre-update) loss.
+        let (step_loss, _) = tr.train_step(batch).unwrap();
+        assert_eq!(a[0], step_loss);
     }
 }
 
-#[test]
-fn copy_cwy_loss_descends() {
-    let Some(e) = engine() else { return };
-    let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
-    let mut provider = copy_provider(&tr.artifact.spec.clone(), 0);
-    let mut first = None;
-    for _ in 0..40 {
-        let (loss, _) = tr.train_step(provider()).unwrap();
-        first.get_or_insert(loss);
+/// Original artifact suites: only meaningful against the real PJRT
+/// runtime + `make artifacts` output; skip otherwise (DESIGN.md §2.4).
+mod pjrt {
+    use super::*;
+    use cwy::data::copying::CopyTask;
+    use cwy::data::corpus::CorpusGen;
+
+    fn engine() -> Option<Engine> {
+        match Engine::open_with("artifacts", Backend::Pjrt) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("skipping: artifacts/PJRT unavailable ({e:#})");
+                None
+            }
+        }
     }
-    let last = tr.history.recent_mean_loss(5).unwrap();
-    assert!(
-        last < first.unwrap() * 0.6,
-        "no descent: {} -> {last}",
-        first.unwrap()
-    );
-}
 
-#[test]
-fn nmt_cwy_loss_descends() {
-    let Some(e) = engine() else { return };
-    let mut tr = Trainer::new(&e, "nmt_cwy_l32_step", Schedule::Constant(2e-3)).unwrap();
-    let spec = tr.artifact.spec.clone();
-    let batch: usize = spec.meta_str("batch").unwrap().parse().unwrap();
-    let ts: usize = spec.meta_str("ts").unwrap().parse().unwrap();
-    let tt: usize = spec.meta_str("tt").unwrap().parse().unwrap();
-    let mut gen = CorpusGen::new(1);
-    let mut first = None;
-    for _ in 0..30 {
-        let b = gen.batch(batch, ts, tt);
-        let data = vec![
-            HostTensor::i32(vec![batch, ts], b.src),
-            HostTensor::i32(vec![batch, tt], b.tgt_in),
-            HostTensor::i32(vec![batch, tt], b.tgt_out),
-        ];
-        let (loss, _) = tr.train_step(data).unwrap();
-        first.get_or_insert(loss);
+    fn copy_provider(
+        spec: &cwy::runtime::ArtifactSpec,
+        seed: u64,
+    ) -> impl FnMut() -> Vec<HostTensor> {
+        let t_blank: usize = spec.meta_str("t_blank").unwrap().parse().unwrap();
+        let batch: usize = spec.meta_str("batch").unwrap().parse().unwrap();
+        let mut task = CopyTask::new(t_blank, batch, seed);
+        move || {
+            let b = task.next_batch();
+            vec![
+                HostTensor::i32(vec![b.batch, b.t_total], b.tokens),
+                HostTensor::i32(vec![b.batch, b.t_total], b.targets),
+            ]
+        }
     }
-    let last = tr.history.recent_mean_loss(5).unwrap();
-    assert!(last < first.unwrap(), "no descent: {:?} -> {last}", first);
-}
 
-#[test]
-fn data_parallel_one_worker_matches_fused_step() {
-    // With W=1 the grad+apply composition must track the fused step closely.
-    let Some(e) = engine() else { return };
-    let mut fused = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
-    let mut dp = DataParallel::new(&e, "copy_cwy", 1, Schedule::Constant(1e-3)).unwrap();
-
-    let spec = fused.artifact.spec.clone();
-    let mut p1 = copy_provider(&spec, 7);
-    let mut p2 = copy_provider(&spec, 7);
-    for _ in 0..5 {
-        let (loss_fused, _) = fused.train_step(p1()).unwrap();
-        let loss_dp = dp.train_step(vec![p2()]).unwrap();
+    #[test]
+    fn copy_cwy_loss_descends() {
+        let Some(e) = engine() else { return };
+        let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
+        let mut provider = copy_provider(&tr.artifact.spec.clone(), 0);
+        let mut first = None;
+        for _ in 0..40 {
+            let (loss, _) = tr.train_step(provider()).unwrap();
+            first.get_or_insert(loss);
+        }
+        let last = tr.history.recent_mean_loss(5).unwrap();
         assert!(
-            (loss_fused - loss_dp).abs() < 1e-4,
-            "fused {loss_fused} vs dp {loss_dp}"
+            last < first.unwrap() * 0.6,
+            "no descent: {} -> {last}",
+            first.unwrap()
         );
     }
-    // Parameters must agree elementwise after the same updates.
-    for (a, b) in fused.params().iter().zip(dp.params()) {
-        let d = a
-            .as_f32()
-            .unwrap()
-            .iter()
-            .zip(b.as_f32().unwrap())
-            .map(|(x, y)| (x - y).abs())
-            .fold(0.0f32, f32::max);
-        assert!(d < 1e-4, "param divergence {d}");
+
+    #[test]
+    fn nmt_cwy_loss_descends() {
+        let Some(e) = engine() else { return };
+        let mut tr = Trainer::new(&e, "nmt_cwy_l32_step", Schedule::Constant(2e-3)).unwrap();
+        let spec = tr.artifact.spec.clone();
+        let batch: usize = spec.meta_str("batch").unwrap().parse().unwrap();
+        let ts: usize = spec.meta_str("ts").unwrap().parse().unwrap();
+        let tt: usize = spec.meta_str("tt").unwrap().parse().unwrap();
+        let mut gen = CorpusGen::new(1);
+        let mut first = None;
+        for _ in 0..30 {
+            let b = gen.batch(batch, ts, tt);
+            let data = vec![
+                HostTensor::i32(vec![batch, ts], b.src),
+                HostTensor::i32(vec![batch, tt], b.tgt_in),
+                HostTensor::i32(vec![batch, tt], b.tgt_out),
+            ];
+            let (loss, _) = tr.train_step(data).unwrap();
+            first.get_or_insert(loss);
+        }
+        let last = tr.history.recent_mean_loss(5).unwrap();
+        assert!(last < first.unwrap(), "no descent: {:?} -> {last}", first);
     }
-}
 
-#[test]
-fn data_parallel_multi_worker_descends() {
-    let Some(e) = engine() else { return };
-    let mut dp = DataParallel::new(&e, "copy_cwy", 4, Schedule::Constant(1e-3)).unwrap();
-    let spec = e.manifest.get("copy_cwy_step").unwrap().clone();
-    let mut providers: Vec<_> = (0..4).map(|w| copy_provider(&spec, w as u64)).collect();
-    let mut first = None;
-    for _ in 0..20 {
-        let batches: Vec<_> = providers.iter_mut().map(|p| p()).collect();
-        let loss = dp.train_step(batches).unwrap();
-        first.get_or_insert(loss);
+    #[test]
+    fn data_parallel_one_worker_matches_fused_step() {
+        let Some(e) = engine() else { return };
+        let mut fused = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
+        let mut dp = DataParallel::new(&e, "copy_cwy", 1, Schedule::Constant(1e-3)).unwrap();
+
+        let spec = fused.artifact.spec.clone();
+        let mut p1 = copy_provider(&spec, 7);
+        let mut p2 = copy_provider(&spec, 7);
+        for _ in 0..5 {
+            let (loss_fused, _) = fused.train_step(p1()).unwrap();
+            let loss_dp = dp.train_step(vec![p2()]).unwrap();
+            assert!(
+                (loss_fused - loss_dp).abs() < 1e-4,
+                "fused {loss_fused} vs dp {loss_dp}"
+            );
+        }
+        for (a, b) in fused.params().iter().zip(dp.params()) {
+            let d = a
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(b.as_f32().unwrap())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d < 1e-4, "param divergence {d}");
+        }
     }
-    let last = dp.history.recent_mean_loss(3).unwrap();
-    assert!(last < first.unwrap(), "{:?} -> {last}", first);
-}
 
-#[test]
-fn checkpoint_roundtrip_resumes_identically() {
-    let Some(e) = engine() else { return };
-    let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
-    let mut provider = copy_provider(&tr.artifact.spec.clone(), 3);
-    for _ in 0..5 {
-        tr.train_step(provider()).unwrap();
+    #[test]
+    fn data_parallel_multi_worker_descends() {
+        let Some(e) = engine() else { return };
+        let mut dp = DataParallel::new(&e, "copy_cwy", 4, Schedule::Constant(1e-3)).unwrap();
+        let spec = e.manifest.get("copy_cwy_step").unwrap().clone();
+        let mut providers: Vec<_> = (0..4).map(|w| copy_provider(&spec, w as u64)).collect();
+        let mut first = None;
+        for _ in 0..20 {
+            let batches: Vec<_> = providers.iter_mut().map(|p| p()).collect();
+            let loss = dp.train_step(batches).unwrap();
+            first.get_or_insert(loss);
+        }
+        let last = dp.history.recent_mean_loss(3).unwrap();
+        assert!(last < first.unwrap(), "{:?} -> {last}", first);
     }
-    let dir = std::env::temp_dir().join("cwy_integration_ckpt");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("t.ckpt");
-    checkpoint::save(&path, tr.step, &tr.state).unwrap();
 
-    // Branch A: continue directly.
-    let batch = provider();
-    let (loss_a, _) = tr.train_step(batch.clone()).unwrap();
+    #[test]
+    fn checkpoint_roundtrip_resumes_identically() {
+        let Some(e) = engine() else { return };
+        let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
+        let mut provider = copy_provider(&tr.artifact.spec.clone(), 3);
+        for _ in 0..5 {
+            tr.train_step(provider()).unwrap();
+        }
+        let dir = std::env::temp_dir().join("cwy_integration_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        checkpoint::save(&path, tr.step, &tr.state).unwrap();
 
-    // Branch B: restore into a fresh trainer and replay the same batch.
-    let mut tr2 = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
-    let (step, state) = checkpoint::load(&path).unwrap();
-    tr2.restore(step, state).unwrap();
-    let (loss_b, _) = tr2.train_step(batch).unwrap();
-    assert!((loss_a - loss_b).abs() < 1e-6, "{loss_a} vs {loss_b}");
-}
+        let batch = provider();
+        let (loss_a, _) = tr.train_step(batch.clone()).unwrap();
 
-#[test]
-fn eval_artifact_is_pure() {
-    // Evaluation must not mutate anything: same inputs -> same loss.
-    let Some(e) = engine() else { return };
-    let tr = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
-    let eval_art = e.load("copy_cwy_eval").unwrap();
-    let mut provider = copy_provider(&tr.artifact.spec.clone(), 9);
-    let batch = provider();
-    let a = evaluate(&eval_art, tr.params(), batch.clone()).unwrap();
-    let b = evaluate(&eval_art, tr.params(), batch).unwrap();
-    assert_eq!(a, b);
-}
-
-#[test]
-fn invsqrt_schedule_decays_during_training() {
-    let Some(e) = engine() else { return };
-    let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::InvSqrt(1e-2)).unwrap();
-    let mut provider = copy_provider(&tr.artifact.spec.clone(), 11);
-    for _ in 0..10 {
-        tr.train_step(provider()).unwrap();
+        let mut tr2 = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
+        let (step, state) = checkpoint::load(&path).unwrap();
+        tr2.restore(step, state).unwrap();
+        let (loss_b, _) = tr2.train_step(batch).unwrap();
+        assert!((loss_a - loss_b).abs() < 1e-6, "{loss_a} vs {loss_b}");
     }
-    // The t counter in Adam state should equal the step count.
-    let t = tr.state.last().unwrap().scalar().unwrap();
-    assert_eq!(t as usize, 10);
+
+    #[test]
+    fn eval_artifact_is_pure() {
+        let Some(e) = engine() else { return };
+        let tr = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(1e-3)).unwrap();
+        let eval_art = e.load("copy_cwy_eval").unwrap();
+        let mut provider = copy_provider(&tr.artifact.spec.clone(), 9);
+        let batch = provider();
+        let a = evaluate(&eval_art, tr.params(), batch.clone()).unwrap();
+        let b = evaluate(&eval_art, tr.params(), batch).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn invsqrt_schedule_decays_during_training() {
+        let Some(e) = engine() else { return };
+        let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::InvSqrt(1e-2)).unwrap();
+        let mut provider = copy_provider(&tr.artifact.spec.clone(), 11);
+        for _ in 0..10 {
+            tr.train_step(provider()).unwrap();
+        }
+        // The t counter in Adam state should equal the step count.
+        let t = tr.state.last().unwrap().scalar().unwrap();
+        assert_eq!(t as usize, 10);
+    }
 }
