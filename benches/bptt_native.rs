@@ -1,0 +1,80 @@
+//! Gradient-path timing: fused CWY BPTT vs the sequential
+//! per-Householder backward over a T-step rollout — the Table 1 story,
+//! now for training instead of inference.  Both differentiate the same
+//! function (`orthogonal::backward` property tests pin the parity), so
+//! the comparison is purely about the shape of the computation: the
+//! fused path is a handful of (B,L)/(N,L) matmuls per step plus one
+//! S-chain finish, while the HR chain walks L reflections serially at
+//! every step, forward and backward.
+//!
+//!   cargo bench --bench bptt_native              # default sweep
+//!   cargo bench --bench bptt_native -- --max-n 256 --t 64
+
+use cwy::linalg::Matrix;
+use cwy::orthogonal::backward::{cwy_rollout_backward, hr_rollout_backward};
+use cwy::report::Table;
+use cwy::util::cli::Args;
+use cwy::util::rng::Pcg32;
+use cwy::util::timing::bench;
+
+fn main() {
+    let args = Args::from_env();
+    let max_n = args.get_usize("max-n", 256);
+    let t = args.get_usize("t", 64);
+    let b = args.get_usize("b", 4);
+    let shapes: Vec<(usize, usize)> = [(64usize, 8usize), (128, 16), (256, 32), (512, 64)]
+        .into_iter()
+        .filter(|&(n, _)| n <= max_n)
+        .collect();
+
+    println!("# bptt_native: BPTT through h_{{t+1}} = h_t Q(V) + x_t, T={t}, B={b}\n");
+    let mut table =
+        Table::new(&["N", "L", "fused CWY ms", "sequential HR ms", "speedup", "max |dV diff|"]);
+    for &(n, l) in &shapes {
+        let mut rng = Pcg32::seeded((n * 31 + l) as u64);
+        let v = Matrix::random_normal(&mut rng, l, n, 1.0);
+        let h0 = Matrix::random_normal(&mut rng, b, n, 1.0);
+        let xs: Vec<Matrix> = (0..t)
+            .map(|_| Matrix::random_normal(&mut rng, b, n, 0.3))
+            .collect();
+        let gs: Vec<Matrix> = (0..t)
+            .map(|_| Matrix::random_normal(&mut rng, b, n, 0.3))
+            .collect();
+
+        // Parity first: a bench that measures two different gradients is
+        // noise.  Tolerance scales with the gradient magnitude (f32).
+        let (_, dv_cwy) = cwy_rollout_backward(&v, &h0, &xs, &gs);
+        let (_, dv_hr) = hr_rollout_backward(&v, &h0, &xs, &gs);
+        let scale = dv_hr.data.iter().fold(1.0f32, |m, x| m.max(x.abs()));
+        let diff = dv_cwy.max_abs_diff(&dv_hr);
+        // Two genuinely different f32 algorithms over a T-step rollout:
+        // allow rounding headroom beyond the short-rollout 1e-4 bound.
+        assert!(
+            diff <= 3e-4 * scale,
+            "N={n} L={l}: fused vs sequential dV diverge by {diff} (scale {scale})"
+        );
+
+        let s_cwy = bench("fused", 1, 0.3, || {
+            std::hint::black_box(cwy_rollout_backward(&v, &h0, &xs, &gs));
+        });
+        let s_hr = bench("sequential", 1, 0.3, || {
+            std::hint::black_box(hr_rollout_backward(&v, &h0, &xs, &gs));
+        });
+        let speedup = s_hr.mean_s / s_cwy.mean_s.max(1e-12);
+        println!(
+            "N={n:<4} L={l:<3} fused {:>9.3} ms   sequential {:>9.3} ms   {speedup:.2}x   diff {diff:.2e}",
+            s_cwy.mean_ms(),
+            s_hr.mean_ms()
+        );
+        table.row(&[
+            n.to_string(),
+            l.to_string(),
+            format!("{:.3}", s_cwy.mean_ms()),
+            format!("{:.3}", s_hr.mean_ms()),
+            format!("{speedup:.2}x"),
+            format!("{diff:.2e}"),
+        ]);
+    }
+    println!("\n## BPTT backward: fused CWY vs sequential Householder (f32)\n");
+    print!("{}", table.to_markdown());
+}

@@ -29,6 +29,24 @@ impl History {
         self.records.last().map(|r| r.loss)
     }
 
+    /// All recorded values of a named extra metric (e.g. `grad_norm`),
+    /// or `None` if the artifact family does not provide it.
+    pub fn metric_series(&self, name: &str) -> Option<Vec<f32>> {
+        let idx = self.metric_names.iter().position(|n| n == name)?;
+        Some(
+            self.records
+                .iter()
+                .map(|r| r.metrics.get(idx).copied().unwrap_or(f32::NAN))
+                .collect(),
+        )
+    }
+
+    /// Most recent value of a named extra metric.
+    pub fn last_metric(&self, name: &str) -> Option<f32> {
+        let idx = self.metric_names.iter().position(|n| n == name)?;
+        self.records.last().and_then(|r| r.metrics.get(idx)).copied()
+    }
+
     /// Mean loss over the most recent `n` steps.
     pub fn recent_mean_loss(&self, n: usize) -> Option<f32> {
         if self.records.is_empty() {
@@ -111,5 +129,16 @@ mod tests {
         let mut lines = csv.lines();
         assert_eq!(lines.next().unwrap(), "step,loss,acc,wall_s");
         assert_eq!(csv.lines().count(), 11);
+    }
+
+    #[test]
+    fn metric_lookup_by_name() {
+        let h = sample();
+        let acc = h.metric_series("acc").unwrap();
+        assert_eq!(acc.len(), 10);
+        assert!((acc[3] - 0.3).abs() < 1e-6);
+        assert!((h.last_metric("acc").unwrap() - 0.9).abs() < 1e-6);
+        assert!(h.metric_series("grad_norm").is_none());
+        assert!(h.last_metric("grad_norm").is_none());
     }
 }

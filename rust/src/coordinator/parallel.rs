@@ -92,7 +92,9 @@ impl DataParallel {
             apply_art,
             state,
             schedule,
-            history: History::new(vec!["loss".into()]),
+            // The loss column is implicit in `History`; DP records no
+            // extra metrics.
+            history: History::new(vec![]),
             step: 0,
             workers,
             n_params,

@@ -51,9 +51,14 @@ impl Trainer {
                 state.len()
             );
         }
-        // Output names beyond the state are the metric names.
+        // Outputs beyond the state are metrics, loss first.  The loss is
+        // recorded separately by `History::push`, so the named columns
+        // cover only the *extra* metrics (e.g. the rnn_copy family's
+        // per-step `grad_norm` descent diagnostic) — previously the loss
+        // name leaked in here and desynced the CSV header from its rows.
         let metric_names: Vec<String> = artifact.spec.outputs[n_state..]
             .iter()
+            .skip(1)
             .map(|s| s.name.clone())
             .collect();
         Ok(Trainer {

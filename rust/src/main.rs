@@ -33,6 +33,8 @@ fn main() -> Result<()> {
                 "usage: cwy <list|train|train-dp|tables|verify|serve|client> \
                  [--artifacts DIR] [--backend auto|native|pjrt] ...\n\
                  train:    --artifact NAME --steps N --schedule constant:1e-3 [--seed S] [--ckpt PATH]\n\
+                 \x20         or --task copy [--param cwy|hr|tcwy] (native rnn_copy family; uses the\n\
+                 \x20         built-in fixture when no artifacts directory exists)\n\
                  train-dp: --base NAME --workers W --steps N\n\
                  tables:   [--t 1000 --n 1024 --l 128 --m 128]\n\
                  serve:    --addr HOST:PORT --artifact NAME --workers W --max-batch B --max-wait-us U\n\
@@ -132,17 +134,53 @@ fn make_provider(
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let engine = open_engine(args)?;
-    let name = args
-        .get("artifact")
-        .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
-    let steps = args.get_usize("steps", 100);
+    // Resolve the artifact: explicit --artifact, or the task/param pair
+    // (`--task copy --param cwy|hr|tcwy`) naming the trainable rnn_copy
+    // family; with no artifacts directory the native fixture supplies it,
+    // so `cwy train --task copy --backend native` works from a bare
+    // checkout (DESIGN.md §3.2).
+    let (name, task_mode) = match args.get("artifact") {
+        Some(n) => (n.to_string(), false),
+        None => {
+            let task = args.get_or("task", "");
+            if task != "copy" {
+                anyhow::bail!(
+                    "train needs --artifact NAME, or --task copy \
+                     [--param cwy|hr|tcwy] for the native copy-task family"
+                );
+            }
+            let param = args.get_or("param", "cwy");
+            if !["cwy", "hr", "tcwy"].contains(&param.as_str()) {
+                anyhow::bail!("--param must be cwy|hr|tcwy, got '{param}'");
+            }
+            (format!("copy_{param}_step"), true)
+        }
+    };
+    let dir = artifacts_dir(args);
+    let mut _fixture_guard: Option<cwy::runtime::fixture::TempDir> = None;
+    let engine = if task_mode
+        && !std::path::Path::new(&dir).join("manifest.json").exists()
+    {
+        let backend = Backend::parse(&args.get_or("backend", "auto"))?;
+        let tmp = cwy::runtime::fixture::TempDir::with_toy_artifacts("train-demo")?;
+        println!("# no artifacts at {dir}: training {name} from the native fixture");
+        let e = Engine::open_with(tmp.path(), backend)?;
+        _fixture_guard = Some(tmp);
+        e
+    } else {
+        open_engine(args)?
+    };
+    // Task mode defaults to the configuration the fixture is tuned for:
+    // the paper's k^-0.5 rate (Thm 4) and enough steps to beat the
+    // memoryless baseline.
+    let steps = args.get_usize("steps", if task_mode { 300 } else { 100 });
     let seed = args.get_usize("seed", 0) as u64;
-    let schedule = Schedule::parse(&args.get_or("schedule", "constant:0.001"))
+    let default_schedule = if task_mode { "invsqrt:0.5" } else { "constant:0.001" };
+    let schedule = Schedule::parse(&args.get_or("schedule", default_schedule))
         .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
     let log_every = args.get_usize("log-every", 10);
 
-    let mut trainer = Trainer::new(&engine, name, schedule)?;
+    let mut trainer = Trainer::new(&engine, &name, schedule)?;
     let task = trainer
         .artifact
         .spec
@@ -155,16 +193,35 @@ fn cmd_train(args: &Args) -> Result<()> {
         "# training {name} for {steps} steps (task={task}, backend={})",
         engine.platform()
     );
+    let baseline = trainer
+        .artifact
+        .spec
+        .meta_str("t_blank")
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|t_blank| CopyTask::new(t_blank, 1, 0).baseline_ce());
+    if let Some(b) = baseline {
+        println!("# memoryless-baseline CE (10 ln 8 / (T+20)): {b:.4}");
+    }
     trainer.train(&mut provider, steps, |step, loss, metrics| {
         if step % log_every == 0 || step + 1 == steps {
             println!("step {step:>5}  loss {loss:.5}  metrics {metrics:?}");
         }
     })?;
+    let final_loss = trainer.history.recent_mean_loss(10).unwrap_or(f32::NAN);
     println!(
-        "# done: final loss {:.5}, total wall {:.2}s",
+        "# done: final loss {:.5} (last-10 mean {final_loss:.5}), total wall {:.2}s",
         trainer.history.last_loss().unwrap_or(f32::NAN),
         trainer.history.total_wall_s()
     );
+    if let Some(gn) = trainer.history.last_metric("grad_norm") {
+        println!("# final grad norm: {gn:.5}");
+    }
+    if let Some(b) = baseline {
+        println!(
+            "# {} the memoryless baseline ({b:.4})",
+            if final_loss < b { "BELOW" } else { "ABOVE" }
+        );
+    }
     if let Some(path) = args.get("ckpt") {
         checkpoint::save(path, trainer.step, &trainer.state)?;
         println!("# checkpoint -> {path}");

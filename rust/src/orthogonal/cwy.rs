@@ -14,15 +14,51 @@ pub struct CwyOperator {
     pub sinv: Matrix,
 }
 
+/// Rows of V with norm at or below this are **degenerate**: the direction
+/// v/||v|| is numerically meaningless and its backward pass divides by the
+/// norm, so f32 rows this small would produce garbage forward values and
+/// NaN/Inf gradients.  Chosen well above f32 denormals and well below any
+/// norm a sanely-initialized reflection row can reach.
+pub const DEGENERATE_NORM: f32 = 1e-6;
+
+/// Euclidean norms of the rows of V.
+pub fn row_norms(v: &Matrix) -> Vec<f32> {
+    (0..v.rows)
+        .map(|i| v.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
+        .collect()
+}
+
+/// Indices of degenerate rows of V (norm <= [`DEGENERATE_NORM`]).
+pub fn degenerate_rows(v: &Matrix) -> Vec<usize> {
+    row_norms(v)
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n <= DEGENERATE_NORM)
+        .map(|(i, _)| i)
+        .collect()
+}
+
 /// Normalize rows of V (L, N) into columns of U (N, L).
+///
+/// A degenerate row (see [`DEGENERATE_NORM`]) is replaced by the canonical
+/// basis vector `e_{i mod N}` — exactly unit norm, so Q stays exactly
+/// orthogonal — instead of the old `norm.max(1e-12)` clamp, which scaled
+/// noise up to O(1e12) and silently produced a garbage direction.  The
+/// replacement is an explicit, documented choice; the backward pass
+/// ([`crate::orthogonal::backward`]) treats such rows as constant and
+/// assigns them zero gradient.
 pub fn normalize(v: &Matrix) -> Matrix {
     let (l, n) = (v.rows, v.cols);
     let mut u = Matrix::zeros(n, l);
     for i in 0..l {
         let row = v.row(i);
-        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
-        for j in 0..n {
-            u[(j, i)] = row[j] / norm;
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm <= DEGENERATE_NORM {
+            u[(i % n, i)] = 1.0;
+        } else {
+            for j in 0..n {
+                u[(j, i)] = row[j] / norm;
+            }
         }
     }
     u
@@ -121,6 +157,32 @@ mod tests {
         let direct = h.matmul(&op.matrix());
         let fused = op.apply(&h);
         assert!(direct.max_abs_diff(&fused) < 1e-4);
+    }
+
+    /// Regression (ISSUE 4): a near-zero reflection row used to be scaled
+    /// by `1/norm.max(1e-12)`, producing an O(1e12)-noise direction.  It
+    /// must now map to an exact canonical basis vector so Q stays exactly
+    /// orthogonal and every entry stays finite.
+    #[test]
+    fn degenerate_row_renormalizes_explicitly() {
+        let mut rng = Pcg32::seeded(77);
+        let mut v = Matrix::random_normal(&mut rng, 4, 10, 1.0);
+        for j in 0..10 {
+            v[(2, j)] = 1e-9; // norm ~3e-9, far below DEGENERATE_NORM
+        }
+        assert_eq!(degenerate_rows(&v), vec![2]);
+        let u = normalize(&v);
+        // Column 2 of U is exactly e_2.
+        for j in 0..10 {
+            let want = if j == 2 { 1.0 } else { 0.0 };
+            assert_eq!(u[(j, 2)], want, "u[{j},2]");
+        }
+        let q = matrix(&v);
+        assert!(q.data.iter().all(|x| x.is_finite()), "non-finite Q entry");
+        assert!(q.orthogonality_defect() < 1e-3);
+        // A healthy V has no degenerate rows and keeps the old behavior.
+        let healthy = Matrix::random_normal(&mut rng, 4, 10, 1.0);
+        assert!(degenerate_rows(&healthy).is_empty());
     }
 
     #[test]

@@ -1,11 +1,24 @@
 //! Sequential Householder reflections (Mhammedi et al. 2017) — the native
 //! baseline CWY is measured against (paper Fig. 2).
+//!
+//! `H(v)` divides by `‖v‖²` and is undefined at `v ≈ 0`: degenerate
+//! vectors (norm ≤ [`cwy::DEGENERATE_NORM`]) are treated as the
+//! **identity** reflection everywhere in this module, matching the
+//! zero-gradient convention of `backward::hr_chain_backward` so forward
+//! and backward differentiate the same function and neither emits NaN.
+//! (The CWY path instead renormalizes such rows to a canonical basis
+//! vector — the two parametrizations agree only on non-degenerate rows.)
 
+use super::cwy;
 use crate::linalg::Matrix;
 
-/// Apply H(v) = I - 2 v v^T / ||v||^2 to a vector in place.
+/// Apply H(v) = I - 2 v v^T / ||v||^2 to a vector in place; a degenerate
+/// `v` (see module docs) is the identity.
 pub fn reflect_vec(v: &[f32], h: &mut [f32]) {
     let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+    if vnorm2 <= cwy::DEGENERATE_NORM * cwy::DEGENERATE_NORM {
+        return;
+    }
     let dot: f32 = v.iter().zip(h.iter()).map(|(a, b)| a * b).sum();
     let c = 2.0 * dot / vnorm2;
     for (hi, vi) in h.iter_mut().zip(v) {
@@ -24,7 +37,8 @@ pub fn apply_chain(vs: &Matrix, batch: &mut Matrix) {
     }
 }
 
-/// Materialize Q = H(v_1) ... H(v_L) (O(L N^2), sequential).
+/// Materialize Q = H(v_1) ... H(v_L) (O(L N^2), sequential); degenerate
+/// rows contribute the identity (see module docs).
 pub fn matrix(vs: &Matrix) -> Matrix {
     let n = vs.cols;
     let mut q = Matrix::eye(n);
@@ -32,6 +46,9 @@ pub fn matrix(vs: &Matrix) -> Matrix {
     for l in 0..vs.rows {
         let v = vs.row(l);
         let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= cwy::DEGENERATE_NORM * cwy::DEGENERATE_NORM {
+            continue;
+        }
         let qv = q.matvec(v);
         for i in 0..n {
             let c = 2.0 * qv[i] / vnorm2;
@@ -77,6 +94,34 @@ mod tests {
                 if d < 1e-4 { Ok(()) } else { Err(format!("defect {d}")) }
             },
         );
+    }
+
+    /// Regression (ISSUE 4 satellite): a near-zero reflection vector used
+    /// to divide by ~0 and poison the chain with NaN; it must now act as
+    /// the identity, keeping Q finite and exactly orthogonal.
+    #[test]
+    fn degenerate_vector_is_identity_reflection() {
+        let mut rng = Pcg32::seeded(23);
+        let mut vs = Matrix::random_normal(&mut rng, 3, 8, 1.0);
+        for j in 0..8 {
+            vs[(1, j)] = 1e-9;
+        }
+        let q = matrix(&vs);
+        assert!(q.data.iter().all(|x| x.is_finite()), "non-finite Q");
+        assert!(q.orthogonality_defect() < 1e-4);
+        // The degenerate row contributes nothing: dropping it gives the
+        // same product.
+        let kept = Matrix::from_rows(
+            2,
+            8,
+            [vs.row(0), vs.row(2)].concat(),
+        );
+        assert!(q.max_abs_diff(&matrix(&kept)) < 1e-6);
+        // apply_chain agrees with the materialized product.
+        let h0 = Matrix::random_normal(&mut rng, 2, 8, 1.0);
+        let mut h = h0.clone();
+        apply_chain(&vs, &mut h);
+        assert!(h.max_abs_diff(&h0.matmul(&q)) < 1e-4);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! These mirror the L2 exports in `python/compile/{parametrize,stiefel}.py`;
 //! the integration tests cross-check artifact outputs against this module.
 
+pub mod backward;
 pub mod cwy;
 pub mod flops;
 pub mod householder;

@@ -45,6 +45,16 @@ pub const LINREG_IN: usize = 6;
 pub const LINREG_OUT: usize = 3;
 pub const LINREG_B: usize = 8;
 
+/// Copy-task RNN family (`rnn_copy_*`): task shape and model size.  The
+/// numbers are tuned so plain SGD with the k^-0.5 schedule (Thm 4)
+/// reliably drives the loss below the memoryless baseline
+/// `10 ln 8 / (T + 20)` within a few hundred steps on the native backend.
+pub const COPY_T_BLANK: usize = 4;
+pub const COPY_T_TOTAL: usize = COPY_T_BLANK + 20;
+pub const COPY_B: usize = 8;
+pub const COPY_N: usize = 32;
+pub const COPY_L: usize = 8;
+
 /// The cell's recorded reflection parameters (state_bin tensor 0).
 pub fn toy_cell_v0() -> Matrix {
     Matrix::random_normal(&mut Pcg32::seeded(2024), CELL_L, CELL_N, 1.0)
@@ -61,6 +71,41 @@ pub fn toy_cell_h0_row() -> Vec<f32> {
 /// Ground-truth teacher weights the linreg data is generated from.
 pub fn linreg_teacher() -> Matrix {
     Matrix::random_normal(&mut Pcg32::seeded(77), LINREG_IN, LINREG_OUT, 1.0)
+}
+
+/// Initial parameters of the copy-task RNN, in state order (V, W_in,
+/// W_out, b_out).  `square_v` selects the (N, N) reflection block the
+/// tcwy variant needs; cwy and hr share the same (L, N) init so their
+/// gradients are comparable on identical rollouts.
+pub fn copy_rnn_init(square_v: bool) -> Vec<HostTensor> {
+    use crate::runtime::native::ops_rnn::{IN_VOCAB, OUT_CLASSES};
+    let l = if square_v { COPY_N } else { COPY_L };
+    let v = Matrix::random_normal(&mut Pcg32::seeded(2025), l, COPY_N, 1.0);
+    let w_in = Matrix::random_normal(&mut Pcg32::seeded(2026), IN_VOCAB, COPY_N, 0.3);
+    let w_out = Matrix::random_normal(&mut Pcg32::seeded(2027), COPY_N, OUT_CLASSES, 0.3);
+    let b_out = Matrix::zeros(1, OUT_CLASSES);
+    [v, w_in, w_out, b_out]
+        .into_iter()
+        .map(|m| HostTensor::f32(vec![m.rows, m.cols], m.data))
+        .collect()
+}
+
+/// Copy-task data provider matching the `copy_*` artifacts' shapes.
+pub fn copy_provider(seed: u64) -> impl FnMut() -> Vec<HostTensor> {
+    let mut task = crate::data::copying::CopyTask::new(COPY_T_BLANK, COPY_B, seed);
+    move || {
+        let b = task.next_batch();
+        vec![
+            HostTensor::i32(vec![b.batch, b.t_total], b.tokens),
+            HostTensor::i32(vec![b.batch, b.t_total], b.targets),
+        ]
+    }
+}
+
+/// The memoryless-predictor cross entropy of the fixture's copy task —
+/// the bar real training must beat.
+pub fn copy_baseline_ce() -> f32 {
+    crate::data::copying::CopyTask::new(COPY_T_BLANK, 1, 0).baseline_ce()
 }
 
 /// Noise-free data provider for the linreg family: fresh `x`, `y = x W*`
@@ -92,39 +137,43 @@ pub fn state_bin_bytes(tensors: &[HostTensor]) -> Result<Vec<u8>> {
     Ok(bytes)
 }
 
-fn tensor_json(name: &str, shape: &[usize], kind: Option<&str>) -> Json {
+fn tensor_json_dtyped(name: &str, shape: &[usize], kind: Option<&str>, dtype: &str) -> Json {
     let mut m = std::collections::BTreeMap::new();
     m.insert("name".to_string(), Json::Str(name.to_string()));
     m.insert(
         "shape".to_string(),
         Json::Arr(shape.iter().map(|&d| Json::Num(d as f64)).collect()),
     );
-    m.insert("dtype".to_string(), Json::Str("float32".to_string()));
+    m.insert("dtype".to_string(), Json::Str(dtype.to_string()));
     if let Some(k) = kind {
         m.insert("kind".to_string(), Json::Str(k.to_string()));
     }
     Json::Obj(m)
 }
 
+fn tensor_json(name: &str, shape: &[usize], kind: Option<&str>) -> Json {
+    tensor_json_dtyped(name, shape, kind, "float32")
+}
+
 struct Art {
-    name: &'static str,
+    name: String,
     kind: &'static str,
     inputs: Vec<Json>,
     outputs: Vec<Json>,
-    state_bin: Option<&'static str>,
+    state_bin: Option<String>,
     meta: Vec<(&'static str, String)>,
 }
 
 impl Art {
     fn json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
-        m.insert("name".to_string(), Json::Str(self.name.to_string()));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
         m.insert("file".to_string(), Json::Str(format!("{}.hlo.txt", self.name)));
         m.insert("kind".to_string(), Json::Str(self.kind.to_string()));
         m.insert("inputs".to_string(), Json::Arr(self.inputs.clone()));
         m.insert("outputs".to_string(), Json::Arr(self.outputs.clone()));
-        if let Some(sb) = self.state_bin {
-            m.insert("state_bin".to_string(), Json::Str(sb.to_string()));
+        if let Some(sb) = &self.state_bin {
+            m.insert("state_bin".to_string(), Json::Str(sb.clone()));
         }
         let mut meta = std::collections::BTreeMap::new();
         for (k, v) in &self.meta {
@@ -146,13 +195,15 @@ impl Art {
 /// * `toy_cell_step` — recurrent CWY cell with recorded initial state;
 /// * `linreg_{step,grad,apply,eval}` — fused SGD family for the trainer
 ///   and data-parallel suites, zero-initialized weights;
+/// * `copy_{cwy,hr,tcwy}_{step,grad,apply,eval}` — trainable rnn_copy
+///   family on the copying task (exact BPTT, loss + grad_norm metrics);
 /// * `hlo_only` — no `meta.op`.
 pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
     fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
 
-    let arts = vec![
+    let mut arts = vec![
         Art {
-            name: "param_cwy",
+            name: "param_cwy".into(),
             kind: "micro",
             inputs: vec![tensor_json("v", &[FWD_L, FWD_N], None)],
             outputs: vec![tensor_json("q", &[FWD_N, FWD_N], None)],
@@ -160,7 +211,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "cwy".into()), ("method", "cwy".into())],
         },
         Art {
-            name: "param_hr",
+            name: "param_hr".into(),
             kind: "micro",
             inputs: vec![tensor_json("v", &[FWD_L, FWD_N], None)],
             outputs: vec![tensor_json("q", &[FWD_N, FWD_N], None)],
@@ -168,7 +219,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "hr".into()), ("method", "hr".into())],
         },
         Art {
-            name: "stiefel_tcwy",
+            name: "stiefel_tcwy".into(),
             kind: "micro",
             inputs: vec![tensor_json("v", &[TCWY_M, TCWY_N], None)],
             outputs: vec![tensor_json("omega", &[TCWY_N, TCWY_M], None)],
@@ -176,7 +227,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "tcwy".into()), ("method", "tcwy".into())],
         },
         Art {
-            name: "rollout_cwy",
+            name: "rollout_cwy".into(),
             kind: "micro",
             inputs: vec![
                 tensor_json("v", &[FWD_L, FWD_N], None),
@@ -187,7 +238,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "rollout_cwy".into())],
         },
         Art {
-            name: "rollout_hr",
+            name: "rollout_hr".into(),
             kind: "micro",
             inputs: vec![
                 tensor_json("v", &[FWD_L, FWD_N], None),
@@ -198,7 +249,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "rollout_hr".into())],
         },
         Art {
-            name: "toy_cell_step",
+            name: "toy_cell_step".into(),
             kind: "step",
             inputs: vec![
                 tensor_json("v", &[CELL_L, CELL_N], Some("state")),
@@ -211,7 +262,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
                 tensor_json("h", &[CELL_B, CELL_N], None),
                 tensor_json("y", &[CELL_B, CELL_N], None),
             ],
-            state_bin: Some("toy_cell.state.bin"),
+            state_bin: Some("toy_cell.state.bin".into()),
             meta: vec![
                 ("op", "cell_cwy".into()),
                 ("task", "toy_cell".into()),
@@ -219,7 +270,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             ],
         },
         Art {
-            name: "linreg_step",
+            name: "linreg_step".into(),
             kind: "step",
             inputs: vec![
                 tensor_json("w", &[LINREG_IN, LINREG_OUT], Some("state")),
@@ -231,7 +282,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
                 tensor_json("w", &[LINREG_IN, LINREG_OUT], None),
                 tensor_json("loss", &[], None),
             ],
-            state_bin: Some("linreg.state.bin"),
+            state_bin: Some("linreg.state.bin".into()),
             meta: vec![
                 ("op", "linreg_step".into()),
                 ("task", "linreg".into()),
@@ -240,7 +291,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             ],
         },
         Art {
-            name: "linreg_grad",
+            name: "linreg_grad".into(),
             kind: "grad",
             inputs: vec![
                 tensor_json("w", &[LINREG_IN, LINREG_OUT], Some("state")),
@@ -255,7 +306,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "linreg_grad".into()), ("n_params", "1".into())],
         },
         Art {
-            name: "linreg_apply",
+            name: "linreg_apply".into(),
             kind: "apply",
             inputs: vec![
                 tensor_json("w", &[LINREG_IN, LINREG_OUT], Some("state")),
@@ -267,7 +318,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "linreg_apply".into())],
         },
         Art {
-            name: "linreg_eval",
+            name: "linreg_eval".into(),
             kind: "eval",
             inputs: vec![
                 tensor_json("w", &[LINREG_IN, LINREG_OUT], None),
@@ -279,7 +330,7 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![("op", "linreg_eval".into())],
         },
         Art {
-            name: "hlo_only",
+            name: "hlo_only".into(),
             kind: "micro",
             inputs: vec![tensor_json("x", &[2, 2], None)],
             outputs: vec![tensor_json("y", &[2, 2], None)],
@@ -287,6 +338,8 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
             meta: vec![],
         },
     ];
+
+    arts.extend(copy_rnn_arts());
 
     let manifest = {
         let mut m = std::collections::BTreeMap::new();
@@ -317,7 +370,93 @@ pub fn write_toy_artifacts(dir: &Path) -> Result<()> {
     fs::write(dir.join("linreg.state.bin"), state_bin_bytes(&w0)?)
         .context("writing linreg.state.bin")?;
 
+    // copy-task RNN states: cwy and hr share one init (so gradients are
+    // comparable on identical rollouts); tcwy records the square V.
+    for (param, square) in [("cwy", false), ("hr", false), ("tcwy", true)] {
+        let bin = format!("copy_{param}.state.bin");
+        fs::write(dir.join(&bin), state_bin_bytes(&copy_rnn_init(square))?)
+            .with_context(|| format!("writing {bin}"))?;
+    }
+
     Ok(())
+}
+
+/// The `copy_{cwy,hr,tcwy}_{step,grad,apply,eval}` artifact entries: the
+/// trainable rnn_copy op family over the procedural copying task, in the
+/// full §2.2 step/grad/apply/eval calling convention.
+fn copy_rnn_arts() -> Vec<Art> {
+    use crate::runtime::native::ops_rnn::{IN_VOCAB, OUT_CLASSES};
+    let mut arts = Vec::new();
+    for (param, vrows) in [("cwy", COPY_L), ("hr", COPY_L), ("tcwy", COPY_N)] {
+        let params = |kind: Option<&str>| {
+            vec![
+                tensor_json("v", &[vrows, COPY_N], kind),
+                tensor_json("w_in", &[IN_VOCAB, COPY_N], kind),
+                tensor_json("w_out", &[COPY_N, OUT_CLASSES], kind),
+                tensor_json("b_out", &[1, OUT_CLASSES], kind),
+            ]
+        };
+        let data = || {
+            vec![
+                tensor_json_dtyped("tokens", &[COPY_B, COPY_T_TOTAL], None, "int32"),
+                tensor_json_dtyped("targets", &[COPY_B, COPY_T_TOTAL], None, "int32"),
+            ]
+        };
+        let metrics = || {
+            vec![tensor_json("loss", &[], None), tensor_json("grad_norm", &[], None)]
+        };
+        let meta = |op: &str| -> Vec<(&'static str, String)> {
+            vec![
+                ("op", format!("rnn_copy_{op}")),
+                ("param", param.to_string()),
+                ("method", param.to_string()),
+                ("task", "copy".to_string()),
+                ("t_blank", COPY_T_BLANK.to_string()),
+                ("batch", COPY_B.to_string()),
+                ("n_params", "4".to_string()),
+            ]
+        };
+        let lr = || tensor_json("lr", &[], Some("hyper"));
+        arts.push(Art {
+            name: format!("copy_{param}_step"),
+            kind: "step",
+            inputs: params(Some("state")).into_iter().chain(data()).chain([lr()]).collect(),
+            outputs: params(None).into_iter().chain(metrics()).collect(),
+            state_bin: Some(format!("copy_{param}.state.bin")),
+            meta: meta("step"),
+        });
+        arts.push(Art {
+            name: format!("copy_{param}_grad"),
+            kind: "grad",
+            inputs: params(Some("state")).into_iter().chain(data()).collect(),
+            outputs: params(None).into_iter().chain(metrics()).collect(),
+            state_bin: None,
+            meta: meta("grad"),
+        });
+        let grad_ins = vec![
+            tensor_json("dv", &[vrows, COPY_N], None),
+            tensor_json("dw_in", &[IN_VOCAB, COPY_N], None),
+            tensor_json("dw_out", &[COPY_N, OUT_CLASSES], None),
+            tensor_json("db_out", &[1, OUT_CLASSES], None),
+        ];
+        arts.push(Art {
+            name: format!("copy_{param}_apply"),
+            kind: "apply",
+            inputs: params(Some("state")).into_iter().chain(grad_ins).chain([lr()]).collect(),
+            outputs: params(None),
+            state_bin: None,
+            meta: meta("apply"),
+        });
+        arts.push(Art {
+            name: format!("copy_{param}_eval"),
+            kind: "eval",
+            inputs: params(None).into_iter().chain(data()).collect(),
+            outputs: vec![tensor_json("loss", &[], None)],
+            state_bin: None,
+            meta: meta("eval"),
+        });
+    }
+    arts
 }
 
 static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -370,7 +509,7 @@ mod tests {
     fn fixture_round_trips_through_manifest_loader() {
         let dir = TempDir::with_toy_artifacts("fixture-test").unwrap();
         let m = Manifest::load(dir.path()).unwrap();
-        assert!(m.artifacts.len() >= 10);
+        assert!(m.artifacts.len() >= 22);
         let cell = m.get("toy_cell_step").unwrap();
         assert_eq!(cell.n_state(), 2);
         assert_eq!(cell.n_data(), 1);
@@ -382,6 +521,36 @@ mod tests {
         assert_eq!(state[1].as_f32().unwrap()[0], 0.25);
         let lin = m.get("linreg_step").unwrap();
         assert_eq!(m.load_state(lin).unwrap()[0].len(), LINREG_IN * LINREG_OUT);
+    }
+
+    #[test]
+    fn copy_rnn_artifacts_compile_and_share_cwy_hr_init() {
+        use crate::runtime::native::NativeExec;
+        let dir = TempDir::with_toy_artifacts("fixture-copy").unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        for param in ["cwy", "hr", "tcwy"] {
+            for op in ["step", "grad", "apply", "eval"] {
+                let spec = m.get(&format!("copy_{param}_{op}")).unwrap();
+                NativeExec::compile(spec).unwrap_or_else(|e| {
+                    panic!("copy_{param}_{op} failed native compile: {e:#}")
+                });
+            }
+            let step = m.get(&format!("copy_{param}_step")).unwrap();
+            assert_eq!(step.n_state(), 4);
+            assert_eq!(step.n_data(), 2);
+            assert!(step.has_lr());
+            assert_eq!(m.load_state(step).unwrap().len(), 4);
+        }
+        // cwy and hr record the *same* initial parameters, so gradient
+        // parity tests compare identical rollouts.
+        let a = m.load_state(m.get("copy_cwy_step").unwrap()).unwrap();
+        let b = m.load_state(m.get("copy_hr_step").unwrap()).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        // tcwy's reflection block is square.
+        let t = m.load_state(m.get("copy_tcwy_step").unwrap()).unwrap();
+        assert_eq!(t[0].shape, vec![COPY_N, COPY_N]);
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod tensor;
 
 pub use engine::{Backend, Compiled, Engine};
 pub use manifest::{ArtifactSpec, Manifest, Role, TensorSpec};
-pub use native::{NativeExec, NativeOp};
+pub use native::{CellKind, NativeExec, NativeOp, StepMode};
 pub use tensor::{Data, Dtype, HostTensor};

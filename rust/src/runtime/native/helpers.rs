@@ -1,0 +1,78 @@
+//! Shared signature-validation and tensor-marshalling helpers for the
+//! native op families (DESIGN.md §2.6).  Every family validates its
+//! manifest contract with these so error messages stay uniform.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Matrix;
+use crate::runtime::manifest::{ArtifactSpec, Role, TensorSpec};
+use crate::runtime::tensor::{Dtype, HostTensor};
+
+/// View a rank-2 f32 host tensor as a [`Matrix`].
+pub fn mat(t: &HostTensor) -> Result<Matrix> {
+    if t.shape.len() != 2 {
+        bail!("expected a rank-2 tensor, got shape {:?}", t.shape);
+    }
+    Ok(Matrix::from_rows(t.shape[0], t.shape[1], t.as_f32()?.to_vec()))
+}
+
+/// Wrap a [`Matrix`] back into a rank-2 f32 host tensor.
+pub fn tensor(m: Matrix) -> HostTensor {
+    HostTensor::f32(vec![m.rows, m.cols], m.data)
+}
+
+/// The two dimensions of a rank-2 port spec.
+pub fn dims2(ts: &TensorSpec) -> Result<(usize, usize)> {
+    if ts.shape.len() != 2 {
+        bail!("port '{}': expected rank 2, got shape {:?}", ts.name, ts.shape);
+    }
+    Ok((ts.shape[0], ts.shape[1]))
+}
+
+/// Require an exact port shape.
+pub fn expect_shape(ts: &TensorSpec, want: &[usize]) -> Result<()> {
+    if ts.shape != want {
+        bail!("port '{}': shape {:?}, op expects {:?}", ts.name, ts.shape, want);
+    }
+    Ok(())
+}
+
+/// Require a port dtype.
+pub fn expect_dtype(ts: &TensorSpec, want: Dtype) -> Result<()> {
+    if ts.dtype != want {
+        bail!("port '{}': dtype {:?}, op expects {:?}", ts.name, ts.dtype, want);
+    }
+    Ok(())
+}
+
+/// Require input/output counts; dtypes are checked per-port by the
+/// family (see [`expect_all_f32`] for the common all-f32 case).
+pub fn expect_arity(spec: &ArtifactSpec, inputs: usize, outputs: usize) -> Result<()> {
+    if spec.inputs.len() != inputs {
+        bail!("op takes {inputs} inputs, manifest lists {}", spec.inputs.len());
+    }
+    if spec.outputs.len() != outputs {
+        bail!("op yields {outputs} outputs, manifest lists {}", spec.outputs.len());
+    }
+    Ok(())
+}
+
+/// Require every port (inputs and outputs) to be f32.
+pub fn expect_all_f32(spec: &ArtifactSpec) -> Result<()> {
+    for ts in spec.inputs.iter().chain(&spec.outputs) {
+        if ts.dtype != Dtype::F32 {
+            bail!("port '{}': this op is f32-only", ts.name);
+        }
+    }
+    Ok(())
+}
+
+/// Require the leading input roles to match the op's calling convention.
+pub fn expect_roles(spec: &ArtifactSpec, roles: &[Role]) -> Result<()> {
+    for (ts, want) in spec.inputs.iter().zip(roles) {
+        if ts.role != *want {
+            bail!("port '{}': role {:?}, op expects {:?}", ts.name, ts.role, want);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,290 @@
+//! Native CPU execution backend (DESIGN.md §2.6, §3.1) — a modular
+//! registry of op families.
+//!
+//! The PJRT path executes HLO text through the `xla` crate; when those
+//! bindings are the offline stub, nothing downstream of `Engine::open`
+//! used to run.  This backend closes that gap: the paper's computations
+//! reduce to a handful of fused matmuls, which is exactly what `linalg` +
+//! `orthogonal` implement — cheap enough to evaluate directly on the CPU.
+//!
+//! A native artifact is a manifest entry whose `meta.op` names a
+//! registered op.  Ops are grouped into **families**, one module each,
+//! registered in the [`FAMILIES`] table; every family independently owns
+//! its op names, its compile-time manifest contract (`validate`), and its
+//! run closure, so adding a family never grows someone else's match:
+//!
+//! | family | module | ops |
+//! |--------|--------|-----|
+//! | `ortho` | [`ops_ortho`] | `cwy`, `hr`, `tcwy`, `rollout_{cwy,hr}`, `cell_{cwy,hr,tcwy}` |
+//! | `linreg` | [`ops_linreg`] | `linreg_{step,grad,apply,eval}` |
+//! | `rnn_copy` | [`ops_rnn`] | `rnn_copy_{step,grad,apply,eval}` (× `meta.param` = `cwy\|hr\|tcwy`) |
+//!
+//! [`NativeExec::compile`] resolves `meta.op` through the registry and
+//! validates the manifest signature against the op's contract (the native
+//! analogue of an XLA compile error); `run` then executes the artifact
+//! contract — shapes, §2.2 calling convention, `state_bin` initial state —
+//! identically to the PJRT path, so `Trainer`, `DataParallel`, and the
+//! serve worker pool run unchanged on either backend.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::HostTensor;
+
+pub mod helpers;
+pub mod ops_linreg;
+pub mod ops_ortho;
+pub mod ops_rnn;
+
+/// Manifest meta key naming the registered native op.
+pub const OP_META_KEY: &str = "op";
+
+/// Manifest meta key selecting the orthogonal parametrization of an op
+/// family that supports several (`cwy` | `hr` | `tcwy`).
+pub const PARAM_META_KEY: &str = "param";
+
+/// Which orthogonal construction a recurrent cell / RNN family uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellKind {
+    Cwy,
+    Hr,
+    Tcwy,
+}
+
+impl CellKind {
+    /// Parse a `meta.param` value.
+    pub fn parse_param(s: &str) -> Option<CellKind> {
+        Some(match s {
+            "cwy" => CellKind::Cwy,
+            "hr" => CellKind::Hr,
+            "tcwy" => CellKind::Tcwy,
+            _ => return None,
+        })
+    }
+}
+
+/// Which §2.2 artifact role an op family member plays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepMode {
+    /// Fused `state', metrics = step(state..., data..., lr)`.
+    Step,
+    /// Per-shard `grads, metrics = grad(state..., data...)`.
+    Grad,
+    /// All-reduced `state' = apply(state..., grads..., lr)`.
+    Apply,
+    /// Pure `metrics = eval(params..., data...)`.
+    Eval,
+}
+
+/// A registered native computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativeOp {
+    CwyMatrix,
+    HrMatrix,
+    TcwyMatrix,
+    RolloutCwy,
+    RolloutHr,
+    Cell(CellKind),
+    LinregStep,
+    LinregGrad,
+    LinregApply,
+    LinregEval,
+    /// CWY/T-CWY/HR-parametrized recurrent net on the copying task.
+    RnnCopy(CellKind, StepMode),
+}
+
+/// One op family's registration: its op-name inventory plus the three
+/// hooks the interpreter needs.  `resolve` returns `None` when the op
+/// string belongs to another family, `Some(Err)` when the string is this
+/// family's but its meta is inconsistent (e.g. a bad `param`).
+pub struct FamilyDef {
+    pub name: &'static str,
+    pub ops: &'static [&'static str],
+    pub resolve: fn(&str, &ArtifactSpec) -> Option<Result<NativeOp>>,
+    pub validate: fn(&ArtifactSpec, NativeOp) -> Result<()>,
+    pub run: fn(&ArtifactSpec, NativeOp, &[&HostTensor]) -> Result<Vec<HostTensor>>,
+}
+
+/// The op-family registry.  Adding a family = adding a module + one row.
+pub static FAMILIES: &[&FamilyDef] =
+    &[&ops_ortho::FAMILY, &ops_linreg::FAMILY, &ops_rnn::FAMILY];
+
+/// Every registered `meta.op` string, in family order (introspection /
+/// `cwy list` tooling).
+pub fn registered_ops() -> Vec<&'static str> {
+    FAMILIES.iter().flat_map(|f| f.ops.iter().copied()).collect()
+}
+
+/// A "compiled" native artifact: the resolved op and its family,
+/// signature-checked against the manifest entry.
+pub struct NativeExec {
+    op: NativeOp,
+    family: &'static FamilyDef,
+}
+
+impl NativeExec {
+    /// Resolve `meta.op` through the registry and validate the artifact
+    /// signature against the op's contract.  Errors here mirror XLA
+    /// compile-time failures.
+    pub fn compile(spec: &ArtifactSpec) -> Result<NativeExec> {
+        let op_str = spec.meta_str(OP_META_KEY).ok_or_else(|| {
+            anyhow!(
+                "{}: no '{}' meta key — the native backend executes registered ops, \
+                 not HLO text; this artifact needs the PJRT backend (DESIGN.md §2.6)",
+                spec.name,
+                OP_META_KEY
+            )
+        })?;
+        let (op, family) = FAMILIES
+            .iter()
+            .find_map(|f| (f.resolve)(op_str, spec).map(|r| r.map(|op| (op, *f))))
+            .ok_or_else(|| anyhow!("{}: unknown native op '{op_str}'", spec.name))?
+            .map_err(|e| anyhow!("{}: {e:#}", spec.name))?;
+        (family.validate)(spec, op)
+            .map_err(|e| anyhow!("{}: bad native signature: {e:#}", spec.name))?;
+        Ok(NativeExec { op, family })
+    }
+
+    pub fn op(&self) -> NativeOp {
+        self.op
+    }
+
+    /// Execute one artifact call.  `inputs` are already checked against
+    /// the manifest shapes/dtypes by `Compiled::run_refs`.
+    pub fn run(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        (self.family.run)(spec, self.op, inputs)
+            .map_err(|e| anyhow!("{} (native {:?}): {e:#}", spec.name, self.op))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::orthogonal::cwy;
+    use crate::runtime::manifest::Manifest;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Pcg32;
+    use std::path::PathBuf;
+
+    use super::helpers::tensor;
+
+    fn manifest(extra: &str) -> Manifest {
+        Manifest::parse_str(
+            &format!(r#"{{"artifacts":[{extra}]}}"#),
+            PathBuf::from("/tmp"),
+        )
+        .unwrap()
+    }
+
+    const CWY_ART: &str = r#"{"name":"q","file":"q.hlo","kind":"micro",
+        "inputs":[{"name":"v","shape":[3,8],"dtype":"float32"}],
+        "outputs":[{"name":"q","shape":[8,8],"dtype":"float32"}],
+        "meta":{"op":"cwy"}}"#;
+
+    #[test]
+    fn compile_resolves_and_validates() {
+        let m = manifest(CWY_ART);
+        let exec = NativeExec::compile(m.get("q").unwrap()).unwrap();
+        assert_eq!(exec.op(), NativeOp::CwyMatrix);
+    }
+
+    #[test]
+    fn compile_rejects_missing_and_unknown_ops() {
+        let m = manifest(
+            r#"{"name":"a","file":"a.hlo","kind":"micro",
+               "inputs":[],"outputs":[],"meta":{}},
+              {"name":"b","file":"b.hlo","kind":"micro",
+               "inputs":[],"outputs":[],"meta":{"op":"warp_drive"}}"#,
+        );
+        let err = NativeExec::compile(m.get("a").unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("no 'op' meta"), "{err:#}");
+        let err = NativeExec::compile(m.get("b").unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown native op"), "{err:#}");
+    }
+
+    #[test]
+    fn compile_rejects_inconsistent_shapes() {
+        let m = manifest(
+            r#"{"name":"q","file":"q.hlo","kind":"micro",
+               "inputs":[{"name":"v","shape":[3,8],"dtype":"float32"}],
+               "outputs":[{"name":"q","shape":[7,7],"dtype":"float32"}],
+               "meta":{"op":"cwy"}}"#,
+        );
+        assert!(NativeExec::compile(m.get("q").unwrap()).is_err());
+    }
+
+    #[test]
+    fn registry_covers_every_family_without_overlap() {
+        let ops = registered_ops();
+        assert!(ops.len() >= 12, "registry shrank: {ops:?}");
+        for (i, name) in ops.iter().enumerate() {
+            assert!(
+                !ops[i + 1..].contains(name),
+                "op '{name}' registered by two families"
+            );
+        }
+        // Every inventoried op resolves through exactly its family.
+        let dummy = manifest(CWY_ART);
+        let spec = dummy.get("q").unwrap();
+        for f in FAMILIES {
+            for &name in f.ops {
+                let hits: Vec<&str> = FAMILIES
+                    .iter()
+                    .filter(|g| (g.resolve)(name, spec).is_some())
+                    .map(|g| g.name)
+                    .collect();
+                assert_eq!(hits, vec![f.name], "op '{name}' resolution");
+            }
+        }
+    }
+
+    #[test]
+    fn cwy_op_matches_native_construction() {
+        let m = manifest(CWY_ART);
+        let spec = m.get("q").unwrap();
+        let exec = NativeExec::compile(spec).unwrap();
+        let mut rng = Pcg32::seeded(11);
+        let v = Matrix::random_normal(&mut rng, 3, 8, 1.0);
+        let vt = tensor(v.clone());
+        let out = exec.run(spec, &[&vt]).unwrap();
+        assert_eq!(out[0].shape, vec![8, 8]);
+        assert_close(out[0].as_f32().unwrap(), &cwy::matrix(&v).data, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn linreg_step_descends() {
+        let m = manifest(
+            r#"{"name":"s","file":"s.hlo","kind":"step",
+               "inputs":[{"name":"w","shape":[4,2],"dtype":"float32","kind":"state"},
+                         {"name":"x","shape":[8,4],"dtype":"float32"},
+                         {"name":"y","shape":[8,2],"dtype":"float32"},
+                         {"name":"lr","shape":[],"dtype":"float32","kind":"hyper"}],
+               "outputs":[{"name":"w","shape":[4,2],"dtype":"float32"},
+                          {"name":"loss","shape":[],"dtype":"float32"}],
+               "meta":{"op":"linreg_step"}}"#,
+        );
+        let spec = m.get("s").unwrap();
+        let exec = NativeExec::compile(spec).unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let w_true = Matrix::random_normal(&mut rng, 4, 2, 1.0);
+        let x = Matrix::random_normal(&mut rng, 8, 4, 1.0);
+        let y = x.matmul(&w_true);
+        let mut w = HostTensor::f32(vec![4, 2], vec![0.0; 8]);
+        let (xt, yt) = (tensor(x), tensor(y));
+        let lr = HostTensor::scalar_f32(0.05);
+        let mut losses = Vec::new();
+        for _ in 0..60 {
+            let out = exec.run(spec, &[&w, &xt, &yt, &lr]).unwrap();
+            losses.push(out[1].scalar().unwrap());
+            w = out[0].clone();
+        }
+        assert!(losses[0] > 0.1, "first loss {} too small to mean anything", losses[0]);
+        assert!(
+            *losses.last().unwrap() < losses[0] * 0.01,
+            "no descent: {} -> {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! Native op family `linreg`: the toy fused-SGD family exercising the
+//! full §2.2 step/grad/apply/eval calling convention with an exact
+//! closed-form gradient.  The trainer / data-parallel integration suites
+//! run on it because every quantity is analytically checkable.
+//!
+//! | `meta.op`      | kind  | signature (roles)                              | computation |
+//! |----------------|-------|------------------------------------------------|-------------|
+//! | `linreg_step`  | step  | W `[k,m]` state, x `[b,k]`, y `[b,m]` data, lr hyper → W', loss | fused SGD: `W - lr · ∇` |
+//! | `linreg_grad`  | grad  | W, x, y → ∇ `[k,m]`, loss                      | per-shard gradient |
+//! | `linreg_apply` | apply | W state, ∇ data, lr hyper → W'                 | all-reduced update |
+//! | `linreg_eval`  | eval  | W, x, y → loss                                 | pure forward |
+
+use anyhow::{bail, Result};
+
+use super::helpers::{dims2, expect_all_f32, expect_arity, expect_roles, expect_shape, mat, tensor};
+use super::{FamilyDef, NativeOp};
+use crate::linalg::Matrix;
+use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::tensor::HostTensor;
+
+pub static FAMILY: FamilyDef = FamilyDef {
+    name: "linreg",
+    ops: &["linreg_step", "linreg_grad", "linreg_apply", "linreg_eval"],
+    resolve,
+    validate,
+    run,
+};
+
+fn resolve(op: &str, _spec: &ArtifactSpec) -> Option<Result<NativeOp>> {
+    Some(Ok(match op {
+        "linreg_step" => NativeOp::LinregStep,
+        "linreg_grad" => NativeOp::LinregGrad,
+        "linreg_apply" => NativeOp::LinregApply,
+        "linreg_eval" => NativeOp::LinregEval,
+        _ => return None,
+    }))
+}
+
+fn validate(spec: &ArtifactSpec, op: NativeOp) -> Result<()> {
+    expect_all_f32(spec)?;
+    match op {
+        NativeOp::LinregStep => {
+            expect_arity(spec, 4, 2)?;
+            expect_roles(spec, &[Role::State, Role::Data, Role::Data, Role::Hyper])?;
+            validate_core(spec)?;
+            let (k, m) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.outputs[0], &[k, m])?;
+            expect_shape(&spec.outputs[1], &[])
+        }
+        NativeOp::LinregGrad => {
+            expect_arity(spec, 3, 2)?;
+            expect_roles(spec, &[Role::State, Role::Data, Role::Data])?;
+            validate_core(spec)?;
+            let (k, m) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.outputs[0], &[k, m])?;
+            expect_shape(&spec.outputs[1], &[])
+        }
+        NativeOp::LinregApply => {
+            expect_arity(spec, 3, 1)?;
+            expect_roles(spec, &[Role::State, Role::Data, Role::Hyper])?;
+            let (k, m) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.inputs[1], &[k, m])?;
+            expect_shape(&spec.inputs[2], &[])?;
+            expect_shape(&spec.outputs[0], &[k, m])
+        }
+        NativeOp::LinregEval => {
+            expect_arity(spec, 3, 1)?;
+            // Eval artifacts are pure functions of (params..., data...)
+            // (§2.2): every input is data, nothing persists.
+            expect_roles(spec, &[Role::Data, Role::Data, Role::Data])?;
+            validate_core(spec)?;
+            expect_shape(&spec.outputs[0], &[])
+        }
+        other => bail!("op {other:?} is not in the linreg family"),
+    }
+}
+
+/// Shared (W, x, y) consistency for the family.
+fn validate_core(spec: &ArtifactSpec) -> Result<()> {
+    let (k, m) = dims2(&spec.inputs[0])?;
+    let (b, xk) = dims2(&spec.inputs[1])?;
+    let (by, ym) = dims2(&spec.inputs[2])?;
+    if xk != k {
+        bail!("x cols {xk} != W rows {k}");
+    }
+    if by != b {
+        bail!("x rows {b} != y rows {by}");
+    }
+    if ym != m {
+        bail!("y cols {ym} != W cols {m}");
+    }
+    if spec.inputs.len() == 4 {
+        expect_shape(&spec.inputs[3], &[])?;
+    }
+    Ok(())
+}
+
+fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    match op {
+        NativeOp::LinregStep => {
+            let w = mat(inputs[0])?;
+            let x = mat(inputs[1])?;
+            let y = mat(inputs[2])?;
+            let lr = inputs[3].scalar()?;
+            let (resid, loss) = forward(&w, &x, &y);
+            let grad = gradient(&x, &resid);
+            let w_next = w.sub(&grad.scale(lr));
+            Ok(vec![tensor(w_next), HostTensor::scalar_f32(loss)])
+        }
+        NativeOp::LinregGrad => {
+            let w = mat(inputs[0])?;
+            let x = mat(inputs[1])?;
+            let y = mat(inputs[2])?;
+            let (resid, loss) = forward(&w, &x, &y);
+            Ok(vec![tensor(gradient(&x, &resid)), HostTensor::scalar_f32(loss)])
+        }
+        NativeOp::LinregApply => {
+            let w = mat(inputs[0])?;
+            let g = mat(inputs[1])?;
+            let lr = inputs[2].scalar()?;
+            Ok(vec![tensor(w.sub(&g.scale(lr)))])
+        }
+        NativeOp::LinregEval => {
+            let w = mat(inputs[0])?;
+            let x = mat(inputs[1])?;
+            let y = mat(inputs[2])?;
+            let (_, loss) = forward(&w, &x, &y);
+            Ok(vec![HostTensor::scalar_f32(loss)])
+        }
+        other => bail!("op {other:?} is not in the linreg family"),
+    }
+}
+
+/// Mean-squared-error forward pass: residual `xW - y` and scalar loss.
+fn forward(w: &Matrix, x: &Matrix, y: &Matrix) -> (Matrix, f32) {
+    let resid = x.matmul(w).sub(y);
+    let b = x.rows.max(1) as f32;
+    let loss = resid.data.iter().map(|r| r * r).sum::<f32>() / b;
+    (resid, loss)
+}
+
+/// Exact MSE gradient: `(2 / b) x^T (xW - y)`.
+fn gradient(x: &Matrix, resid: &Matrix) -> Matrix {
+    let b = x.rows.max(1) as f32;
+    x.t().matmul(resid).scale(2.0 / b)
+}

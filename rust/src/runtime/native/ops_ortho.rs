@@ -1,0 +1,163 @@
+//! Native op family `ortho`: the paper's forward constructions — CWY and
+//! Householder orthogonal matrices (Thm 2), the T-CWY Stiefel frame
+//! (Thm 3), fused rollouts, and the frozen-parameter recurrent `cell_*`
+//! step artifacts the serve subsystem drives (DESIGN.md §6.2).
+//!
+//! | `meta.op`      | kind  | signature (roles)                              | computation |
+//! |----------------|-------|------------------------------------------------|-------------|
+//! | `cwy`          | micro | V `[l,n]` → Q `[n,n]`                          | Thm 2: `I - U S^-1 U^T` |
+//! | `hr`           | micro | V `[l,n]` → Q `[n,n]`                          | sequential Householder product |
+//! | `tcwy`         | micro | V `[m,n]` → Ω `[n,m]`                          | Thm 3 Stiefel frame |
+//! | `rollout_cwy`  | micro | V `[l,n]`, H `[b,n]` → `[b,n]`                 | fused `H @ Q` |
+//! | `rollout_hr`   | micro | V `[l,n]`, H `[b,n]` → `[b,n]`                 | sequential reflection chain |
+//! | `cell_cwy`     | step  | V `[l,n]` state, h `[b,n]` state, x `[b,n]` data, lr hyper → V', h', y | `h' = h Q(V) + x`, `y = h'` |
+//! | `cell_hr`      | step  | same as `cell_cwy`                             | same recurrence, HR chain |
+//! | `cell_tcwy`    | step  | V `[m,n]` state, h `[b,m]` state, x `[b,n]` data, lr hyper → V', h', y | `h' = h + x Ω(V)`, `y = h'` |
+//!
+//! The recurrent cells treat V as frozen parameters (`V' = V`): serving
+//! runs step artifacts with `lr = 0` by convention (DESIGN.md §6.2).  The
+//! *trainable* recurrent family is `rnn_copy_*` ([`super::ops_rnn`]).
+
+use anyhow::{bail, Result};
+
+use super::helpers::{dims2, expect_all_f32, expect_arity, expect_roles, expect_shape, mat, tensor};
+use super::{CellKind, FamilyDef, NativeOp};
+use crate::orthogonal::{cwy, householder, tcwy};
+use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::tensor::HostTensor;
+
+pub static FAMILY: FamilyDef = FamilyDef {
+    name: "ortho",
+    ops: &[
+        "cwy",
+        "hr",
+        "tcwy",
+        "rollout_cwy",
+        "rollout_hr",
+        "cell_cwy",
+        "cell_hr",
+        "cell_tcwy",
+    ],
+    resolve,
+    validate,
+    run,
+};
+
+fn resolve(op: &str, _spec: &ArtifactSpec) -> Option<Result<NativeOp>> {
+    Some(Ok(match op {
+        "cwy" => NativeOp::CwyMatrix,
+        "hr" => NativeOp::HrMatrix,
+        "tcwy" => NativeOp::TcwyMatrix,
+        "rollout_cwy" => NativeOp::RolloutCwy,
+        "rollout_hr" => NativeOp::RolloutHr,
+        "cell_cwy" => NativeOp::Cell(CellKind::Cwy),
+        "cell_hr" => NativeOp::Cell(CellKind::Hr),
+        "cell_tcwy" => NativeOp::Cell(CellKind::Tcwy),
+        _ => return None,
+    }))
+}
+
+/// Check the manifest signature against the op contract (shapes must be
+/// mutually consistent; the actual numbers are the manifest's choice).
+fn validate(spec: &ArtifactSpec, op: NativeOp) -> Result<()> {
+    expect_all_f32(spec)?;
+    match op {
+        NativeOp::CwyMatrix | NativeOp::HrMatrix => {
+            expect_arity(spec, 1, 1)?;
+            let (_, n) = dims2(&spec.inputs[0])?;
+            expect_shape(&spec.outputs[0], &[n, n])
+        }
+        NativeOp::TcwyMatrix => {
+            expect_arity(spec, 1, 1)?;
+            let (m, n) = dims2(&spec.inputs[0])?;
+            if m > n {
+                bail!("T-CWY needs M <= N, got V {:?}", spec.inputs[0].shape);
+            }
+            expect_shape(&spec.outputs[0], &[n, m])
+        }
+        NativeOp::RolloutCwy | NativeOp::RolloutHr => {
+            expect_arity(spec, 2, 1)?;
+            let (_, n) = dims2(&spec.inputs[0])?;
+            let (b, n2) = dims2(&spec.inputs[1])?;
+            if n2 != n {
+                bail!("V cols {n} != H cols {n2}");
+            }
+            expect_shape(&spec.outputs[0], &[b, n])
+        }
+        NativeOp::Cell(kind) => {
+            expect_arity(spec, 4, 3)?;
+            expect_roles(spec, &[Role::State, Role::State, Role::Data, Role::Hyper])?;
+            let (l, n) = dims2(&spec.inputs[0])?;
+            let (b, hn) = dims2(&spec.inputs[1])?;
+            let (bx, xn) = dims2(&spec.inputs[2])?;
+            if bx != b {
+                bail!("h rows {b} != x rows {bx}");
+            }
+            let h_cols = match kind {
+                CellKind::Cwy | CellKind::Hr => n,
+                CellKind::Tcwy => {
+                    if l > n {
+                        bail!("T-CWY cell needs M <= N, got V {:?}", spec.inputs[0].shape);
+                    }
+                    l
+                }
+            };
+            if hn != h_cols {
+                bail!("h cols {hn}, cell expects {h_cols}");
+            }
+            if xn != n {
+                bail!("x cols {xn}, cell expects {n}");
+            }
+            expect_shape(&spec.outputs[0], &[l, n])?;
+            expect_shape(&spec.outputs[1], &[b, hn])?;
+            expect_shape(&spec.outputs[2], &[b, hn])
+        }
+        other => bail!("op {other:?} is not in the ortho family"),
+    }
+}
+
+fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    match op {
+        NativeOp::CwyMatrix => {
+            let v = mat(inputs[0])?;
+            Ok(vec![tensor(cwy::matrix(&v))])
+        }
+        NativeOp::HrMatrix => {
+            let v = mat(inputs[0])?;
+            Ok(vec![tensor(householder::matrix(&v))])
+        }
+        NativeOp::TcwyMatrix => {
+            let v = mat(inputs[0])?;
+            Ok(vec![tensor(tcwy::matrix(&v))])
+        }
+        NativeOp::RolloutCwy => {
+            let v = mat(inputs[0])?;
+            let h = mat(inputs[1])?;
+            Ok(vec![tensor(cwy::CwyOperator::new(&v).apply(&h))])
+        }
+        NativeOp::RolloutHr => {
+            let v = mat(inputs[0])?;
+            let mut h = mat(inputs[1])?;
+            householder::apply_chain(&v, &mut h);
+            Ok(vec![tensor(h)])
+        }
+        NativeOp::Cell(kind) => {
+            let v = mat(inputs[0])?;
+            let h = mat(inputs[1])?;
+            let x = mat(inputs[2])?;
+            let h_next = match kind {
+                CellKind::Cwy => cwy::CwyOperator::new(&v).apply(&h).add(&x),
+                CellKind::Hr => {
+                    let mut rotated = h;
+                    householder::apply_chain(&v, &mut rotated);
+                    rotated.add(&x)
+                }
+                CellKind::Tcwy => h.add(&x.matmul(&tcwy::matrix(&v))),
+            };
+            // V is frozen (see module docs); state outputs come first,
+            // in state-input order, per the step convention (§2.2).
+            Ok(vec![inputs[0].clone(), tensor(h_next.clone()), tensor(h_next)])
+        }
+        other => bail!("op {other:?} is not in the ortho family"),
+    }
+}

@@ -1,0 +1,648 @@
+//! Native op family `rnn_copy`: a **trainable** orthogonal-recurrence RNN
+//! on the paper's copying task (§4.1) — the experiment the CWY
+//! parametrization exists for, now executable under plain `cargo test`
+//! with no Python and no PJRT.
+//!
+//! Model (linear orthogonal RNN, the §2.2 state being the parameters):
+//!
+//! ```text
+//! h_0 = 0
+//! h_{t+1} = h_t Q(V) + W_in[token_t]        Q per meta.param: cwy | hr | tcwy
+//! logits_t = h_{t+1} W_out + b_out          softmax CE vs target_t
+//! loss = mean over batch x time
+//! ```
+//!
+//! Gradients are exact BPTT through the parametrization
+//! ([`crate::orthogonal::backward`]): fused CWY accumulation for `cwy`,
+//! the sequential per-Householder chain for `hr`, and the Thm 3 Ω-path
+//! (square, St(N,N) = O(N)) for `tcwy`.  Every matmul routes through the
+//! blocked GEMM hot path.
+//!
+//! | `meta.op`        | kind  | signature (roles) |
+//! |------------------|-------|-------------------|
+//! | `rnn_copy_step`  | step  | V, W_in `[10,n]`, W_out `[n,9]`, b `[1,9]` state; tokens, targets `[b,t]` i32 data; lr hyper → params', loss, grad_norm |
+//! | `rnn_copy_grad`  | grad  | params (state), tokens, targets → ∇params, loss, grad_norm |
+//! | `rnn_copy_apply` | apply | params (state), ∇params (data), lr hyper → params' |
+//! | `rnn_copy_eval`  | eval  | params, tokens, targets (all data) → loss |
+//!
+//! `meta.param` selects the parametrization; `cwy`/`hr` differentiate the
+//! *same* function, so their gradients agree elementwise — the PR's
+//! acceptance check and the Fig. 2 story at the gradient level.
+
+use anyhow::{bail, Result};
+
+use super::helpers::{dims2, expect_arity, expect_dtype, expect_roles, expect_shape, mat, tensor};
+use super::{CellKind, FamilyDef, NativeOp, StepMode, PARAM_META_KEY};
+use crate::linalg::Matrix;
+use crate::orthogonal::backward::{hr_chain_backward, CwyGrad, TcwyGrad};
+use crate::orthogonal::{cwy, householder, tcwy};
+use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::tensor::{Dtype, HostTensor};
+
+/// Input alphabet of the copying task: blank, digits 1..=8, marker 9.
+pub const IN_VOCAB: usize = 10;
+/// Output classes: blank + digits 1..=8.
+pub const OUT_CLASSES: usize = 9;
+
+pub static FAMILY: FamilyDef = FamilyDef {
+    name: "rnn_copy",
+    ops: &["rnn_copy_step", "rnn_copy_grad", "rnn_copy_apply", "rnn_copy_eval"],
+    resolve,
+    validate,
+    run,
+};
+
+fn resolve(op: &str, spec: &ArtifactSpec) -> Option<Result<NativeOp>> {
+    let mode = match op {
+        "rnn_copy_step" => StepMode::Step,
+        "rnn_copy_grad" => StepMode::Grad,
+        "rnn_copy_apply" => StepMode::Apply,
+        "rnn_copy_eval" => StepMode::Eval,
+        _ => return None,
+    };
+    let kind = match spec.meta_str(PARAM_META_KEY) {
+        Some(p) => match CellKind::parse_param(p) {
+            Some(k) => k,
+            None => {
+                return Some(Err(anyhow::anyhow!(
+                    "bad '{PARAM_META_KEY}' meta '{p}' (expected cwy|hr|tcwy)"
+                )))
+            }
+        },
+        None => {
+            return Some(Err(anyhow::anyhow!(
+                "op '{op}' needs a '{PARAM_META_KEY}' meta key (cwy|hr|tcwy)"
+            )))
+        }
+    };
+    Some(Ok(NativeOp::RnnCopy(kind, mode)))
+}
+
+/// Validate the (V, W_in, W_out, b) parameter block starting at input
+/// `off`; returns the reflection shape (l, n).
+fn validate_params(spec: &ArtifactSpec, kind: CellKind, off: usize) -> Result<(usize, usize)> {
+    let (l, n) = dims2(&spec.inputs[off])?;
+    if kind == CellKind::Tcwy && l != n {
+        bail!(
+            "rnn_copy with param=tcwy needs square V (the recurrence lives \
+             on St(N,N) = O(N)), got {:?}",
+            spec.inputs[off].shape
+        );
+    }
+    expect_shape(&spec.inputs[off + 1], &[IN_VOCAB, n])?;
+    expect_shape(&spec.inputs[off + 2], &[n, OUT_CLASSES])?;
+    expect_shape(&spec.inputs[off + 3], &[1, OUT_CLASSES])?;
+    for ts in &spec.inputs[off..off + 4] {
+        expect_dtype(ts, Dtype::F32)?;
+    }
+    Ok((l, n))
+}
+
+/// Validate the (tokens, targets) data block starting at input `off`.
+fn validate_data(spec: &ArtifactSpec, off: usize) -> Result<()> {
+    let (b, t) = dims2(&spec.inputs[off])?;
+    if b == 0 || t == 0 {
+        bail!("tokens shape {:?} has an empty axis", spec.inputs[off].shape);
+    }
+    expect_shape(&spec.inputs[off + 1], &[b, t])?;
+    expect_dtype(&spec.inputs[off], Dtype::I32)?;
+    expect_dtype(&spec.inputs[off + 1], Dtype::I32)?;
+    Ok(())
+}
+
+fn param_shapes(l: usize, n: usize) -> [Vec<usize>; 4] {
+    [
+        vec![l, n],
+        vec![IN_VOCAB, n],
+        vec![n, OUT_CLASSES],
+        vec![1, OUT_CLASSES],
+    ]
+}
+
+fn validate(spec: &ArtifactSpec, op: NativeOp) -> Result<()> {
+    let NativeOp::RnnCopy(kind, mode) = op else {
+        bail!("op {op:?} is not in the rnn_copy family");
+    };
+    for ts in &spec.outputs {
+        expect_dtype(ts, Dtype::F32)?;
+    }
+    match mode {
+        StepMode::Step => {
+            expect_arity(spec, 7, 6)?;
+            expect_roles(
+                spec,
+                &[
+                    Role::State,
+                    Role::State,
+                    Role::State,
+                    Role::State,
+                    Role::Data,
+                    Role::Data,
+                    Role::Hyper,
+                ],
+            )?;
+            let (l, n) = validate_params(spec, kind, 0)?;
+            validate_data(spec, 4)?;
+            expect_shape(&spec.inputs[6], &[])?;
+            expect_dtype(&spec.inputs[6], Dtype::F32)?;
+            for (ts, want) in spec.outputs[..4].iter().zip(param_shapes(l, n)) {
+                expect_shape(ts, &want)?;
+            }
+            expect_shape(&spec.outputs[4], &[])?;
+            expect_shape(&spec.outputs[5], &[])
+        }
+        StepMode::Grad => {
+            expect_arity(spec, 6, 6)?;
+            expect_roles(
+                spec,
+                &[Role::State, Role::State, Role::State, Role::State, Role::Data, Role::Data],
+            )?;
+            let (l, n) = validate_params(spec, kind, 0)?;
+            validate_data(spec, 4)?;
+            for (ts, want) in spec.outputs[..4].iter().zip(param_shapes(l, n)) {
+                expect_shape(ts, &want)?;
+            }
+            expect_shape(&spec.outputs[4], &[])?;
+            expect_shape(&spec.outputs[5], &[])
+        }
+        StepMode::Apply => {
+            expect_arity(spec, 9, 4)?;
+            expect_roles(
+                spec,
+                &[
+                    Role::State,
+                    Role::State,
+                    Role::State,
+                    Role::State,
+                    Role::Data,
+                    Role::Data,
+                    Role::Data,
+                    Role::Data,
+                    Role::Hyper,
+                ],
+            )?;
+            let (l, n) = validate_params(spec, kind, 0)?;
+            let shapes = param_shapes(l, n);
+            for (ts, want) in spec.inputs[4..8].iter().zip(&shapes) {
+                expect_shape(ts, want)?;
+                expect_dtype(ts, Dtype::F32)?;
+            }
+            expect_shape(&spec.inputs[8], &[])?;
+            expect_dtype(&spec.inputs[8], Dtype::F32)?;
+            for (ts, want) in spec.outputs.iter().zip(&shapes) {
+                expect_shape(ts, want)?;
+            }
+            Ok(())
+        }
+        StepMode::Eval => {
+            expect_arity(spec, 6, 1)?;
+            // Pure function of (params..., data...): everything is data.
+            expect_roles(spec, &[Role::Data; 6])?;
+            validate_params(spec, kind, 0)?;
+            validate_data(spec, 4)?;
+            expect_shape(&spec.outputs[0], &[])
+        }
+    }
+}
+
+/// The four trainable tensors of the copy-task RNN.
+pub struct CopyRnnParams {
+    /// Reflection rows: (L, N), square (N, N) for `tcwy`.
+    pub v: Matrix,
+    /// Token embedding, (IN_VOCAB, N).
+    pub w_in: Matrix,
+    /// Readout, (N, OUT_CLASSES).
+    pub w_out: Matrix,
+    /// Readout bias, (1, OUT_CLASSES).
+    pub b_out: Matrix,
+}
+
+/// Gradients with respect to the four parameter tensors.
+pub struct CopyRnnGrads {
+    pub v: Matrix,
+    pub w_in: Matrix,
+    pub w_out: Matrix,
+    pub b_out: Matrix,
+}
+
+impl CopyRnnGrads {
+    /// Euclidean norm over the whole parameter block — the per-step
+    /// descent diagnostic surfaced in `metrics::History`.
+    pub fn global_norm(&self) -> f32 {
+        [&self.v, &self.w_in, &self.w_out, &self.b_out]
+            .iter()
+            .map(|m| m.data.iter().map(|x| x * x).sum::<f32>())
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+/// The recurrent transition `h → h Q` for each parametrization, with the
+/// state it needs to run BPTT afterwards.
+enum Transition {
+    Cwy(cwy::CwyOperator),
+    Hr,
+    /// Materialized square Ω (Thm 3 at M = N).
+    Tcwy(Matrix),
+}
+
+impl Transition {
+    fn new(kind: CellKind, v: &Matrix) -> Transition {
+        match kind {
+            CellKind::Cwy => Transition::Cwy(cwy::CwyOperator::new(v)),
+            CellKind::Hr => Transition::Hr,
+            CellKind::Tcwy => Transition::Tcwy(tcwy::matrix(v)),
+        }
+    }
+
+    fn apply(&self, v: &Matrix, h: &Matrix) -> Matrix {
+        match self {
+            Transition::Cwy(op) => op.apply(h),
+            Transition::Hr => {
+                let mut out = h.clone();
+                householder::apply_chain(v, &mut out);
+                out
+            }
+            Transition::Tcwy(omega) => h.matmul(omega),
+        }
+    }
+}
+
+/// Accumulates the V-path of the BPTT, per parametrization.
+enum TransitionGrad {
+    Cwy(CwyGrad),
+    Hr(Matrix),
+    Tcwy { grad: TcwyGrad, omega: Matrix, domega: Matrix },
+}
+
+impl TransitionGrad {
+    fn new(kind: CellKind, v: &Matrix, trans: &Transition) -> TransitionGrad {
+        match kind {
+            CellKind::Cwy => TransitionGrad::Cwy(CwyGrad::new(v)),
+            CellKind::Hr => TransitionGrad::Hr(Matrix::zeros(v.rows, v.cols)),
+            CellKind::Tcwy => {
+                let Transition::Tcwy(omega) = trans else { unreachable!() };
+                TransitionGrad::Tcwy {
+                    grad: TcwyGrad::new(v),
+                    omega: omega.clone(),
+                    domega: Matrix::zeros(omega.rows, omega.cols),
+                }
+            }
+        }
+    }
+
+    /// Backward through one transition `y = h Q`: upstream `g = dL/dy`,
+    /// stored input `h`; returns `dL/dh` and accumulates the V-path.
+    fn backward(&mut self, v: &Matrix, h: &Matrix, g: &Matrix) -> Matrix {
+        match self {
+            TransitionGrad::Cwy(grad) => grad.apply_backward(h, g),
+            TransitionGrad::Hr(dv) => {
+                let (dh, dvs) = hr_chain_backward(v, h, g);
+                *dv = dv.add(&dvs);
+                dh
+            }
+            TransitionGrad::Tcwy { omega, domega, .. } => {
+                *domega = domega.add(&h.t().matmul(g));
+                g.matmul(&omega.t())
+            }
+        }
+    }
+
+    fn into_dv(self, v: &Matrix) -> Matrix {
+        match self {
+            TransitionGrad::Cwy(grad) => grad.into_dv(v),
+            TransitionGrad::Hr(dv) => dv,
+            TransitionGrad::Tcwy { mut grad, domega, .. } => {
+                grad.matrix_backward(&domega);
+                grad.into_dv(v)
+            }
+        }
+    }
+}
+
+/// One copy-task batch viewed by the RNN: row-major `(batch, t_total)`
+/// token and target grids.
+pub struct CopyBatchRef<'a> {
+    pub tokens: &'a [i32],
+    pub targets: &'a [i32],
+    pub batch: usize,
+    pub t_total: usize,
+}
+
+/// Forward pass (and optionally exact BPTT) of the copy-task RNN.
+pub fn forward_backward(
+    kind: CellKind,
+    params: &CopyRnnParams,
+    data: &CopyBatchRef,
+    want_grads: bool,
+) -> Result<(f32, Option<CopyRnnGrads>)> {
+    let CopyRnnParams { v, w_in, w_out, b_out } = params;
+    let (batch, t_total) = (data.batch, data.t_total);
+    let n = v.cols;
+    let denom = (batch * t_total) as f32;
+    let trans = Transition::new(kind, v);
+
+    // ---- forward, storing hidden states and per-step logit gradients
+    let mut hs: Vec<Matrix> = Vec::with_capacity(t_total + 1);
+    hs.push(Matrix::zeros(batch, n));
+    let mut dlogits: Vec<Matrix> = Vec::with_capacity(t_total);
+    let mut loss_sum = 0.0f32;
+    for t in 0..t_total {
+        let mut x = Matrix::zeros(batch, n);
+        for b in 0..batch {
+            let tok = data.tokens[b * t_total + t];
+            if tok < 0 || tok as usize >= IN_VOCAB {
+                bail!("token {tok} at (row {b}, t {t}) outside 0..{IN_VOCAB}");
+            }
+            x.row_mut(b).copy_from_slice(w_in.row(tok as usize));
+        }
+        let h_next = trans.apply(v, hs.last().unwrap()).add(&x);
+        let logits = h_next.matmul(w_out);
+        let mut dl = Matrix::zeros(batch, OUT_CLASSES);
+        for b in 0..batch {
+            let tgt = data.targets[b * t_total + t];
+            if tgt < 0 || tgt as usize >= OUT_CLASSES {
+                bail!("target {tgt} at (row {b}, t {t}) outside 0..{OUT_CLASSES}");
+            }
+            // Stable softmax cross-entropy on logits + b_out.
+            let bias = b_out.row(0);
+            let mut mx = f32::NEG_INFINITY;
+            for (lc, bc) in logits.row(b).iter().zip(bias) {
+                mx = mx.max(lc + bc);
+            }
+            let mut e = [0.0f32; OUT_CLASSES];
+            let mut z = 0.0f32;
+            for ((ec, lc), bc) in e.iter_mut().zip(logits.row(b)).zip(bias) {
+                *ec = (lc + bc - mx).exp();
+                z += *ec;
+            }
+            loss_sum -= (e[tgt as usize] / z).max(1e-30).ln();
+            for (c, &ec) in e.iter().enumerate() {
+                let hit = if c == tgt as usize { 1.0 } else { 0.0 };
+                dl[(b, c)] = (ec / z - hit) / denom;
+            }
+        }
+        hs.push(h_next);
+        if want_grads {
+            dlogits.push(dl);
+        }
+    }
+    let loss = loss_sum / denom;
+    if !want_grads {
+        return Ok((loss, None));
+    }
+
+    // ---- backward (BPTT)
+    let mut tg = TransitionGrad::new(kind, v, &trans);
+    let mut d_win = Matrix::zeros(IN_VOCAB, n);
+    let mut d_wout = Matrix::zeros(n, OUT_CLASSES);
+    let mut d_b = Matrix::zeros(1, OUT_CLASSES);
+    let mut g = Matrix::zeros(batch, n);
+    for t in (0..t_total).rev() {
+        let dl = &dlogits[t];
+        d_wout = d_wout.add(&hs[t + 1].t().matmul(dl));
+        for b in 0..batch {
+            for c in 0..OUT_CLASSES {
+                d_b[(0, c)] += dl[(b, c)];
+            }
+        }
+        g = g.add(&dl.matmul(&w_out.t()));
+        // h_{t+1} = (h_t Q) + x_t: dx_t = g lands on the token's row of
+        // W_in; the transition backward yields dL/dh_t.
+        for b in 0..batch {
+            let tok = data.tokens[b * t_total + t] as usize;
+            for (dw, gv) in d_win.row_mut(tok).iter_mut().zip(g.row(b)) {
+                *dw += gv;
+            }
+        }
+        g = tg.backward(v, &hs[t], &g);
+    }
+    let grads = CopyRnnGrads { v: tg.into_dv(v), w_in: d_win, w_out: d_wout, b_out: d_b };
+    Ok((loss, Some(grads)))
+}
+
+struct Inputs {
+    params: CopyRnnParams,
+    tokens: Vec<i32>,
+    targets: Vec<i32>,
+    batch: usize,
+    t_total: usize,
+}
+
+impl Inputs {
+    fn data(&self) -> CopyBatchRef<'_> {
+        CopyBatchRef {
+            tokens: &self.tokens,
+            targets: &self.targets,
+            batch: self.batch,
+            t_total: self.t_total,
+        }
+    }
+}
+
+fn unpack(inputs: &[&HostTensor]) -> Result<Inputs> {
+    Ok(Inputs {
+        params: CopyRnnParams {
+            v: mat(inputs[0])?,
+            w_in: mat(inputs[1])?,
+            w_out: mat(inputs[2])?,
+            b_out: mat(inputs[3])?,
+        },
+        tokens: inputs[4].as_i32()?.to_vec(),
+        targets: inputs[5].as_i32()?.to_vec(),
+        batch: inputs[4].shape[0],
+        t_total: inputs[4].shape[1],
+    })
+}
+
+fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let NativeOp::RnnCopy(kind, mode) = op else {
+        bail!("op {op:?} is not in the rnn_copy family");
+    };
+    match mode {
+        StepMode::Step | StepMode::Grad => {
+            let inp = unpack(inputs)?;
+            let (loss, grads) = forward_backward(kind, &inp.params, &inp.data(), true)?;
+            let grads = grads.expect("grads requested");
+            let gnorm = grads.global_norm();
+            let out_params = match mode {
+                StepMode::Grad => [grads.v, grads.w_in, grads.w_out, grads.b_out],
+                _ => {
+                    let lr = inputs[6].scalar()?;
+                    let p = &inp.params;
+                    [
+                        p.v.sub(&grads.v.scale(lr)),
+                        p.w_in.sub(&grads.w_in.scale(lr)),
+                        p.w_out.sub(&grads.w_out.scale(lr)),
+                        p.b_out.sub(&grads.b_out.scale(lr)),
+                    ]
+                }
+            };
+            let mut out: Vec<HostTensor> = out_params.into_iter().map(tensor).collect();
+            out.push(HostTensor::scalar_f32(loss));
+            out.push(HostTensor::scalar_f32(gnorm));
+            Ok(out)
+        }
+        StepMode::Apply => {
+            let lr = inputs[8].scalar()?;
+            (0..4)
+                .map(|i| {
+                    let p = mat(inputs[i])?;
+                    let g = mat(inputs[4 + i])?;
+                    Ok(tensor(p.sub(&g.scale(lr))))
+                })
+                .collect()
+        }
+        StepMode::Eval => {
+            let inp = unpack(inputs)?;
+            let (loss, _) = forward_backward(kind, &inp.params, &inp.data(), false)?;
+            Ok(vec![HostTensor::scalar_f32(loss)])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orthogonal::backward::finite_diff;
+    use crate::util::rng::Pcg32;
+
+    struct Tiny {
+        params: CopyRnnParams,
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+        batch: usize,
+        t_total: usize,
+    }
+
+    impl Tiny {
+        fn data(&self) -> CopyBatchRef<'_> {
+            CopyBatchRef {
+                tokens: &self.tokens,
+                targets: &self.targets,
+                batch: self.batch,
+                t_total: self.t_total,
+            }
+        }
+    }
+
+    fn tiny_setup(seed: u64, l: usize, n: usize, b: usize, t: usize) -> Tiny {
+        let mut rng = Pcg32::seeded(seed);
+        let params = CopyRnnParams {
+            v: Matrix::random_normal(&mut rng, l, n, 1.0),
+            w_in: Matrix::random_normal(&mut rng, IN_VOCAB, n, 0.3),
+            w_out: Matrix::random_normal(&mut rng, n, OUT_CLASSES, 0.3),
+            b_out: Matrix::random_normal(&mut rng, 1, OUT_CLASSES, 0.1),
+        };
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(IN_VOCAB as u32) as i32).collect();
+        let targets: Vec<i32> = (0..b * t).map(|_| rng.below(OUT_CLASSES as u32) as i32).collect();
+        Tiny { params, tokens, targets, batch: b, t_total: t }
+    }
+
+    /// Exact-BPTT check: every parameter gradient matches central finite
+    /// differences of the f32 forward loss (tolerance-scaled for f32),
+    /// for all three parametrizations.
+    #[test]
+    fn gradients_match_finite_differences() {
+        for kind in [CellKind::Cwy, CellKind::Hr, CellKind::Tcwy] {
+            let (l, n, b, t) = match kind {
+                CellKind::Tcwy => (6, 6, 2, 5),
+                _ => (3, 6, 2, 5),
+            };
+            let tiny = tiny_setup(9, l, n, b, t);
+            let p = &tiny.params;
+            let loss_of = |params: &CopyRnnParams| {
+                forward_backward(kind, params, &tiny.data(), false).unwrap().0
+            };
+            let (_, grads) = forward_backward(kind, p, &tiny.data(), true).unwrap();
+            let grads = grads.unwrap();
+            let with = |v: Matrix, w_in: Matrix, w_out: Matrix, b_out: Matrix| {
+                CopyRnnParams { v, w_in, w_out, b_out }
+            };
+            // The loss is O(ln 9) and the FD quotient divides f32 noise by
+            // 2*eps, so compare with a scaled tolerance.
+            let eps = 3e-3;
+            let tol = 3e-3;
+            let fd_v = finite_diff(&p.v, eps, |x| {
+                loss_of(&with(x.clone(), p.w_in.clone(), p.w_out.clone(), p.b_out.clone()))
+            });
+            let fd_win = finite_diff(&p.w_in, eps, |x| {
+                loss_of(&with(p.v.clone(), x.clone(), p.w_out.clone(), p.b_out.clone()))
+            });
+            let fd_wout = finite_diff(&p.w_out, eps, |x| {
+                loss_of(&with(p.v.clone(), p.w_in.clone(), x.clone(), p.b_out.clone()))
+            });
+            let fd_b = finite_diff(&p.b_out, eps, |x| {
+                loss_of(&with(p.v.clone(), p.w_in.clone(), p.w_out.clone(), x.clone()))
+            });
+            let cases: [(&str, &Matrix, Matrix); 4] = [
+                ("v", &grads.v, fd_v),
+                ("w_in", &grads.w_in, fd_win),
+                ("w_out", &grads.w_out, fd_wout),
+                ("b_out", &grads.b_out, fd_b),
+            ];
+            for (name, analytic, numeric) in cases {
+                let scale = numeric.data.iter().fold(1.0f32, |m, x| m.max(x.abs()));
+                let err = analytic.max_abs_diff(&numeric) / scale;
+                assert!(err < tol, "{kind:?} d{name}: scaled FD error {err}");
+            }
+        }
+    }
+
+    /// cwy and hr parametrize the same function, so their BPTT gradients
+    /// agree elementwise (acceptance bound 1e-4) on the same rollout.
+    #[test]
+    fn cwy_and_hr_grads_agree_elementwise() {
+        let tiny = tiny_setup(21, 4, 12, 3, 8);
+        let run = |kind| forward_backward(kind, &tiny.params, &tiny.data(), true).unwrap();
+        let (loss_c, gc) = run(CellKind::Cwy);
+        let (loss_h, gh) = run(CellKind::Hr);
+        let (gc, gh) = (gc.unwrap(), gh.unwrap());
+        assert!((loss_c - loss_h).abs() <= 1e-5, "loss {loss_c} vs {loss_h}");
+        assert!(gc.v.max_abs_diff(&gh.v) <= 1e-4);
+        assert!(gc.w_in.max_abs_diff(&gh.w_in) <= 1e-4);
+        assert!(gc.w_out.max_abs_diff(&gh.w_out) <= 1e-4);
+        assert!(gc.b_out.max_abs_diff(&gh.b_out) <= 1e-4);
+    }
+
+    /// A few fused steps on a fixed batch drive the loss down — the
+    /// smallest possible descent smoke for the family itself (the full
+    /// below-baseline run lives in the trainer integration suite).
+    #[test]
+    fn repeated_steps_descend_on_fixed_batch() {
+        let mut tiny = tiny_setup(5, 4, 16, 4, 10);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let data = CopyBatchRef {
+                tokens: &tiny.tokens,
+                targets: &tiny.targets,
+                batch: tiny.batch,
+                t_total: tiny.t_total,
+            };
+            let (loss, grads) = forward_backward(CellKind::Cwy, &tiny.params, &data, true).unwrap();
+            let g = grads.unwrap();
+            losses.push(loss);
+            let lr = 0.5;
+            let p = &mut tiny.params;
+            p.v = p.v.sub(&g.v.scale(lr));
+            p.w_in = p.w_in.sub(&g.w_in.scale(lr));
+            p.w_out = p.w_out.sub(&g.w_out.scale(lr));
+            p.b_out = p.b_out.sub(&g.b_out.scale(lr));
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.5),
+            "no descent: {} -> {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn rejects_out_of_range_tokens() {
+        let mut tiny = tiny_setup(3, 2, 4, 1, 3);
+        tiny.tokens[1] = 12;
+        let err = forward_backward(CellKind::Cwy, &tiny.params, &tiny.data(), false).unwrap_err();
+        assert!(format!("{err:#}").contains("outside"), "{err:#}");
+    }
+}

@@ -133,6 +133,165 @@ mod native {
         let (step_loss, _) = tr.train_step(batch).unwrap();
         assert_eq!(a[0], step_loss);
     }
+
+    // ---- rnn_copy family: real manifold training on the copying task ----
+
+    /// Mean loss over a window of recorded steps.
+    fn window_mean(tr: &Trainer, range: std::ops::Range<usize>) -> f32 {
+        let w = &tr.history.records[range];
+        w.iter().map(|r| r.loss).sum::<f32>() / w.len() as f32
+    }
+
+    /// The paper's core experiment, natively executed: a CWY-parametrized
+    /// orthogonal-recurrence RNN trained on the copying task with the
+    /// k^-0.5 schedule (Thm 4) must beat the memoryless-predictor
+    /// baseline `10 ln 8 / (T + 20)` — which requires *actual memory*,
+    /// not class-frequency tricks — and the loss must strictly decrease
+    /// across the run (windowed means, so per-batch noise cancels).
+    #[test]
+    fn copy_task_training_descends_below_baseline() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::InvSqrt(0.5)).unwrap();
+        let mut provider = fixture::copy_provider(1);
+        for _ in 0..300 {
+            tr.train_step(provider()).unwrap();
+        }
+        let base = fixture::copy_baseline_ce();
+        let first10 = window_mean(&tr, 0..10);
+        assert!(first10 > base, "init loss {first10} already beats baseline {base}?");
+        let thirds = [
+            window_mean(&tr, 0..100),
+            window_mean(&tr, 100..200),
+            window_mean(&tr, 200..300),
+        ];
+        assert!(
+            thirds[0] > thirds[1] && thirds[1] > thirds[2],
+            "loss not strictly decreasing across the run: {thirds:?}"
+        );
+        let tail = tr.history.recent_mean_loss(10).unwrap();
+        assert!(
+            tail < base,
+            "final loss {tail} not below the memoryless baseline {base}"
+        );
+        // Satellite: the family surfaces per-step gradient norms, so the
+        // descent diagnostic is assertable, not just the loss.
+        let gn = tr.history.metric_series("grad_norm").expect("grad_norm surfaced");
+        assert_eq!(gn.len(), 300);
+        assert!(gn.iter().all(|g| g.is_finite() && *g > 0.0), "bad grad_norm");
+        assert_eq!(tr.history.metric_names, vec!["grad_norm".to_string()]);
+    }
+
+    /// Same training path through the T-CWY (Thm 3, square) Ω gradient.
+    #[test]
+    fn copy_task_tcwy_variant_trains_below_baseline() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "copy_tcwy_step", Schedule::InvSqrt(0.5)).unwrap();
+        let mut provider = fixture::copy_provider(2);
+        for _ in 0..200 {
+            tr.train_step(provider()).unwrap();
+        }
+        let base = fixture::copy_baseline_ce();
+        let tail = tr.history.recent_mean_loss(10).unwrap();
+        assert!(tail < base, "tcwy final loss {tail} not below baseline {base}");
+    }
+
+    /// Acceptance: fused CWY BPTT and the sequential per-Householder BPTT
+    /// produce elementwise-equal gradients (≤ 1e-4) on the same rollout —
+    /// same recorded init, same batch, two different algorithms.
+    #[test]
+    fn copy_cwy_and_hr_gradients_agree_on_the_same_rollout() {
+        let (_dir, e) = engine();
+        let cwy_grad = e.load("copy_cwy_grad").unwrap();
+        let hr_grad = e.load("copy_hr_grad").unwrap();
+        let state = e.initial_state("copy_cwy_step").unwrap();
+        let mut provider = fixture::copy_provider(5);
+        let batch = provider();
+        let mut inputs: Vec<&HostTensor> = state.iter().collect();
+        inputs.extend(batch.iter());
+        let a = cwy_grad.run_refs(&inputs).unwrap();
+        let b = hr_grad.run_refs(&inputs).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let d = x
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(y.as_f32().unwrap())
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d <= 1e-4, "grad output {i} diverges by {d}");
+        }
+    }
+
+    /// W=1 data parallelism must track the fused rnn_copy step exactly,
+    /// i32 batches and all.
+    #[test]
+    fn copy_data_parallel_one_worker_matches_fused_step() {
+        let (_dir, e) = engine();
+        let mut fused = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(0.2)).unwrap();
+        let mut dp = DataParallel::new(&e, "copy_cwy", 1, Schedule::Constant(0.2)).unwrap();
+        let mut p1 = fixture::copy_provider(7);
+        let mut p2 = fixture::copy_provider(7);
+        for _ in 0..5 {
+            let (loss_fused, _) = fused.train_step(p1()).unwrap();
+            let loss_dp = dp.train_step(vec![p2()]).unwrap();
+            assert!(
+                (loss_fused - loss_dp).abs() < 1e-5,
+                "fused {loss_fused} vs dp {loss_dp}"
+            );
+        }
+        for (a, b) in fused.params().iter().zip(dp.params()) {
+            let d = a
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(b.as_f32().unwrap())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d < 1e-5, "param divergence {d}");
+        }
+    }
+
+    /// Checkpoint replay through the new family is bit-identical (the
+    /// blocked GEMM keeps a deterministic accumulation order).
+    #[test]
+    fn copy_checkpoint_roundtrip_resumes_identically() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::InvSqrt(0.5)).unwrap();
+        let mut provider = fixture::copy_provider(3);
+        for _ in 0..5 {
+            tr.train_step(provider()).unwrap();
+        }
+        let ckpt_dir = TempDir::new("copy-ckpt").unwrap();
+        let path = ckpt_dir.path().join("copy.ckpt");
+        checkpoint::save(&path, tr.step, &tr.state).unwrap();
+
+        let batch = provider();
+        let (loss_a, _) = tr.train_step(batch.clone()).unwrap();
+
+        let mut tr2 = Trainer::new(&e, "copy_cwy_step", Schedule::InvSqrt(0.5)).unwrap();
+        let (step, state) = checkpoint::load(&path).unwrap();
+        tr2.restore(step, state).unwrap();
+        let (loss_b, _) = tr2.train_step(batch).unwrap();
+        assert_eq!(loss_a, loss_b, "restored replay diverged");
+        assert_eq!(tr.state, tr2.state);
+    }
+
+    /// The rnn_copy eval artifact is pure and equals the step's reported
+    /// (pre-update) loss on the same batch.
+    #[test]
+    fn copy_eval_is_pure_and_matches_step_loss() {
+        let (_dir, e) = engine();
+        let mut tr = Trainer::new(&e, "copy_cwy_step", Schedule::Constant(0.2)).unwrap();
+        let eval_art = e.load("copy_cwy_eval").unwrap();
+        let mut provider = fixture::copy_provider(9);
+        let batch = provider();
+        let a = evaluate(&eval_art, tr.params(), batch.clone()).unwrap();
+        let b = evaluate(&eval_art, tr.params(), batch.clone()).unwrap();
+        assert_eq!(a, b);
+        let (step_loss, _) = tr.train_step(batch).unwrap();
+        assert_eq!(a[0], step_loss);
+    }
 }
 
 /// Original artifact suites: only meaningful against the real PJRT
