@@ -1,58 +1,151 @@
-//! Native-backend GEMM: blocked/cache-tiled/multithreaded kernel vs the
-//! naive reference triple loop (`linalg::gemm`).  The blocked kernel is
-//! the hot path under every native-op execution (CWY construction,
-//! rollouts, linreg SGD), so the speedup here bounds native serve/train
-//! throughput.
+//! Native-backend GEMM: the transpose-aware packed kernel (`linalg::gemm`)
+//! vs the naive reference triple loop and the frozen PR-4 tiled kernel
+//! (`gemm::legacy`).  The gemm is the hot path under every native-op
+//! execution (CWY construction, rollouts, BPTT, linreg SGD), so the
+//! numbers here bound native serve/train throughput; the NT/TN rows
+//! additionally measure what transpose awareness saves over the
+//! materialize-then-multiply pattern the substrate replaced.
 //!
-//!   cargo bench --bench gemm_native            # default size sweep
+//!   cargo bench --bench gemm_native                    # default size sweep
 //!   cargo bench --bench gemm_native -- --max-n 1024
+//!   cargo bench --bench gemm_native -- --smoke --json BENCH_5.json
+//!
+//! `--smoke` runs every kernel once at one size (CI keeps the kernels
+//! from rotting); `--json PATH` merges median ns/op per kernel into the
+//! perf-trajectory file (`report::BenchJson`).
 
-use cwy::linalg::gemm::{matmul_blocked, matmul_naive};
+use cwy::linalg::gemm::{self, legacy, matmul_blocked, matmul_naive};
 use cwy::linalg::Matrix;
-use cwy::report::Table;
+use cwy::report::{BenchJson, Table};
 use cwy::util::cli::Args;
 use cwy::util::rng::Pcg32;
-use cwy::util::timing::bench;
+use cwy::util::timing::{bench_n, BenchStats};
 
 fn main() {
     let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
     let max_n = args.get_usize("max-n", 512);
-    let sizes: Vec<usize> = [64usize, 128, 192, 256, 384, 512, 768, 1024]
-        .into_iter()
-        .filter(|&n| n <= max_n)
-        .collect();
+    let sizes: Vec<usize> = if smoke {
+        vec![args.get_usize("n", 128)]
+    } else {
+        [64usize, 128, 192, 256, 384, 512, 768, 1024]
+            .into_iter()
+            .filter(|&n| n <= max_n)
+            .collect()
+    };
+    // Adaptive iteration counts sized off a 0.2 s budget, or exactly one
+    // iteration in smoke mode.
+    let timed = |name: &str, budget_s: f64, f: &mut dyn FnMut()| -> BenchStats {
+        if smoke {
+            bench_n(name, 1, 1, f)
+        } else {
+            cwy::util::timing::bench(name, 1, budget_s, f)
+        }
+    };
 
-    let mut table = Table::new(&["N", "naive ms", "blocked ms", "speedup", "max |diff|"]);
-    println!("# gemm_native: square f32 GEMM, naive vs blocked+threaded\n");
+    let mut json = BenchJson::new("gemm_native");
+    let mut table = Table::new(&["N", "kernel", "median ms", "vs naive"]);
+    println!("# gemm_native: f32 GEMM kernels (NN square + NT/TN transpose-aware)\n");
     for &n in &sizes {
         let mut rng = Pcg32::seeded(n as u64);
         let a = Matrix::random_normal(&mut rng, n, n, 1.0);
         let b = Matrix::random_normal(&mut rng, n, n, 1.0);
 
         // Parity first: a bench that measures the wrong answer is noise.
+        // (Only the NN-vs-naive diff is computed here; the TN/NT/beta=1
+        // variants are pinned bitwise by the linalg::gemm property tests,
+        // so no per-variant number is printed that was not measured.)
         let diff = matmul_blocked(&a, &b).max_abs_diff(&matmul_naive(&a, &b));
-        assert!(diff < 1e-3 * n as f32, "N={n}: kernels disagree by {diff}");
+        assert!(diff < 1e-3 * n as f32, "N={n}: NN kernels disagree by {diff}");
 
-        let s_naive = bench("naive", 1, 0.2, || {
+        let s_naive = timed("naive", 0.2, &mut || {
             std::hint::black_box(matmul_naive(&a, &b));
         });
-        let s_blocked = bench("blocked", 1, 0.2, || {
+        let s_legacy = timed("legacy", 0.2, &mut || {
+            std::hint::black_box(legacy::matmul(&a, &b));
+        });
+        let s_nn = timed("gemm_nn", 0.2, &mut || {
             std::hint::black_box(matmul_blocked(&a, &b));
         });
-        let speedup = s_naive.mean_s / s_blocked.mean_s.max(1e-12);
+
+        // Transpose-aware paths vs the PR-4 materialize-then-multiply
+        // pattern they replace (`x.t().matmul(y)` / `x.matmul(&y.t())`).
+        let mut out = Matrix::zeros(n, n);
+        let s_tn = timed("gemm_tn", 0.2, &mut || {
+            gemm::gemm(true, false, 1.0, &a, &b, 0.0, &mut out);
+            std::hint::black_box(&out);
+        });
+        let s_tn_mat = timed("materialized_tn", 0.2, &mut || {
+            std::hint::black_box(legacy::matmul(&a.t(), &b));
+        });
+        let s_nt = timed("gemm_nt", 0.2, &mut || {
+            gemm::gemm(false, true, 1.0, &a, &b, 0.0, &mut out);
+            std::hint::black_box(&out);
+        });
+        let s_nt_mat = timed("materialized_nt", 0.2, &mut || {
+            std::hint::black_box(legacy::matmul(&a, &b.t()));
+        });
+        // Fused accumulation vs allocate-product-then-add.
+        let mut acc = Matrix::zeros(n, n);
+        let s_fused = timed("gemm_nn_beta1", 0.2, &mut || {
+            gemm::gemm(false, false, 1.0, &a, &b, 1.0, &mut acc);
+            std::hint::black_box(&acc);
+        });
+        let s_addmm = timed("add_of_product", 0.2, &mut || {
+            acc = acc.add(&legacy::matmul(&a, &b));
+            std::hint::black_box(&acc);
+        });
+
+        let rows: [(&str, &BenchStats); 8] = [
+            ("naive", &s_naive),
+            ("legacy (PR-4)", &s_legacy),
+            ("gemm NN", &s_nn),
+            ("gemm TN", &s_tn),
+            ("materialized TN", &s_tn_mat),
+            ("gemm NT", &s_nt),
+            ("materialized NT", &s_nt_mat),
+            ("gemm NN beta=1", &s_fused),
+            // add_of_product reported via println below (not vs-naive
+            // comparable; it includes the allocating add pass)
+        ];
+        for (label, s) in rows {
+            let speedup = s_naive.median_s / s.median_s.max(1e-12);
+            table.row(&[
+                n.to_string(),
+                label.to_string(),
+                format!("{:.3}", s.median_ms()),
+                format!("{speedup:.2}x"),
+            ]);
+        }
         println!(
-            "N={n:<5} naive {:>9.3} ms   blocked {:>9.3} ms   {speedup:.2}x   diff {diff:.2e}",
-            s_naive.mean_ms(),
-            s_blocked.mean_ms()
+            "N={n:<5} naive {:>8.3} ms  legacy {:>8.3} ms  NN {:>8.3} ms  \
+             TN {:>8.3}/{:>8.3} ms  NT {:>8.3}/{:>8.3} ms  beta1 {:>8.3} ms \
+             (add-of-product {:>8.3} ms, NN diff {diff:.2e})",
+            s_naive.median_ms(),
+            s_legacy.median_ms(),
+            s_nn.median_ms(),
+            s_tn.median_ms(),
+            s_tn_mat.median_ms(),
+            s_nt.median_ms(),
+            s_nt_mat.median_ms(),
+            s_fused.median_ms(),
+            s_addmm.median_ms(),
         );
-        table.row(&[
-            n.to_string(),
-            format!("{:.3}", s_naive.mean_ms()),
-            format!("{:.3}", s_blocked.mean_ms()),
-            format!("{speedup:.2}x"),
-            format!("{diff:.2e}"),
-        ]);
+
+        json.push(&format!("gemm_nn_n{n}"), s_nn.median_ns());
+        json.push(&format!("gemm_tn_n{n}"), s_tn.median_ns());
+        json.push(&format!("gemm_nt_n{n}"), s_nt.median_ns());
+        json.push(&format!("gemm_nn_beta1_n{n}"), s_fused.median_ns());
+        json.push(&format!("legacy_nn_n{n}"), s_legacy.median_ns());
+        json.push(&format!("naive_nn_n{n}"), s_naive.median_ns());
     }
-    println!("\n## GEMM kernels (f32, square N)\n");
+    println!("\n## GEMM kernels (f32; median of adaptive runs)\n");
     print!("{}", table.to_markdown());
+    if let Some(path) = args.get("json") {
+        json.merge_write(path).expect("writing bench json");
+        println!(
+            "\n# medians merged into {}",
+            BenchJson::resolve_trajectory_path(path).display()
+        );
+    }
 }

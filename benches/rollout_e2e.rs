@@ -1,0 +1,152 @@
+//! End-to-end native training step of the copy-task RNN (`rnn_copy`
+//! family): forward rollout + exact BPTT + in-place SGD apply, timed as
+//! one unit — the op the trainer hot loop and `cwy train --backend
+//! native` actually execute per step.
+//!
+//! Two variants isolate what the ISSUE 5 substrate buys at the full-step
+//! level:
+//!
+//! * **workspace** — reused [`RolloutWorkspace`]: zero heap allocations
+//!   at steady state (pinned by `tests/alloc_discipline`);
+//! * **fresh** — the same math through a throwaway workspace per step,
+//!   i.e. the allocation profile the pre-ISSUE-5 path paid.
+//!
+//!   cargo bench --bench rollout_e2e                  # default sweep
+//!   cargo bench --bench rollout_e2e -- --smoke --json BENCH_5.json
+
+use cwy::linalg::Matrix;
+use cwy::report::{BenchJson, Table};
+use cwy::runtime::native::ops_rnn::{
+    forward_backward_ws, CopyBatchRef, CopyRnnParams, RolloutWorkspace, IN_VOCAB, OUT_CLASSES,
+};
+use cwy::runtime::native::CellKind;
+use cwy::util::cli::Args;
+use cwy::util::rng::Pcg32;
+use cwy::util::timing::{bench, bench_n, BenchStats};
+
+struct Setup {
+    params: CopyRnnParams,
+    tokens: Vec<i32>,
+    targets: Vec<i32>,
+    batch: usize,
+    t_total: usize,
+}
+
+fn setup(seed: u64, l: usize, n: usize, b: usize, t: usize) -> Setup {
+    let mut rng = Pcg32::seeded(seed);
+    let params = CopyRnnParams {
+        v: Matrix::random_normal(&mut rng, l, n, 1.0),
+        w_in: Matrix::random_normal(&mut rng, IN_VOCAB, n, 0.3),
+        w_out: Matrix::random_normal(&mut rng, n, OUT_CLASSES, 0.3),
+        b_out: Matrix::random_normal(&mut rng, 1, OUT_CLASSES, 0.1),
+    };
+    let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(IN_VOCAB as u32) as i32).collect();
+    let targets: Vec<i32> = (0..b * t).map(|_| rng.below(OUT_CLASSES as u32) as i32).collect();
+    Setup { params, tokens, targets, batch: b, t_total: t }
+}
+
+impl Setup {
+    fn data(&self) -> CopyBatchRef<'_> {
+        CopyBatchRef {
+            tokens: &self.tokens,
+            targets: &self.targets,
+            batch: self.batch,
+            t_total: self.t_total,
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    // (L, N, B, T): the middle row matches the bptt_native acceptance
+    // configuration; the copy task itself runs T = t_blank + 20.
+    let shapes: Vec<(usize, usize, usize, usize)> = if smoke {
+        vec![(16, 64, 4, 8)]
+    } else {
+        vec![(16, 64, 16, 84), (64, 128, 16, 64), (64, 256, 32, 84)]
+    };
+    let timed = |name: &str, f: &mut dyn FnMut()| -> BenchStats {
+        if smoke {
+            bench_n(name, 1, 1, f)
+        } else {
+            bench(name, 1, 0.5, f)
+        }
+    };
+
+    println!("# rollout_e2e: full rnn_copy training step (forward + BPTT + SGD), param=cwy\n");
+    let mut json = BenchJson::new("rollout_e2e");
+    let mut table = Table::new(&[
+        "L", "N", "B", "T", "step ms (workspace)", "step ms (fresh)", "ws speedup", "eval ms",
+    ]);
+    for &(l, n, b, t) in &shapes {
+        let mut s = setup((l * 131 + n) as u64, l, n, b, t);
+        let mut rws = RolloutWorkspace::new();
+        // Warm the workspace (and validate the data path) once.
+        forward_backward_ws(CellKind::Cwy, &s.params, &s.data(), true, &mut rws).unwrap();
+
+        let s_ws = timed("train_step_ws", &mut || {
+            let data = CopyBatchRef {
+                tokens: &s.tokens,
+                targets: &s.targets,
+                batch: s.batch,
+                t_total: s.t_total,
+            };
+            forward_backward_ws(CellKind::Cwy, &s.params, &data, true, &mut rws).unwrap();
+            s.params.sgd_step(rws.grads(), 1e-3);
+            std::hint::black_box(&s.params);
+        });
+        let s_fresh = timed("train_step_fresh", &mut || {
+            let mut fresh = RolloutWorkspace::new();
+            let data = CopyBatchRef {
+                tokens: &s.tokens,
+                targets: &s.targets,
+                batch: s.batch,
+                t_total: s.t_total,
+            };
+            forward_backward_ws(CellKind::Cwy, &s.params, &data, true, &mut fresh).unwrap();
+            s.params.sgd_step(fresh.grads(), 1e-3);
+            std::hint::black_box(&s.params);
+        });
+        let s_eval = timed("eval_forward", &mut || {
+            let data = CopyBatchRef {
+                tokens: &s.tokens,
+                targets: &s.targets,
+                batch: s.batch,
+                t_total: s.t_total,
+            };
+            let loss =
+                forward_backward_ws(CellKind::Cwy, &s.params, &data, false, &mut rws).unwrap();
+            std::hint::black_box(loss);
+        });
+        let speedup = s_fresh.median_s / s_ws.median_s.max(1e-12);
+        println!(
+            "L={l:<3} N={n:<4} B={b:<3} T={t:<3} step {:>9.3} ms (fresh {:>9.3} ms, {speedup:.2}x)   eval {:>9.3} ms",
+            s_ws.median_ms(),
+            s_fresh.median_ms(),
+            s_eval.median_ms()
+        );
+        table.row(&[
+            l.to_string(),
+            n.to_string(),
+            b.to_string(),
+            t.to_string(),
+            format!("{:.3}", s_ws.median_ms()),
+            format!("{:.3}", s_fresh.median_ms()),
+            format!("{speedup:.2}x"),
+            format!("{:.3}", s_eval.median_ms()),
+        ]);
+        json.push(&format!("train_step_l{l}_n{n}_b{b}_t{t}"), s_ws.median_ns());
+        json.push(&format!("train_step_fresh_l{l}_n{n}_b{b}_t{t}"), s_fresh.median_ns());
+        json.push(&format!("eval_forward_l{l}_n{n}_b{b}_t{t}"), s_eval.median_ns());
+    }
+    println!("\n## rnn_copy end-to-end training step (f32, param=cwy)\n");
+    print!("{}", table.to_markdown());
+    if let Some(path) = args.get("json") {
+        json.merge_write(path).expect("writing bench json");
+        println!(
+            "\n# medians merged into {}",
+            BenchJson::resolve_trajectory_path(path).display()
+        );
+    }
+}

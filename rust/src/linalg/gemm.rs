@@ -1,34 +1,64 @@
-//! Blocked, cache-tiled, multithreaded GEMM — the hot path under the
-//! native execution backend (DESIGN.md §3.1).
+//! Transpose-aware, allocation-free GEMM — the hot path under the native
+//! execution backend (DESIGN.md §3.1, §3.3).
 //!
-//! Two kernels share one accumulation order (k ascending per output
-//! element), so they agree bitwise and the property suite can compare
-//! them tightly:
+//! The single entry point is [`gemm`]:
 //!
-//! * [`matmul_naive`] — the reference (i, k, j) triple loop, kept as the
-//!   parity baseline for tests and `benches/gemm_native`;
-//! * [`matmul_blocked`] — tiles the reduction axis in [`TILE_K`] panels
-//!   and the output columns in [`TILE_J`] strips so each `B` panel stays
-//!   cache-resident across a whole row band, then splits the row bands
-//!   over `std::thread::scope` workers (no extra dependencies).
+//! ```text
+//! C = beta * C + alpha * op(A) @ op(B)      op(X) = X or X^T
+//! ```
 //!
-//! `Matrix::matmul` routes everything here; small products take the
-//! single-threaded tiled path (spawning threads under
-//! [`PARALLEL_FLOP_CUTOFF`] multiply-adds costs more than it saves).
+//! which subsumes every product the CWY forward/backward substrate needs
+//! (NN, NT, TN — and TT for completeness) *without materializing a
+//! transposed copy as a fresh `Matrix`* and *without allocating the
+//! output*: transposed operands are packed once per call into a
+//! thread-local panel buffer that is reused across calls, so the packed
+//! rows stream cache-friendly through the same microkernel the plain
+//! path uses, and steady-state callers perform zero heap allocations.
+//!
+//! # Accumulation-order contract (bitwise parity)
+//!
+//! The whole test suite leans on one invariant, inherited from the seed:
+//! every output element is a single serial sum over `k` in ascending
+//! order, with the `a_ik == 0.0` skip applied identically everywhere.
+//! The microkernel therefore accumulates each `C` element into a
+//! zero-initialized scratch row (full `k` sweep) and only then combines
+//! `beta * c + alpha * acc` in one rounding step per term.  Consequences:
+//!
+//! * `gemm(NN, 1, A, B, 0, C)` is bitwise identical to [`matmul_naive`];
+//! * `gemm(TN/NT/TT, ...)` is bitwise identical to materializing the
+//!   transpose(s) and calling the NN path (packing reorders memory, not
+//!   arithmetic);
+//! * `gemm(_, _, α, A, B, 1, C)` is bitwise identical to
+//!   `C.add(&product.scale(α))`, so fused accumulation can replace the
+//!   allocating `add`/`sub` chains with no numeric drift at all.
+//!
+//! The microkernel is 4×-row-blocked: four output rows share each
+//! streamed `op(B)` row, and the four accumulator rows are independent
+//! serial chains, so the inner loop vectorizes over columns (SIMD) and
+//! keeps four FMA chains in flight (ILP) without touching the per-element
+//! accumulation order.
+//!
+//! The frozen PR-4 kernel lives in [`legacy`] as the measurement baseline
+//! for `benches/bptt_native` / `BENCH_5.json` and as a bitwise parity
+//! oracle for the packed paths.
+
+use std::cell::RefCell;
 
 use crate::linalg::Matrix;
 
-/// Rows of `B` (reduction-axis panel) kept hot while a row band runs.
-pub const TILE_K: usize = 64;
-/// Output-column strip width: one strip of an output row plus the
-/// matching `B` panel columns fit in L1 together.
-pub const TILE_J: usize = 256;
+/// Output-column strip width: one scratch strip (4 rows x TILE_J) plus
+/// the streamed `op(B)` row segment stay L1-resident.
+pub const TILE_J: usize = 128;
+/// Microkernel height: output rows per block, each an independent
+/// accumulator chain.
+pub const MR: usize = 4;
 /// Multiply-add count below which thread spawn overhead dominates and
-/// the single-threaded tiled kernel wins.
+/// the single-threaded kernel wins.
 pub const PARALLEL_FLOP_CUTOFF: usize = 1 << 18;
 
 /// Reference kernel: straightforward (i, k, j) loop, inner loop
-/// contiguous in both `b` and `out` rows.
+/// contiguous in both `b` and `out` rows.  Kept allocating and simple —
+/// it is the parity baseline for tests and `benches/gemm_native`.
 pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     let mut out = Matrix::zeros(a.rows, b.cols);
@@ -47,42 +77,6 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
         }
     }
     out
-}
-
-/// Tiled kernel over one band of output rows (`i0..i0 + rows`).
-///
-/// Loop order (kb, jb, i, kk) walks the reduction axis in ascending
-/// order for every output element, so results match [`matmul_naive`]
-/// bitwise while the `TILE_K x TILE_J` panel of `b` is reused across
-/// all rows of the band.
-fn band_kernel(a: &[f32], k: usize, n: usize, i0: usize, out_band: &mut [f32], b: &[f32]) {
-    if n == 0 {
-        return;
-    }
-    let rows = out_band.len() / n;
-    let mut kb = 0;
-    while kb < k {
-        let kend = (kb + TILE_K).min(k);
-        let mut jb = 0;
-        while jb < n {
-            let jend = (jb + TILE_J).min(n);
-            for i in 0..rows {
-                let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
-                let orow = &mut out_band[i * n + jb..i * n + jend];
-                for (kk, &aik) in arow[kb..kend].iter().enumerate() {
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[(kb + kk) * n + jb..(kb + kk) * n + jend];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += aik * bv;
-                    }
-                }
-            }
-            jb = jend;
-        }
-        kb = kend;
-    }
 }
 
 fn hardware_threads() -> usize {
@@ -114,56 +108,333 @@ impl Drop for GemmSlot {
     }
 }
 
-/// Blocked, multithreaded matmul: `out = a @ b`.
-///
-/// Output rows are split into contiguous bands, one scoped thread per
-/// band; bands are disjoint `&mut` slices of the output buffer, so no
-/// synchronization is needed beyond the scope join.
-pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut out = Matrix::zeros(m, n);
-    if m == 0 || n == 0 || k == 0 {
-        return out;
-    }
-    if m * k * n < PARALLEL_FLOP_CUTOFF {
-        band_kernel(&a.data, k, n, 0, &mut out.data, &b.data);
-        return out;
-    }
-    let slot = GemmSlot::acquire();
-    let threads = slot.budget.min(m);
-    if threads <= 1 {
-        band_kernel(&a.data, k, n, 0, &mut out.data, &b.data);
-        return out;
-    }
-    let rows_per = m.div_ceil(threads);
-    let (a_data, b_data) = (&a.data[..], &b.data[..]);
-    std::thread::scope(|s| {
-        for (band_idx, out_band) in out.data.chunks_mut(rows_per * n).enumerate() {
-            s.spawn(move || {
-                band_kernel(a_data, k, n, band_idx * rows_per, out_band, b_data);
-            });
+thread_local! {
+    /// Reused packing buffers for transposed operands (`op = ^T`).  They
+    /// grow to the largest panel a thread ever needs and then serve every
+    /// later call allocation-free; per-thread residency is bounded by the
+    /// largest transposed operand the workload touches.
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Pack `src` (r x c, row-major) transposed into `dst` (c x r, row-major),
+/// reusing `dst`'s capacity.  Reorders memory only — every later
+/// multiply-add sees the same values in the same `k` order.
+fn pack_transposed(src: &Matrix, dst: &mut Vec<f32>) {
+    let (r, c) = (src.rows, src.cols);
+    dst.clear();
+    dst.resize(r * c, 0.0);
+    for i in 0..r {
+        let srow = &src.data[i * c..(i + 1) * c];
+        for (j, &v) in srow.iter().enumerate() {
+            dst[j * r + i] = v;
         }
+    }
+}
+
+/// The microkernel over one band of output rows (`i0..i0 + rows`).
+///
+/// `x` is `op(A)` row-major (m x k), `bp` is `op(B)` row-major (k x n);
+/// `cband` holds rows `i0..` of `C`.  Each element's sum is accumulated
+/// in a scratch strip over the full ascending `k` range, then combined
+/// as `beta * c + alpha * acc` in a single pass — see the module docs
+/// for why this exact shape is load-bearing.
+#[allow(clippy::too_many_arguments)]
+fn band_kernel(
+    x: &[f32],
+    kdim: usize,
+    n: usize,
+    i0: usize,
+    alpha: f32,
+    beta: f32,
+    bp: &[f32],
+    cband: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let rows = cband.len() / n;
+    let mut scratch = [0.0f32; MR * TILE_J];
+    let mut jb = 0;
+    while jb < n {
+        let jw = TILE_J.min(n - jb);
+        let mut i = 0;
+        // 4-row blocks: one streamed bp row feeds four accumulator rows.
+        while i + MR <= rows {
+            let (s0, rest) = scratch.split_at_mut(jw);
+            let (s1, rest) = rest.split_at_mut(jw);
+            let (s2, rest) = rest.split_at_mut(jw);
+            let s3 = &mut rest[..jw];
+            s0.fill(0.0);
+            s1.fill(0.0);
+            s2.fill(0.0);
+            s3.fill(0.0);
+            let x0 = &x[(i0 + i) * kdim..(i0 + i + 1) * kdim];
+            let x1 = &x[(i0 + i + 1) * kdim..(i0 + i + 2) * kdim];
+            let x2 = &x[(i0 + i + 2) * kdim..(i0 + i + 3) * kdim];
+            let x3 = &x[(i0 + i + 3) * kdim..(i0 + i + 4) * kdim];
+            for kk in 0..kdim {
+                let brow = &bp[kk * n + jb..kk * n + jb + jw];
+                let (a0, a1, a2, a3) = (x0[kk], x1[kk], x2[kk], x3[kk]);
+                if a0 != 0.0 {
+                    for (s, &bv) in s0.iter_mut().zip(brow) {
+                        *s += a0 * bv;
+                    }
+                }
+                if a1 != 0.0 {
+                    for (s, &bv) in s1.iter_mut().zip(brow) {
+                        *s += a1 * bv;
+                    }
+                }
+                if a2 != 0.0 {
+                    for (s, &bv) in s2.iter_mut().zip(brow) {
+                        *s += a2 * bv;
+                    }
+                }
+                if a3 != 0.0 {
+                    for (s, &bv) in s3.iter_mut().zip(brow) {
+                        *s += a3 * bv;
+                    }
+                }
+            }
+            for (r, srow) in [&*s0, &*s1, &*s2, &*s3].into_iter().enumerate() {
+                combine(&mut cband[(i + r) * n + jb..(i + r) * n + jb + jw], srow, alpha, beta);
+            }
+            i += MR;
+        }
+        // Remainder rows, one accumulator chain each.
+        while i < rows {
+            let s0 = &mut scratch[..jw];
+            s0.fill(0.0);
+            let xr = &x[(i0 + i) * kdim..(i0 + i + 1) * kdim];
+            for (kk, &aik) in xr.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bp[kk * n + jb..kk * n + jb + jw];
+                for (s, &bv) in s0.iter_mut().zip(brow) {
+                    *s += aik * bv;
+                }
+            }
+            combine(&mut cband[i * n + jb..i * n + jb + jw], s0, alpha, beta);
+            i += 1;
+        }
+        jb += jw;
+    }
+}
+
+/// `c = beta * c + alpha * s`, one rounding per term so the fused form
+/// matches `c.scale(beta).add(&product.scale(alpha))` bitwise.  `beta == 0`
+/// never reads `c` (the buffer may hold stale workspace contents).
+#[inline]
+fn combine(crow: &mut [f32], srow: &[f32], alpha: f32, beta: f32) {
+    if beta == 0.0 {
+        for (c, &s) in crow.iter_mut().zip(srow) {
+            *c = alpha * s;
+        }
+    } else if beta == 1.0 {
+        for (c, &s) in crow.iter_mut().zip(srow) {
+            *c += alpha * s;
+        }
+    } else {
+        for (c, &s) in crow.iter_mut().zip(srow) {
+            *c = beta * *c + alpha * s;
+        }
+    }
+}
+
+/// General matrix multiply-accumulate: `c = beta*c + alpha*op(a)@op(b)`,
+/// with `op` selected per operand by `trans_a` / `trans_b`.
+///
+/// * No allocation of the output — `c` must be preshaped to
+///   `(op(a).rows, op(b).cols)` (asserted).
+/// * Transposed operands are packed into reused thread-local panels, so
+///   `x.t().matmul(&y)`-style call sites collapse to one call with zero
+///   temporaries (transpose-variant cheat sheet in DESIGN.md §3.3).
+/// * `beta = 0.0` overwrites (never reads) `c`; `beta = 1.0` fuses the
+///   `d += a@b` accumulation pattern of the BPTT.
+/// * Output rows split across scoped threads above
+///   [`PARALLEL_FLOP_CUTOFF`] multiply-adds, as before.
+pub fn gemm(
+    trans_a: bool,
+    trans_b: bool,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &mut Matrix,
+) {
+    let (m, ka) = if trans_a { (a.cols, a.rows) } else { (a.rows, a.cols) };
+    let (kb, n) = if trans_b { (b.cols, b.rows) } else { (b.rows, b.cols) };
+    assert_eq!(ka, kb, "gemm reduction-dim mismatch");
+    assert_eq!((c.rows, c.cols), (m, n), "gemm output shape mismatch");
+    let k = ka;
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 || alpha == 0.0 {
+        // No products contribute; only the beta term remains.
+        if beta == 0.0 {
+            c.data.fill(0.0);
+        } else if beta != 1.0 {
+            for v in &mut c.data {
+                *v *= beta;
+            }
+        }
+        return;
+    }
+    PACK_A.with(|pa| {
+        PACK_B.with(|pb| {
+            let (mut pa, mut pb) = (pa.borrow_mut(), pb.borrow_mut());
+            if trans_a {
+                pack_transposed(a, &mut pa);
+            }
+            if trans_b {
+                pack_transposed(b, &mut pb);
+            }
+            let x: &[f32] = if trans_a { &pa } else { &a.data };
+            let bp: &[f32] = if trans_b { &pb } else { &b.data };
+            if m * k * n < PARALLEL_FLOP_CUTOFF {
+                band_kernel(x, k, n, 0, alpha, beta, bp, &mut c.data);
+                return;
+            }
+            let slot = GemmSlot::acquire();
+            let threads = slot.budget.min(m);
+            if threads <= 1 {
+                band_kernel(x, k, n, 0, alpha, beta, bp, &mut c.data);
+                return;
+            }
+            let rows_per = m.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (band_idx, out_band) in c.data.chunks_mut(rows_per * n).enumerate() {
+                    s.spawn(move || {
+                        band_kernel(x, k, n, band_idx * rows_per, alpha, beta, bp, out_band);
+                    });
+                }
+            });
+        })
     });
+}
+
+/// Plain product `a @ b` through the [`gemm`] NN path (allocates the
+/// output; `Matrix::matmul` routes here).
+pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    gemm(false, false, 1.0, a, b, 0.0, &mut out);
     out
+}
+
+/// The frozen PR-4 GEMM: blocked/cache-tiled band kernel with per-call
+/// output allocation and no transpose awareness.  Kept verbatim as (a)
+/// the baseline `benches/bptt_native` and `BENCH_5.json` measure the
+/// substrate against, and (b) a bitwise parity oracle — it shares the
+/// ascending-`k` accumulation order and zero-skip with [`gemm`], so the
+/// two must agree to the last bit.
+pub mod legacy {
+    use super::Matrix;
+
+    const TILE_K: usize = 64;
+    const TILE_J: usize = 256;
+
+    fn band_kernel(a: &[f32], k: usize, n: usize, i0: usize, out_band: &mut [f32], b: &[f32]) {
+        if n == 0 {
+            return;
+        }
+        let rows = out_band.len() / n;
+        let mut kb = 0;
+        while kb < k {
+            let kend = (kb + TILE_K).min(k);
+            let mut jb = 0;
+            while jb < n {
+                let jend = (jb + TILE_J).min(n);
+                for i in 0..rows {
+                    let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+                    let orow = &mut out_band[i * n + jb..i * n + jend];
+                    for (kk, &aik) in arow[kb..kend].iter().enumerate() {
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[(kb + kk) * n + jb..(kb + kk) * n + jend];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += aik * bv;
+                        }
+                    }
+                }
+                jb = jend;
+            }
+            kb = kend;
+        }
+    }
+
+    /// PR-4 `Matrix::matmul`: allocate + zero the output, run the tiled
+    /// band kernel, threading above the same FLOP cutoff.
+    pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut out = Matrix::zeros(m, n);
+        if m == 0 || n == 0 || k == 0 {
+            return out;
+        }
+        if m * k * n < super::PARALLEL_FLOP_CUTOFF {
+            band_kernel(&a.data, k, n, 0, &mut out.data, &b.data);
+            return out;
+        }
+        let slot = super::GemmSlot::acquire();
+        let threads = slot.budget.min(m);
+        if threads <= 1 {
+            band_kernel(&a.data, k, n, 0, &mut out.data, &b.data);
+            return out;
+        }
+        let rows_per = m.div_ceil(threads);
+        let (a_data, b_data) = (&a.data[..], &b.data[..]);
+        std::thread::scope(|s| {
+            for (band_idx, out_band) in out.data.chunks_mut(rows_per * n).enumerate() {
+                s.spawn(move || {
+                    band_kernel(a_data, k, n, band_idx * rows_per, out_band, b_data);
+                });
+            }
+        });
+        out
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop::{assert_close, forall};
+    use crate::util::rng::Pcg32;
 
-    /// The acceptance property: blocked/threaded output equals the naive
-    /// reference across ragged shapes, including dims smaller than a tile
-    /// and bands that do not divide the thread count evenly.
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn assert_bitwise(a: &Matrix, b: &Matrix, what: &str) -> Result<(), String> {
+        if bits(a) == bits(b) {
+            Ok(())
+        } else {
+            Err(format!("{what}: bitwise mismatch (max |diff| {})", a.max_abs_diff(b)))
+        }
+    }
+
+    /// Random shapes spanning the edge cases the satellite demands:
+    /// L = 1 / B = 1 rows, dims straddling the strip width and the
+    /// microkernel height.
+    fn ragged_dims(rng: &mut Pcg32) -> (usize, usize, usize) {
+        let pick = |rng: &mut Pcg32| match rng.below(5) {
+            0 => 1,
+            1 => MR - 1,
+            2 => MR + 1,
+            _ => 1 + rng.below(TILE_J as u32 + 19) as usize,
+        };
+        (pick(rng), pick(rng), pick(rng))
+    }
+
     #[test]
-    fn blocked_matches_naive_on_ragged_shapes() {
+    fn nn_matches_naive_on_ragged_shapes() {
         forall(
             24,
             |rng| {
-                let m = 1 + rng.below(TILE_K as u32 + 13) as usize;
-                let k = 1 + rng.below(TILE_K as u32 + 29) as usize;
-                let n = 1 + rng.below(TILE_J as u32 + 17) as usize;
+                let (m, k, n) = ragged_dims(rng);
                 let a = Matrix::random_normal(rng, m, k, 1.0);
                 let b = Matrix::random_normal(rng, k, n, 1.0);
                 (a, b)
@@ -171,7 +442,9 @@ mod tests {
             |(a, b)| {
                 let fast = matmul_blocked(a, b);
                 let slow = matmul_naive(a, b);
-                assert_close(&fast.data, &slow.data, 1e-5)
+                // The accumulation-order contract makes this exact, not
+                // approximate — assert the stronger property.
+                assert_bitwise(&fast, &slow, "NN vs naive")
             },
         );
     }
@@ -195,6 +468,119 @@ mod tests {
         );
     }
 
+    /// NT / TN / TT bit-match materializing the transpose(s) and running
+    /// the allocating NN path — packing reorders memory, not arithmetic.
+    #[test]
+    fn transpose_variants_bitwise_match_materialized() {
+        forall(
+            24,
+            |rng| {
+                let (m, k, n) = ragged_dims(rng);
+                let (ta, tb) =
+                    [(true, false), (false, true), (true, true)][rng.below(3) as usize];
+                let a_dims = if ta { (k, m) } else { (m, k) };
+                let b_dims = if tb { (n, k) } else { (k, n) };
+                let a = Matrix::random_normal(rng, a_dims.0, a_dims.1, 1.0);
+                let b = Matrix::random_normal(rng, b_dims.0, b_dims.1, 1.0);
+                (ta, tb, a, b, m, n)
+            },
+            |(ta, tb, a, b, m, n)| {
+                let mut c = Matrix::zeros(*m, *n);
+                gemm(*ta, *tb, 1.0, a, b, 0.0, &mut c);
+                let am = if *ta { a.t() } else { a.clone() };
+                let bm = if *tb { b.t() } else { b.clone() };
+                let reference = am.matmul(&bm);
+                assert_bitwise(&c, &reference, "transposed gemm vs materialized")
+            },
+        );
+    }
+
+    /// Fused accumulation (`beta = 1`) and scaling (`alpha`) bit-match the
+    /// allocating `add`/`scale` composition they replace in the BPTT.
+    #[test]
+    fn fused_accumulate_bitwise_matches_add_of_product() {
+        forall(
+            24,
+            |rng| {
+                let (m, k, n) = ragged_dims(rng);
+                let a = Matrix::random_normal(rng, m, k, 1.0);
+                let b = Matrix::random_normal(rng, k, n, 1.0);
+                let c0 = Matrix::random_normal(rng, m, n, 1.0);
+                let alpha = [1.0f32, -1.0, 0.5][rng.below(3) as usize];
+                (a, b, c0, alpha)
+            },
+            |(a, b, c0, alpha)| {
+                let mut fused = c0.clone();
+                gemm(false, false, *alpha, a, b, 1.0, &mut fused);
+                let reference = c0.add(&a.matmul(b).scale(*alpha));
+                assert_bitwise(&fused, &reference, "fused accumulate")
+            },
+        );
+    }
+
+    /// `beta = 0` must overwrite without reading `c` — stale workspace
+    /// contents (even NaN) cannot leak into the output.
+    #[test]
+    fn beta_zero_ignores_stale_output_contents() {
+        let mut rng = Pcg32::seeded(9);
+        let a = Matrix::random_normal(&mut rng, 5, 7, 1.0);
+        let b = Matrix::random_normal(&mut rng, 7, 3, 1.0);
+        let mut c = Matrix::zeros(5, 3);
+        c.data.fill(f32::NAN);
+        gemm(false, false, 1.0, &a, &b, 0.0, &mut c);
+        assert_bitwise(&c, &a.matmul(&b), "beta=0 with NaN-poisoned c").unwrap();
+    }
+
+    /// alpha = 0 / k = 0 reduce to the pure beta term.
+    #[test]
+    fn degenerate_reductions_apply_beta_only() {
+        let mut rng = Pcg32::seeded(10);
+        let c0 = Matrix::random_normal(&mut rng, 4, 6, 1.0);
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 6);
+        let mut c = c0.clone();
+        gemm(false, false, 1.0, &a, &b, 1.0, &mut c);
+        assert_bitwise(&c, &c0, "k=0, beta=1 is the identity").unwrap();
+        let mut c = c0.clone();
+        gemm(false, false, 1.0, &a, &b, 0.0, &mut c);
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        let a = Matrix::random_normal(&mut rng, 4, 5, 1.0);
+        let b = Matrix::random_normal(&mut rng, 5, 6, 1.0);
+        let mut c = c0.clone();
+        gemm(false, false, 0.0, &a, &b, 2.0, &mut c);
+        assert_bitwise(&c, &c0.scale(2.0), "alpha=0 scales by beta").unwrap();
+    }
+
+    /// The frozen PR-4 kernel shares the accumulation contract, so old
+    /// and new paths agree to the last bit — the property that lets
+    /// `benches/bptt_native` attribute its speedup to structure, not to
+    /// numerics drift.
+    #[test]
+    fn legacy_kernel_bitwise_matches_gemm() {
+        forall(
+            16,
+            |rng| {
+                let (m, k, n) = ragged_dims(rng);
+                let a = Matrix::random_normal(rng, m, k, 1.0);
+                let b = Matrix::random_normal(rng, k, n, 1.0);
+                (a, b)
+            },
+            |(a, b)| assert_bitwise(&legacy::matmul(a, b), &a.matmul(b), "legacy vs gemm"),
+        );
+    }
+
+    #[test]
+    fn rows_smaller_than_thread_count_still_correct() {
+        // m = 1 with a wide reduction exceeds the cutoff but cannot be
+        // split into more than one band.
+        let mut rng = Pcg32::seeded(7);
+        let a = Matrix::random_normal(&mut rng, 1, 700, 1.0);
+        let b = Matrix::random_normal(&mut rng, 700, 600, 1.0);
+        let fast = matmul_blocked(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert_close(&fast.data, &slow.data, 1e-4).unwrap();
+    }
+
     #[test]
     fn degenerate_dims_produce_zero_shapes() {
         let a = Matrix::zeros(3, 0);
@@ -202,17 +588,5 @@ mod tests {
         let c = matmul_blocked(&a, &b);
         assert_eq!((c.rows, c.cols), (3, 4));
         assert!(c.data.iter().all(|&x| x == 0.0));
-    }
-
-    #[test]
-    fn rows_smaller_than_thread_count_still_correct() {
-        // m = 1 with a wide reduction exceeds the cutoff but cannot be
-        // split into more than one band.
-        let mut rng = crate::util::rng::Pcg32::seeded(7);
-        let a = Matrix::random_normal(&mut rng, 1, 700, 1.0);
-        let b = Matrix::random_normal(&mut rng, 700, 600, 1.0);
-        let fast = matmul_blocked(&a, &b);
-        let slow = matmul_naive(&a, &b);
-        assert_close(&fast.data, &slow.data, 1e-4).unwrap();
     }
 }

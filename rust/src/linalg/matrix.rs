@@ -1,6 +1,38 @@
 //! Dense row-major f32 matrix with the operations the native baselines need.
+//!
+//! Since the zero-allocation substrate pass (DESIGN.md §3.3) the hot-path
+//! entry points are the `_into` / in-place methods plus the [`Workspace`]
+//! buffer pool; the original allocating methods remain as thin wrappers
+//! so cold paths and tests keep their ergonomic form.  Every wrapper is
+//! bitwise-identical to its in-place counterpart (same kernels, same
+//! accumulation order — see `linalg::gemm`).
 
 use crate::util::rng::Pcg32;
+
+/// Typed shape-mismatch error for the fallible call sites that consume
+/// runtime-shaped data (serve sessions, artifact tensors).  Internal math
+/// with statically consistent shapes keeps using the panicking methods;
+/// anything fed from the wire must go through a `try_` variant so a bad
+/// request cannot take down a worker thread.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeError {
+    /// The operation that rejected the operands (e.g. `"matvec"`).
+    pub op: &'static str,
+    pub expected: Vec<usize>,
+    pub got: Vec<usize>,
+}
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: shape mismatch (expected {:?}, got {:?})",
+            self.op, self.expected, self.got
+        )
+    }
+}
+
+impl std::error::Error for ShapeError {}
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -41,6 +73,29 @@ impl Matrix {
         Matrix { rows, cols, data: rng.normal_vec(rows * cols, scale) }
     }
 
+    /// Reshape to `(rows, cols)`, zero-filled, reusing the existing
+    /// buffer capacity (no allocation once the buffer has grown to the
+    /// workload's steady-state shapes).
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape to `(rows, cols)` **without** clearing: contents are
+    /// unspecified (stale values from earlier use).  For buffers every
+    /// element of which is overwritten before being read (`beta = 0`
+    /// gemm outputs, `copy_from` targets) — skips the redundant
+    /// O(rows·cols) memset `resize_zeroed` would pay per step.
+    pub fn resize_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        if self.data.len() != rows * cols {
+            self.data.resize(rows * cols, 0.0);
+        }
+    }
+
     pub fn t(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -60,45 +115,107 @@ impl Matrix {
     }
 
     /// Matrix product (the L3/native-backend hot path).  Delegates to the
-    /// blocked, cache-tiled, multithreaded kernel in [`crate::linalg::gemm`];
-    /// small products stay single-threaded there, and both paths keep the
-    /// reference accumulation order (see `gemm::matmul_naive`).
+    /// transpose-aware kernel in [`crate::linalg::gemm`]; small products
+    /// stay single-threaded there, and all paths keep the reference
+    /// accumulation order (see `gemm::matmul_naive`).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         super::gemm::matmul_blocked(self, other)
     }
 
-    /// y = A x for a vector x.
+    /// `out = self @ other` without allocating: `out` must be preshaped
+    /// to `(self.rows, other.cols)`.  Bitwise-identical to [`Matrix::matmul`].
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        super::gemm::gemm(false, false, 1.0, self, other, 0.0, out);
+    }
+
+    /// y = A x for a vector x (panicking form — internal call sites with
+    /// statically consistent shapes).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(self.cols, x.len());
-        (0..self.rows)
+        match self.try_matvec(x) {
+            Ok(y) => y,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// y = A x, rejecting a mis-shaped `x` with a typed [`ShapeError`]
+    /// instead of panicking — the form runtime-fed data must use (a serve
+    /// worker feeding stale-shaped session state after a parameter swap
+    /// must surface an error frame, not die on an assert).
+    pub fn try_matvec(&self, x: &[f32]) -> Result<Vec<f32>, ShapeError> {
+        if self.cols != x.len() {
+            return Err(ShapeError {
+                op: "matvec",
+                expected: vec![self.cols],
+                got: vec![x.len()],
+            });
+        }
+        Ok((0..self.rows)
             .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
-            .collect()
+            .collect())
+    }
+
+    /// `self += other`, elementwise, in place.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self -= other`, elementwise, in place.
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// `self += alpha * x` (the SGD apply / gradient-accumulate primitive).
+    /// Bitwise-identical to `self.add(&x.scale(alpha))`.
+    pub fn axpy(&mut self, alpha: f32, x: &Matrix) {
+        assert_eq!((self.rows, self.cols), (x.rows, x.cols));
+        for (a, b) in self.data.iter_mut().zip(&x.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= s`, in place.
+    pub fn scale_in_place(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Copy `other`'s contents into this buffer, reshaping as needed
+    /// (allocation-free when the capacity already fits).
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
     }
 
     pub fn add(&self, other: &Matrix) -> Matrix {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        Matrix {
-            rows: self.rows,
-            cols: self.cols,
-            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
-        }
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
     }
 
     pub fn sub(&self, other: &Matrix) -> Matrix {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        Matrix {
-            rows: self.rows,
-            cols: self.cols,
-            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
-        }
+        let mut out = self.clone();
+        out.sub_assign(other);
+        out
     }
 
     pub fn scale(&self, s: f32) -> Matrix {
-        Matrix {
-            rows: self.rows,
-            cols: self.cols,
-            data: self.data.iter().map(|a| a * s).collect(),
-        }
+        let mut out = self.clone();
+        out.scale_in_place(s);
+        out
     }
 
     /// (A - A^T)/2 — projection to Skew(N).
@@ -122,7 +239,8 @@ impl Matrix {
 
     /// ||A^T A - I||_max — orthogonality defect of the columns.
     pub fn orthogonality_defect(&self) -> f32 {
-        let g = self.t().matmul(self);
+        let mut g = Matrix::zeros(self.cols, self.cols);
+        super::gemm::gemm(true, false, 1.0, self, self, 0.0, &mut g);
         g.max_abs_diff(&Matrix::eye(self.cols))
     }
 }
@@ -138,6 +256,66 @@ impl std::ops::Index<(usize, usize)> for Matrix {
 impl std::ops::IndexMut<(usize, usize)> for Matrix {
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
         &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Reusable scratch-buffer pool for the `_into` kernels (DESIGN.md §3.3).
+///
+/// `take` hands out a zero-filled matrix backed by a pooled buffer;
+/// `give` returns the backing buffer for reuse.  After a warmup pass at
+/// the workload's steady-state shapes every `take` is allocation-free,
+/// which is what the counting-allocator test in `tests/alloc_discipline`
+/// pins down.  Not thread-safe by design — each worker owns its own pool
+/// (serve workers, trainer threads, the rollout workspace).
+#[derive(Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { pool: Vec::new() }
+    }
+
+    /// Borrow a zero-filled `(rows, cols)` matrix from the pool.  Prefers
+    /// the smallest pooled buffer that already fits (so a large buffer is
+    /// not burned on a small request); falls back to growing the
+    /// best-available buffer, which is the warmup-only allocation.
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let need = rows * cols;
+        let pick = self
+            .pool
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= need)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i)
+            .or_else(|| {
+                // Nothing fits: grow the largest buffer (fewest reallocs
+                // over a warmup with mixed shapes).
+                self.pool
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, b)| b.capacity())
+                    .map(|(i, _)| i)
+            });
+        let mut data = match pick {
+            Some(i) => self.pool.swap_remove(i),
+            None => Vec::new(),
+        };
+        data.clear();
+        data.resize(need, 0.0);
+        Matrix { rows, cols, data }
+    }
+
+    /// Return a matrix taken with [`Workspace::take`] to the pool.
+    pub fn give(&mut self, m: Matrix) {
+        self.pool.push(m.data);
+    }
+
+    /// Number of pooled (idle) buffers — used by the allocation tests.
+    pub fn idle(&self) -> usize {
+        self.pool.len()
     }
 }
 
@@ -186,5 +364,88 @@ mod tests {
         for i in 0..3 {
             assert!((via_mm[(i, 0)] - via_mv[i]).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn try_matvec_returns_typed_shape_error() {
+        let a = Matrix::eye(3);
+        let err = a.try_matvec(&[1.0, 2.0]).unwrap_err();
+        assert_eq!(err.op, "matvec");
+        assert_eq!(err.expected, vec![3]);
+        assert_eq!(err.got, vec![2]);
+        // And the error formats usefully / converts into anyhow.
+        let msg = format!("{err}");
+        assert!(msg.contains("matvec"), "{msg}");
+        let _: anyhow::Error = err.into();
+        assert_eq!(a.try_matvec(&[1.0, 2.0, 3.0]).unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn in_place_ops_bitwise_match_allocating_wrappers() {
+        let mut rng = Pcg32::seeded(5);
+        let a = Matrix::random_normal(&mut rng, 4, 6, 1.0);
+        let b = Matrix::random_normal(&mut rng, 4, 6, 1.0);
+        let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+        let mut x = a.clone();
+        x.add_assign(&b);
+        assert_eq!(bits(&x), bits(&a.add(&b)));
+
+        let mut x = a.clone();
+        x.sub_assign(&b);
+        assert_eq!(bits(&x), bits(&a.sub(&b)));
+
+        let mut x = a.clone();
+        x.axpy(-0.37, &b);
+        assert_eq!(bits(&x), bits(&a.add(&b.scale(-0.37))));
+
+        let mut x = a.clone();
+        x.scale_in_place(1.7);
+        assert_eq!(bits(&x), bits(&a.scale(1.7)));
+
+        let c = Matrix::random_normal(&mut rng, 6, 3, 1.0);
+        let mut out = Matrix::zeros(4, 3);
+        a.matmul_into(&c, &mut out);
+        assert_eq!(bits(&out), bits(&a.matmul(&c)));
+    }
+
+    #[test]
+    fn workspace_reuses_buffers_without_regrowth() {
+        let mut ws = Workspace::new();
+        let m = ws.take(4, 8);
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        let cap = m.data.capacity();
+        let ptr = m.data.as_ptr();
+        ws.give(m);
+        assert_eq!(ws.idle(), 1);
+        // Same-or-smaller shapes reuse the identical backing buffer.
+        let mut m2 = ws.take(2, 8);
+        assert_eq!(m2.data.as_ptr(), ptr);
+        assert_eq!(m2.data.capacity(), cap);
+        m2.fill(3.0);
+        ws.give(m2);
+        // Re-take zero-fills stale contents.
+        let m3 = ws.take(4, 8);
+        assert!(m3.data.iter().all(|&x| x == 0.0));
+        ws.give(m3);
+        // Smallest-fit policy: a small buffer is preferred over a large one.
+        let big = ws.take(32, 32);
+        ws.give(big);
+        ws.give(Matrix::zeros(1, 4));
+        let small = ws.take(1, 2);
+        assert!(small.data.capacity() < 32 * 32);
+    }
+
+    #[test]
+    fn resize_zeroed_keeps_capacity() {
+        let mut m = Matrix::zeros(8, 8);
+        let cap = m.data.capacity();
+        let ptr = m.data.as_ptr();
+        m[(0, 0)] = 5.0;
+        m.resize_zeroed(4, 4);
+        assert_eq!((m.rows, m.cols), (4, 4));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.capacity(), cap);
+        assert_eq!(m.data.as_ptr(), ptr);
     }
 }

@@ -13,7 +13,7 @@ pub mod qr;
 pub mod tri;
 
 pub use expm::{cayley, expm, expm_default};
-pub use gemm::{matmul_blocked, matmul_naive};
-pub use matrix::Matrix;
+pub use gemm::{gemm, matmul_blocked, matmul_naive};
+pub use matrix::{Matrix, ShapeError, Workspace};
 pub use qr::{gauss_jordan_inv, householder_qr};
-pub use tri::{triu_inv, triu_inv_neumann, triu_solve, triu_solve_vec};
+pub use tri::{triu_inv, triu_inv_into, triu_inv_neumann, triu_solve, triu_solve_vec};

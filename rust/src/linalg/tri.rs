@@ -1,13 +1,14 @@
 //! Triangular solves and inverses (native mirror of `linalg_hlo.triu_inv`).
 
-use super::matrix::Matrix;
+use super::matrix::{Matrix, Workspace};
 
-/// Back-substitution solve of U x = b for upper-triangular U.
-pub fn triu_solve_vec(u: &Matrix, b: &[f32]) -> Vec<f32> {
+/// Back-substitution solve of U x = b into a caller-provided `x`
+/// (allocation-free core shared by every solve entry).
+pub fn triu_solve_vec_into(u: &Matrix, b: &[f32], x: &mut [f32]) {
     let n = u.rows;
     assert_eq!(u.cols, n);
     assert_eq!(b.len(), n);
-    let mut x = vec![0.0f32; n];
+    assert_eq!(x.len(), n);
     for i in (0..n).rev() {
         let mut s = b[i];
         for j in i + 1..n {
@@ -15,28 +16,69 @@ pub fn triu_solve_vec(u: &Matrix, b: &[f32]) -> Vec<f32> {
         }
         x[i] = s / u[(i, i)];
     }
+}
+
+/// Back-substitution solve of U x = b for upper-triangular U.
+pub fn triu_solve_vec(u: &Matrix, b: &[f32]) -> Vec<f32> {
+    let mut x = vec![0.0f32; u.rows];
+    triu_solve_vec_into(u, b, &mut x);
     x
 }
 
 /// Solve U X = B column-by-column (B is n x m).
 pub fn triu_solve(u: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(u.rows, b.cols);
+    let mut ws = Workspace::new();
+    triu_solve_into(u, b, &mut out, &mut ws);
+    out
+}
+
+/// Solve U X = B into a preshaped `out`, scratch drawn from `ws`
+/// (allocation-free at steady state).  Bitwise-identical to
+/// [`triu_solve`].
+pub fn triu_solve_into(u: &Matrix, b: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
     let n = u.rows;
     assert_eq!(b.rows, n);
-    let mut out = Matrix::zeros(n, b.cols);
+    assert_eq!((out.rows, out.cols), (n, b.cols), "triu_solve output shape");
+    let mut col = ws.take(1, n);
+    let mut x = ws.take(1, n);
     for c in 0..b.cols {
-        let col: Vec<f32> = (0..n).map(|r| b[(r, c)]).collect();
-        let x = triu_solve_vec(u, &col);
         for r in 0..n {
-            out[(r, c)] = x[r];
+            col.data[r] = b[(r, c)];
+        }
+        triu_solve_vec_into(u, &col.data, &mut x.data);
+        for r in 0..n {
+            out[(r, c)] = x.data[r];
         }
     }
-    out
+    ws.give(col);
+    ws.give(x);
 }
 
 /// Inverse of an upper-triangular matrix; costs ~n^3/3 FLOPs (Hunger 2005),
 /// which is the count the paper's Table 2 credits T-CWY for.
 pub fn triu_inv(u: &Matrix) -> Matrix {
     triu_solve(u, &Matrix::eye(u.rows))
+}
+
+/// Inverse into a preshaped `out` with pooled scratch — the form the
+/// per-step CWY operator rebuild uses so `S⁻¹` costs no allocation.
+/// Bitwise-identical to [`triu_inv`].
+pub fn triu_inv_into(u: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+    let n = u.rows;
+    assert_eq!((out.rows, out.cols), (n, n), "triu_inv output shape");
+    let mut col = ws.take(1, n);
+    let mut x = ws.take(1, n);
+    for c in 0..n {
+        col.data.fill(0.0);
+        col.data[c] = 1.0;
+        triu_solve_vec_into(u, &col.data, &mut x.data);
+        for r in 0..n {
+            out[(r, c)] = x.data[r];
+        }
+    }
+    ws.give(col);
+    ws.give(x);
 }
 
 /// Inverse via the log-depth nilpotent Neumann product — the exact same
@@ -115,6 +157,30 @@ mod tests {
                 } else {
                     Err(format!("defect {defect} at n={}", u.rows))
                 }
+            },
+        );
+    }
+
+    #[test]
+    fn inv_into_bitwise_matches_allocating() {
+        forall(
+            12,
+            |rng| {
+                let n = 1 + rng.below(12) as usize;
+                random_triu(rng, n)
+            },
+            |u| {
+                let reference = triu_inv(u);
+                let mut ws = Workspace::new();
+                let mut out = Matrix::zeros(u.rows, u.rows);
+                out.fill(f32::NAN); // stale contents must not leak
+                triu_inv_into(u, &mut out, &mut ws);
+                let same = reference
+                    .data
+                    .iter()
+                    .zip(&out.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if same { Ok(()) } else { Err("triu_inv_into drifted".into()) }
             },
         );
     }

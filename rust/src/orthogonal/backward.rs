@@ -20,10 +20,16 @@
 //! * [`cwy_rollout_backward`] / [`hr_rollout_backward`] — BPTT through a
 //!   T-step rollout `h_{t+1} = h_t Q + x_t` of the recurrent cell.
 //!
-//! Every matmul routes through [`crate::linalg::Matrix::matmul`], i.e. the
-//! blocked GEMM hot path (§3.1), so the bench trajectory there covers
-//! training as well as inference.  All formulas are verified against
-//! central finite differences by the property tests below.
+//! Since the zero-allocation substrate pass (DESIGN.md §3.3) the hot
+//! entry points are in-place: [`CwyGrad::recompute`] rebuilds the tape
+//! for new parameters reusing every buffer, [`CwyGrad::apply_backward_in_place`]
+//! turns the upstream gradient into `dL/dH` in its own buffer while
+//! accumulating the V-path through fused `beta = 1` gemms (no
+//! materialized transposes, no temporaries beyond pooled scratch), and
+//! [`CwyGrad::finish_into`] runs the S-chain once per rollout into a
+//! caller buffer.  The PR-4 allocating implementation is frozen verbatim
+//! in [`reference`] as the `BENCH_5` measurement baseline and a bitwise
+//! parity oracle — the fused path must agree with it to the last bit.
 //!
 //! Degenerate reflection rows (norm ≤ [`cwy::DEGENERATE_NORM`]) carry
 //! **zero** gradient on every path — never NaN: the CWY chain maps them
@@ -32,9 +38,9 @@
 //! see [`householder`]).  The two parametrizations agree as functions
 //! only on non-degenerate rows.
 
-use crate::linalg::{triu_inv, Matrix};
+use crate::linalg::{gemm, triu_inv_into, Matrix, Workspace};
 
-use super::cwy::{self, build_s, normalize, CwyOperator};
+use super::cwy::{self, apply_with_operands, normalize_with_norms_into, row_norms_into, CwyOperator};
 use super::householder;
 
 /// Shared backward context for the CWY-family parametrizations: the
@@ -45,9 +51,12 @@ use super::householder;
 /// The chain `dU/dA → dS → d(UᵀU) → dU → dV` is linear in the incoming
 /// cotangents, so contributions from many timesteps can be *accumulated*
 /// into `du`/`da` and the (comparatively expensive) `S`-chain run once at
-/// [`ParamTape::into_dv`] — this is what makes the fused BPTT cheap.
+/// [`ParamTape::finish_into`] — this is what makes the fused BPTT cheap.
+/// Every buffer is reused across [`ParamTape::recompute`] calls, so a
+/// steady-state training loop rebuilds the tape allocation-free.
 struct ParamTape {
     u: Matrix,    // (N, L) normalized columns
+    s: Matrix,    // (L, L) S = 0.5 I + striu(UᵀU), kept for rebuilds
     sinv: Matrix, // (L, L) upper-triangular inverse of S
     norms: Vec<f32>,
     degenerate: Vec<bool>,
@@ -57,42 +66,87 @@ struct ParamTape {
 
 impl ParamTape {
     fn new(v: &Matrix) -> ParamTape {
-        let u = normalize(v);
-        let sinv = triu_inv(&build_s(&u));
-        let norms = cwy::row_norms(v);
-        let degenerate = norms.iter().map(|&n| n <= cwy::DEGENERATE_NORM).collect();
-        let (du, da) = (Matrix::zeros(u.rows, u.cols), Matrix::zeros(u.cols, u.cols));
-        ParamTape { u, sinv, norms, degenerate, du, da }
+        let mut tape = ParamTape {
+            u: Matrix::zeros(0, 0),
+            s: Matrix::zeros(0, 0),
+            sinv: Matrix::zeros(0, 0),
+            norms: Vec::new(),
+            degenerate: Vec::new(),
+            du: Matrix::zeros(0, 0),
+            da: Matrix::zeros(0, 0),
+        };
+        let mut ws = Workspace::new();
+        tape.recompute(v, &mut ws);
+        tape
+    }
+
+    /// Rebuild the forward operands for new parameters and zero the
+    /// accumulators, reusing every buffer (allocation-free at steady
+    /// state).  One `row_norms` pass feeds `normalize`, the degenerate
+    /// mask, and the final division — the norm dedup of ISSUE 5.
+    fn recompute(&mut self, v: &Matrix, ws: &mut Workspace) {
+        let (l, n) = (v.rows, v.cols);
+        self.norms.clear();
+        self.norms.resize(l, 0.0);
+        row_norms_into(v, &mut self.norms);
+        self.degenerate.clear();
+        self.degenerate
+            .extend(self.norms.iter().map(|&x| x <= cwy::DEGENERATE_NORM));
+        self.u.resize_zeroed(n, l);
+        normalize_with_norms_into(v, &self.norms, &mut self.u);
+        self.s.resize_zeroed(l, l);
+        cwy::build_s_into(&self.u, &mut self.s, ws);
+        self.sinv.resize_zeroed(l, l);
+        triu_inv_into(&self.s, &mut self.sinv, ws);
+        self.du.resize_zeroed(n, l);
+        self.da.resize_zeroed(l, l);
     }
 
     /// Finish the chain: `dS = −Aᵀ dA Aᵀ`, keep the strict upper triangle
     /// (only those entries of `UᵀU` enter `S`), push through the Gram
-    /// product and the row normalization.
-    fn into_dv(self, v: &Matrix) -> Matrix {
+    /// product and the row normalization.  Writes into a preshaped `dv`;
+    /// the accumulators are left untouched, so callers that want to keep
+    /// accumulating must `recompute` first.
+    fn finish_into(&mut self, v: &Matrix, dv: &mut Matrix, ws: &mut Workspace) {
         let l = self.u.cols;
-        let ds = self.sinv.t().matmul(&self.da).matmul(&self.sinv.t()).scale(-1.0);
-        let mut p = Matrix::zeros(l, l);
+        let n = self.u.rows;
+        assert_eq!((dv.rows, dv.cols), (v.rows, v.cols), "finish output shape");
+        let mut t1 = ws.take(l, l);
+        gemm(true, false, 1.0, &self.sinv, &self.da, 0.0, &mut t1); // Aᵀ dA
+        let mut ds = ws.take(l, l);
+        gemm(false, true, 1.0, &t1, &self.sinv, 0.0, &mut ds); // (Aᵀ dA) Aᵀ
+        ds.scale_in_place(-1.0);
+        // q = striu(ds) + striu(ds)ᵀ, written exactly as the reference
+        // computes `p.add(&p.t())` (the `+ 0.0` keeps −0.0 edge cases
+        // bit-identical to the allocating path).
+        let mut q = ws.take(l, l);
         for i in 0..l {
             for j in i + 1..l {
-                p[(i, j)] = ds[(i, j)];
+                let d = ds[(i, j)];
+                q[(i, j)] = d + 0.0;
+                q[(j, i)] = 0.0 + d;
             }
         }
-        let du = self.du.add(&self.u.matmul(&p.add(&p.t())));
+        let mut dufin = ws.take(n, l);
+        dufin.copy_from(&self.du);
+        gemm(false, false, 1.0, &self.u, &q, 1.0, &mut dufin); // du + U q
         // normalize backward, row i of V vs column i of U:
         // dv_i = (du_i − u_i (u_iᵀ du_i)) / ‖v_i‖; degenerate rows are
         // constant under normalize, so their gradient is exactly zero.
-        let n = self.u.rows;
-        let mut dv = Matrix::zeros(v.rows, v.cols);
+        dv.fill(0.0);
         for i in 0..l {
             if self.degenerate[i] {
                 continue;
             }
-            let dot: f32 = (0..n).map(|j| self.u[(j, i)] * du[(j, i)]).sum();
+            let dot: f32 = (0..n).map(|j| self.u[(j, i)] * dufin[(j, i)]).sum();
             for j in 0..n {
-                dv[(i, j)] = (du[(j, i)] - self.u[(j, i)] * dot) / self.norms[i];
+                dv[(i, j)] = (dufin[(j, i)] - self.u[(j, i)] * dot) / self.norms[i];
             }
         }
-        dv
+        ws.give(t1);
+        ws.give(ds);
+        ws.give(q);
+        ws.give(dufin);
     }
 }
 
@@ -106,46 +160,92 @@ impl CwyGrad {
         CwyGrad { tape: ParamTape::new(v) }
     }
 
+    /// Rebuild for new parameters, reusing every internal buffer and
+    /// zeroing the accumulators — the steady-state training entry.
+    pub fn recompute(&mut self, v: &Matrix, ws: &mut Workspace) {
+        self.tape.recompute(v, ws);
+    }
+
     /// The forward operator sharing this tape's operands (for rollouts
     /// that interleave applies and backward accumulation).
     pub fn operator(&self) -> CwyOperator {
         CwyOperator { u: self.tape.u.clone(), sinv: self.tape.sinv.clone() }
     }
 
+    /// Fused forward apply `out = h Q(V)` using the tape's operands
+    /// directly (no operator clone), allocation-free with pooled scratch.
+    pub fn apply_forward_into(&self, h: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        apply_with_operands(&self.tape.u, &self.tape.sinv, h, out, ws);
+    }
+
     /// Backward of one fused apply `Y = H Q(V)`: given the apply's input
     /// `h` (B, N) and the upstream gradient `g = dL/dY` (B, N), returns
     /// `dL/dH` and accumulates the `V`-path into the tape.  Cost
-    /// `O(B·N·L + B·L²)` — no `N×N` intermediate.
+    /// `O(B·N·L + B·L²)` — no `N×N` intermediate.  (Allocating wrapper
+    /// over [`CwyGrad::apply_backward_in_place`], bitwise-identical.)
     pub fn apply_backward(&mut self, h: &Matrix, g: &Matrix) -> Matrix {
-        let u = &self.tape.u;
-        let a = &self.tape.sinv;
-        let gu = g.matmul(u); // (B, L)
-        let hu = h.matmul(u); // (B, L)
-        // dH = G (I − U A Uᵀ)ᵀ = G − (G U) Aᵀ Uᵀ
-        let dh = g.sub(&gu.matmul(&a.t()).matmul(&u.t()));
-        // dU += −Hᵀ(G U) Aᵀ − Gᵀ(H U) A   (from M = U A Uᵀ, dL/dM = −Hᵀ G)
-        let du_h = h.t().matmul(&gu).matmul(&a.t());
-        let du_g = g.t().matmul(&hu).matmul(a);
-        self.tape.du = self.tape.du.sub(&du_h).sub(&du_g);
-        // dA += −(H U)ᵀ (G U)
-        self.tape.da = self.tape.da.sub(&hu.t().matmul(&gu));
+        let mut ws = Workspace::new();
+        let mut dh = g.clone();
+        self.apply_backward_in_place(h, &mut dh, &mut ws);
         dh
+    }
+
+    /// In-place backward of one fused apply: `g` enters as `dL/dY` and
+    /// leaves as `dL/dH`; the `V`-path lands in the tape accumulators via
+    /// fused `beta = 1` gemms.  No materialized transposes, no
+    /// allocation beyond pooled scratch.
+    pub fn apply_backward_in_place(&mut self, h: &Matrix, g: &mut Matrix, ws: &mut Workspace) {
+        let tape = &mut self.tape;
+        let (b, l, n) = (h.rows, tape.u.cols, tape.u.rows);
+        let mut gu = ws.take(b, l);
+        gemm(false, false, 1.0, g, &tape.u, 0.0, &mut gu); // G U
+        let mut hu = ws.take(b, l);
+        gemm(false, false, 1.0, h, &tape.u, 0.0, &mut hu); // H U
+        // dU −= Hᵀ(G U) Aᵀ  then  dU −= Gᵀ(H U) A
+        // (from M = U A Uᵀ, dL/dM = −Hᵀ G; same order as the reference)
+        let mut m1 = ws.take(n, l);
+        gemm(true, false, 1.0, h, &gu, 0.0, &mut m1); // Hᵀ (G U)
+        gemm(false, true, -1.0, &m1, &tape.sinv, 1.0, &mut tape.du);
+        gemm(true, false, 1.0, g, &hu, 0.0, &mut m1); // Gᵀ (H U)
+        gemm(false, false, -1.0, &m1, &tape.sinv, 1.0, &mut tape.du);
+        // dA −= (H U)ᵀ (G U)
+        gemm(true, false, -1.0, &hu, &gu, 1.0, &mut tape.da);
+        // dH = G (I − U A Uᵀ)ᵀ = G − (G U) Aᵀ Uᵀ — last, so the V-path
+        // above saw the original G.
+        let mut t = ws.take(b, l);
+        gemm(false, true, 1.0, &gu, &tape.sinv, 0.0, &mut t); // (G U) Aᵀ
+        gemm(false, true, -1.0, &t, &tape.u, 1.0, g);
+        ws.give(gu);
+        ws.give(hu);
+        ws.give(m1);
+        ws.give(t);
     }
 
     /// Backward of the materialized matrix `Q = I − U S⁻¹ Uᵀ`: accumulate
     /// the `V`-path for an upstream gradient `dq = dL/dQ` (N, N).
     pub fn matrix_backward(&mut self, dq: &Matrix) {
-        let u = &self.tape.u;
-        let a = &self.tape.sinv;
-        let qu = dq.matmul(u); // (N, L)
-        let qtu = dq.t().matmul(u); // (N, L)
-        self.tape.du = self.tape.du.sub(&qu.matmul(&a.t())).sub(&qtu.matmul(a));
-        self.tape.da = self.tape.da.sub(&u.t().matmul(&qu));
+        let tape = &mut self.tape;
+        let (n, l) = (tape.u.rows, tape.u.cols);
+        let mut qu = Matrix::zeros(n, l);
+        gemm(false, false, 1.0, dq, &tape.u, 0.0, &mut qu); // dQ U
+        let mut qtu = Matrix::zeros(n, l);
+        gemm(true, false, 1.0, dq, &tape.u, 0.0, &mut qtu); // dQᵀ U
+        gemm(false, true, -1.0, &qu, &tape.sinv, 1.0, &mut tape.du);
+        gemm(false, false, -1.0, &qtu, &tape.sinv, 1.0, &mut tape.du);
+        gemm(true, false, -1.0, &tape.u, &qu, 1.0, &mut tape.da);
     }
 
     /// Finish all accumulated contributions into `dL/dV`.
-    pub fn into_dv(self, v: &Matrix) -> Matrix {
-        self.tape.into_dv(v)
+    pub fn into_dv(mut self, v: &Matrix) -> Matrix {
+        let mut dv = Matrix::zeros(v.rows, v.cols);
+        let mut ws = Workspace::new();
+        self.tape.finish_into(v, &mut dv, &mut ws);
+        dv
+    }
+
+    /// Allocation-free finish: write `dL/dV` into a preshaped `dv`.
+    pub fn finish_into(&mut self, v: &Matrix, dv: &mut Matrix, ws: &mut Workspace) {
+        self.tape.finish_into(v, dv, ws);
     }
 }
 
@@ -160,38 +260,86 @@ pub struct TcwyGrad {
 impl TcwyGrad {
     pub fn new(v: &Matrix) -> TcwyGrad {
         assert!(v.rows <= v.cols, "T-CWY needs M <= N");
-        let tape = ParamTape::new(v);
-        let m = v.rows;
-        let mut u1 = Matrix::zeros(m, m);
+        let mut grad = TcwyGrad {
+            tape: ParamTape::new(v),
+            u1: Matrix::zeros(0, 0),
+            w: Matrix::zeros(0, 0),
+        };
+        grad.rebuild_frame();
+        grad
+    }
+
+    /// Rebuild for new parameters, reusing buffers (cf. [`CwyGrad::recompute`]).
+    pub fn recompute(&mut self, v: &Matrix, ws: &mut Workspace) {
+        assert!(v.rows <= v.cols, "T-CWY needs M <= N");
+        self.tape.recompute(v, ws);
+        self.rebuild_frame();
+    }
+
+    fn rebuild_frame(&mut self) {
+        let m = self.tape.u.cols;
+        self.u1.resize_zeroed(m, m);
         for i in 0..m {
             for j in 0..m {
-                u1[(i, j)] = tape.u[(i, j)];
+                self.u1[(i, j)] = self.tape.u[(i, j)];
             }
         }
-        let w = tape.sinv.matmul(&u1.t());
-        TcwyGrad { tape, u1, w }
+        self.w.resize_zeroed(m, m);
+        gemm(false, true, 1.0, &self.tape.sinv, &self.u1, 0.0, &mut self.w); // S⁻¹ U₁ᵀ
+    }
+
+    /// Materialize `Ω = [I;0] − U W` into a preshaped `(N, M)` buffer —
+    /// the frame the square T-CWY recurrence multiplies by, sharing the
+    /// tape's operands so nothing is recomputed.
+    pub fn omega_into(&self, out: &mut Matrix) {
+        let (n, m) = (self.tape.u.rows, self.tape.u.cols);
+        assert_eq!((out.rows, out.cols), (n, m), "omega output shape");
+        out.fill(0.0);
+        for i in 0..n.min(m) {
+            out[(i, i)] = 1.0;
+        }
+        gemm(false, false, -1.0, &self.tape.u, &self.w, 1.0, out);
     }
 
     /// Accumulate the `V`-path for an upstream gradient `g = dL/dΩ` (N, M).
     pub fn matrix_backward(&mut self, g: &Matrix) {
+        let mut ws = Workspace::new();
+        self.matrix_backward_ws(g, &mut ws);
+    }
+
+    /// Allocation-free [`TcwyGrad::matrix_backward`] with pooled scratch.
+    pub fn matrix_backward_ws(&mut self, g: &Matrix, ws: &mut Workspace) {
         let m = self.u1.rows;
+        let tape = &mut self.tape;
         // Ω = E − U W:  dU += −G Wᵀ,  dW = −Uᵀ G
-        self.tape.du = self.tape.du.sub(&g.matmul(&self.w.t()));
-        let dw = self.tape.u.t().matmul(g).scale(-1.0);
+        gemm(false, true, -1.0, g, &self.w, 1.0, &mut tape.du);
+        let mut dw = ws.take(m, m);
+        gemm(true, false, -1.0, &tape.u, g, 0.0, &mut dw);
         // W = A U₁ᵀ:  dA += dW U₁,  dU₁ = dWᵀ A (added into the leading
         // M×M block of dU)
-        self.tape.da = self.tape.da.add(&dw.matmul(&self.u1));
-        let du1 = dw.t().matmul(&self.tape.sinv);
+        gemm(false, false, 1.0, &dw, &self.u1, 1.0, &mut tape.da);
+        let mut du1 = ws.take(m, m);
+        gemm(true, false, 1.0, &dw, &tape.sinv, 0.0, &mut du1);
         for i in 0..m {
             for j in 0..m {
-                self.tape.du[(i, j)] += du1[(i, j)];
+                tape.du[(i, j)] += du1[(i, j)];
             }
         }
+        ws.give(dw);
+        ws.give(du1);
     }
 
     /// Finish all accumulated contributions into `dL/dV`.
-    pub fn into_dv(self, v: &Matrix) -> Matrix {
-        self.tape.into_dv(v)
+    pub fn into_dv(mut self, v: &Matrix) -> Matrix {
+        let mut dv = Matrix::zeros(v.rows, v.cols);
+        let mut ws = Workspace::new();
+        self.tape.finish_into(v, &mut dv, &mut ws);
+        dv
+    }
+
+    /// Allocation-free finish: write `dL/dV` into a preshaped `dv`.
+    pub fn finish_into(&mut self, v: &Matrix, dv: &mut Matrix, ws: &mut Workspace) {
+        self.tape.finish_into(v, dv, ws);
     }
 }
 
@@ -264,10 +412,13 @@ pub fn hr_chain_backward(vs: &Matrix, h: &Matrix, g: &Matrix) -> (Matrix, Matrix
 /// by the *fused* CWY operator; returns `[h_0, …, h_T]`.
 pub fn cwy_rollout_states(v: &Matrix, h0: &Matrix, xs: &[Matrix]) -> Vec<Matrix> {
     let op = CwyOperator::new(v);
+    let mut ws = Workspace::new();
     let mut hs = Vec::with_capacity(xs.len() + 1);
     hs.push(h0.clone());
     for x in xs {
-        let next = op.apply(hs.last().unwrap()).add(x);
+        let mut next = Matrix::zeros(h0.rows, h0.cols);
+        op.apply_into(hs.last().unwrap(), &mut next, &mut ws);
+        next.add_assign(x);
         hs.push(next);
     }
     hs
@@ -287,7 +438,9 @@ pub fn hr_rollout_states(v: &Matrix, h0: &Matrix, xs: &[Matrix]) -> Vec<Matrix> 
 
 /// Fused BPTT through the rollout: `gs[t] = dL/dh_{t+1}` for each step of
 /// `h_{t+1} = h_t Q(V) + x_t`.  Returns `(dL/dh_0, dL/dV)`.  One
-/// [`CwyGrad::apply_backward`] per step, one `S`-chain finish total.
+/// [`CwyGrad::apply_backward_in_place`] per step, one `S`-chain finish
+/// total, all scratch pooled.  Bitwise-identical to the frozen PR-4 path
+/// in [`reference`].
 pub fn cwy_rollout_backward(
     v: &Matrix,
     h0: &Matrix,
@@ -295,22 +448,26 @@ pub fn cwy_rollout_backward(
     gs: &[Matrix],
 ) -> (Matrix, Matrix) {
     assert_eq!(xs.len(), gs.len());
-    // One tape for the whole rollout: its operator drives the forward
+    // One tape for the whole rollout: its operands drive the forward
     // replay, so normalize/build_s/triu_inv run once, not twice.
+    let mut ws = Workspace::new();
     let mut grad = CwyGrad::new(v);
-    let op = grad.operator();
     let mut hs = Vec::with_capacity(xs.len() + 1);
     hs.push(h0.clone());
     for x in xs {
-        let next = op.apply(hs.last().unwrap()).add(x);
+        let mut next = Matrix::zeros(h0.rows, h0.cols);
+        grad.apply_forward_into(hs.last().unwrap(), &mut next, &mut ws);
+        next.add_assign(x);
         hs.push(next);
     }
     let mut g = Matrix::zeros(h0.rows, h0.cols);
     for t in (0..xs.len()).rev() {
-        g = g.add(&gs[t]);
-        g = grad.apply_backward(&hs[t], &g);
+        g.add_assign(&gs[t]);
+        grad.apply_backward_in_place(&hs[t], &mut g, &mut ws);
     }
-    (g, grad.into_dv(v))
+    let mut dv = Matrix::zeros(v.rows, v.cols);
+    grad.finish_into(v, &mut dv, &mut ws);
+    (g, dv)
 }
 
 /// Sequential-baseline BPTT through the same rollout: per step, per
@@ -349,6 +506,126 @@ pub fn finite_diff(x: &Matrix, eps: f32, mut f: impl FnMut(&Matrix) -> f32) -> M
         }
     }
     g
+}
+
+/// The PR-4 backward path, frozen verbatim: per-op output allocation,
+/// materialized transposes (`.t()` before every TN/NT product), the
+/// legacy tiled GEMM, and a fresh normalize/build_s/triu_inv per tape.
+///
+/// Kept for two jobs:
+/// * **measurement baseline** — `benches/bptt_native` and `BENCH_5.json`
+///   report the fused substrate's speedup over exactly this code, on the
+///   same machine, so the delta isolates allocation + transpose +
+///   fusion structure rather than kernel drift;
+/// * **parity oracle** — both paths share the ascending-`k` accumulation
+///   contract (`linalg::gemm` module docs), so the fused rollout must
+///   reproduce this one bit-for-bit, which the property tests assert.
+pub mod reference {
+    use crate::linalg::gemm::legacy;
+    use crate::linalg::{triu_inv, Matrix};
+
+    use super::super::cwy::{self, normalize};
+
+    fn build_s(u: &Matrix) -> Matrix {
+        let l = u.cols;
+        let gram = legacy::matmul(&u.t(), u);
+        let mut s = Matrix::zeros(l, l);
+        for i in 0..l {
+            s[(i, i)] = 0.5;
+            for j in i + 1..l {
+                s[(i, j)] = gram[(i, j)];
+            }
+        }
+        s
+    }
+
+    struct Tape {
+        u: Matrix,
+        sinv: Matrix,
+        norms: Vec<f32>,
+        degenerate: Vec<bool>,
+        du: Matrix,
+        da: Matrix,
+    }
+
+    impl Tape {
+        fn new(v: &Matrix) -> Tape {
+            let u = normalize(v);
+            let sinv = triu_inv(&build_s(&u));
+            let norms = cwy::row_norms(v);
+            let degenerate = norms.iter().map(|&n| n <= cwy::DEGENERATE_NORM).collect();
+            let (du, da) = (Matrix::zeros(u.rows, u.cols), Matrix::zeros(u.cols, u.cols));
+            Tape { u, sinv, norms, degenerate, du, da }
+        }
+
+        fn apply(&self, h: &Matrix) -> Matrix {
+            let t = legacy::matmul(h, &self.u);
+            let v = legacy::matmul(&t, &self.sinv);
+            h.sub(&legacy::matmul(&v, &self.u.t()))
+        }
+
+        fn apply_backward(&mut self, h: &Matrix, g: &Matrix) -> Matrix {
+            let u = &self.u;
+            let a = &self.sinv;
+            let gu = legacy::matmul(g, u);
+            let hu = legacy::matmul(h, u);
+            let dh = g.sub(&legacy::matmul(&legacy::matmul(&gu, &a.t()), &u.t()));
+            let du_h = legacy::matmul(&legacy::matmul(&h.t(), &gu), &a.t());
+            let du_g = legacy::matmul(&legacy::matmul(&g.t(), &hu), a);
+            self.du = self.du.sub(&du_h).sub(&du_g);
+            self.da = self.da.sub(&legacy::matmul(&hu.t(), &gu));
+            dh
+        }
+
+        fn into_dv(self, v: &Matrix) -> Matrix {
+            let l = self.u.cols;
+            let ds = legacy::matmul(&legacy::matmul(&self.sinv.t(), &self.da), &self.sinv.t())
+                .scale(-1.0);
+            let mut p = Matrix::zeros(l, l);
+            for i in 0..l {
+                for j in i + 1..l {
+                    p[(i, j)] = ds[(i, j)];
+                }
+            }
+            let du = self.du.add(&legacy::matmul(&self.u, &p.add(&p.t())));
+            let n = self.u.rows;
+            let mut dv = Matrix::zeros(v.rows, v.cols);
+            for i in 0..l {
+                if self.degenerate[i] {
+                    continue;
+                }
+                let dot: f32 = (0..n).map(|j| self.u[(j, i)] * du[(j, i)]).sum();
+                for j in 0..n {
+                    dv[(i, j)] = (du[(j, i)] - self.u[(j, i)] * dot) / self.norms[i];
+                }
+            }
+            dv
+        }
+    }
+
+    /// PR-4 `cwy_rollout_backward`: the allocating BPTT this PR's fused
+    /// path is measured against.
+    pub fn cwy_rollout_backward(
+        v: &Matrix,
+        h0: &Matrix,
+        xs: &[Matrix],
+        gs: &[Matrix],
+    ) -> (Matrix, Matrix) {
+        assert_eq!(xs.len(), gs.len());
+        let mut grad = Tape::new(v);
+        let mut hs = Vec::with_capacity(xs.len() + 1);
+        hs.push(h0.clone());
+        for x in xs {
+            let next = grad.apply(hs.last().unwrap()).add(x);
+            hs.push(next);
+        }
+        let mut g = Matrix::zeros(h0.rows, h0.cols);
+        for t in (0..xs.len()).rev() {
+            g = g.add(&gs[t]);
+            g = grad.apply_backward(&hs[t], &g);
+        }
+        (g, grad.into_dv(v))
+    }
 }
 
 #[cfg(test)]
@@ -479,6 +756,34 @@ mod tests {
         );
     }
 
+    /// The tape's Ω must equal the standalone construction, and rebuilding
+    /// a recycled tape for new parameters must equal a fresh tape.
+    #[test]
+    fn tcwy_omega_and_recompute_match_fresh() {
+        let mut rng = Pcg32::seeded(91);
+        let mut ws = Workspace::new();
+        let v1 = Matrix::random_normal(&mut rng, 4, 9, 1.0);
+        let v2 = Matrix::random_normal(&mut rng, 4, 9, 1.0);
+        let mut grad = TcwyGrad::new(&v1);
+        let mut omega = Matrix::zeros(9, 4);
+        grad.omega_into(&mut omega);
+        assert!(omega.max_abs_diff(&tcwy::matrix(&v1)) < 1e-6);
+        // Recycle for v2: same dv as a fresh tape.
+        grad.recompute(&v2, &mut ws);
+        grad.omega_into(&mut omega);
+        assert!(omega.max_abs_diff(&tcwy::matrix(&v2)) < 1e-6);
+        let g = Matrix::random_normal(&mut rng, 9, 4, 1.0);
+        grad.matrix_backward_ws(&g, &mut ws);
+        let dv_recycled = {
+            let mut dv = Matrix::zeros(4, 9);
+            grad.finish_into(&v2, &mut dv, &mut ws);
+            dv
+        };
+        let mut fresh = TcwyGrad::new(&v2);
+        fresh.matrix_backward(&g);
+        assert_eq!(dv_recycled, fresh.into_dv(&v2));
+    }
+
     #[test]
     fn prop_hr_chain_backward_matches_fd() {
         forall(
@@ -551,6 +856,85 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// The zero-allocation contract's numeric half: the fused in-place
+    /// rollout backward reproduces the frozen PR-4 implementation
+    /// bit-for-bit (shared accumulation order end to end), across random
+    /// shapes including L = 1 / B = 1 / T = 1.
+    #[test]
+    fn prop_fused_rollout_bitwise_matches_pr4_reference() {
+        forall(
+            10,
+            |rng| {
+                let l = 1 + rng.below(6) as usize;
+                let n = l + 1 + rng.below(10) as usize;
+                let b = 1 + rng.below(4) as usize;
+                let t = 1 + rng.below(5) as usize;
+                let v = Matrix::random_normal(rng, l, n, 1.0);
+                let h0 = Matrix::random_normal(rng, b, n, 1.0);
+                let xs: Vec<Matrix> = (0..t)
+                    .map(|_| Matrix::random_normal(rng, b, n, 0.5))
+                    .collect();
+                let gs: Vec<Matrix> = (0..t)
+                    .map(|_| Matrix::random_normal(rng, b, n, 0.5))
+                    .collect();
+                (v, h0, xs, gs)
+            },
+            |(v, h0, xs, gs)| {
+                let (dh_new, dv_new) = cwy_rollout_backward(v, h0, xs, gs);
+                let (dh_ref, dv_ref) = reference::cwy_rollout_backward(v, h0, xs, gs);
+                let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                if bits(&dh_new) == bits(&dh_ref) && bits(&dv_new) == bits(&dv_ref) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "fused vs PR-4 drift: |dh| {} |dv| {}",
+                        dh_new.max_abs_diff(&dh_ref),
+                        dv_new.max_abs_diff(&dv_ref)
+                    ))
+                }
+            },
+        );
+    }
+
+    /// A recycled tape (recompute) behaves exactly like a fresh one — the
+    /// property that lets the rollout workspace reuse its tape across
+    /// training steps.
+    #[test]
+    fn recomputed_tape_matches_fresh_tape() {
+        let mut rng = Pcg32::seeded(53);
+        let mut ws = Workspace::new();
+        let v1 = Matrix::random_normal(&mut rng, 5, 11, 1.0);
+        let v2 = Matrix::random_normal(&mut rng, 5, 11, 1.0);
+        let h = Matrix::random_normal(&mut rng, 3, 11, 1.0);
+        let g0 = Matrix::random_normal(&mut rng, 3, 11, 1.0);
+
+        let mut recycled = CwyGrad::new(&v1);
+        let mut sink = Matrix::zeros(3, 11);
+        recycled.apply_forward_into(&h, &mut sink, &mut ws);
+        let mut g = g0.clone();
+        recycled.apply_backward_in_place(&h, &mut g, &mut ws);
+        // Now rebuild for v2 and run the same step as a fresh tape.
+        recycled.recompute(&v2, &mut ws);
+        let mut out_recycled = Matrix::zeros(3, 11);
+        recycled.apply_forward_into(&h, &mut out_recycled, &mut ws);
+        let mut g_recycled = g0.clone();
+        recycled.apply_backward_in_place(&h, &mut g_recycled, &mut ws);
+        let mut dv_recycled = Matrix::zeros(5, 11);
+        recycled.finish_into(&v2, &mut dv_recycled, &mut ws);
+
+        let mut fresh = CwyGrad::new(&v2);
+        let out_fresh = {
+            let mut out = Matrix::zeros(3, 11);
+            fresh.apply_forward_into(&h, &mut out, &mut ws);
+            out
+        };
+        let dh_fresh = fresh.apply_backward(&h, &g0);
+        let dv_fresh = fresh.into_dv(&v2);
+        assert_eq!(out_recycled, out_fresh);
+        assert_eq!(g_recycled, dh_fresh);
+        assert_eq!(dv_recycled, dv_fresh);
     }
 
     /// Thm 2 at the gradient level: the fused CWY backward and the

@@ -2,9 +2,14 @@
 //!
 //! This is the rust mirror of `python/compile/kernels/cwy.py`, used for
 //! Table 1/2 harnesses, orthogonality property tests, and cross-checking
-//! artifact outputs.
+//! artifact outputs.  Since the zero-allocation substrate pass
+//! (DESIGN.md §3.3) the hot entry points are the `_into` variants — the
+//! gram matrix streams through the transpose-aware TN gemm path instead
+//! of materializing `U^T`, and `apply_into` runs the fused transform with
+//! pooled scratch; the allocating forms remain as bitwise-identical
+//! wrappers.
 
-use crate::linalg::{triu_inv, Matrix};
+use crate::linalg::{gemm, triu_inv, Matrix, Workspace};
 
 /// Precomputed CWY operands for a rollout.
 pub struct CwyOperator {
@@ -23,9 +28,19 @@ pub const DEGENERATE_NORM: f32 = 1e-6;
 
 /// Euclidean norms of the rows of V.
 pub fn row_norms(v: &Matrix) -> Vec<f32> {
-    (0..v.rows)
-        .map(|i| v.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
-        .collect()
+    let mut out = vec![0.0; v.rows];
+    row_norms_into(v, &mut out);
+    out
+}
+
+/// Euclidean norms of the rows of V into a caller-provided buffer — the
+/// one pass whose result `normalize`, `degenerate_rows`, and the backward
+/// tape all share (they used to each recompute it).
+pub fn row_norms_into(v: &Matrix, out: &mut [f32]) {
+    assert_eq!(out.len(), v.rows);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = v.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+    }
 }
 
 /// Indices of degenerate rows of V (norm <= [`DEGENERATE_NORM`]).
@@ -48,11 +63,28 @@ pub fn degenerate_rows(v: &Matrix) -> Vec<usize> {
 /// ([`crate::orthogonal::backward`]) treats such rows as constant and
 /// assigns them zero gradient.
 pub fn normalize(v: &Matrix) -> Matrix {
+    let norms = row_norms(v);
+    normalize_with_norms(v, &norms)
+}
+
+/// [`normalize`] with the row norms already in hand, so callers that also
+/// need the norms (the backward tape) pay for exactly one pass.
+pub fn normalize_with_norms(v: &Matrix, norms: &[f32]) -> Matrix {
+    let mut u = Matrix::zeros(v.cols, v.rows);
+    normalize_with_norms_into(v, norms, &mut u);
+    u
+}
+
+/// Allocation-free core of [`normalize`]: writes U into a preshaped
+/// `(N, L)` buffer.  Bitwise-identical to the allocating forms.
+pub fn normalize_with_norms_into(v: &Matrix, norms: &[f32], u: &mut Matrix) {
     let (l, n) = (v.rows, v.cols);
-    let mut u = Matrix::zeros(n, l);
+    assert_eq!(norms.len(), l, "row_norms length mismatch");
+    assert_eq!((u.rows, u.cols), (n, l), "normalize output shape");
+    u.fill(0.0);
     for i in 0..l {
         let row = v.row(i);
-        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let norm = norms[i];
         if norm <= DEGENERATE_NORM {
             u[(i % n, i)] = 1.0;
         } else {
@@ -61,21 +93,53 @@ pub fn normalize(v: &Matrix) -> Matrix {
             }
         }
     }
-    u
 }
 
 /// S = 0.5 I + striu(U^T U).
 pub fn build_s(u: &Matrix) -> Matrix {
+    let mut s = Matrix::zeros(u.cols, u.cols);
+    let mut ws = Workspace::new();
+    build_s_into(u, &mut s, &mut ws);
+    s
+}
+
+/// Allocation-free [`build_s`]: the gram `U^T U` streams through the TN
+/// gemm path (no materialized `U^T`) into pooled scratch, and S is
+/// assembled in a preshaped `(L, L)` buffer.
+pub fn build_s_into(u: &Matrix, s: &mut Matrix, ws: &mut Workspace) {
     let l = u.cols;
-    let gram = u.t().matmul(u);
-    let mut s = Matrix::zeros(l, l);
+    assert_eq!((s.rows, s.cols), (l, l), "build_s output shape");
+    let mut gram = ws.take(l, l);
+    gemm(true, false, 1.0, u, u, 0.0, &mut gram);
+    s.fill(0.0);
     for i in 0..l {
         s[(i, i)] = 0.5;
         for j in i + 1..l {
             s[(i, j)] = gram[(i, j)];
         }
     }
-    s
+    ws.give(gram);
+}
+
+/// Fused apply core shared by [`CwyOperator`] and the backward tape:
+/// `out = batch - ((batch @ U) @ S⁻¹) @ Uᵀ`, all scratch pooled, the
+/// trailing product running through the NT path (no materialized `Uᵀ`).
+pub(crate) fn apply_with_operands(
+    u: &Matrix,
+    sinv: &Matrix,
+    batch: &Matrix,
+    out: &mut Matrix,
+    ws: &mut Workspace,
+) {
+    let (b, l) = (batch.rows, u.cols);
+    let mut t = ws.take(b, l);
+    gemm(false, false, 1.0, batch, u, 0.0, &mut t); // (B, L)
+    let mut ta = ws.take(b, l);
+    gemm(false, false, 1.0, &t, sinv, 0.0, &mut ta); // (B, L)
+    out.copy_from(batch);
+    gemm(false, true, -1.0, &ta, u, 1.0, out); // out -= ta @ Uᵀ
+    ws.give(t);
+    ws.give(ta);
 }
 
 impl CwyOperator {
@@ -89,15 +153,27 @@ impl CwyOperator {
     /// Apply to a batch (B, N) of row-vector hidden states: `out = h @ Q`,
     /// matching the kernels' convention and the sequential HR chain.
     pub fn apply(&self, batch: &Matrix) -> Matrix {
-        let t = batch.matmul(&self.u);      // (B, L)
-        let v = t.matmul(&self.sinv);       // (B, L)
-        batch.sub(&v.matmul(&self.u.t()))
+        let mut out = Matrix::zeros(batch.rows, batch.cols);
+        let mut ws = Workspace::new();
+        self.apply_into(batch, &mut out, &mut ws);
+        out
+    }
+
+    /// Allocation-free [`CwyOperator::apply`]: `out` preshaped `(B, N)`,
+    /// scratch pooled in `ws`.  Bitwise-identical to the wrapper.
+    pub fn apply_into(&self, batch: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        assert_eq!((out.rows, out.cols), (batch.rows, batch.cols), "apply output shape");
+        apply_with_operands(&self.u, &self.sinv, batch, out, ws);
     }
 
     /// Materialize Q = I - U S^{-1} U^T.
     pub fn matrix(&self) -> Matrix {
         let n = self.u.rows;
-        Matrix::eye(n).sub(&self.u.matmul(&self.sinv).matmul(&self.u.t()))
+        let mut q = Matrix::eye(n);
+        let mut w = Matrix::zeros(n, self.u.cols);
+        gemm(false, false, 1.0, &self.u, &self.sinv, 0.0, &mut w);
+        gemm(false, true, -1.0, &w, &self.u, 1.0, &mut q); // I - (U S⁻¹) Uᵀ
+        q
     }
 }
 
@@ -157,6 +233,55 @@ mod tests {
         let direct = h.matmul(&op.matrix());
         let fused = op.apply(&h);
         assert!(direct.max_abs_diff(&fused) < 1e-4);
+    }
+
+    /// The satellite property: `apply_into` over a reused workspace (and
+    /// stale output contents) bit-matches the allocating `apply`, across
+    /// random shapes including L = 1 and B = 1.
+    #[test]
+    fn apply_into_bitwise_matches_apply() {
+        let mut ws = Workspace::new();
+        forall(
+            16,
+            |rng| {
+                let l = 1 + rng.below(8) as usize;
+                let n = l + 1 + rng.below(12) as usize;
+                let b = 1 + rng.below(5) as usize;
+                (
+                    Matrix::random_normal(rng, l, n, 1.0),
+                    Matrix::random_normal(rng, b, n, 1.0),
+                )
+            },
+            |(v, h)| {
+                let op = CwyOperator::new(v);
+                let reference = op.apply(h);
+                let mut out = Matrix::zeros(h.rows, h.cols);
+                out.fill(f32::NAN); // stale contents must not leak
+                op.apply_into(h, &mut out, &mut ws);
+                let same = reference
+                    .data
+                    .iter()
+                    .zip(&out.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if same { Ok(()) } else { Err("apply_into drifted from apply".into()) }
+            },
+        );
+    }
+
+    /// Norm dedup: normalize given precomputed norms equals normalize
+    /// recomputing them, and the shared pass matches `row_norms`.
+    #[test]
+    fn normalize_with_norms_matches_normalize() {
+        let mut rng = Pcg32::seeded(47);
+        let v = Matrix::random_normal(&mut rng, 5, 9, 1.0);
+        let norms = row_norms(&v);
+        let mut direct = vec![0.0; 5];
+        row_norms_into(&v, &mut direct);
+        assert_eq!(norms, direct);
+        assert_eq!(normalize(&v), normalize_with_norms(&v, &norms));
+        let mut u = Matrix::zeros(9, 5);
+        normalize_with_norms_into(&v, &norms, &mut u);
+        assert_eq!(u, normalize(&v));
     }
 
     /// Regression (ISSUE 4): a near-zero reflection row used to be scaled

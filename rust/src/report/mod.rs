@@ -1,5 +1,10 @@
-//! Report emitters: markdown tables and CSV series in the exact shapes the
-//! paper's tables/figures use (benches print through these).
+//! Report emitters: markdown tables, CSV series in the exact shapes the
+//! paper's tables/figures use (benches print through these), and the
+//! `BENCH_*.json` perf-trajectory writer.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
 
 /// A markdown table builder.
 pub struct Table {
@@ -93,6 +98,88 @@ impl Series {
     }
 }
 
+/// Collector for the perf-trajectory files (`BENCH_5.json`, …): one
+/// bench binary contributes a `kernel name -> median ns/op` map under
+/// `benches.<bench>`, merging into whatever other benches already wrote
+/// to the same file.  Every perf PR is judged against the previous
+/// trajectory point, so the schema stays deliberately flat:
+///
+/// ```json
+/// { "schema": "cwy-bench-trajectory-v1",
+///   "benches": { "gemm_native": { "gemm_nn_n256": 1.23e6, ... },
+///                "bptt_native": { ... } } }
+/// ```
+pub struct BenchJson {
+    bench: String,
+    kernels: BTreeMap<String, f64>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> BenchJson {
+        BenchJson { bench: bench.to_string(), kernels: BTreeMap::new() }
+    }
+
+    /// Record one kernel's median ns/op.
+    pub fn push(&mut self, kernel: &str, median_ns: f64) -> &mut Self {
+        self.kernels.insert(kernel.to_string(), median_ns);
+        self
+    }
+
+    /// The `benches.<bench>` object this collector holds.
+    fn to_json(&self) -> Json {
+        let map: BTreeMap<String, Json> = self
+            .kernels
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        Json::Obj(map)
+    }
+
+    /// Resolve a trajectory-file path: absolute paths are honored, but a
+    /// relative path lands at the **workspace root** — `cargo bench` runs
+    /// bench binaries with cwd = the package root (`rust/`), which would
+    /// otherwise scatter `rust/BENCH_5.json` while CI and the README read
+    /// the repo-root file.
+    pub fn resolve_trajectory_path(path: &str) -> std::path::PathBuf {
+        let p = std::path::Path::new(path);
+        if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(p)
+        }
+    }
+
+    /// Merge this bench's kernels into `path` (resolved via
+    /// [`BenchJson::resolve_trajectory_path`]), preserving other benches'
+    /// entries (read-modify-write; a missing or unreadable file starts
+    /// fresh).
+    pub fn merge_write(&self, path: &str) -> std::io::Result<()> {
+        let path = Self::resolve_trajectory_path(path);
+        let mut root = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| json::parse(&text).ok())
+            .unwrap_or(Json::Null);
+        if !matches!(root, Json::Obj(_)) {
+            root = Json::Obj(BTreeMap::new());
+        }
+        let Json::Obj(top) = &mut root else { unreachable!() };
+        top.insert(
+            "schema".to_string(),
+            Json::Str("cwy-bench-trajectory-v1".to_string()),
+        );
+        let benches = top
+            .entry("benches".to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if !matches!(benches, Json::Obj(_)) {
+            *benches = Json::Obj(BTreeMap::new());
+        }
+        if let Json::Obj(bm) = benches {
+            bm.insert(self.bench.clone(), self.to_json());
+        }
+        std::fs::write(path, root.dump() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +207,54 @@ mod tests {
     fn width_mismatch_panics() {
         let mut t = Table::new(&["a"]);
         t.row(&["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn trajectory_paths_resolve_to_workspace_root() {
+        let p = BenchJson::resolve_trajectory_path("BENCH_T.json");
+        assert!(p.is_absolute());
+        assert_eq!(
+            p,
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_T.json")
+        );
+        // Absolute paths pass through untouched.
+        let abs = std::env::temp_dir().join("x.json");
+        assert_eq!(BenchJson::resolve_trajectory_path(abs.to_str().unwrap()), abs);
+    }
+
+    #[test]
+    fn bench_json_merges_across_benches() {
+        let dir = std::env::temp_dir().join(format!("cwy_benchjson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_T.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+
+        let mut a = BenchJson::new("gemm_native");
+        a.push("gemm_nn_n64", 1000.0).push("gemm_nt_n64", 2000.0);
+        a.merge_write(path).unwrap();
+        let mut b = BenchJson::new("bptt_native");
+        b.push("fused_n64", 3000.0);
+        b.merge_write(path).unwrap();
+        // Re-writing a bench replaces only its own entries.
+        let mut a2 = BenchJson::new("gemm_native");
+        a2.push("gemm_nn_n64", 1500.0);
+        a2.merge_write(path).unwrap();
+
+        let root = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(root.path(&["schema"]).as_str(), Some("cwy-bench-trajectory-v1"));
+        assert_eq!(
+            root.path(&["benches", "gemm_native", "gemm_nn_n64"]).as_f64(),
+            Some(1500.0)
+        );
+        assert_eq!(
+            root.path(&["benches", "gemm_native", "gemm_nt_n64"]).as_f64(),
+            None, // replaced wholesale by the second gemm write
+        );
+        assert_eq!(
+            root.path(&["benches", "bptt_native", "fused_n64"]).as_f64(),
+            Some(3000.0)
+        );
+        let _ = std::fs::remove_file(path);
     }
 }

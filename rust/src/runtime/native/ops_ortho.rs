@@ -18,13 +18,23 @@
 //! runs step artifacts with `lr = 0` by convention (DESIGN.md §6.2).  The
 //! *trainable* recurrent family is `rnn_copy_*` ([`super::ops_rnn`]).
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
 use super::helpers::{dims2, expect_all_f32, expect_arity, expect_roles, expect_shape, mat, tensor};
 use super::{CellKind, FamilyDef, NativeOp};
+use crate::linalg::{gemm, Matrix, Workspace};
 use crate::orthogonal::{cwy, householder, tcwy};
 use crate::runtime::manifest::{ArtifactSpec, Role};
 use crate::runtime::tensor::HostTensor;
+
+thread_local! {
+    /// Per-thread gemm scratch for the fused apply paths: each serve
+    /// worker reuses its own pool across requests instead of allocating
+    /// operator temporaries per call (DESIGN.md §3.3).
+    static WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
 
 pub static FAMILY: FamilyDef = FamilyDef {
     name: "ortho",
@@ -133,7 +143,11 @@ fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec
         NativeOp::RolloutCwy => {
             let v = mat(inputs[0])?;
             let h = mat(inputs[1])?;
-            Ok(vec![tensor(cwy::CwyOperator::new(&v).apply(&h))])
+            let mut out = Matrix::zeros(h.rows, h.cols);
+            WS.with(|ws| {
+                cwy::CwyOperator::new(&v).apply_into(&h, &mut out, &mut ws.borrow_mut())
+            });
+            Ok(vec![tensor(out)])
         }
         NativeOp::RolloutHr => {
             let v = mat(inputs[0])?;
@@ -146,13 +160,25 @@ fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec
             let h = mat(inputs[1])?;
             let x = mat(inputs[2])?;
             let h_next = match kind {
-                CellKind::Cwy => cwy::CwyOperator::new(&v).apply(&h).add(&x),
+                CellKind::Cwy => {
+                    let mut out = Matrix::zeros(h.rows, h.cols);
+                    WS.with(|ws| {
+                        cwy::CwyOperator::new(&v).apply_into(&h, &mut out, &mut ws.borrow_mut())
+                    });
+                    out.add_assign(&x);
+                    out
+                }
                 CellKind::Hr => {
                     let mut rotated = h;
                     householder::apply_chain(&v, &mut rotated);
                     rotated.add(&x)
                 }
-                CellKind::Tcwy => h.add(&x.matmul(&tcwy::matrix(&v))),
+                CellKind::Tcwy => {
+                    // h + x Ω(V): fused beta = 1 accumulate, no temporary.
+                    let mut out = h;
+                    gemm(false, false, 1.0, &x, &tcwy::matrix(&v), 1.0, &mut out);
+                    out
+                }
             };
             // V is frozen (see module docs); state outputs come first,
             // in state-input order, per the step convention (§2.2).

@@ -15,8 +15,20 @@
 //! Gradients are exact BPTT through the parametrization
 //! ([`crate::orthogonal::backward`]): fused CWY accumulation for `cwy`,
 //! the sequential per-Householder chain for `hr`, and the Thm 3 Ω-path
-//! (square, St(N,N) = O(N)) for `tcwy`.  Every matmul routes through the
-//! blocked GEMM hot path.
+//! (square, St(N,N) = O(N)) for `tcwy`.
+//!
+//! Since the zero-allocation substrate pass (DESIGN.md §3.3) the whole
+//! rollout — forward states, per-step logit gradients, the BPTT itself —
+//! runs over a preallocated [`RolloutWorkspace`]: the hidden-state ring,
+//! logits/grad scratch, the parametrization tape, and the gemm pack
+//! panels are all reused across training steps, so a steady-state step
+//! performs **zero heap allocations** after warmup (pinned by
+//! `tests/alloc_discipline`).  Every matmul routes through the
+//! transpose-aware [`crate::linalg::gemm`] with fused `beta = 1`
+//! accumulation — `d_wout += hsᵀ dl` is one call, no `.t()`
+//! materialization, no temporary.  The family's `run` keeps a
+//! thread-local workspace, so trainer loops and serve workers each reuse
+//! their own buffers across calls.
 //!
 //! | `meta.op`        | kind  | signature (roles) |
 //! |------------------|-------|-------------------|
@@ -26,16 +38,18 @@
 //! | `rnn_copy_eval`  | eval  | params, tokens, targets (all data) → loss |
 //!
 //! `meta.param` selects the parametrization; `cwy`/`hr` differentiate the
-//! *same* function, so their gradients agree elementwise — the PR's
+//! *same* function, so their gradients agree elementwise — the PR-4
 //! acceptance check and the Fig. 2 story at the gradient level.
+
+use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
 use super::helpers::{dims2, expect_arity, expect_dtype, expect_roles, expect_shape, mat, tensor};
 use super::{CellKind, FamilyDef, NativeOp, StepMode, PARAM_META_KEY};
-use crate::linalg::Matrix;
+use crate::linalg::{gemm, Matrix, Workspace};
 use crate::orthogonal::backward::{hr_chain_backward, CwyGrad, TcwyGrad};
-use crate::orthogonal::{cwy, householder, tcwy};
+use crate::orthogonal::householder;
 use crate::runtime::manifest::{ArtifactSpec, Role};
 use crate::runtime::tensor::{Dtype, HostTensor};
 
@@ -217,6 +231,18 @@ pub struct CopyRnnParams {
     pub b_out: Matrix,
 }
 
+impl CopyRnnParams {
+    /// In-place SGD update `p -= lr * g` over the whole block — the
+    /// allocation-free training apply (bitwise-identical to the
+    /// `p.sub(&g.scale(lr))` it replaces).
+    pub fn sgd_step(&mut self, grads: &CopyRnnGrads, lr: f32) {
+        self.v.axpy(-lr, &grads.v);
+        self.w_in.axpy(-lr, &grads.w_in);
+        self.w_out.axpy(-lr, &grads.w_out);
+        self.b_out.axpy(-lr, &grads.b_out);
+    }
+}
+
 /// Gradients with respect to the four parameter tensors.
 pub struct CopyRnnGrads {
     pub v: Matrix,
@@ -226,6 +252,15 @@ pub struct CopyRnnGrads {
 }
 
 impl CopyRnnGrads {
+    fn empty() -> CopyRnnGrads {
+        CopyRnnGrads {
+            v: Matrix::zeros(0, 0),
+            w_in: Matrix::zeros(0, 0),
+            w_out: Matrix::zeros(0, 0),
+            b_out: Matrix::zeros(0, 0),
+        }
+    }
+
     /// Euclidean norm over the whole parameter block — the per-step
     /// descent diagnostic surfaced in `metrics::History`.
     pub fn global_norm(&self) -> f32 {
@@ -234,89 +269,6 @@ impl CopyRnnGrads {
             .map(|m| m.data.iter().map(|x| x * x).sum::<f32>())
             .sum::<f32>()
             .sqrt()
-    }
-}
-
-/// The recurrent transition `h → h Q` for each parametrization, with the
-/// state it needs to run BPTT afterwards.
-enum Transition {
-    Cwy(cwy::CwyOperator),
-    Hr,
-    /// Materialized square Ω (Thm 3 at M = N).
-    Tcwy(Matrix),
-}
-
-impl Transition {
-    fn new(kind: CellKind, v: &Matrix) -> Transition {
-        match kind {
-            CellKind::Cwy => Transition::Cwy(cwy::CwyOperator::new(v)),
-            CellKind::Hr => Transition::Hr,
-            CellKind::Tcwy => Transition::Tcwy(tcwy::matrix(v)),
-        }
-    }
-
-    fn apply(&self, v: &Matrix, h: &Matrix) -> Matrix {
-        match self {
-            Transition::Cwy(op) => op.apply(h),
-            Transition::Hr => {
-                let mut out = h.clone();
-                householder::apply_chain(v, &mut out);
-                out
-            }
-            Transition::Tcwy(omega) => h.matmul(omega),
-        }
-    }
-}
-
-/// Accumulates the V-path of the BPTT, per parametrization.
-enum TransitionGrad {
-    Cwy(CwyGrad),
-    Hr(Matrix),
-    Tcwy { grad: TcwyGrad, omega: Matrix, domega: Matrix },
-}
-
-impl TransitionGrad {
-    fn new(kind: CellKind, v: &Matrix, trans: &Transition) -> TransitionGrad {
-        match kind {
-            CellKind::Cwy => TransitionGrad::Cwy(CwyGrad::new(v)),
-            CellKind::Hr => TransitionGrad::Hr(Matrix::zeros(v.rows, v.cols)),
-            CellKind::Tcwy => {
-                let Transition::Tcwy(omega) = trans else { unreachable!() };
-                TransitionGrad::Tcwy {
-                    grad: TcwyGrad::new(v),
-                    omega: omega.clone(),
-                    domega: Matrix::zeros(omega.rows, omega.cols),
-                }
-            }
-        }
-    }
-
-    /// Backward through one transition `y = h Q`: upstream `g = dL/dy`,
-    /// stored input `h`; returns `dL/dh` and accumulates the V-path.
-    fn backward(&mut self, v: &Matrix, h: &Matrix, g: &Matrix) -> Matrix {
-        match self {
-            TransitionGrad::Cwy(grad) => grad.apply_backward(h, g),
-            TransitionGrad::Hr(dv) => {
-                let (dh, dvs) = hr_chain_backward(v, h, g);
-                *dv = dv.add(&dvs);
-                dh
-            }
-            TransitionGrad::Tcwy { omega, domega, .. } => {
-                *domega = domega.add(&h.t().matmul(g));
-                g.matmul(&omega.t())
-            }
-        }
-    }
-
-    fn into_dv(self, v: &Matrix) -> Matrix {
-        match self {
-            TransitionGrad::Cwy(grad) => grad.into_dv(v),
-            TransitionGrad::Hr(dv) => dv,
-            TransitionGrad::Tcwy { mut grad, domega, .. } => {
-                grad.matrix_backward(&domega);
-                grad.into_dv(v)
-            }
-        }
     }
 }
 
@@ -329,36 +281,149 @@ pub struct CopyBatchRef<'a> {
     pub t_total: usize,
 }
 
-/// Forward pass (and optionally exact BPTT) of the copy-task RNN.
-pub fn forward_backward(
+/// Every buffer the rollout forward + BPTT touches, preallocated and
+/// reused across training steps (DESIGN.md §3.3): the hidden-state ring
+/// `hs[0..=T]`, per-step logit-gradient scratch, the running BPTT
+/// gradient `g`, the parametrization tape (CWY or T-CWY, rebuilt in
+/// place per step), the materialized Ω for the tcwy recurrence, the
+/// output gradients, and the shared gemm scratch pool.  After one warmup
+/// step at the workload's shapes, [`forward_backward_ws`] allocates
+/// nothing.
+pub struct RolloutWorkspace {
+    ws: Workspace,
+    hs: Vec<Matrix>,
+    dlogits: Vec<Matrix>,
+    logits: Matrix,
+    g: Matrix,
+    grads: CopyRnnGrads,
+    cwy: Option<CwyGrad>,
+    tcwy: Option<TcwyGrad>,
+    omega: Matrix,
+    domega: Matrix,
+}
+
+impl Default for RolloutWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RolloutWorkspace {
+    pub fn new() -> RolloutWorkspace {
+        RolloutWorkspace {
+            ws: Workspace::new(),
+            hs: Vec::new(),
+            dlogits: Vec::new(),
+            logits: Matrix::zeros(0, 0),
+            g: Matrix::zeros(0, 0),
+            grads: CopyRnnGrads::empty(),
+            cwy: None,
+            tcwy: None,
+            omega: Matrix::zeros(0, 0),
+            domega: Matrix::zeros(0, 0),
+        }
+    }
+
+    /// The gradients computed by the last `want_grads` call to
+    /// [`forward_backward_ws`].
+    pub fn grads(&self) -> &CopyRnnGrads {
+        &self.grads
+    }
+
+    /// Move the gradients out (the allocating-API wrapper uses this).
+    fn take_grads(&mut self) -> CopyRnnGrads {
+        std::mem::replace(&mut self.grads, CopyRnnGrads::empty())
+    }
+}
+
+/// Forward pass (and optionally exact BPTT) of the copy-task RNN over a
+/// reused [`RolloutWorkspace`].  Returns the mean CE loss; when
+/// `want_grads`, the parameter gradients are left in `rws.grads()`.
+/// Zero heap allocations at steady state; bitwise-identical to the
+/// allocating [`forward_backward`] wrapper.
+pub fn forward_backward_ws(
     kind: CellKind,
     params: &CopyRnnParams,
     data: &CopyBatchRef,
     want_grads: bool,
-) -> Result<(f32, Option<CopyRnnGrads>)> {
+    rws: &mut RolloutWorkspace,
+) -> Result<f32> {
     let CopyRnnParams { v, w_in, w_out, b_out } = params;
     let (batch, t_total) = (data.batch, data.t_total);
     let n = v.cols;
     let denom = (batch * t_total) as f32;
-    let trans = Transition::new(kind, v);
+
+    // ---- rebuild the transition operands in place for this step's V
+    match kind {
+        CellKind::Cwy => match &mut rws.cwy {
+            Some(grad) => grad.recompute(v, &mut rws.ws),
+            None => rws.cwy = Some(CwyGrad::new(v)),
+        },
+        CellKind::Hr => {}
+        CellKind::Tcwy => {
+            match &mut rws.tcwy {
+                Some(grad) => grad.recompute(v, &mut rws.ws),
+                None => rws.tcwy = Some(TcwyGrad::new(v)),
+            }
+            rws.omega.resize_zeroed(n, v.rows);
+            rws.tcwy.as_ref().unwrap().omega_into(&mut rws.omega);
+            rws.domega.resize_zeroed(n, v.rows);
+        }
+    }
+
+    // ---- shape the rollout buffers.  Only h_0 needs zeroing: every
+    // element of hs[1..=T], logits, and dlogits is overwritten before it
+    // is read (beta = 0 gemm / copy_from / full per-row CE write), so
+    // those skip the per-step memset entirely.
+    if rws.hs.len() < t_total + 1 {
+        rws.hs.resize_with(t_total + 1, || Matrix::zeros(0, 0));
+    }
+    rws.hs[0].resize_zeroed(batch, n);
+    for h in rws.hs.iter_mut().take(t_total + 1).skip(1) {
+        h.resize_for_overwrite(batch, n);
+    }
+    rws.logits.resize_for_overwrite(batch, OUT_CLASSES);
+    if want_grads {
+        if rws.dlogits.len() < t_total {
+            rws.dlogits.resize_with(t_total, || Matrix::zeros(0, 0));
+        }
+        for d in rws.dlogits.iter_mut().take(t_total) {
+            d.resize_for_overwrite(batch, OUT_CLASSES);
+        }
+    }
 
     // ---- forward, storing hidden states and per-step logit gradients
-    let mut hs: Vec<Matrix> = Vec::with_capacity(t_total + 1);
-    hs.push(Matrix::zeros(batch, n));
-    let mut dlogits: Vec<Matrix> = Vec::with_capacity(t_total);
     let mut loss_sum = 0.0f32;
     for t in 0..t_total {
-        let mut x = Matrix::zeros(batch, n);
+        let (left, right) = rws.hs.split_at_mut(t + 1);
+        let h_prev = &left[t];
+        let h_next = &mut right[0];
+        match kind {
+            CellKind::Cwy => {
+                rws.cwy
+                    .as_ref()
+                    .expect("cwy tape built above")
+                    .apply_forward_into(h_prev, h_next, &mut rws.ws);
+            }
+            CellKind::Hr => {
+                h_next.copy_from(h_prev);
+                householder::apply_chain(v, h_next);
+            }
+            CellKind::Tcwy => {
+                gemm(false, false, 1.0, h_prev, &rws.omega, 0.0, h_next);
+            }
+        }
+        // h_{t+1} += W_in[token_t], row-wise (the embedding add).
         for b in 0..batch {
             let tok = data.tokens[b * t_total + t];
             if tok < 0 || tok as usize >= IN_VOCAB {
                 bail!("token {tok} at (row {b}, t {t}) outside 0..{IN_VOCAB}");
             }
-            x.row_mut(b).copy_from_slice(w_in.row(tok as usize));
+            for (hv, wv) in h_next.row_mut(b).iter_mut().zip(w_in.row(tok as usize)) {
+                *hv += wv;
+            }
         }
-        let h_next = trans.apply(v, hs.last().unwrap()).add(&x);
-        let logits = h_next.matmul(w_out);
-        let mut dl = Matrix::zeros(batch, OUT_CLASSES);
+        gemm(false, false, 1.0, h_next, w_out, 0.0, &mut rws.logits);
         for b in 0..batch {
             let tgt = data.targets[b * t_total + t];
             if tgt < 0 || tgt as usize >= OUT_CLASSES {
@@ -367,58 +432,105 @@ pub fn forward_backward(
             // Stable softmax cross-entropy on logits + b_out.
             let bias = b_out.row(0);
             let mut mx = f32::NEG_INFINITY;
-            for (lc, bc) in logits.row(b).iter().zip(bias) {
+            for (lc, bc) in rws.logits.row(b).iter().zip(bias) {
                 mx = mx.max(lc + bc);
             }
             let mut e = [0.0f32; OUT_CLASSES];
             let mut z = 0.0f32;
-            for ((ec, lc), bc) in e.iter_mut().zip(logits.row(b)).zip(bias) {
+            for ((ec, lc), bc) in e.iter_mut().zip(rws.logits.row(b)).zip(bias) {
                 *ec = (lc + bc - mx).exp();
                 z += *ec;
             }
             loss_sum -= (e[tgt as usize] / z).max(1e-30).ln();
-            for (c, &ec) in e.iter().enumerate() {
-                let hit = if c == tgt as usize { 1.0 } else { 0.0 };
-                dl[(b, c)] = (ec / z - hit) / denom;
+            if want_grads {
+                let dl = &mut rws.dlogits[t];
+                for (c, &ec) in e.iter().enumerate() {
+                    let hit = if c == tgt as usize { 1.0 } else { 0.0 };
+                    dl[(b, c)] = (ec / z - hit) / denom;
+                }
             }
-        }
-        hs.push(h_next);
-        if want_grads {
-            dlogits.push(dl);
         }
     }
     let loss = loss_sum / denom;
     if !want_grads {
-        return Ok((loss, None));
+        return Ok(loss);
     }
 
-    // ---- backward (BPTT)
-    let mut tg = TransitionGrad::new(kind, v, &trans);
-    let mut d_win = Matrix::zeros(IN_VOCAB, n);
-    let mut d_wout = Matrix::zeros(n, OUT_CLASSES);
-    let mut d_b = Matrix::zeros(1, OUT_CLASSES);
-    let mut g = Matrix::zeros(batch, n);
+    // ---- backward (BPTT), every accumulation a fused beta = 1 gemm
+    rws.grads.v.resize_zeroed(v.rows, v.cols);
+    rws.grads.w_in.resize_zeroed(IN_VOCAB, n);
+    rws.grads.w_out.resize_zeroed(n, OUT_CLASSES);
+    rws.grads.b_out.resize_zeroed(1, OUT_CLASSES);
+    rws.g.resize_zeroed(batch, n);
     for t in (0..t_total).rev() {
-        let dl = &dlogits[t];
-        d_wout = d_wout.add(&hs[t + 1].t().matmul(dl));
+        let dl = &rws.dlogits[t];
+        // d_wout += hs[t+1]ᵀ dl — the call the issue names: one fused
+        // TN gemm, zero temporaries.
+        gemm(true, false, 1.0, &rws.hs[t + 1], dl, 1.0, &mut rws.grads.w_out);
         for b in 0..batch {
             for c in 0..OUT_CLASSES {
-                d_b[(0, c)] += dl[(b, c)];
+                rws.grads.b_out[(0, c)] += dl[(b, c)];
             }
         }
-        g = g.add(&dl.matmul(&w_out.t()));
+        // g += dl @ W_outᵀ (NT path, fused accumulate).
+        gemm(false, true, 1.0, dl, w_out, 1.0, &mut rws.g);
         // h_{t+1} = (h_t Q) + x_t: dx_t = g lands on the token's row of
         // W_in; the transition backward yields dL/dh_t.
         for b in 0..batch {
             let tok = data.tokens[b * t_total + t] as usize;
-            for (dw, gv) in d_win.row_mut(tok).iter_mut().zip(g.row(b)) {
+            for (dw, gv) in rws.grads.w_in.row_mut(tok).iter_mut().zip(rws.g.row(b)) {
                 *dw += gv;
             }
         }
-        g = tg.backward(v, &hs[t], &g);
+        match kind {
+            CellKind::Cwy => {
+                rws.cwy
+                    .as_mut()
+                    .expect("cwy tape built above")
+                    .apply_backward_in_place(&rws.hs[t], &mut rws.g, &mut rws.ws);
+            }
+            CellKind::Hr => {
+                let (dh, dvs) = hr_chain_backward(v, &rws.hs[t], &rws.g);
+                rws.g.copy_from(&dh);
+                rws.grads.v.add_assign(&dvs);
+            }
+            CellKind::Tcwy => {
+                gemm(true, false, 1.0, &rws.hs[t], &rws.g, 1.0, &mut rws.domega);
+                let mut gnext = rws.ws.take(batch, n);
+                gemm(false, true, 1.0, &rws.g, &rws.omega, 0.0, &mut gnext);
+                rws.g.copy_from(&gnext);
+                rws.ws.give(gnext);
+            }
+        }
     }
-    let grads = CopyRnnGrads { v: tg.into_dv(v), w_in: d_win, w_out: d_wout, b_out: d_b };
-    Ok((loss, Some(grads)))
+    match kind {
+        CellKind::Cwy => {
+            let grad = rws.cwy.as_mut().expect("cwy tape built above");
+            grad.finish_into(v, &mut rws.grads.v, &mut rws.ws);
+        }
+        CellKind::Hr => {}
+        CellKind::Tcwy => {
+            let grad = rws.tcwy.as_mut().expect("tcwy tape built above");
+            grad.matrix_backward_ws(&rws.domega, &mut rws.ws);
+            grad.finish_into(v, &mut rws.grads.v, &mut rws.ws);
+        }
+    }
+    Ok(loss)
+}
+
+/// Forward pass (and optionally exact BPTT) of the copy-task RNN —
+/// allocating wrapper over [`forward_backward_ws`] with a throwaway
+/// workspace, kept for tests and one-shot callers.
+pub fn forward_backward(
+    kind: CellKind,
+    params: &CopyRnnParams,
+    data: &CopyBatchRef,
+    want_grads: bool,
+) -> Result<(f32, Option<CopyRnnGrads>)> {
+    let mut rws = RolloutWorkspace::new();
+    let loss = forward_backward_ws(kind, params, data, want_grads, &mut rws)?;
+    let grads = if want_grads { Some(rws.take_grads()) } else { None };
+    Ok((loss, grads))
 }
 
 struct Inputs {
@@ -455,6 +567,13 @@ fn unpack(inputs: &[&HostTensor]) -> Result<Inputs> {
     })
 }
 
+thread_local! {
+    /// Per-thread rollout workspace: the trainer loop and each serve
+    /// worker reuse their own buffers across `run` calls, so repeated
+    /// steps at fixed shapes stop allocating inside the rollout.
+    static RWS: RefCell<RolloutWorkspace> = RefCell::new(RolloutWorkspace::new());
+}
+
 fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
     let NativeOp::RnnCopy(kind, mode) = op else {
         bail!("op {op:?} is not in the rnn_copy family");
@@ -462,40 +581,52 @@ fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec
     match mode {
         StepMode::Step | StepMode::Grad => {
             let inp = unpack(inputs)?;
-            let (loss, grads) = forward_backward(kind, &inp.params, &inp.data(), true)?;
-            let grads = grads.expect("grads requested");
-            let gnorm = grads.global_norm();
-            let out_params = match mode {
-                StepMode::Grad => [grads.v, grads.w_in, grads.w_out, grads.b_out],
-                _ => {
-                    let lr = inputs[6].scalar()?;
-                    let p = &inp.params;
-                    [
-                        p.v.sub(&grads.v.scale(lr)),
-                        p.w_in.sub(&grads.w_in.scale(lr)),
-                        p.w_out.sub(&grads.w_out.scale(lr)),
-                        p.b_out.sub(&grads.b_out.scale(lr)),
-                    ]
-                }
-            };
-            let mut out: Vec<HostTensor> = out_params.into_iter().map(tensor).collect();
-            out.push(HostTensor::scalar_f32(loss));
-            out.push(HostTensor::scalar_f32(gnorm));
-            Ok(out)
+            RWS.with(|cell| {
+                let rws = &mut *cell.borrow_mut();
+                let loss = forward_backward_ws(kind, &inp.params, &inp.data(), true, rws)?;
+                let grads = rws.grads();
+                let gnorm = grads.global_norm();
+                let out_params: [Matrix; 4] = match mode {
+                    StepMode::Grad => [
+                        grads.v.clone(),
+                        grads.w_in.clone(),
+                        grads.w_out.clone(),
+                        grads.b_out.clone(),
+                    ],
+                    _ => {
+                        let lr = inputs[6].scalar()?;
+                        let mut p = CopyRnnParams {
+                            v: inp.params.v.clone(),
+                            w_in: inp.params.w_in.clone(),
+                            w_out: inp.params.w_out.clone(),
+                            b_out: inp.params.b_out.clone(),
+                        };
+                        p.sgd_step(grads, lr);
+                        [p.v, p.w_in, p.w_out, p.b_out]
+                    }
+                };
+                let mut out: Vec<HostTensor> = out_params.into_iter().map(tensor).collect();
+                out.push(HostTensor::scalar_f32(loss));
+                out.push(HostTensor::scalar_f32(gnorm));
+                Ok(out)
+            })
         }
         StepMode::Apply => {
             let lr = inputs[8].scalar()?;
             (0..4)
                 .map(|i| {
-                    let p = mat(inputs[i])?;
+                    let mut p = mat(inputs[i])?;
                     let g = mat(inputs[4 + i])?;
-                    Ok(tensor(p.sub(&g.scale(lr))))
+                    p.axpy(-lr, &g);
+                    Ok(tensor(p))
                 })
                 .collect()
         }
         StepMode::Eval => {
             let inp = unpack(inputs)?;
-            let (loss, _) = forward_backward(kind, &inp.params, &inp.data(), false)?;
+            let loss = RWS.with(|cell| {
+                forward_backward_ws(kind, &inp.params, &inp.data(), false, &mut cell.borrow_mut())
+            })?;
             Ok(vec![HostTensor::scalar_f32(loss)])
         }
     }
@@ -589,6 +720,44 @@ mod tests {
         }
     }
 
+    /// The zero-allocation path is also the *same-answer* path: a reused
+    /// workspace must reproduce a fresh one bit-for-bit, step after step,
+    /// for every parametrization — including B = 1 / L = 1 edge shapes.
+    #[test]
+    fn reused_workspace_bitwise_matches_fresh() {
+        let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for kind in [CellKind::Cwy, CellKind::Hr, CellKind::Tcwy] {
+            let shapes: &[(usize, usize, usize, usize)] = match kind {
+                CellKind::Tcwy => &[(5, 5, 3, 6), (4, 4, 1, 1)],
+                _ => &[(3, 7, 2, 6), (1, 5, 1, 1)],
+            };
+            let mut rws = RolloutWorkspace::new();
+            for (step, &(l, n, b, t)) in shapes.iter().enumerate() {
+                let tiny = tiny_setup(100 + step as u64, l, n, b, t);
+                let loss_ws =
+                    forward_backward_ws(kind, &tiny.params, &tiny.data(), true, &mut rws)
+                        .unwrap();
+                let (loss_fresh, grads_fresh) =
+                    forward_backward(kind, &tiny.params, &tiny.data(), true).unwrap();
+                let gf = grads_fresh.unwrap();
+                assert_eq!(
+                    loss_ws.to_bits(),
+                    loss_fresh.to_bits(),
+                    "{kind:?} step {step}: loss drifted"
+                );
+                let gw = rws.grads();
+                for (name, a, b) in [
+                    ("v", &gw.v, &gf.v),
+                    ("w_in", &gw.w_in, &gf.w_in),
+                    ("w_out", &gw.w_out, &gf.w_out),
+                    ("b_out", &gw.b_out, &gf.b_out),
+                ] {
+                    assert_eq!(bits(a), bits(b), "{kind:?} step {step}: d{name} drifted");
+                }
+            }
+        }
+    }
+
     /// cwy and hr parametrize the same function, so their BPTT gradients
     /// agree elementwise (acceptance bound 1e-4) on the same rollout.
     #[test]
@@ -607,10 +776,12 @@ mod tests {
 
     /// A few fused steps on a fixed batch drive the loss down — the
     /// smallest possible descent smoke for the family itself (the full
-    /// below-baseline run lives in the trainer integration suite).
+    /// below-baseline run lives in the trainer integration suite).  Runs
+    /// through the workspace + in-place SGD path the trainer hot loop uses.
     #[test]
     fn repeated_steps_descend_on_fixed_batch() {
         let mut tiny = tiny_setup(5, 4, 16, 4, 10);
+        let mut rws = RolloutWorkspace::new();
         let mut losses = Vec::new();
         for _ in 0..30 {
             let data = CopyBatchRef {
@@ -619,15 +790,10 @@ mod tests {
                 batch: tiny.batch,
                 t_total: tiny.t_total,
             };
-            let (loss, grads) = forward_backward(CellKind::Cwy, &tiny.params, &data, true).unwrap();
-            let g = grads.unwrap();
+            let loss =
+                forward_backward_ws(CellKind::Cwy, &tiny.params, &data, true, &mut rws).unwrap();
             losses.push(loss);
-            let lr = 0.5;
-            let p = &mut tiny.params;
-            p.v = p.v.sub(&g.v.scale(lr));
-            p.w_in = p.w_in.sub(&g.w_in.scale(lr));
-            p.w_out = p.w_out.sub(&g.w_out.scale(lr));
-            p.b_out = p.b_out.sub(&g.b_out.scale(lr));
+            tiny.params.sgd_step(rws.grads(), 0.5);
         }
         assert!(
             losses.last().unwrap() < &(losses[0] * 0.5),

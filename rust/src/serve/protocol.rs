@@ -60,6 +60,12 @@ pub enum ErrCode {
     BadRequest,
     /// The fused execution failed.
     Exec,
+    /// The request named a session whose stored state no longer matches
+    /// the served signature (e.g. after a parameter/artifact swap) — the
+    /// typed form of what used to be a silent reset (worst case, a
+    /// worker-thread shape assert).  Clients should drop or re-key the
+    /// session and retry.
+    StaleState,
     /// The server is shutting down.
     Unavailable,
 }
@@ -71,6 +77,7 @@ impl ErrCode {
             ErrCode::Overloaded => "overloaded",
             ErrCode::BadRequest => "bad_request",
             ErrCode::Exec => "exec",
+            ErrCode::StaleState => "stale_state",
             ErrCode::Unavailable => "unavailable",
         }
     }
@@ -81,6 +88,7 @@ impl ErrCode {
             "overloaded" => ErrCode::Overloaded,
             "bad_request" => ErrCode::BadRequest,
             "exec" => ErrCode::Exec,
+            "stale_state" => ErrCode::StaleState,
             "unavailable" => ErrCode::Unavailable,
             other => bail!("unknown error code '{other}'"),
         })

@@ -13,6 +13,7 @@ use std::thread::{self, JoinHandle};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::linalg::ShapeError;
 use crate::runtime::engine::{Backend, Compiled, Engine};
 use crate::runtime::manifest::{ArtifactSpec, Manifest, Role};
 use crate::runtime::tensor::{Dtype, HostTensor};
@@ -421,21 +422,83 @@ impl ServeModel for FakeModel {
     }
 }
 
+/// Per-worker reusable scratch for batch execution (DESIGN.md §3.3):
+/// the control-plane vectors `run_chunk` fills for every fused chunk
+/// keep their capacity across requests instead of reallocating in the
+/// serve hot loop.  One instance per worker thread, like the model.
+#[derive(Default)]
+pub struct WorkerScratch {
+    /// Taken per-request session state, aligned with the chunk.
+    taken: Vec<Option<Vec<HostTensor>>>,
+    /// Updated per-row state gathered from the outputs, per request.
+    session_rows: Vec<Vec<HostTensor>>,
+    /// Per-port split rows of the user-facing outputs.
+    rows_by_port: Vec<Option<Vec<HostTensor>>>,
+    /// Per-request queue waits for the stats record.
+    queue_waits: Vec<u64>,
+}
+
+/// Typed shape check for stored session state against the served per-row
+/// state ports.  `None` means the state streams straight into the fused
+/// batch; `Some` carries the first mismatch (count, shape, or dtype) so
+/// the worker can reply with a `stale_state` error frame instead of
+/// panicking on a downstream assert or silently serving a reset session.
+pub fn session_state_shape_error(
+    state: &[HostTensor],
+    ports: &[&PortSpec],
+) -> Option<ShapeError> {
+    if state.len() != ports.len() {
+        return Some(ShapeError {
+            op: "session state tensor count",
+            expected: vec![ports.len()],
+            got: vec![state.len()],
+        });
+    }
+    for (t, p) in state.iter().zip(ports) {
+        if t.shape != p.tail() {
+            return Some(ShapeError {
+                op: "session state row",
+                expected: p.tail().to_vec(),
+                got: t.shape.clone(),
+            });
+        }
+        if t.dtype() != p.dtype {
+            // ShapeError's vectors carry shapes, so the op string names
+            // both dtypes explicitly (there are only two).
+            let op = match p.dtype {
+                Dtype::F32 => "session state dtype (port expects f32, stored row is i32)",
+                Dtype::I32 => "session state dtype (port expects i32, stored row is f32)",
+            };
+            return Some(ShapeError {
+                op,
+                expected: p.tail().to_vec(),
+                got: t.shape.clone(),
+            });
+        }
+    }
+    None
+}
+
 /// Execute one coalesced batch end-to-end: validate, gather session rows,
-/// stack, run, scatter state + outputs, reply.
+/// stack, run, scatter state + outputs, reply.  `spec` is the worker's
+/// cached copy of `model.spec()` and `scratch` its reusable buffers —
+/// both are per-worker state so the hot loop neither re-clones the
+/// signature nor reallocates its control vectors per batch.
+#[allow(clippy::too_many_arguments)]
 pub fn execute_batch(
     model: &mut dyn ServeModel,
+    spec: &ServeSpec,
     resident: &mut Vec<HostTensor>,
     batch: Vec<Pending>,
     sessions: &SessionStore,
     stats: &ServeStats,
     clock: &Clock,
     lr: f32,
+    scratch: &mut WorkerScratch,
 ) {
-    let spec = model.spec().clone();
     let mut good = Vec::new();
     for p in batch {
-        match validate_request(&spec, &p.req) {
+        match validate_request(spec, &p.req) {
             Ok(()) => good.push(p),
             Err(e) => {
                 stats.record_bad_request();
@@ -453,23 +516,26 @@ pub fn execute_batch(
         // A fused chunk may hold at most one request per session key: a
         // second would read state the first has not written yet.  Cutting
         // the chunk at the duplicate keeps FIFO order, and the duplicate
-        // runs in the next sequential chunk, after the state lands.
-        let mut seen = std::collections::HashSet::new();
+        // runs in the next sequential chunk, after the state lands.  The
+        // scan is quadratic in the chunk length, which is bounded by the
+        // fused batch — no per-batch set allocation.
         let mut chunk_len = 0usize;
-        for p in rest.iter() {
+        for (idx, p) in rest.iter().enumerate() {
             if chunk_len >= cap {
                 break;
             }
             if let Some(s) = &p.req.session {
-                if !seen.insert(s.as_str()) {
+                if rest[..idx]
+                    .iter()
+                    .any(|q| q.req.session.as_deref() == Some(s.as_str()))
+                {
                     break;
                 }
             }
             chunk_len += 1;
         }
-        drop(seen);
         let remainder = rest.split_off(chunk_len);
-        run_chunk(model, &spec, resident, rest, sessions, stats, clock, lr);
+        run_chunk(model, spec, resident, rest, sessions, stats, clock, lr, scratch);
         rest = remainder;
     }
 }
@@ -484,6 +550,7 @@ fn run_chunk(
     stats: &ServeStats,
     clock: &Clock,
     lr: f32,
+    scratch: &mut WorkerScratch,
 ) {
     let start_us = clock.now_us();
 
@@ -529,29 +596,49 @@ fn run_chunk(
     if chunk.is_empty() {
         return;
     }
-    let k = chunk.len();
     let per_row_state: Vec<&PortSpec> =
         spec.inputs.iter().filter(|p| p.role == Role::State && p.per_row).collect();
     let init_rows = model.initial_session_rows();
 
-    // Exclusive session handoff: take state rows for the whole chunk.
-    let taken: Vec<Option<Vec<HostTensor>>> = chunk
-        .iter()
-        .map(|p| {
-            p.req
-                .session
-                .as_ref()
-                .and_then(|key| sessions.take(key, start_us))
-                // A stale/mismatched state vector falls back to fresh.
-                .filter(|state| {
-                    state.len() == per_row_state.len()
-                        && state
-                            .iter()
-                            .zip(&per_row_state)
-                            .all(|(t, p)| t.shape == p.tail() && t.dtype() == p.dtype)
-                })
-        })
-        .collect();
+    // Exclusive session handoff: take state rows for the whole chunk.  A
+    // state vector that no longer matches the served signature (stale
+    // after a parameter/artifact swap) gets a typed `stale_state` error
+    // frame and its request leaves the chunk — previously it silently
+    // reset the conversation, and a shape slipping past the reset would
+    // have panicked the worker on a downstream assert.  The stale state
+    // is discarded so a retry starts fresh.
+    scratch.taken.clear();
+    let mut kept: Vec<Pending> = Vec::with_capacity(chunk.len());
+    for p in chunk {
+        match p.req.session.as_ref().and_then(|key| sessions.take(key, start_us)) {
+            Some(state) => match session_state_shape_error(&state, &per_row_state) {
+                None => {
+                    kept.push(p);
+                    scratch.taken.push(Some(state));
+                }
+                Some(e) => {
+                    stats.record_bad_request();
+                    p.reply(Response::Err {
+                        id: p.req.id,
+                        code: ErrCode::StaleState,
+                        msg: format!(
+                            "stored session state no longer matches the served \
+                             signature ({e}); state discarded — retry to start fresh"
+                        ),
+                    });
+                }
+            },
+            None => {
+                kept.push(p);
+                scratch.taken.push(None);
+            }
+        }
+    }
+    let chunk = kept;
+    if chunk.is_empty() {
+        return;
+    }
+    let k = chunk.len();
 
     // Assemble fused inputs in port order.
     let mut inputs: Vec<HostTensor> = Vec::with_capacity(spec.inputs.len());
@@ -576,7 +663,8 @@ fn run_chunk(
                     .filter(|t| t.shape == port.tail() && t.dtype() == port.dtype)
                     .cloned()
                     .unwrap_or_else(|| HostTensor::zeros(port.tail().to_vec(), port.dtype));
-                let rows: Vec<HostTensor> = taken
+                let rows: Vec<HostTensor> = scratch
+                    .taken
                     .iter()
                     .map(|s| {
                         s.as_ref()
@@ -625,7 +713,7 @@ fn run_chunk(
             stats.record_exec_error(k as u64);
             // Put the taken session states back — a transient execution
             // failure must not reset every conversation in the batch.
-            for (p, state) in chunk.iter().zip(taken) {
+            for (p, state) in chunk.iter().zip(scratch.taken.drain(..)) {
                 if let (Some(key), Some(state)) = (&p.req.session, state) {
                     sessions.put(key, state, end_us);
                 }
@@ -640,17 +728,25 @@ fn run_chunk(
             return;
         }
     };
+    // The taken states were consumed by the fused inputs; drop the clones
+    // now rather than pinning them in the scratch until the next batch.
+    scratch.taken.clear();
 
     // Scatter updated state: outputs[..n_state_out] align with the state
     // input ports in order.
     let state_ports = spec.state_ports();
-    let mut new_session_rows: Vec<Vec<HostTensor>> = vec![Vec::new(); k];
+    for rows in scratch.session_rows.iter_mut() {
+        rows.clear();
+    }
+    while scratch.session_rows.len() < k {
+        scratch.session_rows.push(Vec::new());
+    }
     let mut resident_idx = 0usize;
     for (out, port) in outputs.iter().take(spec.n_state_out).zip(&state_ports) {
         if port.per_row {
             if let Ok(rows) = split_rows(out, k) {
                 for (j, row) in rows.into_iter().enumerate() {
-                    new_session_rows[j].push(row);
+                    scratch.session_rows[j].push(row);
                 }
             }
         } else {
@@ -663,8 +759,8 @@ fn run_chunk(
     if !per_row_state.is_empty() {
         for (j, p) in chunk.iter().enumerate() {
             if let Some(key) = &p.req.session {
-                if new_session_rows[j].len() == per_row_state.len() {
-                    sessions.put(key, std::mem::take(&mut new_session_rows[j]), end_us);
+                if scratch.session_rows[j].len() == per_row_state.len() {
+                    sessions.put(key, std::mem::take(&mut scratch.session_rows[j]), end_us);
                 }
             }
         }
@@ -673,26 +769,26 @@ fn run_chunk(
     // Scatter user-facing outputs and reply.
     let user_ports = &spec.outputs[spec.n_state_out..];
     let user_outputs = &outputs[spec.n_state_out..];
-    let mut rows_by_port: Vec<Option<Vec<HostTensor>>> = Vec::with_capacity(user_ports.len());
+    scratch.rows_by_port.clear();
     for (out, port) in user_outputs.iter().zip(user_ports) {
         if port.per_row {
-            rows_by_port.push(split_rows(out, k).ok());
+            scratch.rows_by_port.push(split_rows(out, k).ok());
         } else {
-            rows_by_port.push(None);
+            scratch.rows_by_port.push(None);
         }
     }
-    let mut queue_waits = Vec::with_capacity(k);
+    scratch.queue_waits.clear();
     for (j, p) in chunk.iter().enumerate() {
         let outs: Vec<HostTensor> = user_outputs
             .iter()
             .enumerate()
-            .map(|(oi, full)| match &rows_by_port[oi] {
+            .map(|(oi, full)| match &scratch.rows_by_port[oi] {
                 Some(rows) => rows[j].clone(),
                 None => full.clone(),
             })
             .collect();
         let queue_us = start_us.saturating_sub(p.enqueued_us);
-        queue_waits.push(queue_us);
+        scratch.queue_waits.push(queue_us);
         p.reply(Response::Ok {
             id: p.req.id,
             outputs: outs,
@@ -702,7 +798,7 @@ fn run_chunk(
         });
         stats.record_completed(end_us.saturating_sub(p.enqueued_us));
     }
-    stats.record_batch(k, &queue_waits, exec_us);
+    stats.record_batch(k, &scratch.queue_waits, exec_us);
 }
 
 /// The worker pool: `n` threads, each owning a private model instance.
@@ -751,15 +847,22 @@ impl WorkerPool {
                             return;
                         }
                     };
+                    // Per-worker hot-loop state: the signature is cloned
+                    // once, and the batch scratch reuses its buffers
+                    // across every request this worker ever serves.
+                    let spec = model.spec().clone();
+                    let mut scratch = WorkerScratch::default();
                     while let Some(batch) = batcher.next_batch() {
                         execute_batch(
                             model.as_mut(),
+                            &spec,
                             &mut resident,
                             batch,
                             &sessions,
                             &stats,
                             &clock,
                             lr,
+                            &mut scratch,
                         );
                     }
                 })
@@ -829,13 +932,29 @@ mod tests {
         )
     }
 
+    /// Test-side wrapper supplying the per-worker state (cached spec +
+    /// scratch) the pool normally owns.
+    fn exec(
+        model: &mut dyn ServeModel,
+        resident: &mut Vec<HostTensor>,
+        batch: Vec<Pending>,
+        sessions: &SessionStore,
+        stats: &ServeStats,
+        clock: &Clock,
+        lr: f32,
+    ) {
+        let spec = model.spec().clone();
+        let mut scratch = WorkerScratch::default();
+        execute_batch(model, &spec, resident, batch, sessions, stats, clock, lr, &mut scratch);
+    }
+
     #[test]
     fn fused_batch_serves_every_request() {
         let (mut model, sessions, stats, clock) = harness();
         let mut resident = model.initial_resident().unwrap();
         let (p1, r1) = pending(1, None, &[1.0, 2.0]);
         let (p2, r2) = pending(2, None, &[10.0, 20.0]);
-        execute_batch(&mut model, &mut resident, vec![p1, p2], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p1, p2], &sessions, &stats, &clock, 0.0);
 
         // y = 2x + h with h = 0.
         match r1.try_recv().unwrap() {
@@ -865,7 +984,7 @@ mod tests {
         let mut resident = model.initial_resident().unwrap();
 
         let (p1, r1) = pending(1, Some("s"), &[1.0, 1.0]);
-        execute_batch(&mut model, &mut resident, vec![p1], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p1], &sessions, &stats, &clock, 0.0);
         match r1.try_recv().unwrap() {
             Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[2.0, 2.0])]),
             other => panic!("wrong frame: {other:?}"),
@@ -873,7 +992,7 @@ mod tests {
 
         // Second call on the same session sees h = 1: y = 2*1 + 1 = 3.
         let (p2, r2) = pending(2, Some("s"), &[1.0, 1.0]);
-        execute_batch(&mut model, &mut resident, vec![p2], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p2], &sessions, &stats, &clock, 0.0);
         match r2.try_recv().unwrap() {
             Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[3.0, 3.0])]),
             other => panic!("wrong frame: {other:?}"),
@@ -887,7 +1006,7 @@ mod tests {
         let mut resident = model.initial_resident().unwrap();
         let (good, rg) = pending(1, None, &[1.0, 1.0]);
         let (bad, rb) = pending(2, None, &[1.0, 1.0, 1.0]); // wrong row shape
-        execute_batch(&mut model, &mut resident, vec![good, bad], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![good, bad], &sessions, &stats, &clock, 0.0);
         assert!(matches!(rg.try_recv().unwrap(), Response::Ok { .. }));
         match rb.try_recv().unwrap() {
             Response::Err { code, .. } => assert_eq!(code, ErrCode::BadRequest),
@@ -904,7 +1023,7 @@ mod tests {
         let mut resident = model.initial_resident().unwrap();
         let (p1, r1) = pending(1, Some("s"), &[1.0, 1.0]);
         let (p2, r2) = pending(2, Some("s"), &[1.0, 1.0]);
-        execute_batch(&mut model, &mut resident, vec![p1, p2], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p1, p2], &sessions, &stats, &clock, 0.0);
 
         match r1.try_recv().unwrap() {
             Response::Ok { outputs, batch, .. } => {
@@ -952,22 +1071,73 @@ mod tests {
 
         // Seed the session with h = 1.
         let (p1, _r1) = pending(1, Some("s"), &[1.0, 1.0]);
-        execute_batch(&mut model, &mut resident, vec![p1], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p1], &sessions, &stats, &clock, 0.0);
 
         // Failing execution must not wipe the stored state.
         model.fail = true;
         let (p2, r2) = pending(2, Some("s"), &[1.0, 1.0]);
-        execute_batch(&mut model, &mut resident, vec![p2], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p2], &sessions, &stats, &clock, 0.0);
         assert!(matches!(r2.try_recv().unwrap(), Response::Err { code: ErrCode::Exec, .. }));
 
         // Next successful call still sees h = 1: y = 2*1 + 1 = 3.
         model.fail = false;
         let (p3, r3) = pending(3, Some("s"), &[1.0, 1.0]);
-        execute_batch(&mut model, &mut resident, vec![p3], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p3], &sessions, &stats, &clock, 0.0);
         match r3.try_recv().unwrap() {
             Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[3.0, 3.0])]),
             other => panic!("wrong frame: {other:?}"),
         }
+    }
+
+    /// ISSUE 5 satellite: stored session state that no longer matches the
+    /// served signature (e.g. after a param swap changed the hidden dim)
+    /// must produce a typed `stale_state` error frame — not a worker
+    /// panic, and not a silent session reset.  The stale entry is
+    /// discarded, so the next call starts a fresh session.
+    #[test]
+    fn stale_session_state_is_rejected_with_typed_error() {
+        let (mut model, sessions, stats, clock) = harness();
+        let mut resident = model.initial_resident().unwrap();
+        // Seed the store with a state row of the wrong dimension (as if
+        // the model was swapped from dim 3 to dim 2).
+        sessions.put("s", vec![t(&[9.0, 9.0, 9.0])], 0);
+        let (p1, r1) = pending(1, Some("s"), &[1.0, 1.0]);
+        exec(&mut model, &mut resident, vec![p1], &sessions, &stats, &clock, 0.0);
+        match r1.try_recv().unwrap() {
+            Response::Err { code, msg, .. } => {
+                assert_eq!(code, ErrCode::StaleState);
+                assert!(msg.contains("shape"), "{msg}");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert_eq!(stats.snapshot().bad_requests, 1);
+        assert_eq!(sessions.len(), 0, "stale state must be discarded");
+        // A retry starts fresh and succeeds (h = 0 again).
+        let (p2, r2) = pending(2, Some("s"), &[1.0, 1.0]);
+        exec(&mut model, &mut resident, vec![p2], &sessions, &stats, &clock, 0.0);
+        match r2.try_recv().unwrap() {
+            Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[2.0, 2.0])]),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // The typed checker itself reports count and shape mismatches.
+        let port = PortSpec {
+            name: "h".into(),
+            shape: vec![4, 2],
+            dtype: Dtype::F32,
+            role: Role::State,
+            per_row: true,
+        };
+        assert!(session_state_shape_error(&[], &[&port]).is_some());
+        let bad = session_state_shape_error(&[t(&[1.0, 2.0, 3.0])], &[&port]).unwrap();
+        assert_eq!(bad.expected, vec![2]);
+        assert_eq!(bad.got, vec![3]);
+        assert!(session_state_shape_error(&[t(&[1.0, 2.0])], &[&port]).is_none());
+        // A dtype mismatch names both dtypes in the typed error (the
+        // shape vectors alone would be identical and useless here).
+        let wrong_dtype = HostTensor::i32(vec![2], vec![1, 2]);
+        let bad = session_state_shape_error(&[wrong_dtype], &[&port]).unwrap();
+        assert!(bad.op.contains("expects f32"), "{}", bad.op);
+        assert!(bad.op.contains("i32"), "{}", bad.op);
     }
 
     #[test]
@@ -981,7 +1151,7 @@ mod tests {
             batch.push(p);
             rxs.push(r);
         }
-        execute_batch(&mut model, &mut resident, batch, &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, batch, &sessions, &stats, &clock, 0.0);
         for r in &rxs {
             assert!(matches!(r.try_recv().unwrap(), Response::Ok { .. }));
         }
@@ -1070,7 +1240,7 @@ mod tests {
         let (p1, r1) = mk(1, 3.0, 2.0);
         let (p2, r2) = mk(2, 4.0, 2.0);
         let (p3, r3) = mk(3, 5.0, 7.0); // conflicting shared input c
-        execute_batch(&mut model, &mut resident, vec![p1, p2, p3], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p1, p2, p3], &sessions, &stats, &clock, 0.0);
 
         match r1.try_recv().unwrap() {
             Response::Ok { outputs, batch, .. } => {
@@ -1116,7 +1286,7 @@ mod tests {
         let mut resident = Vec::new();
         // y = 2x + h with seeded h = 10 -> 12, not 2.
         let (p, r) = pending(1, None, &[1.0, 1.0]);
-        execute_batch(&mut model, &mut resident, vec![p], &sessions, &stats, &clock, 0.0);
+        exec(&mut model, &mut resident, vec![p], &sessions, &stats, &clock, 0.0);
         match r.try_recv().unwrap() {
             Response::Ok { outputs, .. } => assert_eq!(outputs, vec![t(&[12.0, 12.0])]),
             other => panic!("wrong frame: {other:?}"),

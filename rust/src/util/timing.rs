@@ -9,6 +9,9 @@ pub struct BenchStats {
     pub name: String,
     pub iters: usize,
     pub mean_s: f64,
+    /// Median single-iteration time — the robust per-kernel number the
+    /// `BENCH_*.json` perf trajectory records.
+    pub median_s: f64,
     pub std_s: f64,
     pub min_s: f64,
     pub max_s: f64,
@@ -21,6 +24,15 @@ impl BenchStats {
 
     pub fn mean_us(&self) -> f64 {
         self.mean_s * 1e6
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+
+    /// Median in nanoseconds per op — the unit `BENCH_*.json` stores.
+    pub fn median_ns(&self) -> f64 {
+        self.median_s * 1e9
     }
 
     pub fn row(&self) -> String {
@@ -46,7 +58,17 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, target_s: f64, mut f: F) -> 
     f();
     let once = probe.elapsed().as_secs_f64().max(1e-9);
     let iters = ((target_s / once).ceil() as usize).clamp(3, 1000);
+    bench_n(name, 0, iters, f)
+}
 
+/// Time exactly `iters` iterations after `warmup` — the `--smoke` CI mode
+/// (1 iteration: the kernel ran and produced a number; trend analysis is
+/// the full run's job).
+pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let iters = iters.max(1);
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();
@@ -61,10 +83,23 @@ pub fn stats(name: &str, times: &[f64]) -> BenchStats {
     let n = times.len().max(1) as f64;
     let mean = times.iter().sum::<f64>() / n;
     let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let median = if times.is_empty() {
+        0.0
+    } else {
+        let mut sorted = times.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mid = sorted.len() / 2;
+        if sorted.len() % 2 == 1 {
+            sorted[mid]
+        } else {
+            0.5 * (sorted[mid - 1] + sorted[mid])
+        }
+    };
     BenchStats {
         name: name.to_string(),
         iters: times.len(),
         mean_s: mean,
+        median_s: median,
         std_s: var.sqrt(),
         min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
         max_s: times.iter().cloned().fold(0.0, f64::max),
@@ -105,5 +140,17 @@ mod tests {
         let s = stats("x", &[1.0, 3.0]);
         assert!((s.mean_s - 2.0).abs() < 1e-12);
         assert!((s.std_s - 1.0).abs() < 1e-12);
+        assert!((s.median_s - 2.0).abs() < 1e-12);
+        let s = stats("y", &[5.0, 1.0, 2.0]);
+        assert!((s.median_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_n_runs_exactly() {
+        let mut count = 0usize;
+        let s = bench_n("one", 2, 1, || count += 1);
+        assert_eq!(s.iters, 1);
+        assert_eq!(count, 3); // 2 warmup + 1 measured
+        assert!(s.median_s >= 0.0);
     }
 }
