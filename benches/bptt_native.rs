@@ -18,6 +18,7 @@
 use cwy::linalg::Matrix;
 use cwy::orthogonal::backward::{cwy_rollout_backward, hr_rollout_backward, reference};
 use cwy::report::{BenchJson, Table};
+use cwy::telemetry::span_delta;
 use cwy::util::cli::Args;
 use cwy::util::rng::Pcg32;
 use cwy::util::timing::{bench, bench_n, BenchStats};
@@ -122,6 +123,14 @@ fn main() {
         json.push(&format!("rollout_bwd_fused_n{n}_l{l}"), s_fused.median_ns());
         json.push(&format!("rollout_bwd_pr4_n{n}_l{l}"), s_pr4.median_ns());
         json.push(&format!("rollout_bwd_hr_n{n}_l{l}"), s_hr.median_ns());
+        // Telemetry sidecar: gemm-variant attribution of one fused
+        // backward pass (the PR-4/HR paths run the uninstrumented legacy
+        // kernel, so only the fused kernel has a phase breakdown).
+        for (span, ns) in span_delta(|| {
+            std::hint::black_box(cwy_rollout_backward(&v, &h0, &xs, &gs));
+        }) {
+            json.push_phase(&format!("rollout_bwd_fused_n{n}_l{l}"), span, ns as f64);
+        }
         if !smoke && (n, l) == (128, 64) && t >= 64 && b >= 16 {
             println!(
                 "#   acceptance (N=128, L=64, T={t}, B={b}): fused is {vs_pr4:.2}x \

@@ -17,6 +17,7 @@
 use cwy::linalg::gemm::{self, legacy, matmul_blocked, matmul_naive};
 use cwy::linalg::Matrix;
 use cwy::report::{BenchJson, Table};
+use cwy::telemetry::span_delta;
 use cwy::util::cli::Args;
 use cwy::util::rng::Pcg32;
 use cwy::util::timing::{bench_n, BenchStats};
@@ -138,6 +139,30 @@ fn main() {
         json.push(&format!("gemm_nn_beta1_n{n}"), s_fused.median_ns());
         json.push(&format!("legacy_nn_n{n}"), s_legacy.median_ns());
         json.push(&format!("naive_nn_n{n}"), s_naive.median_ns());
+
+        // Telemetry sidecar: one extra representative run per
+        // instrumented kernel, attributed by span (the naive/legacy
+        // kernels predate the span set and contribute nothing).
+        for (span, ns) in span_delta(|| {
+            std::hint::black_box(matmul_blocked(&a, &b));
+        }) {
+            json.push_phase(&format!("gemm_nn_n{n}"), span, ns as f64);
+        }
+        for (span, ns) in span_delta(|| {
+            gemm::gemm(true, false, 1.0, &a, &b, 0.0, &mut out);
+        }) {
+            json.push_phase(&format!("gemm_tn_n{n}"), span, ns as f64);
+        }
+        for (span, ns) in span_delta(|| {
+            gemm::gemm(false, true, 1.0, &a, &b, 0.0, &mut out);
+        }) {
+            json.push_phase(&format!("gemm_nt_n{n}"), span, ns as f64);
+        }
+        for (span, ns) in span_delta(|| {
+            gemm::gemm(false, false, 1.0, &a, &b, 1.0, &mut acc);
+        }) {
+            json.push_phase(&format!("gemm_nn_beta1_n{n}"), span, ns as f64);
+        }
     }
     println!("\n## GEMM kernels (f32; median of adaptive runs)\n");
     print!("{}", table.to_markdown());

@@ -20,6 +20,7 @@ use cwy::runtime::native::ops_rnn::{
     forward_backward_ws, CopyBatchRef, CopyRnnParams, RolloutWorkspace, IN_VOCAB, OUT_CLASSES,
 };
 use cwy::runtime::native::CellKind;
+use cwy::telemetry::span_delta;
 use cwy::util::cli::Args;
 use cwy::util::rng::Pcg32;
 use cwy::util::timing::{bench, bench_n, BenchStats};
@@ -139,6 +140,33 @@ fn main() {
         json.push(&format!("train_step_l{l}_n{n}_b{b}_t{t}"), s_ws.median_ns());
         json.push(&format!("train_step_fresh_l{l}_n{n}_b{b}_t{t}"), s_fresh.median_ns());
         json.push(&format!("eval_forward_l{l}_n{n}_b{b}_t{t}"), s_eval.median_ns());
+
+        // Telemetry sidecar: span attribution of one representative
+        // step/eval (rollout_forward + bptt_backward + sgd_step, with the
+        // nested gemm-variant spans counted flat alongside them).
+        for (span, ns) in span_delta(|| {
+            let data = CopyBatchRef {
+                tokens: &s.tokens,
+                targets: &s.targets,
+                batch: s.batch,
+                t_total: s.t_total,
+            };
+            forward_backward_ws(CellKind::Cwy, &s.params, &data, true, &mut rws).unwrap();
+            s.params.sgd_step(rws.grads(), 1e-3);
+        }) {
+            json.push_phase(&format!("train_step_l{l}_n{n}_b{b}_t{t}"), span, ns as f64);
+        }
+        for (span, ns) in span_delta(|| {
+            let data = CopyBatchRef {
+                tokens: &s.tokens,
+                targets: &s.targets,
+                batch: s.batch,
+                t_total: s.t_total,
+            };
+            forward_backward_ws(CellKind::Cwy, &s.params, &data, false, &mut rws).unwrap();
+        }) {
+            json.push_phase(&format!("eval_forward_l{l}_n{n}_b{b}_t{t}"), span, ns as f64);
+        }
     }
     println!("\n## rnn_copy end-to-end training step (f32, param=cwy)\n");
     print!("{}", table.to_markdown());

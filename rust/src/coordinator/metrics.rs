@@ -1,5 +1,10 @@
 //! Training metrics: per-step records, EMA smoothing, curve export.
 
+/// Per-step phase column names, aligned with [`StepRecord::phase_ns`]:
+/// forward rollout, BPTT backward, SGD apply.  Captured as telemetry
+/// span-ns deltas around the step's artifact execution.
+pub const PHASE_NAMES: [&str; 3] = ["forward_ns", "backward_ns", "sgd_ns"];
+
 /// One recorded training step.
 #[derive(Clone, Debug)]
 pub struct StepRecord {
@@ -7,6 +12,9 @@ pub struct StepRecord {
     pub loss: f32,
     pub metrics: Vec<f32>,
     pub wall_s: f64,
+    /// Nanoseconds attributed to each phase in [`PHASE_NAMES`] order;
+    /// all-zero when the executing backend is uninstrumented (PJRT).
+    pub phase_ns: [u64; 3],
 }
 
 /// Loss/metric history for a run.
@@ -22,7 +30,18 @@ impl History {
     }
 
     pub fn push(&mut self, step: usize, loss: f32, metrics: Vec<f32>, wall_s: f64) {
-        self.records.push(StepRecord { step, loss, metrics, wall_s });
+        self.push_with_phases(step, loss, metrics, wall_s, [0; 3]);
+    }
+
+    pub fn push_with_phases(
+        &mut self,
+        step: usize,
+        loss: f32,
+        metrics: Vec<f32>,
+        wall_s: f64,
+        phase_ns: [u64; 3],
+    ) {
+        self.records.push(StepRecord { step, loss, metrics, wall_s, phase_ns });
     }
 
     pub fn last_loss(&self) -> Option<f32> {
@@ -74,18 +93,49 @@ impl History {
         self.records.iter().map(|r| r.wall_s).sum()
     }
 
-    /// CSV with header `step,loss,<metrics...>,wall_s`.
+    /// Summed per-phase nanoseconds over all recorded steps, in
+    /// [`PHASE_NAMES`] order.
+    pub fn phase_totals_ns(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for r in &self.records {
+            for (acc, &ns) in out.iter_mut().zip(r.phase_ns.iter()) {
+                *acc += ns;
+            }
+        }
+        out
+    }
+
+    /// Fraction of the total wall time the instrumented phases account
+    /// for (0.0 with no records or an uninstrumented backend).  The
+    /// `--trace` acceptance gate asserts this is >= 0.9 on native runs.
+    pub fn phase_coverage(&self) -> f64 {
+        let wall = self.total_wall_s();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        let phase_s = self.phase_totals_ns().iter().sum::<u64>() as f64 * 1e-9;
+        phase_s / wall
+    }
+
+    /// CSV with header `step,loss,<metrics...>,forward_ns,backward_ns,sgd_ns,wall_s`.
     pub fn to_csv(&self) -> String {
         let mut out = String::from("step,loss");
         for m in &self.metric_names {
             out.push(',');
             out.push_str(m);
         }
+        for p in PHASE_NAMES {
+            out.push(',');
+            out.push_str(p);
+        }
         out.push_str(",wall_s\n");
         for r in &self.records {
             out.push_str(&format!("{},{}", r.step, r.loss));
             for m in &r.metrics {
                 out.push_str(&format!(",{m}"));
+            }
+            for ns in r.phase_ns {
+                out.push_str(&format!(",{ns}"));
             }
             out.push_str(&format!(",{:.6}\n", r.wall_s));
         }
@@ -127,8 +177,25 @@ mod tests {
     fn csv_header_and_rows() {
         let csv = sample().to_csv();
         let mut lines = csv.lines();
-        assert_eq!(lines.next().unwrap(), "step,loss,acc,wall_s");
+        assert_eq!(
+            lines.next().unwrap(),
+            "step,loss,acc,forward_ns,backward_ns,sgd_ns,wall_s"
+        );
         assert_eq!(csv.lines().count(), 11);
+    }
+
+    #[test]
+    fn phase_accounting() {
+        let mut h = History::new(vec![]);
+        h.push_with_phases(0, 1.0, vec![], 1e-3, [400_000, 500_000, 50_000]);
+        h.push_with_phases(1, 0.9, vec![], 1e-3, [400_000, 500_000, 50_000]);
+        assert_eq!(h.phase_totals_ns(), [800_000, 1_000_000, 100_000]);
+        // 1.9ms of phases over 2ms of wall: 95% coverage.
+        assert!((h.phase_coverage() - 0.95).abs() < 1e-9);
+        // Plain push records zero phases and drags coverage down.
+        h.push(2, 0.8, vec![], 1e-3);
+        assert!(h.phase_coverage() < 0.95);
+        assert!(History::default().phase_coverage() == 0.0);
     }
 
     #[test]

@@ -99,9 +99,26 @@ impl Trainer {
         if self.has_lr {
             inputs.push(&lr_t);
         }
+        // Attribute this step's wall time to forward/backward/sgd via
+        // telemetry span-ns deltas around the artifact execution.  On the
+        // native backend the rollout spans fire inside run_refs; on an
+        // uninstrumented backend the deltas are simply zero.
+        let reg = crate::telemetry::global();
+        let phase_ids = [
+            crate::telemetry::SpanId::RolloutForward,
+            crate::telemetry::SpanId::BpttBackward,
+            crate::telemetry::SpanId::SgdStep,
+        ];
+        let ns_before = phase_ids.map(|id| reg.span_ns(id));
         let watch = Stopwatch::start();
         let mut outputs = self.artifact.run_refs(&inputs)?;
         let wall = watch.elapsed_s();
+        let mut phase_ns = [0u64; 3];
+        for (out, (id, before)) in
+            phase_ns.iter_mut().zip(phase_ids.iter().zip(ns_before.iter()))
+        {
+            *out = reg.span_ns(*id).saturating_sub(*before);
+        }
 
         let metrics_out: Vec<HostTensor> = outputs.split_off(self.n_state);
         self.state = outputs;
@@ -114,7 +131,7 @@ impl Trainer {
             .iter()
             .map(|t| t.scalar().unwrap_or(f32::NAN))
             .collect();
-        self.history.push(self.step, loss, extra.clone(), wall);
+        self.history.push_with_phases(self.step, loss, extra.clone(), wall, phase_ns);
         self.step += 1;
         Ok((loss, extra))
     }

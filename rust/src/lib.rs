@@ -24,4 +24,5 @@ pub mod orthogonal;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod util;

@@ -269,6 +269,15 @@ pub fn gemm(
     assert_eq!(ka, kb, "gemm reduction-dim mismatch");
     assert_eq!((c.rows, c.cols), (m, n), "gemm output shape mismatch");
     let k = ka;
+    // Per-variant telemetry: ~two clock reads and three relaxed atomic
+    // adds per call — no lock, no allocation (alloc_discipline covers
+    // this path with recording live).
+    let gemm_span = match (trans_a, trans_b) {
+        (false, false) => crate::span!(gemm_nn),
+        (false, true) => crate::span!(gemm_nt),
+        (true, false) => crate::span!(gemm_tn),
+        (true, true) => crate::span!(gemm_tt),
+    };
     if m == 0 || n == 0 {
         return;
     }
@@ -283,6 +292,10 @@ pub fn gemm(
         }
         return;
     }
+    // Only calls that reach the product loops count FLOPs; the beta-only
+    // early-outs above perform no multiply-adds.
+    crate::telemetry::global()
+        .add_gemm_flops(gemm_span.id(), crate::orthogonal::flops::gemm_flops(m, k, n));
     PACK_A.with(|pa| {
         PACK_B.with(|pb| {
             let (mut pa, mut pb) = (pa.borrow_mut(), pb.borrow_mut());

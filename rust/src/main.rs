@@ -8,8 +8,9 @@
 //!   verify                             orthogonality cross-checks vs native
 //!   serve  --artifact copy_cwy_step    micro-batching inference server
 //!   client --requests 1000             closed-loop load generator
+//!   bench-check --committed J --measured J   perf-trajectory CI gate
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use cwy::coordinator::{checkpoint, Schedule, Trainer};
 use cwy::data::{copying::CopyTask, corpus::CorpusGen, digits::DigitTask, video::VideoTask};
 use cwy::orthogonal::flops;
@@ -28,19 +29,23 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "bench-check" => cmd_bench_check(&args),
         _ => {
             eprintln!(
-                "usage: cwy <list|train|train-dp|tables|verify|serve|client> \
+                "usage: cwy <list|train|train-dp|tables|verify|serve|client|bench-check> \
                  [--artifacts DIR] [--backend auto|native|pjrt] ...\n\
                  train:    --artifact NAME --steps N --schedule constant:1e-3 [--seed S] [--ckpt PATH]\n\
                  \x20         or --task copy [--param cwy|hr|tcwy] (native rnn_copy family; uses the\n\
                  \x20         built-in fixture when no artifacts directory exists)\n\
+                 \x20         [--trace PATH] writes a Chrome/Perfetto trace + phase summary\n\
                  train-dp: --base NAME --workers W --steps N\n\
                  tables:   [--t 1000 --n 1024 --l 128 --m 128]\n\
                  serve:    --addr HOST:PORT --artifact NAME --workers W --max-batch B --max-wait-us U\n\
                  \x20         [--backend auto|native|pjrt|fake --queue-cap N --lr F]\n\
                  \x20         (--backend native with no --artifact serves the toy fixture)\n\
                  client:   --addr HOST:PORT --requests N --concurrency C [--deadline-us U --sessions]\n\
+                 \x20         [--stats fetch+print the server metrics frame only] [--prom]\n\
+                 bench-check: --committed BENCH.json --measured BENCH.json (CI perf gate)\n\
                  --backend auto (default) prefers PJRT and falls back to the native rust backend."
             );
             Ok(())
@@ -179,6 +184,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let schedule = Schedule::parse(&args.get_or("schedule", default_schedule))
         .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
     let log_every = args.get_usize("log-every", 10);
+    // --trace PATH: install the process trace ring before the first step
+    // so every span of the run is captured (DESIGN.md §7).  1M slots
+    // covers ~100k steps of the 10-span native pipeline.
+    let trace_path = args.get("trace");
+    if trace_path.is_some() {
+        cwy::telemetry::enable_tracing(1 << 20);
+    }
 
     let mut trainer = Trainer::new(&engine, &name, schedule)?;
     let task = trainer
@@ -220,6 +232,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!(
             "# {} the memoryless baseline ({b:.4})",
             if final_loss < b { "BELOW" } else { "ABOVE" }
+        );
+    }
+    if let Some(path) = trace_path {
+        let (events, dropped) = cwy::telemetry::write_chrome_trace(path)?;
+        println!("# trace -> {path} ({events} events, {dropped} dropped)");
+        let totals = trainer.history.phase_totals_ns();
+        let coverage = trainer.history.phase_coverage();
+        println!(
+            "# phase totals: forward {:.3}s  backward {:.3}s  sgd {:.3}s  \
+             = {:.1}% of {:.2}s step wall{}",
+            totals[0] as f64 / 1e9,
+            totals[1] as f64 / 1e9,
+            totals[2] as f64 / 1e9,
+            100.0 * coverage,
+            trainer.history.total_wall_s(),
+            if coverage < 0.9 { " (target >= 90% on the native backend)" } else { "" }
         );
     }
     if let Some(path) = args.get("ckpt") {
@@ -452,11 +480,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Closed-loop load generator; exits non-zero on any dropped
 /// (non-deadline) request so CI can assert serving health.
+///
+/// After the run (or instead of it, with `--stats`) the server's
+/// `metrics` frame renders as the final latency table — p50/p95/p99/p999,
+/// shed/occupancy, and the per-phase queue/assemble/execute/write-back
+/// percentiles from the telemetry registry.  `--prom` additionally dumps
+/// the Prometheus text exposition of the same frame.
 fn cmd_client(args: &Args) -> Result<()> {
-    use cwy::serve::{fetch_stats, run_load, ClientCfg};
+    use cwy::serve::{fetch_metrics, fetch_stats, metrics_table, run_load, ClientCfg};
+
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let show_metrics = |addr: &str| -> Result<()> {
+        let frame = fetch_metrics(addr)?;
+        print!("{}", metrics_table(&frame).to_markdown());
+        if args.has_flag("prom") {
+            print!("{}", cwy::telemetry::render_prometheus(frame.path(&["telemetry"])));
+        }
+        Ok(())
+    };
+    if args.has_flag("stats") {
+        return show_metrics(&addr);
+    }
 
     let cfg = ClientCfg {
-        addr: args.get_or("addr", "127.0.0.1:7070"),
+        addr,
         requests: args.get_usize("requests", 1_000),
         concurrency: args.get_usize("concurrency", 32),
         deadline_us: args.get("deadline-us").and_then(|v| v.parse().ok()),
@@ -468,11 +515,86 @@ fn cmd_client(args: &Args) -> Result<()> {
     );
     let report = run_load(&cfg)?;
     print!("{}", report.to_table().to_markdown());
-    if let Ok(stats) = fetch_stats(&cfg.addr) {
-        println!("# server stats: {stats}");
+    if show_metrics(&cfg.addr).is_err() {
+        // Pre-metrics servers still answer the bare stats frame.
+        if let Ok(stats) = fetch_stats(&cfg.addr) {
+            println!("# server stats: {stats}");
+        }
     }
     if report.dropped() > 0 {
         bail!("{} requests dropped without a deadline excuse", report.dropped());
     }
+    Ok(())
+}
+
+/// CI gate over the perf-trajectory files: every kernel key staked in the
+/// committed `BENCH_*.json` must be present in the freshly measured file
+/// (a kernel silently vanishing from a bench is a failure, not a skip),
+/// and the ISSUE 5 fused/PR-4 BPTT ratio is re-enforced whenever the
+/// measured run covered the acceptance shape.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    use cwy::util::json::{self, Json};
+
+    let committed_path = args
+        .get("committed")
+        .ok_or_else(|| anyhow::anyhow!("--committed PATH required"))?;
+    let measured_path = args
+        .get("measured")
+        .ok_or_else(|| anyhow::anyhow!("--measured PATH required"))?;
+    let read = |p: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+        if j.path(&["schema"]).as_str() != Some("cwy-bench-trajectory-v1") {
+            bail!("{p}: not a cwy-bench-trajectory-v1 file");
+        }
+        Ok(j)
+    };
+    let committed = read(committed_path)?;
+    let measured = read(measured_path)?;
+
+    let mut checked = 0usize;
+    let mut missing: Vec<String> = Vec::new();
+    if let Json::Obj(benches) = committed.path(&["benches"]) {
+        for (bench, kernels) in benches {
+            if let Json::Obj(ks) = kernels {
+                for kernel in ks.keys() {
+                    checked += 1;
+                    if measured.path(&["benches", bench, kernel]).as_f64().is_none() {
+                        missing.push(format!("{bench}.{kernel}"));
+                    }
+                }
+            }
+        }
+    }
+    if !missing.is_empty() {
+        bail!(
+            "{} committed trajectory kernels missing from the measured run \
+             (a bench stopped emitting them): {}",
+            missing.len(),
+            missing.join(", ")
+        );
+    }
+    println!("# bench-check: all {checked} committed kernels present in the measured run");
+
+    let fused = measured
+        .path(&["benches", "bptt_native", "rollout_bwd_fused_n128_l64"])
+        .as_f64();
+    let pr4 = measured
+        .path(&["benches", "bptt_native", "rollout_bwd_pr4_n128_l64"])
+        .as_f64();
+    match (fused, pr4) {
+        (Some(f), Some(p)) if f > 0.0 => {
+            let ratio = p / f;
+            println!(
+                "# bench-check: fused BPTT is {ratio:.2}x PR-4 at N=128 L=64 \
+                 (target >= 1.5x)"
+            );
+            if ratio < 1.5 {
+                bail!("fused rollout backward regressed to {ratio:.2}x PR-4 (target >= 1.5x)");
+            }
+        }
+        _ => println!("# bench-check: acceptance shape not measured; ratio gate skipped"),
+    }
+    println!("bench-check OK");
     Ok(())
 }

@@ -72,6 +72,14 @@ pub fn table1(t: usize, n: usize, l: usize) -> Vec<Table1Row> {
     ]
 }
 
+/// FLOPs of one `(m x k)(k x n)` GEMM call under the same `2 d1 d2 d3`
+/// counting rule as the tables.  The telemetry registry's per-variant
+/// GEMM FLOP counters use this, so measured GFLOP/s in the `metrics`
+/// frame is directly comparable with the Table 1/2 analytical model.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> u64 {
+    2 * (m as u64) * (k as u64) * (n as u64)
+}
+
 /// A Table-2 row: Stiefel step cost for (N, M).
 #[derive(Clone, Debug)]
 pub struct Table2Row {

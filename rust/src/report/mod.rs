@@ -107,21 +107,41 @@ impl Series {
 /// ```json
 /// { "schema": "cwy-bench-trajectory-v1",
 ///   "benches": { "gemm_native": { "gemm_nn_n256": 1.23e6, ... },
-///                "bptt_native": { ... } } }
+///                "bptt_native": { ... } },
+///   "phase_ns": { "gemm_native": { "gemm_nn_n256": { "gemm_nn": 1.2e6 } } } }
 /// ```
+///
+/// `phase_ns` is the telemetry sidecar (ISSUE 6): per kernel, the span-ns
+/// attribution of one representative run, so the trajectory file shows
+/// not just *how fast* each kernel is but *where the time went*.
 pub struct BenchJson {
     bench: String,
     kernels: BTreeMap<String, f64>,
+    phases: BTreeMap<String, BTreeMap<String, f64>>,
 }
 
 impl BenchJson {
     pub fn new(bench: &str) -> BenchJson {
-        BenchJson { bench: bench.to_string(), kernels: BTreeMap::new() }
+        BenchJson {
+            bench: bench.to_string(),
+            kernels: BTreeMap::new(),
+            phases: BTreeMap::new(),
+        }
     }
 
     /// Record one kernel's median ns/op.
     pub fn push(&mut self, kernel: &str, median_ns: f64) -> &mut Self {
         self.kernels.insert(kernel.to_string(), median_ns);
+        self
+    }
+
+    /// Record one telemetry span's ns inside a single representative run
+    /// of `kernel` (lands under the top-level `phase_ns` object).
+    pub fn push_phase(&mut self, kernel: &str, span: &str, ns: f64) -> &mut Self {
+        self.phases
+            .entry(kernel.to_string())
+            .or_default()
+            .insert(span.to_string(), ns);
         self
     }
 
@@ -131,6 +151,20 @@ impl BenchJson {
             .kernels
             .iter()
             .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        Json::Obj(map)
+    }
+
+    /// The `phase_ns.<bench>` object this collector holds.
+    fn phases_to_json(&self) -> Json {
+        let map: BTreeMap<String, Json> = self
+            .phases
+            .iter()
+            .map(|(kernel, spans)| {
+                let inner: BTreeMap<String, Json> =
+                    spans.iter().map(|(s, ns)| (s.clone(), Json::Num(*ns))).collect();
+                (kernel.clone(), Json::Obj(inner))
+            })
             .collect();
         Json::Obj(map)
     }
@@ -175,6 +209,17 @@ impl BenchJson {
         }
         if let Json::Obj(bm) = benches {
             bm.insert(self.bench.clone(), self.to_json());
+        }
+        if !self.phases.is_empty() {
+            let phases = top
+                .entry("phase_ns".to_string())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+            if !matches!(phases, Json::Obj(_)) {
+                *phases = Json::Obj(BTreeMap::new());
+            }
+            if let Json::Obj(pm) = phases {
+                pm.insert(self.bench.clone(), self.phases_to_json());
+            }
         }
         std::fs::write(path, root.dump() + "\n")
     }
@@ -255,6 +300,32 @@ mod tests {
             root.path(&["benches", "bptt_native", "fused_n64"]).as_f64(),
             Some(3000.0)
         );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn phase_sidecar_lands_under_phase_ns() {
+        let dir = std::env::temp_dir().join(format!("cwy_benchphase_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_P.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+
+        let mut a = BenchJson::new("gemm_native");
+        a.push("gemm_nn_n64", 1000.0);
+        a.push_phase("gemm_nn_n64", "gemm_nn", 900.0);
+        a.merge_write(path).unwrap();
+        // A bench with no phase data leaves the sidecar of others intact.
+        let mut b = BenchJson::new("bptt_native");
+        b.push("fused_n64", 3000.0);
+        b.merge_write(path).unwrap();
+
+        let root = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(
+            root.path(&["phase_ns", "gemm_native", "gemm_nn_n64", "gemm_nn"]).as_f64(),
+            Some(900.0)
+        );
+        assert_eq!(root.path(&["benches", "bptt_native", "fused_n64"]).as_f64(), Some(3000.0));
         let _ = std::fs::remove_file(path);
     }
 }

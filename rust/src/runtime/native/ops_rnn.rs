@@ -236,6 +236,7 @@ impl CopyRnnParams {
     /// allocation-free training apply (bitwise-identical to the
     /// `p.sub(&g.scale(lr))` it replaces).
     pub fn sgd_step(&mut self, grads: &CopyRnnGrads, lr: f32) {
+        let _span = crate::span!(sgd_step);
         self.v.axpy(-lr, &grads.v);
         self.w_in.axpy(-lr, &grads.w_in);
         self.w_out.axpy(-lr, &grads.w_out);
@@ -353,6 +354,11 @@ pub fn forward_backward_ws(
     let n = v.cols;
     let denom = (batch * t_total) as f32;
 
+    // Phase telemetry: tape rebuild + rollout under `rollout_forward`,
+    // the BPTT sweep under `bptt_backward` — the split the trainer's
+    // per-step `phase_ns` columns and `--trace` timelines report.
+    let forward_span = crate::span!(rollout_forward);
+
     // ---- rebuild the transition operands in place for this step's V
     match kind {
         CellKind::Cwy => match &mut rws.cwy {
@@ -452,9 +458,11 @@ pub fn forward_backward_ws(
         }
     }
     let loss = loss_sum / denom;
+    drop(forward_span);
     if !want_grads {
         return Ok(loss);
     }
+    let _backward_span = crate::span!(bptt_backward);
 
     // ---- backward (BPTT), every accumulation a fused beta = 1 gemm
     rws.grads.v.resize_zeroed(v.rows, v.cols);

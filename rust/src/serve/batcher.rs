@@ -225,6 +225,7 @@ impl Batcher {
         match q.push(pending) {
             Ok(()) => {
                 self.stats.record_submit(q.len());
+                crate::telemetry::global().set_queue_depth(q.len() as u64);
                 drop(q);
                 self.notify.notify_one();
                 true
@@ -257,7 +258,9 @@ impl Batcher {
             }
             match q.poll(self.cfg.max_batch, self.cfg.max_wait_us, now) {
                 FlushDecision::Flush(_) => {
-                    return Some(q.take_batch(self.cfg.max_batch));
+                    let batch = q.take_batch(self.cfg.max_batch);
+                    crate::telemetry::global().set_queue_depth(q.len() as u64);
+                    return Some(batch);
                 }
                 FlushDecision::WaitUs(us) => {
                     let dur = Duration::from_micros(us.clamp(100, 50_000));

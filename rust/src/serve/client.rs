@@ -342,6 +342,86 @@ pub fn fetch_stats(addr: &str) -> Result<Json> {
     }
 }
 
+/// Fetch the combined serve + telemetry metrics frame as JSON.
+pub fn fetch_metrics(addr: &str) -> Result<Json> {
+    let mut conn = Conn::open(addr)?;
+    conn.send(&Request::Metrics)?;
+    match conn.recv()? {
+        Response::Metrics(j) => Ok(j),
+        other => bail!("expected metrics frame, got {other:?}"),
+    }
+}
+
+/// Final per-run latency table from the server's `metrics` frame — the
+/// server-side truth (`cwy client`'s ad-hoc client-side timers remain in
+/// [`LoadReport`] for the transport view, but this is what the run
+/// reports).  Covers end-to-end latency percentiles, shed/reject counts,
+/// occupancy, and the per-phase serve pipeline percentiles.
+pub fn metrics_table(metrics: &Json) -> Table {
+    let g = |keys: &[&str]| -> String {
+        metrics
+            .path(keys)
+            .as_f64()
+            .map(|x| {
+                if x.fract() == 0.0 {
+                    format!("{}", x as i64)
+                } else {
+                    format!("{x:.1}")
+                }
+            })
+            .unwrap_or_else(|| "-".to_string())
+    };
+    let mut t = Table::new(&["metric", "value"]);
+    let rows: Vec<(&str, String)> = vec![
+        ("requests completed", g(&["serve", "completed"])),
+        ("latency p50 (us)", g(&["serve", "latency_p50_us"])),
+        ("latency p95 (us)", g(&["serve", "latency_p95_us"])),
+        ("latency p99 (us)", g(&["serve", "latency_p99_us"])),
+        ("latency p999 (us)", g(&["serve", "latency_p999_us"])),
+        ("latency mean (us)", g(&["serve", "latency_mean_us"])),
+        ("shed (deadline)", g(&["serve", "shed_deadline"])),
+        ("rejected (queue full)", g(&["serve", "rejected_full"])),
+        ("mean batch occupancy", g(&["serve", "mean_occupancy"])),
+        ("max batch occupancy", g(&["serve", "max_occupancy"])),
+        (
+            "queue wait p50/p99 (us)",
+            format!(
+                "{} / {}",
+                g(&["telemetry", "phases", "queue_wait_us", "p50"]),
+                g(&["telemetry", "phases", "queue_wait_us", "p99"]),
+            ),
+        ),
+        (
+            "batch assemble p50/p99 (us)",
+            format!(
+                "{} / {}",
+                g(&["telemetry", "phases", "batch_assemble_us", "p50"]),
+                g(&["telemetry", "phases", "batch_assemble_us", "p99"]),
+            ),
+        ),
+        (
+            "execute p50/p99 (us)",
+            format!(
+                "{} / {}",
+                g(&["telemetry", "phases", "execute_us", "p50"]),
+                g(&["telemetry", "phases", "execute_us", "p99"]),
+            ),
+        ),
+        (
+            "write back p50/p99 (us)",
+            format!(
+                "{} / {}",
+                g(&["telemetry", "phases", "write_back_us", "p50"]),
+                g(&["telemetry", "phases", "write_back_us", "p99"]),
+            ),
+        ),
+    ];
+    for (k, v) in rows {
+        t.row(&[k.to_string(), v]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -373,5 +453,27 @@ mod tests {
         let r = LoadReport { sent: 10, ok: 10, wall_s: 1.0, ..Default::default() };
         assert_eq!(r.dropped(), 0);
         assert!(r.to_table().to_markdown().contains("requests sent"));
+    }
+
+    #[test]
+    fn metrics_table_renders_from_frame_json() {
+        let frame = crate::util::json::parse(
+            r#"{"serve":{"completed":12,"latency_p50_us":100,"latency_p95_us":200,
+                 "latency_p99_us":300,"latency_p999_us":400,"latency_mean_us":123.4,
+                 "shed_deadline":1,"rejected_full":0,"mean_occupancy":3.5,
+                 "max_occupancy":4},
+                "telemetry":{"phases":{"queue_wait_us":{"p50":10,"p99":20},
+                 "batch_assemble_us":{"p50":1,"p99":2},
+                 "execute_us":{"p50":500,"p99":900},
+                 "write_back_us":{"p50":5,"p99":9}}}}"#,
+        )
+        .unwrap();
+        let md = metrics_table(&frame).to_markdown();
+        assert!(md.contains("latency p999 (us)"));
+        assert!(md.contains("123.4"));
+        assert!(md.contains("500 / 900"));
+        // Missing keys degrade to "-", not panics.
+        let empty = metrics_table(&Json::Obj(Default::default())).to_markdown();
+        assert!(empty.contains('-'));
     }
 }

@@ -28,7 +28,9 @@ pub mod stats;
 pub mod worker;
 
 pub use batcher::{BatchCfg, Batcher};
-pub use client::{fetch_spec, fetch_stats, ping, run_load, ClientCfg, LoadReport};
+pub use client::{
+    fetch_metrics, fetch_spec, fetch_stats, metrics_table, ping, run_load, ClientCfg, LoadReport,
+};
 pub use protocol::{ErrCode, InferRequest, Request, Response};
 pub use server::{serve, ServeCfg, Server};
 pub use session::{SessionCfg, SessionStore};

@@ -47,6 +47,9 @@ pub enum Request {
     Spec,
     /// Ask for a server statistics snapshot.
     Stats,
+    /// Ask for the combined serve + telemetry metrics snapshot
+    /// (`{"serve": .., "telemetry": ..}` — see `ServeStats::metrics_json`).
+    Metrics,
 }
 
 /// Machine-readable error classes in `err` frames.
@@ -118,6 +121,7 @@ pub enum Response {
     },
     Spec(Json),
     Stats(Json),
+    Metrics(Json),
 }
 
 impl Response {
@@ -127,7 +131,7 @@ impl Response {
             Response::Ok { id, .. } | Response::Err { id, .. } | Response::Pong { id } => {
                 Some(*id)
             }
-            Response::Spec(_) | Response::Stats(_) => None,
+            Response::Spec(_) | Response::Stats(_) | Response::Metrics(_) => None,
         }
     }
 }
@@ -217,6 +221,7 @@ pub fn encode_request(req: &Request) -> String {
         }
         Request::Spec => obj(vec![("type", Json::Str("spec".into()))]).dump(),
         Request::Stats => obj(vec![("type", Json::Str("stats".into()))]).dump(),
+        Request::Metrics => obj(vec![("type", Json::Str("metrics".into()))]).dump(),
     }
 }
 
@@ -254,6 +259,7 @@ pub fn decode_request(line: &str) -> Result<Request> {
         }),
         "spec" => Ok(Request::Spec),
         "stats" => Ok(Request::Stats),
+        "metrics" => Ok(Request::Metrics),
         other => bail!("unknown request type '{other}'"),
     }
 }
@@ -288,6 +294,9 @@ pub fn encode_response(resp: &Response) -> String {
         }
         Response::Stats(s) => {
             obj(vec![("type", Json::Str("stats".into())), ("stats", s.clone())]).dump()
+        }
+        Response::Metrics(m) => {
+            obj(vec![("type", Json::Str("metrics".into())), ("metrics", m.clone())]).dump()
         }
     }
 }
@@ -325,6 +334,7 @@ pub fn decode_response(line: &str) -> Result<Response> {
         "pong" => Ok(Response::Pong { id }),
         "spec" => Ok(Response::Spec(j.path(&["spec"]).clone())),
         "stats" => Ok(Response::Stats(j.path(&["stats"]).clone())),
+        "metrics" => Ok(Response::Metrics(j.path(&["metrics"]).clone())),
         other => bail!("unknown response type '{other}'"),
     }
 }
@@ -410,6 +420,24 @@ mod tests {
             decode_request(&encode_request(&Request::Stats)).unwrap(),
             Request::Stats
         ));
+        assert!(matches!(
+            decode_request(&encode_request(&Request::Metrics)).unwrap(),
+            Request::Metrics
+        ));
+    }
+
+    #[test]
+    fn metrics_frame_roundtrip() {
+        let payload = parse(r#"{"serve":{"completed":3},"telemetry":{"spans":{}}}"#).unwrap();
+        let resp = Response::Metrics(payload.clone());
+        assert_eq!(resp.id(), None);
+        match decode_response(&encode_response(&resp)).unwrap() {
+            Response::Metrics(m) => {
+                assert_eq!(m, payload);
+                assert_eq!(m.path(&["serve", "completed"]).as_f64(), Some(3.0));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
     }
 
     #[test]

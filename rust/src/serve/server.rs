@@ -174,6 +174,9 @@ fn spawn_connection(
                 Ok(Request::Stats) => {
                     let _ = tx.send(Response::Stats(stats.snapshot().to_json()));
                 }
+                Ok(Request::Metrics) => {
+                    let _ = tx.send(Response::Metrics(stats.metrics_json()));
+                }
                 Err(e) => {
                     stats.record_bad_request();
                     let _ = tx.send(Response::Err {

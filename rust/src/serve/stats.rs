@@ -8,86 +8,15 @@
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
-use std::time::Instant;
 
 use crate::report::Table;
 use crate::util::json::Json;
 
-/// Monotonic microsecond clock anchored at construction.  All serve-side
-/// timestamps (enqueue, expiry, batch start) are `now_us()` values from one
-/// shared clock, so deadlines need no wall-clock agreement with clients.
-pub struct Clock {
-    t0: Instant,
-}
-
-impl Clock {
-    pub fn new() -> Clock {
-        Clock { t0: Instant::now() }
-    }
-
-    pub fn now_us(&self) -> u64 {
-        self.t0.elapsed().as_micros() as u64
-    }
-}
-
-impl Default for Clock {
-    fn default() -> Clock {
-        Clock::new()
-    }
-}
-
-/// Power-of-two-bucketed histogram over microsecond values.  Bucket `i`
-/// covers `[2^i, 2^(i+1))` (bucket 0 also absorbs 0); percentiles report
-/// the upper bound of the containing bucket, which is exact enough for
-/// p50/p95/p99 latency reporting.
-#[derive(Clone, Debug)]
-pub struct Histogram {
-    counts: [u64; 40],
-    total: u64,
-}
-
-impl Histogram {
-    pub fn new() -> Histogram {
-        Histogram { counts: [0; 40], total: 0 }
-    }
-
-    fn bucket_of(us: u64) -> usize {
-        let b = (64 - us.max(1).leading_zeros() as usize) - 1;
-        b.min(39)
-    }
-
-    pub fn record(&mut self, us: u64) {
-        self.counts[Self::bucket_of(us)] += 1;
-        self.total += 1;
-    }
-
-    pub fn count(&self) -> u64 {
-        self.total
-    }
-
-    /// Upper bound (in us) of the bucket containing the `p`-quantile;
-    /// 0 when empty.
-    pub fn percentile(&self, p: f64) -> u64 {
-        if self.total == 0 {
-            return 0;
-        }
-        let rank = (p * self.total as f64).ceil().max(1.0) as u64;
-        let mut cum = 0u64;
-        for (i, c) in self.counts.iter().enumerate() {
-            cum += c;
-            if cum >= rank {
-                return (1u64 << (i + 1)) - 1;
-            }
-        }
-        (1u64 << 40) - 1
-    }
-}
-
-impl Default for Histogram {
-    fn default() -> Histogram {
-        Histogram::new()
-    }
-}
+// Clock and Histogram moved to `telemetry` in PR 6 — serve records into
+// the same substrate as every other instrumented layer (one histogram,
+// one clock, one snapshot path).  Re-exported here so serve-internal
+// `stats::Clock` / `stats::Histogram` paths keep working.
+pub use crate::telemetry::{Clock, Histogram};
 
 #[derive(Default)]
 struct Inner {
@@ -170,6 +99,9 @@ impl ServeStats {
             .enumerate()
             .map(|(i, c)| (i as u64 + 1) * c)
             .sum();
+        let latency = g.latency_us.snapshot();
+        let queue = g.queue_us.snapshot();
+        let exec = g.exec_us.snapshot();
         Snapshot {
             submitted: g.submitted,
             completed: g.completed,
@@ -185,13 +117,27 @@ impl ServeStats {
                 fused as f64 / g.batches as f64
             },
             queue_depth_peak: g.queue_depth_peak,
-            latency_p50_us: g.latency_us.percentile(0.50),
-            latency_p95_us: g.latency_us.percentile(0.95),
-            latency_p99_us: g.latency_us.percentile(0.99),
-            queue_p50_us: g.queue_us.percentile(0.50),
-            queue_p99_us: g.queue_us.percentile(0.99),
-            exec_p50_us: g.exec_us.percentile(0.50),
+            latency_p50_us: latency.p50(),
+            latency_p95_us: latency.p95(),
+            latency_p99_us: latency.p99(),
+            latency_p999_us: latency.p999(),
+            latency_mean_us: latency.mean(),
+            queue_p50_us: queue.p50(),
+            queue_p99_us: queue.p99(),
+            queue_p999_us: queue.p999(),
+            exec_p50_us: exec.p50(),
+            exec_p999_us: exec.p999(),
         }
+    }
+
+    /// The serve `metrics` protocol frame: this server's counters plus
+    /// the process-wide telemetry registry (spans, GEMM FLOPs, serve
+    /// phase percentiles) in one JSON object.
+    pub fn metrics_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("serve".to_string(), self.snapshot().to_json());
+        m.insert("telemetry".to_string(), crate::telemetry::registry_json());
+        Json::Obj(m)
     }
 }
 
@@ -211,9 +157,14 @@ pub struct Snapshot {
     pub latency_p50_us: u64,
     pub latency_p95_us: u64,
     pub latency_p99_us: u64,
+    pub latency_p999_us: u64,
+    /// Exact mean end-to-end latency (from the histogram's running sum).
+    pub latency_mean_us: f64,
     pub queue_p50_us: u64,
     pub queue_p99_us: u64,
+    pub queue_p999_us: u64,
     pub exec_p50_us: u64,
+    pub exec_p999_us: u64,
 }
 
 impl Snapshot {
@@ -242,9 +193,13 @@ impl Snapshot {
             ("latency p50 (us)", self.latency_p50_us.to_string()),
             ("latency p95 (us)", self.latency_p95_us.to_string()),
             ("latency p99 (us)", self.latency_p99_us.to_string()),
+            ("latency p999 (us)", self.latency_p999_us.to_string()),
+            ("latency mean (us)", format!("{:.1}", self.latency_mean_us)),
             ("queue wait p50 (us)", self.queue_p50_us.to_string()),
             ("queue wait p99 (us)", self.queue_p99_us.to_string()),
+            ("queue wait p999 (us)", self.queue_p999_us.to_string()),
             ("exec p50 (us)", self.exec_p50_us.to_string()),
+            ("exec p999 (us)", self.exec_p999_us.to_string()),
         ];
         for (k, v) in rows {
             t.row(&[k.to_string(), v]);
@@ -270,9 +225,13 @@ impl Snapshot {
         num("latency_p50_us", self.latency_p50_us as f64, &mut m);
         num("latency_p95_us", self.latency_p95_us as f64, &mut m);
         num("latency_p99_us", self.latency_p99_us as f64, &mut m);
+        num("latency_p999_us", self.latency_p999_us as f64, &mut m);
+        num("latency_mean_us", self.latency_mean_us, &mut m);
         num("queue_p50_us", self.queue_p50_us as f64, &mut m);
         num("queue_p99_us", self.queue_p99_us as f64, &mut m);
+        num("queue_p999_us", self.queue_p999_us as f64, &mut m);
         num("exec_p50_us", self.exec_p50_us as f64, &mut m);
+        num("exec_p999_us", self.exec_p999_us as f64, &mut m);
         m.insert(
             "occupancy".to_string(),
             Json::Arr(self.occupancy.iter().map(|&c| Json::Num(c as f64)).collect()),
@@ -287,7 +246,7 @@ mod tests {
 
     #[test]
     fn histogram_buckets_and_percentiles() {
-        let mut h = Histogram::new();
+        let h = Histogram::new();
         for us in [1u64, 2, 4, 8] {
             h.record(us);
         }
@@ -301,10 +260,12 @@ mod tests {
 
     #[test]
     fn histogram_handles_extremes() {
-        let mut h = Histogram::new();
+        let h = Histogram::new();
         h.record(0);
         h.record(u64::MAX);
-        assert_eq!(h.percentile(0.25), 1);
+        // A recorded zero reports 0 — the shared histogram's bucket 0 is
+        // exactly {0}, not [0, 2) (the PR-3 version reported 1 here).
+        assert_eq!(h.percentile(0.25), 0);
         assert!(h.percentile(1.0) >= (1u64 << 40) - 1);
     }
 
@@ -327,9 +288,28 @@ mod tests {
         s.record_submit(3);
         s.record_completed(500);
         let snap = s.snapshot();
+        // p999 of a single 500us sample: upper bound of [256, 512).
+        assert_eq!(snap.latency_p999_us, 511);
+        // The mean comes from the exact running sum, not bucket bounds.
+        assert!((snap.latency_mean_us - 500.0).abs() < 1e-9);
         let md = snap.to_table().to_markdown();
         assert!(md.contains("requests completed"));
+        assert!(md.contains("latency p999"));
         let j = snap.to_json();
         assert_eq!(j.path(&["completed"]).as_f64(), Some(1.0));
+        assert_eq!(j.path(&["latency_p999_us"]).as_f64(), Some(511.0));
+    }
+
+    #[test]
+    fn metrics_frame_combines_serve_and_telemetry() {
+        let s = ServeStats::new();
+        s.record_completed(100);
+        let j = s.metrics_json();
+        assert_eq!(j.path(&["serve", "completed"]).as_f64(), Some(1.0));
+        assert!(j
+            .path(&["telemetry", "phases", "execute_us", "p50"])
+            .as_f64()
+            .is_some());
+        assert!(j.path(&["telemetry", "spans", "gemm_nn", "calls"]).as_f64().is_some());
     }
 }

@@ -553,6 +553,11 @@ fn run_chunk(
     scratch: &mut WorkerScratch,
 ) {
     let start_us = clock.now_us();
+    // Serve-phase spans: validation + session handoff + input assembly
+    // under `batch_assemble`, the fused model call under `execute`, and
+    // state/output scatter + replies under `write_back`.  Each feeds the
+    // registry's phase histogram behind the `metrics` frame.
+    let assemble_span = crate::span!(batch_assemble);
 
     // Shared (non-per-row) data inputs are fed once for the whole fused
     // execution; requests whose values differ from the chunk head's would
@@ -700,12 +705,17 @@ fn run_chunk(
         }
     }
 
+    drop(assemble_span);
     let outputs = match assembly {
-        Ok(()) => model.run(inputs),
+        Ok(()) => {
+            let _execute_span = crate::span!(execute);
+            model.run(inputs)
+        }
         Err(e) => Err(e),
     };
     let end_us = clock.now_us();
     let exec_us = end_us.saturating_sub(start_us);
+    let _write_back_span = crate::span!(write_back);
 
     let outputs = match outputs {
         Ok(o) => o,
@@ -789,6 +799,7 @@ fn run_chunk(
             .collect();
         let queue_us = start_us.saturating_sub(p.enqueued_us);
         scratch.queue_waits.push(queue_us);
+        crate::telemetry::global().record_queue_wait(queue_us);
         p.reply(Response::Ok {
             id: p.req.id,
             outputs: outs,

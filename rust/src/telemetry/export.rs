@@ -1,0 +1,73 @@
+//! Chrome trace-event exporter (DESIGN.md §7).
+//!
+//! Emits the JSON array flavor of the Trace Event Format — one complete
+//! (`"ph":"X"`) event per line, loadable in `chrome://tracing` and
+//! Perfetto.  Timestamps and durations are microseconds as floats, per
+//! the format; span start times come off the shared trace epoch so
+//! events from different threads nest correctly on the timeline.
+
+use std::io::Write;
+
+use anyhow::{Context, Result};
+
+use crate::telemetry::span::{trace_buffer, TraceEvent};
+
+/// Render events as a Chrome trace JSON array, one event per line.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::from("[\n");
+    for (i, e) in events.iter().enumerate() {
+        let sep = if i + 1 == events.len() { "" } else { "," };
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"cwy\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}{}\n",
+            e.id.name(),
+            e.start_ns as f64 / 1_000.0,
+            e.dur_ns as f64 / 1_000.0,
+            e.tid,
+            sep,
+        ));
+    }
+    out.push(']');
+    out
+}
+
+/// Write the process trace ring to `path`; returns (events written,
+/// events dropped on ring overflow).  Errors if tracing was never
+/// enabled — the caller forgot `enable_tracing` before the workload.
+pub fn write_chrome_trace(path: &str) -> Result<(usize, u64)> {
+    let buf = trace_buffer()
+        .context("tracing is not enabled; call telemetry::enable_tracing first")?;
+    let events = buf.events();
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    f.write_all(chrome_trace_json(&events).as_bytes())
+        .with_context(|| format!("writing {path}"))?;
+    Ok((events.len(), buf.dropped()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::SpanId;
+    use crate::util::json::parse;
+
+    #[test]
+    fn emits_parseable_trace_events() {
+        let events = [
+            TraceEvent { id: SpanId::RolloutForward, tid: 1, start_ns: 0, dur_ns: 10_000 },
+            TraceEvent { id: SpanId::GemmNn, tid: 1, start_ns: 1_500, dur_ns: 2_000 },
+        ];
+        let text = chrome_trace_json(&events);
+        let j = parse(&text).expect("chrome trace must be valid JSON");
+        let arr = j.as_arr().expect("top level is an array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].path(&["name"]).as_str(), Some("rollout_forward"));
+        assert_eq!(arr[0].path(&["ph"]).as_str(), Some("X"));
+        assert_eq!(arr[1].path(&["ts"]).as_f64(), Some(1.5));
+        assert_eq!(arr[1].path(&["dur"]).as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn empty_trace_is_an_empty_array() {
+        let j = parse(&chrome_trace_json(&[])).unwrap();
+        assert_eq!(j.as_arr().map(|a| a.len()), Some(0));
+    }
+}

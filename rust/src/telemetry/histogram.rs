@@ -1,0 +1,218 @@
+//! Shared power-of-two-bucketed histogram over microsecond values.
+//!
+//! This is the one histogram in the tree (DESIGN.md §7): `serve/stats.rs`
+//! and the telemetry registry both record into it.  Compared to the PR-3
+//! serve-private version it fixes two reporting edges:
+//!
+//! * bucket 0 holds **exactly** the value 0, so recorded zeros report a
+//!   0 us percentile instead of the old 1 us upper bound;
+//! * an exact running sum makes `mean_us()` exact rather than derived
+//!   from bucket bounds.
+//!
+//! Interior mutability is atomic so `record` takes `&self`: the registry
+//! records from any thread without a lock, and `ServeStats` keeps its
+//! `Mutex` for the multi-field invariants, not for the histogram.
+//! `record` touches three atomics and never allocates — it is admissible
+//! on the hot path under the `tests/alloc_discipline.rs` contract.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket 0 is `{0}`; bucket `i >= 1` covers `[2^(i-1), 2^i)`; the last
+/// bucket absorbs everything from `2^(BUCKETS-2)` up.
+pub const BUCKETS: usize = 41;
+
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    total: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            counts: [ZERO; BUCKETS],
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket containing `us`.
+    pub fn bucket_of(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            (64 - us.leading_zeros() as usize).min(BUCKETS - 1)
+        }
+    }
+
+    /// Largest value reported for bucket `i` (inclusive upper bound).
+    pub fn upper_bound(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record(&self, us: u64) {
+        self.counts[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(us, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean of recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        self.snapshot().mean()
+    }
+
+    /// Upper bound (in us) of the bucket containing the `p`-quantile;
+    /// 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.snapshot().percentile(p)
+    }
+
+    /// Consistent point-in-time copy: buckets are loaded into a local
+    /// array first, so the quantile walk never mixes epochs with the
+    /// total.  Concurrent `record`s may land between loads — the snapshot
+    /// then reflects some interleaving of them, never a torn count.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot { counts, sum: self.sum.load(Ordering::Relaxed) }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Immutable value-type view of a [`Histogram`] — the unit percentiles,
+/// means, and merges are computed on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { counts: [0; BUCKETS], sum: 0 }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (p * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Histogram::upper_bound(i);
+            }
+        }
+        Histogram::upper_bound(BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.percentile(0.999)
+    }
+
+    /// Bucket-wise sum; merging is commutative and associative, so shard
+    /// snapshots combine in any order.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut out = self.clone();
+        for (dst, src) in out.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        out.sum += other.sum;
+        out
+    }
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot::empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_the_domain() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(u64::MAX), BUCKETS - 1);
+        // Every value is <= the upper bound of its bucket and > the upper
+        // bound of the previous bucket (for buckets below the overflow).
+        for us in [0u64, 1, 2, 3, 7, 8, 100, 1023, 1024, 1_000_000] {
+            let b = Histogram::bucket_of(us);
+            assert!(us <= Histogram::upper_bound(b) || b == BUCKETS - 1);
+            if b > 0 {
+                assert!(us > Histogram::upper_bound(b - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn recorded_zero_reports_zero() {
+        let h = Histogram::new();
+        h.record(0);
+        h.record(0);
+        h.record(8);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.percentile(1.0), 15);
+        assert!((h.mean() - 8.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let h = Histogram::new();
+        for us in [3u64, 5, 1000, 40] {
+            h.record(us);
+        }
+        assert!((h.mean() - 262.0).abs() < 1e-12);
+        assert_eq!(h.count(), 4);
+    }
+}

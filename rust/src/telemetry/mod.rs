@@ -1,0 +1,78 @@
+//! Process-wide, zero-allocation-on-hot-path observability (DESIGN.md §7).
+//!
+//! Layout:
+//! * [`registry`] — one `static` of preregistered atomic counters,
+//!   gauges, span totals, and phase histograms; `telemetry::global()`.
+//! * [`span`] — RAII [`SpanGuard`] + the `span!` macro; optional
+//!   lock-free trace ring behind [`enable_tracing`].
+//! * [`histogram`] — the shared pow2 microsecond [`Histogram`] (also
+//!   the substrate of `serve::stats`).
+//! * [`export`] — Chrome trace-event writer for `cwy train --trace`.
+//! * [`prom`] — JSON snapshot (the serve `metrics` frame) and
+//!   Prometheus text exposition.
+//!
+//! Hot-path rule: recording on a live span, counter, gauge, or histogram
+//! is a handful of relaxed atomic ops — never a lock, never an
+//! allocation.  Anything that allocates (snapshotting, export, render)
+//! lives on the read path and is called from cold code only.
+
+pub mod export;
+pub mod histogram;
+pub mod prom;
+pub mod registry;
+pub mod span;
+
+pub use export::{chrome_trace_json, write_chrome_trace};
+pub use histogram::{HistSnapshot, Histogram};
+pub use prom::{registry_json, registry_json_of, render_prometheus};
+pub use registry::{global, HistId, Registry, SpanId, SpanTotals, SPAN_COUNT};
+pub use span::{
+    enable_tracing, now_ns, trace_buffer, tracing_enabled, SpanGuard, TraceBuffer, TraceEvent,
+};
+
+use std::time::Instant;
+
+/// Span-ns attribution of one closure run: every span whose cumulative
+/// ns advanced while `f` ran, as `(span name, delta ns)` pairs.  Benches
+/// use this to publish a per-kernel `phase_ns` sidecar next to their
+/// medians (read path; allocates the result vector).
+pub fn span_delta(f: impl FnOnce()) -> Vec<(&'static str, u64)> {
+    let reg = global();
+    let before = reg.span_totals();
+    f();
+    let after = reg.span_totals();
+    SpanId::ALL
+        .iter()
+        .zip(before.iter().zip(after.iter()))
+        .filter(|(_, (b, a))| a.ns > b.ns)
+        .map(|(id, (b, a))| (id.name(), a.ns - b.ns))
+        .collect()
+}
+
+/// Monotonic microsecond clock anchored at construction.  The serve
+/// subsystem threads one shared instance through batcher and workers so
+/// deadlines and queue waits agree without wall-clock coordination;
+/// span timestamps use the finer process-wide [`now_ns`] epoch instead.
+pub struct Clock {
+    t0: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { t0: Instant::now() }
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::new()
+    }
+}

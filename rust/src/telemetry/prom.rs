@@ -1,0 +1,190 @@
+//! Registry snapshot presentation: JSON (the serve `metrics` frame) and
+//! Prometheus-style text exposition.
+//!
+//! The JSON shape is the wire contract; `render_prometheus` works from
+//! that JSON rather than the live registry, so `cwy client --prom` can
+//! render a *server's* snapshot and the unit tests need no live spans.
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::registry::{Registry, SpanId, GEMM_VARIANTS};
+use crate::telemetry::span::trace_buffer;
+use crate::util::json::Json;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Snapshot one registry as the `metrics`-frame JSON:
+///
+/// ```text
+/// {"spans":  {"gemm_nn": {"calls":..,"ns":..}, ...},
+///  "gemm":   {"nn": {"calls":..,"ns":..,"flops":..,"gflops":..}, ...},
+///  "phases": {"queue_wait_us": {"count":..,"mean_us":..,
+///             "p50":..,"p95":..,"p99":..,"p999":..}, ...},
+///  "gauges": {"queue_depth": ..},
+///  "trace":  {"events":..,"dropped":..}}
+/// ```
+pub fn registry_json_of(reg: &Registry) -> Json {
+    let totals = reg.span_totals();
+
+    let mut spans = BTreeMap::new();
+    for id in SpanId::ALL {
+        let t = totals[id.index()];
+        spans.insert(
+            id.name().to_string(),
+            obj(vec![("calls", num(t.calls as f64)), ("ns", num(t.ns as f64))]),
+        );
+    }
+
+    let mut gemm = BTreeMap::new();
+    for id in SpanId::ALL.iter().take(GEMM_VARIANTS) {
+        let t = totals[id.index()];
+        let flops = reg.gemm_flops(*id);
+        // flops/ns is numerically GFLOP/s.
+        let gflops = if t.ns == 0 { 0.0 } else { flops as f64 / t.ns as f64 };
+        gemm.insert(
+            id.name().trim_start_matches("gemm_").to_string(),
+            obj(vec![
+                ("calls", num(t.calls as f64)),
+                ("ns", num(t.ns as f64)),
+                ("flops", num(flops as f64)),
+                ("gflops", num(gflops)),
+            ]),
+        );
+    }
+
+    let mut phases = BTreeMap::new();
+    for id in crate::telemetry::registry::HistId::ALL {
+        let s = reg.hist(id).snapshot();
+        phases.insert(
+            id.name().to_string(),
+            obj(vec![
+                ("count", num(s.count() as f64)),
+                ("mean_us", num(s.mean())),
+                ("p50", num(s.p50() as f64)),
+                ("p95", num(s.p95() as f64)),
+                ("p99", num(s.p99() as f64)),
+                ("p999", num(s.p999() as f64)),
+            ]),
+        );
+    }
+
+    let (events, dropped) = trace_buffer()
+        .map(|b| (b.len() as f64, b.dropped() as f64))
+        .unwrap_or((0.0, 0.0));
+
+    obj(vec![
+        ("spans", Json::Obj(spans)),
+        ("gemm", Json::Obj(gemm)),
+        ("phases", Json::Obj(phases)),
+        ("gauges", obj(vec![("queue_depth", num(reg.queue_depth() as f64))])),
+        ("trace", obj(vec![("events", num(events)), ("dropped", num(dropped))])),
+    ])
+}
+
+/// Snapshot the process-wide registry.
+pub fn registry_json() -> Json {
+    registry_json_of(crate::telemetry::registry::global())
+}
+
+/// Prometheus text exposition of a [`registry_json`]-shaped value
+/// (counters as `_total`, phase quantiles as summary-style series).
+pub fn render_prometheus(j: &Json) -> String {
+    let mut out = String::new();
+    let fields = |j: &Json| -> Vec<(String, f64)> {
+        match j {
+            Json::Obj(m) => m
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                .collect(),
+            _ => vec![],
+        }
+    };
+    if let Json::Obj(spans) = j.path(&["spans"]) {
+        out.push_str("# TYPE cwy_span_calls_total counter\n");
+        for (name, v) in spans {
+            let calls = v.path(&["calls"]).as_f64().unwrap_or(0.0);
+            out.push_str(&format!("cwy_span_calls_total{{span=\"{name}\"}} {calls}\n"));
+        }
+        out.push_str("# TYPE cwy_span_ns_total counter\n");
+        for (name, v) in spans {
+            let ns = v.path(&["ns"]).as_f64().unwrap_or(0.0);
+            out.push_str(&format!("cwy_span_ns_total{{span=\"{name}\"}} {ns}\n"));
+        }
+    }
+    if let Json::Obj(gemm) = j.path(&["gemm"]) {
+        out.push_str("# TYPE cwy_gemm_flops_total counter\n");
+        for (variant, v) in gemm {
+            let flops = v.path(&["flops"]).as_f64().unwrap_or(0.0);
+            out.push_str(&format!("cwy_gemm_flops_total{{variant=\"{variant}\"}} {flops}\n"));
+        }
+    }
+    if let Json::Obj(phases) = j.path(&["phases"]) {
+        out.push_str("# TYPE cwy_phase_us summary\n");
+        for (phase, v) in phases {
+            for (q, key) in [("0.5", "p50"), ("0.95", "p95"), ("0.99", "p99"), ("0.999", "p999")] {
+                let x = v.path(&[key]).as_f64().unwrap_or(0.0);
+                out.push_str(&format!(
+                    "cwy_phase_us{{phase=\"{phase}\",quantile=\"{q}\"}} {x}\n"
+                ));
+            }
+            let count = v.path(&["count"]).as_f64().unwrap_or(0.0);
+            out.push_str(&format!("cwy_phase_us_count{{phase=\"{phase}\"}} {count}\n"));
+        }
+    }
+    for (name, v) in fields(j.path(&["gauges"])) {
+        out.push_str(&format!("# TYPE cwy_{name} gauge\ncwy_{name} {v}\n"));
+    }
+    for (name, v) in fields(j.path(&["trace"])) {
+        out.push_str(&format!("cwy_trace_{name} {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{Registry, SpanId};
+
+    #[test]
+    fn json_snapshot_has_the_contract_shape() {
+        let r = Registry::new();
+        r.record_span(SpanId::GemmNn, 2_000);
+        r.add_gemm_flops(SpanId::GemmNn, 4_000);
+        r.record_span(SpanId::Execute, 1_000_000);
+        r.record_queue_wait(12);
+        let j = registry_json_of(&r);
+        assert_eq!(j.path(&["spans", "gemm_nn", "calls"]).as_f64(), Some(1.0));
+        assert_eq!(j.path(&["gemm", "nn", "flops"]).as_f64(), Some(4_000.0));
+        // 4000 flops over 2000 ns = 2 GFLOP/s.
+        assert_eq!(j.path(&["gemm", "nn", "gflops"]).as_f64(), Some(2.0));
+        assert_eq!(j.path(&["phases", "execute_us", "count"]).as_f64(), Some(1.0));
+        assert_eq!(j.path(&["phases", "queue_wait_us", "p999"]).as_f64(), Some(15.0));
+        assert!(j.path(&["gauges", "queue_depth"]).as_f64().is_some());
+        // Serde-free round trip: the frame must survive the wire.
+        let back = crate::util::json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn prometheus_text_renders_from_json() {
+        let r = Registry::new();
+        r.record_span(SpanId::BpttBackward, 5_000);
+        r.set_queue_depth(3);
+        let text = render_prometheus(&registry_json_of(&r));
+        assert!(text.contains("cwy_span_calls_total{span=\"bptt_backward\"} 1"));
+        assert!(text.contains("cwy_queue_depth 3"));
+        assert!(text.contains("cwy_phase_us{phase=\"execute_us\",quantile=\"0.5\"} 0"));
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+}

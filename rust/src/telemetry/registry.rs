@@ -1,0 +1,263 @@
+//! Process-wide metrics registry (DESIGN.md §7).
+//!
+//! One `static` of preregistered atomic slots — span call/ns totals, GEMM
+//! FLOP counters, a queue-depth gauge, and the serve-phase histograms.
+//! Everything is `const`-constructed: no lazy init, no lock, and no
+//! allocation anywhere on a record path, so instrumented code stays
+//! inside the `tests/alloc_discipline.rs` zero-allocation contract.
+//!
+//! Identifiers are static enums, not strings: a span or histogram is a
+//! fixed array index, and "registering" a new one means adding an enum
+//! variant.  That is the deliberate trade — dynamic metric names would
+//! need interning (allocation) or hashing (contention); a growing
+//! codebase adds variants in review instead.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::telemetry::histogram::Histogram;
+
+/// Static identity of every instrumented span.  `name()` is the label
+/// used by the trace exporter, the registry JSON, and `span!`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanId {
+    GemmNn = 0,
+    GemmNt = 1,
+    GemmTn = 2,
+    GemmTt = 3,
+    RolloutForward = 4,
+    BpttBackward = 5,
+    SgdStep = 6,
+    BatchAssemble = 7,
+    Execute = 8,
+    WriteBack = 9,
+}
+
+pub const SPAN_COUNT: usize = 10;
+
+/// The four GEMM transpose variants lead the [`SpanId`] numbering, so a
+/// span index below this doubles as a FLOP-counter index.
+pub const GEMM_VARIANTS: usize = 4;
+
+impl SpanId {
+    pub const ALL: [SpanId; SPAN_COUNT] = [
+        SpanId::GemmNn,
+        SpanId::GemmNt,
+        SpanId::GemmTn,
+        SpanId::GemmTt,
+        SpanId::RolloutForward,
+        SpanId::BpttBackward,
+        SpanId::SgdStep,
+        SpanId::BatchAssemble,
+        SpanId::Execute,
+        SpanId::WriteBack,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanId::GemmNn => "gemm_nn",
+            SpanId::GemmNt => "gemm_nt",
+            SpanId::GemmTn => "gemm_tn",
+            SpanId::GemmTt => "gemm_tt",
+            SpanId::RolloutForward => "rollout_forward",
+            SpanId::BpttBackward => "bptt_backward",
+            SpanId::SgdStep => "sgd_step",
+            SpanId::BatchAssemble => "batch_assemble",
+            SpanId::Execute => "execute",
+            SpanId::WriteBack => "write_back",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Serve-pipeline spans additionally feed a phase histogram so the
+    /// `metrics` frame can report per-phase percentiles, not just totals.
+    fn hist(self) -> Option<HistId> {
+        match self {
+            SpanId::BatchAssemble => Some(HistId::BatchAssembleUs),
+            SpanId::Execute => Some(HistId::ExecuteUs),
+            SpanId::WriteBack => Some(HistId::WriteBackUs),
+            _ => None,
+        }
+    }
+}
+
+/// Registry-owned phase histograms (microsecond values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HistId {
+    QueueWaitUs = 0,
+    BatchAssembleUs = 1,
+    ExecuteUs = 2,
+    WriteBackUs = 3,
+}
+
+pub const HIST_COUNT: usize = 4;
+
+impl HistId {
+    pub const ALL: [HistId; HIST_COUNT] = [
+        HistId::QueueWaitUs,
+        HistId::BatchAssembleUs,
+        HistId::ExecuteUs,
+        HistId::WriteBackUs,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HistId::QueueWaitUs => "queue_wait_us",
+            HistId::BatchAssembleUs => "batch_assemble_us",
+            HistId::ExecuteUs => "execute_us",
+            HistId::WriteBackUs => "write_back_us",
+        }
+    }
+}
+
+struct SpanStat {
+    calls: AtomicU64,
+    ns: AtomicU64,
+}
+
+/// Point-in-time (calls, ns) totals for one span — the unit of the delta
+/// arithmetic the trainer and benches do around a timed region.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanTotals {
+    pub calls: u64,
+    pub ns: u64,
+}
+
+pub struct Registry {
+    spans: [SpanStat; SPAN_COUNT],
+    gemm_flops: [AtomicU64; GEMM_VARIANTS],
+    queue_depth: AtomicU64,
+    hists: [Histogram; HIST_COUNT],
+}
+
+static REGISTRY: Registry = Registry::new();
+
+/// The process-wide registry every span and counter records into.
+pub fn global() -> &'static Registry {
+    &REGISTRY
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const STAT: SpanStat = SpanStat { calls: AtomicU64::new(0), ns: AtomicU64::new(0) };
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        #[allow(clippy::declare_interior_mutable_const)]
+        const HIST: Histogram = Histogram::new();
+        Registry {
+            spans: [STAT; SPAN_COUNT],
+            gemm_flops: [ZERO; GEMM_VARIANTS],
+            queue_depth: AtomicU64::new(0),
+            hists: [HIST; HIST_COUNT],
+        }
+    }
+
+    /// One finished span: bump the call count and ns total; serve-phase
+    /// spans also land in their microsecond histogram.
+    pub fn record_span(&self, id: SpanId, dur_ns: u64) {
+        let s = &self.spans[id.index()];
+        s.calls.fetch_add(1, Ordering::Relaxed);
+        s.ns.fetch_add(dur_ns, Ordering::Relaxed);
+        if let Some(h) = id.hist() {
+            self.hists[h as usize].record(dur_ns / 1_000);
+        }
+    }
+
+    /// FLOPs performed by one GEMM call (counted per the
+    /// `orthogonal::flops` rules); `id` must be a GEMM variant span.
+    pub fn add_gemm_flops(&self, id: SpanId, flops: u64) {
+        debug_assert!(id.index() < GEMM_VARIANTS, "not a gemm span: {id:?}");
+        self.gemm_flops[id.index() % GEMM_VARIANTS].fetch_add(flops, Ordering::Relaxed);
+    }
+
+    pub fn gemm_flops(&self, id: SpanId) -> u64 {
+        self.gemm_flops[id.index() % GEMM_VARIANTS].load(Ordering::Relaxed)
+    }
+
+    pub fn record_queue_wait(&self, us: u64) {
+        self.hists[HistId::QueueWaitUs as usize].record(us);
+    }
+
+    pub fn set_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn hist(&self, id: HistId) -> &Histogram {
+        &self.hists[id as usize]
+    }
+
+    pub fn span_calls(&self, id: SpanId) -> u64 {
+        self.spans[id.index()].calls.load(Ordering::Relaxed)
+    }
+
+    pub fn span_ns(&self, id: SpanId) -> u64 {
+        self.spans[id.index()].ns.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of every span's totals, for before/after delta capture.
+    pub fn span_totals(&self) -> [SpanTotals; SPAN_COUNT] {
+        let mut out = [SpanTotals::default(); SPAN_COUNT];
+        for (dst, src) in out.iter_mut().zip(self.spans.iter()) {
+            dst.calls = src.calls.load(Ordering::Relaxed);
+            dst.ns = src.ns.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ids_index_their_slots() {
+        for (i, id) in SpanId::ALL.iter().enumerate() {
+            assert_eq!(id.index(), i);
+        }
+        for (i, id) in HistId::ALL.iter().enumerate() {
+            assert_eq!(*id as usize, i);
+        }
+    }
+
+    #[test]
+    fn record_span_accumulates() {
+        let r = Registry::new();
+        r.record_span(SpanId::GemmNn, 1_500);
+        r.record_span(SpanId::GemmNn, 2_500);
+        assert_eq!(r.span_calls(SpanId::GemmNn), 2);
+        assert_eq!(r.span_ns(SpanId::GemmNn), 4_000);
+        assert_eq!(r.span_calls(SpanId::GemmNt), 0);
+    }
+
+    #[test]
+    fn serve_spans_feed_phase_histograms() {
+        let r = Registry::new();
+        r.record_span(SpanId::Execute, 3_000_000); // 3 ms
+        assert_eq!(r.hist(HistId::ExecuteUs).count(), 1);
+        assert_eq!(r.hist(HistId::ExecuteUs).percentile(1.0), 4_095);
+        r.record_queue_wait(7);
+        assert_eq!(r.hist(HistId::QueueWaitUs).count(), 1);
+    }
+
+    #[test]
+    fn gemm_flop_counters() {
+        let r = Registry::new();
+        r.add_gemm_flops(SpanId::GemmTn, 1_000);
+        r.add_gemm_flops(SpanId::GemmTn, 24);
+        assert_eq!(r.gemm_flops(SpanId::GemmTn), 1_024);
+        assert_eq!(r.gemm_flops(SpanId::GemmNn), 0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Tracing spans: RAII guards with static identities (DESIGN.md §7).
+//!
+//! `let _s = span!(bptt_backward);` times the enclosing scope and, on
+//! drop, folds (calls += 1, ns += dur) into the registry.  When tracing
+//! is enabled the span additionally claims one preallocated slot in a
+//! lock-free ring and stores (span, tid, start, dur) — four atomic
+//! stores, no allocation — which the Chrome trace exporter later turns
+//! into `ph:"X"` complete events.
+//!
+//! The hot-path budget per span is two monotonic clock reads and a
+//! handful of relaxed atomic RMWs; a full ring drops events (counted)
+//! rather than blocking or growing.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::telemetry::registry::{global, SpanId};
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-wide trace epoch (the first call
+/// anchors it).  All spans share this origin, so cross-thread nesting in
+/// the exported trace is meaningful.
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Small dense per-thread id for trace attribution (0 is "unassigned";
+/// ids are handed out on first use and never reused).
+pub fn trace_tid() -> u32 {
+    TID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            v
+        } else {
+            let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+            v
+        }
+    })
+}
+
+/// Live timer for one instrumented region.  Construction stamps the
+/// start; `Drop` records into the registry (and the trace ring when
+/// enabled).  Hold it in a local — `let _ = span!(..)` drops immediately
+/// and times nothing.
+#[must_use = "a span guard times its scope; dropping it immediately records ~0ns"]
+pub struct SpanGuard {
+    id: SpanId,
+    start_ns: u64,
+}
+
+impl SpanGuard {
+    pub fn enter(id: SpanId) -> SpanGuard {
+        SpanGuard { id, start_ns: now_ns() }
+    }
+
+    pub fn id(&self) -> SpanId {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur_ns = now_ns().saturating_sub(self.start_ns);
+        global().record_span(self.id, dur_ns);
+        if TRACE_ENABLED.load(Ordering::Relaxed) {
+            if let Some(buf) = TRACE.get() {
+                buf.push(self.id, trace_tid(), self.start_ns, dur_ns);
+            }
+        }
+    }
+}
+
+/// Open a [`SpanGuard`] by static name: `let _s = span!(gemm_nn);`.
+/// The name set is closed — adding a span means adding a [`SpanId`]
+/// variant and an arm here, which keeps every span preregistered.
+#[macro_export]
+macro_rules! span {
+    (gemm_nn) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::GemmNn)
+    };
+    (gemm_nt) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::GemmNt)
+    };
+    (gemm_tn) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::GemmTn)
+    };
+    (gemm_tt) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::GemmTt)
+    };
+    (rollout_forward) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::RolloutForward)
+    };
+    (bptt_backward) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::BpttBackward)
+    };
+    (sgd_step) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::SgdStep)
+    };
+    (batch_assemble) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::BatchAssemble)
+    };
+    (execute) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::Execute)
+    };
+    (write_back) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::WriteBack)
+    };
+}
+
+/// One exported trace event (a closed span).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub id: SpanId,
+    pub tid: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+struct TraceSlot {
+    span: AtomicU32,
+    tid: AtomicU32,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    /// Release-stored last, acquire-loaded by the exporter, so a slot is
+    /// either invisible or fully written — never torn.
+    done: AtomicBool,
+}
+
+/// Fixed-capacity span sink: all slots are allocated at install time, so
+/// pushing is allocation-free.  Overflow drops (and counts) events.
+pub struct TraceBuffer {
+    slots: Box<[TraceSlot]>,
+    next: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl TraceBuffer {
+    pub fn new(capacity: usize) -> TraceBuffer {
+        let slots: Vec<TraceSlot> = (0..capacity)
+            .map(|_| TraceSlot {
+                span: AtomicU32::new(0),
+                tid: AtomicU32::new(0),
+                start_ns: AtomicU64::new(0),
+                dur_ns: AtomicU64::new(0),
+                done: AtomicBool::new(false),
+            })
+            .collect();
+        TraceBuffer {
+            slots: slots.into_boxed_slice(),
+            next: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn push(&self, id: SpanId, tid: u32, start_ns: u64, dur_ns: u64) {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let slot = &self.slots[idx];
+        slot.span.store(id.index() as u32, Ordering::Relaxed);
+        slot.tid.store(tid, Ordering::Relaxed);
+        slot.start_ns.store(start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.done.store(true, Ordering::Release);
+    }
+
+    pub fn len(&self) -> usize {
+        self.next.load(Ordering::Relaxed).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Completed events, sorted by start time (allocates; export path).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out: Vec<TraceEvent> = self
+            .slots
+            .iter()
+            .filter(|s| s.done.load(Ordering::Acquire))
+            .map(|s| TraceEvent {
+                id: SpanId::ALL[s.span.load(Ordering::Relaxed) as usize],
+                tid: s.tid.load(Ordering::Relaxed),
+                start_ns: s.start_ns.load(Ordering::Relaxed),
+                dur_ns: s.dur_ns.load(Ordering::Relaxed),
+            })
+            .collect();
+        out.sort_by_key(|e| (e.start_ns, e.tid));
+        out
+    }
+}
+
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+static TRACE: OnceLock<TraceBuffer> = OnceLock::new();
+
+/// Install the process trace ring (idempotent; first capacity wins) and
+/// start capturing span events.  The one allocation happens here, up
+/// front — never on a later record.
+pub fn enable_tracing(capacity: usize) {
+    TRACE.get_or_init(|| TraceBuffer::new(capacity));
+    TRACE_ENABLED.store(true, Ordering::Release);
+}
+
+pub fn tracing_enabled() -> bool {
+    TRACE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// The installed ring, if `enable_tracing` ever ran.
+pub fn trace_buffer() -> Option<&'static TraceBuffer> {
+    TRACE.get()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::SpanId;
+
+    #[test]
+    fn guard_records_into_registry() {
+        let before = global().span_totals();
+        {
+            let _s = SpanGuard::enter(SpanId::GemmTt);
+        }
+        let after = global().span_totals();
+        let i = SpanId::GemmTt.index();
+        assert_eq!(after[i].calls, before[i].calls + 1);
+        assert!(after[i].ns >= before[i].ns);
+    }
+
+    #[test]
+    fn trace_buffer_drops_on_overflow() {
+        let buf = TraceBuffer::new(2);
+        buf.push(SpanId::GemmNn, 1, 0, 10);
+        buf.push(SpanId::GemmNt, 1, 5, 10);
+        buf.push(SpanId::GemmTn, 1, 20, 10);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.dropped(), 1);
+        let ev = buf.events();
+        assert_eq!(ev.len(), 2);
+        assert!(ev[0].start_ns <= ev[1].start_ns);
+    }
+
+    #[test]
+    fn tids_are_distinct_per_thread() {
+        let here = trace_tid();
+        assert_eq!(here, trace_tid(), "tid must be stable within a thread");
+        let there = std::thread::spawn(trace_tid).join().unwrap();
+        assert_ne!(here, there);
+    }
+}

@@ -3,6 +3,11 @@
 //! training step — forward rollout, exact BPTT, in-place SGD apply —
 //! performs **zero** heap allocations.
 //!
+//! ISSUE 6 tightens the same contract to hold with telemetry live: the
+//! counted window runs with span recording *and* the trace ring enabled,
+//! so every `span!` fire (registry fold + ring push) is inside the
+//! zero-allocation budget.
+//!
 //! A counting `GlobalAlloc` wrapper around the system allocator tallies
 //! every `alloc`/`realloc`; the test snapshots the counter around a
 //! window of steady-state steps and asserts the delta is exactly zero.
@@ -96,6 +101,12 @@ fn steady_state_training_step_allocates_zero() {
         .collect();
     let mut rws = RolloutWorkspace::new();
 
+    // Telemetry ON for the whole window: installing the trace ring is the
+    // one allocation (all slots up front, here); recording a span into
+    // the registry or pushing a ring event afterwards must allocate
+    // nothing (DESIGN.md §7 hot-path rule).
+    cwy::telemetry::enable_tracing(4096);
+
     // Warmup: grows the workspace pool, the tape, and the thread-local
     // gemm pack panels to their steady-state capacities.
     for _ in 0..3 {
@@ -113,6 +124,16 @@ fn steady_state_training_step_allocates_zero() {
         "steady-state training step allocated {delta} times over 5 steps \
          (the ISSUE 5 zero-allocation contract)"
     );
+    // The zero-allocation claim above covered live telemetry, not an
+    // idle registry: the counted steps recorded spans and trace events.
+    let bptt = cwy::telemetry::SpanId::BpttBackward;
+    let calls = cwy::telemetry::global().span_calls(bptt);
+    assert!(calls >= 5, "telemetry missed the counted window (bptt_backward calls={calls})");
+    assert!(
+        !cwy::telemetry::trace_buffer().expect("ring installed").is_empty(),
+        "trace ring captured no events"
+    );
+
     // The steps did real work: finite, varying loss (SGD is moving).
     assert!(losses.iter().all(|l| l.is_finite()));
     assert!(

@@ -1,0 +1,193 @@
+//! Integration suite for the telemetry layer (ISSUE 6, DESIGN.md §7):
+//! histogram properties under randomized input, snapshot consistency
+//! under concurrent writers, and the Chrome trace exporter's golden
+//! output shape.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cwy::telemetry::histogram::BUCKETS;
+use cwy::telemetry::{chrome_trace_json, HistSnapshot, Histogram, SpanId, TraceBuffer};
+use cwy::util::json::{self, Json};
+use cwy::util::rng::Pcg32;
+
+/// Values mixing the scales the registry sees in practice: exact zeros,
+/// single-digit us, request-sized us, and bucket-spanning giants.
+fn random_values(seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|_| match rng.below(4) {
+            0 => 0,
+            1 => rng.below(16) as u64,
+            2 => rng.below(10_000) as u64,
+            _ => (rng.below(1 << 30) as u64) << rng.below(20),
+        })
+        .collect()
+}
+
+#[test]
+fn percentiles_are_monotone_in_p() {
+    for seed in 0..8u64 {
+        let h = Histogram::new();
+        for v in random_values(seed, 500) {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let ps = [0.001, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0];
+        for w in ps.windows(2) {
+            assert!(
+                snap.percentile(w[0]) <= snap.percentile(w[1]),
+                "seed {seed}: percentile({}) > percentile({})",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn percentile_bounds_the_recorded_value() {
+    // A single recorded value reports a percentile >= the value and —
+    // below the overflow bucket — under one octave above it: pow2
+    // buckets never undershoot and overshoot by less than 2x.
+    let mut rng = Pcg32::seeded(7);
+    for _ in 0..200 {
+        let v = (rng.below(1 << 30) as u64) << rng.below(10);
+        let h = Histogram::new();
+        h.record(v);
+        let p = h.percentile(0.5);
+        assert!(p >= v, "reported {p} < recorded {v}");
+        if Histogram::bucket_of(v) < BUCKETS - 1 {
+            assert!(p < 2 * v.max(1), "reported {p} >= 2x recorded {v}");
+        }
+    }
+    // The bucket-0 edge (the ISSUE 6 fix): a recorded zero reports 0.
+    let h = Histogram::new();
+    h.record(0);
+    assert_eq!(h.percentile(1.0), 0);
+}
+
+#[test]
+fn merge_is_associative_and_commutative() {
+    let snaps: Vec<HistSnapshot> = (0..3u64)
+        .map(|s| {
+            let h = Histogram::new();
+            for v in random_values(100 + s, 200) {
+                h.record(v);
+            }
+            h.snapshot()
+        })
+        .collect();
+    let (a, b, c) = (&snaps[0], &snaps[1], &snaps[2]);
+    assert_eq!(a.merge(b), b.merge(a));
+    assert_eq!(a.merge(b).merge(c), a.merge(&b.merge(c)));
+    let all = a.merge(b).merge(c);
+    assert_eq!(all.count(), a.count() + b.count() + c.count());
+    assert_eq!(all.sum, a.sum + b.sum + c.sum);
+    assert_eq!(a.merge(&HistSnapshot::empty()), a.clone());
+}
+
+#[test]
+fn concurrent_snapshots_never_tear() {
+    let h = Arc::new(Histogram::new());
+    let writers = 4u64;
+    let per = 10_000u64;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Reader races the writers: every mid-flight snapshot must be
+    // internally consistent (bounded count, monotone percentiles) even
+    // though its buckets were loaded one relaxed atomic at a time.
+    let reader = {
+        let h = h.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut seen = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let snap = h.snapshot();
+                let n = snap.count();
+                assert!(n <= writers * per, "snapshot count {n} exceeds writes");
+                assert!(n >= seen, "snapshot count went backwards");
+                seen = n;
+                assert!(snap.p50() <= snap.p99());
+                assert!(snap.p99() <= snap.percentile(1.0));
+            }
+        })
+    };
+
+    let handles: Vec<_> = (0..writers)
+        .map(|_| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    h.record(i % 1000);
+                }
+            })
+        })
+        .collect();
+    for t in handles {
+        t.join().unwrap();
+    }
+    stop.store(true, Ordering::Release);
+    reader.join().unwrap();
+
+    // Exact totals once the writers are quiescent.
+    let snap = h.snapshot();
+    assert_eq!(snap.count(), writers * per);
+    let per_writer_sum: u64 = (0..per).map(|i| i % 1000).sum();
+    assert_eq!(snap.sum, writers * per_writer_sum);
+}
+
+#[test]
+fn chrome_trace_export_golden() {
+    let buf = TraceBuffer::new(16);
+    // One thread's nested spans (two gemms inside a forward rollout)
+    // plus a second thread's sgd step.
+    buf.push(SpanId::RolloutForward, 1, 1_000, 10_000);
+    buf.push(SpanId::GemmNn, 1, 1_500, 2_000);
+    buf.push(SpanId::GemmNt, 1, 5_000, 3_000);
+    buf.push(SpanId::SgdStep, 2, 2_000, 4_000);
+
+    let events = buf.events();
+    assert_eq!(events.len(), 4);
+    let text = chrome_trace_json(&events);
+    let root = json::parse(&text).expect("exporter must emit valid JSON");
+    let Json::Arr(items) = &root else {
+        panic!("trace root must be a JSON array")
+    };
+    assert_eq!(items.len(), 4);
+    for item in items {
+        assert_eq!(item.path(&["ph"]).as_str(), Some("X"));
+        assert_eq!(item.path(&["cat"]).as_str(), Some("cwy"));
+        assert_eq!(item.path(&["pid"]).as_f64(), Some(1.0));
+        assert!(item.path(&["name"]).as_str().is_some());
+    }
+    // Events are sorted by start; ts/dur are microseconds.
+    assert_eq!(items[0].path(&["name"]).as_str(), Some("rollout_forward"));
+    assert_eq!(items[0].path(&["ts"]).as_f64(), Some(1.0));
+    assert_eq!(items[0].path(&["dur"]).as_f64(), Some(10.0));
+    assert_eq!(items[0].path(&["tid"]).as_f64(), Some(1.0));
+    assert_eq!(items[2].path(&["name"]).as_str(), Some("sgd_step"));
+    assert_eq!(items[2].path(&["tid"]).as_f64(), Some(2.0));
+    // Nesting survives the round trip: both gemm events sit inside the
+    // forward span's [ts, ts+dur] window on the same tid.
+    let fwd = (1.0, 11.0);
+    for idx in [1usize, 3] {
+        let ts = items[idx].path(&["ts"]).as_f64().unwrap();
+        let dur = items[idx].path(&["dur"]).as_f64().unwrap();
+        assert!(items[idx].path(&["name"]).as_str().unwrap().starts_with("gemm_"));
+        assert!(ts >= fwd.0 && ts + dur <= fwd.1, "gemm span escapes its parent");
+    }
+}
+
+#[test]
+fn span_macro_feeds_registry_and_ring() {
+    cwy::telemetry::enable_tracing(64);
+    let reg = cwy::telemetry::global();
+    let before = reg.span_calls(SpanId::GemmTt);
+    {
+        let _s = cwy::span!(gemm_tt);
+    }
+    assert_eq!(reg.span_calls(SpanId::GemmTt), before + 1);
+    let buf = cwy::telemetry::trace_buffer().expect("ring installed");
+    assert!(buf.events().iter().any(|e| e.id == SpanId::GemmTt));
+}
