@@ -6,8 +6,10 @@
 //! * **PR-4** — the frozen allocating implementation
 //!   (`backward::reference`): fresh `Vec` per matmul, materialized
 //!   transposes, legacy tiled kernel.  The fused/PR-4 ratio is ISSUE 5's
-//!   acceptance number (≥ 1.5× at N=128, L=64, T=64, B=16) and the two
-//!   paths agree **bitwise**, so the ratio measures structure only;
+//!   acceptance number (≥ 1.5× at N=128, L=64, T=64, B=16).  Under the
+//!   portable microkernel the two paths agree **bitwise**, so the ratio
+//!   measures structure only; under avx2+fma the fused side additionally
+//!   banks the SIMD speedup and parity is asserted within f32 headroom;
 //! * **sequential HR** — the per-Householder chain (Table 1's serial
 //!   baseline, unchanged since PR 4).
 //!
@@ -15,6 +17,7 @@
 //!   cargo bench --bench bptt_native -- --max-n 256 --t 64
 //!   cargo bench --bench bptt_native -- --smoke --json BENCH_5.json
 
+use cwy::linalg::gemm::{self, KernelKind};
 use cwy::linalg::Matrix;
 use cwy::orthogonal::backward::{cwy_rollout_backward, hr_rollout_backward, reference};
 use cwy::report::{BenchJson, Table};
@@ -45,7 +48,11 @@ fn main() {
         }
     };
 
-    println!("# bptt_native: BPTT through h_{{t+1}} = h_t Q(V) + x_t, T={t}, B={b}\n");
+    println!(
+        "# bptt_native: BPTT through h_{{t+1}} = h_t Q(V) + x_t, T={t}, B={b}; \
+         dispatched microkernel: {}\n",
+        gemm::active_kernel().name()
+    );
     let mut json = BenchJson::new("bptt_native");
     let mut table = Table::new(&[
         "N",
@@ -69,21 +76,33 @@ fn main() {
             .collect();
 
         // Parity first: a bench that measures different gradients is
-        // noise.  Fused vs PR-4 must agree bitwise (shared accumulation
-        // order); fused vs HR within f32 headroom for two genuinely
-        // different algorithms.
+        // noise.  Under the portable kernel fused vs PR-4 must agree
+        // bitwise (shared accumulation order); under avx2+fma the fused
+        // gemms group the reduction differently, so parity is f32-scaled.
+        // Fused vs HR is always tolerance-based (genuinely different
+        // algorithms).
         let (_, dv_fused) = cwy_rollout_backward(&v, &h0, &xs, &gs);
         let (_, dv_pr4) = reference::cwy_rollout_backward(&v, &h0, &xs, &gs);
-        assert!(
-            dv_fused
-                .data
-                .iter()
-                .zip(&dv_pr4.data)
-                .all(|(a, b)| a.to_bits() == b.to_bits()),
-            "N={n} L={l}: fused BPTT drifted from the PR-4 reference \
-             (max |diff| {})",
-            dv_fused.max_abs_diff(&dv_pr4)
-        );
+        if gemm::active_kernel() == KernelKind::Portable {
+            assert!(
+                dv_fused
+                    .data
+                    .iter()
+                    .zip(&dv_pr4.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "N={n} L={l}: fused BPTT drifted from the PR-4 reference \
+                 (max |diff| {})",
+                dv_fused.max_abs_diff(&dv_pr4)
+            );
+        } else {
+            let scale = dv_pr4.data.iter().fold(1.0f32, |m, x| m.max(x.abs()));
+            let d = dv_fused.max_abs_diff(&dv_pr4);
+            assert!(
+                d <= 3e-4 * scale,
+                "N={n} L={l}: simd fused BPTT diverged from the PR-4 \
+                 reference by {d} (scale {scale})"
+            );
+        }
         let (_, dv_hr) = hr_rollout_backward(&v, &h0, &xs, &gs);
         let scale = dv_hr.data.iter().fold(1.0f32, |m, x| m.max(x.abs()));
         let diff = dv_fused.max_abs_diff(&dv_hr);

@@ -14,7 +14,7 @@
 //! from rotting); `--json PATH` merges median ns/op per kernel into the
 //! perf-trajectory file (`report::BenchJson`).
 
-use cwy::linalg::gemm::{self, legacy, matmul_blocked, matmul_naive};
+use cwy::linalg::gemm::{self, legacy, matmul_blocked, matmul_naive, KernelKind};
 use cwy::linalg::Matrix;
 use cwy::report::{BenchJson, Table};
 use cwy::telemetry::span_delta;
@@ -27,7 +27,12 @@ fn main() {
     let smoke = args.has_flag("smoke");
     let max_n = args.get_usize("max-n", 512);
     let sizes: Vec<usize> = if smoke {
-        vec![args.get_usize("n", 128)]
+        // Both SIMD-acceptance sizes by default (the bench-check ratio
+        // gate reads n=128 and n=256); `--n` narrows to one size.
+        match args.get("n") {
+            Some(n) => vec![n.parse().expect("--n")],
+            None => vec![128, 256],
+        }
     } else {
         [64usize, 128, 192, 256, 384, 512, 768, 1024]
             .into_iter()
@@ -46,7 +51,11 @@ fn main() {
 
     let mut json = BenchJson::new("gemm_native");
     let mut table = Table::new(&["N", "kernel", "median ms", "vs naive"]);
-    println!("# gemm_native: f32 GEMM kernels (NN square + NT/TN transpose-aware)\n");
+    println!(
+        "# gemm_native: f32 GEMM kernels (NN square + NT/TN transpose-aware); \
+         dispatched microkernel: {}\n",
+        gemm::active_kernel().name()
+    );
     for &n in &sizes {
         let mut rng = Pcg32::seeded(n as u64);
         let a = Matrix::random_normal(&mut rng, n, n, 1.0);
@@ -67,6 +76,23 @@ fn main() {
         });
         let s_nn = timed("gemm_nn", 0.2, &mut || {
             std::hint::black_box(matmul_blocked(&a, &b));
+        });
+        // The portable strip kernel, pinned regardless of what the host
+        // dispatches — the trajectory file then carries both points, so
+        // the SIMD delta is measured on one machine, not across CI hosts.
+        let mut portable_out = Matrix::zeros(n, n);
+        let s_portable = timed("portable_nn", 0.2, &mut || {
+            gemm::gemm_with(
+                KernelKind::Portable,
+                false,
+                false,
+                1.0,
+                &a,
+                &b,
+                0.0,
+                &mut portable_out,
+            );
+            std::hint::black_box(&portable_out);
         });
 
         // Transpose-aware paths vs the PR-4 materialize-then-multiply
@@ -97,10 +123,11 @@ fn main() {
             std::hint::black_box(&acc);
         });
 
-        let rows: [(&str, &BenchStats); 8] = [
+        let rows: [(&str, &BenchStats); 9] = [
             ("naive", &s_naive),
             ("legacy (PR-4)", &s_legacy),
             ("gemm NN", &s_nn),
+            ("portable NN", &s_portable),
             ("gemm TN", &s_tn),
             ("materialized TN", &s_tn_mat),
             ("gemm NT", &s_nt),
@@ -134,6 +161,7 @@ fn main() {
         );
 
         json.push(&format!("gemm_nn_n{n}"), s_nn.median_ns());
+        json.push(&format!("portable_nn_n{n}"), s_portable.median_ns());
         json.push(&format!("gemm_tn_n{n}"), s_tn.median_ns());
         json.push(&format!("gemm_nt_n{n}"), s_nt.median_ns());
         json.push(&format!("gemm_nn_beta1_n{n}"), s_fused.median_ns());

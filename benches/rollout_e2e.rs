@@ -14,7 +14,7 @@
 //!   cargo bench --bench rollout_e2e                  # default sweep
 //!   cargo bench --bench rollout_e2e -- --smoke --json BENCH_5.json
 
-use cwy::linalg::Matrix;
+use cwy::linalg::{set_thread_cap, Matrix};
 use cwy::report::{BenchJson, Table};
 use cwy::runtime::native::ops_rnn::{
     forward_backward_ws, CopyBatchRef, CopyRnnParams, RolloutWorkspace, IN_VOCAB, OUT_CLASSES,
@@ -140,6 +140,35 @@ fn main() {
         json.push(&format!("train_step_l{l}_n{n}_b{b}_t{t}"), s_ws.median_ns());
         json.push(&format!("train_step_fresh_l{l}_n{n}_b{b}_t{t}"), s_fresh.median_ns());
         json.push(&format!("eval_forward_l{l}_n{n}_b{b}_t{t}"), s_eval.median_ns());
+
+        // Thread-scaling rows: the same workspace step with the gemm
+        // band-parallelism capped at 1/2/4 threads.  Band partitioning
+        // never changes per-element arithmetic, so these rows measure
+        // scaling only; small shapes sit under the parallel cutoff and
+        // legitimately report flat numbers.
+        for cap in [1usize, 2, 4] {
+            set_thread_cap(cap);
+            let s_cap = timed(&format!("train_step_threads{cap}"), &mut || {
+                let data = CopyBatchRef {
+                    tokens: &s.tokens,
+                    targets: &s.targets,
+                    batch: s.batch,
+                    t_total: s.t_total,
+                };
+                forward_backward_ws(CellKind::Cwy, &s.params, &data, true, &mut rws).unwrap();
+                s.params.sgd_step(rws.grads(), 1e-3);
+                std::hint::black_box(&s.params);
+            });
+            println!(
+                "L={l:<3} N={n:<4} B={b:<3} T={t:<3} step {:>9.3} ms @ {cap} thread(s)",
+                s_cap.median_ms()
+            );
+            json.push(
+                &format!("train_step_l{l}_n{n}_b{b}_t{t}_threads{cap}"),
+                s_cap.median_ns(),
+            );
+        }
+        set_thread_cap(0); // back to the hardware default for the sidecars
 
         // Telemetry sidecar: span attribution of one representative
         // step/eval (rollout_forward + bptt_backward + sgd_step, with the

@@ -32,29 +32,144 @@
 //!   `C.add(&product.scale(α))`, so fused accumulation can replace the
 //!   allocating `add`/`sub` chains with no numeric drift at all.
 //!
-//! The microkernel is 4×-row-blocked: four output rows share each
-//! streamed `op(B)` row, and the four accumulator rows are independent
-//! serial chains, so the inner loop vectorizes over columns (SIMD) and
-//! keeps four FMA chains in flight (ILP) without touching the per-element
-//! accumulation order.
+//! # Kernel dispatch (portable vs AVX2+FMA)
+//!
+//! The microkernel exists in two forms behind a one-time runtime dispatch
+//! ([`active_kernel`]):
+//!
+//! * [`KernelKind::Portable`] — the scalar strip kernel above, kept
+//!   bit-for-bit.  Its inner loop runs independent per-column accumulator
+//!   chains, so LLVM may autovectorize it *without* changing any rounding
+//!   (reassociation and FMA contraction are never licensed), and every
+//!   bitwise guarantee in this module continues to hold.
+//! * [`KernelKind::Avx2Fma`] — an explicit `std::arch` register-tiled
+//!   kernel: an `MR x NR` = 4x16 tile held in eight 8-lane FMA
+//!   accumulators, fed by lane-contiguous packed-B panels with software
+//!   prefetch on the streaming panel.  Each `C` element is STILL one
+//!   ascending-`k` chain (a fixed lane of a fixed accumulator register),
+//!   so transpose variants and fused-beta forms remain bitwise-consistent
+//!   *within* this kernel; but FMA's single rounding per multiply-add and
+//!   the dropped `a_ik == 0.0` skip mean its results drift from the
+//!   portable kernel by O(k·eps).  Cross-kernel assertions are therefore
+//!   tolerance-based (DESIGN.md §3.3), while portable-vs-oracle stays
+//!   bitwise.
+//!
+//! Dispatch is decided once per process — `CWY_PORTABLE_KERNEL=1` forces
+//! the fallback, non-x86_64 builds always take it — and published to the
+//! telemetry registry as the `kernel_dispatch` gauge so `cwy client
+//! --stats` and trace exports show which kernel actually ran.
+//! [`gemm_with`] pins a kernel explicitly; the parity property tests use
+//! it to exercise both paths in one process on one host.
 //!
 //! The frozen PR-4 kernel lives in [`legacy`] as the measurement baseline
-//! for `benches/bptt_native` / `BENCH_5.json` and as a bitwise parity
-//! oracle for the packed paths.
+//! for `benches/bptt_native` / the BENCH trajectory files and as a
+//! bitwise parity oracle for the packed portable path.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use crate::linalg::Matrix;
 
-/// Output-column strip width: one scratch strip (4 rows x TILE_J) plus
-/// the streamed `op(B)` row segment stay L1-resident.
+/// Output-column strip width of the portable kernel: one scratch strip
+/// (4 rows x TILE_J) plus the streamed `op(B)` row segment stay
+/// L1-resident.
 pub const TILE_J: usize = 128;
 /// Microkernel height: output rows per block, each an independent
-/// accumulator chain.
+/// accumulator chain.  Shared by the portable strip and the SIMD register
+/// tile.
 pub const MR: usize = 4;
+/// SIMD register-tile width: two 8-lane AVX2 accumulators per row.
+pub const NR: usize = 16;
+/// f32 lanes per AVX2 vector.
+pub const LANES: usize = 8;
 /// Multiply-add count below which thread spawn overhead dominates and
 /// the single-threaded kernel wins.
 pub const PARALLEL_FLOP_CUTOFF: usize = 1 << 18;
+
+/// Which microkernel a [`gemm_with`] call runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Scalar strip kernel with the bitwise-stable accumulation order.
+    Portable,
+    /// Explicit AVX2+FMA register tile.  Requesting it on a host without
+    /// avx2+fma (or on a non-x86_64 build) silently falls back to
+    /// [`KernelKind::Portable`] instead of faulting.
+    Avx2Fma,
+}
+
+impl KernelKind {
+    /// Label used by the telemetry `kernel_dispatch` gauge and the bench
+    /// trajectory files.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Portable => "portable",
+            KernelKind::Avx2Fma => "avx2fma",
+        }
+    }
+}
+
+/// Host support for the AVX2+FMA kernel, independent of the dispatch
+/// override — so `gemm_with(Avx2Fma, ..)` can honor an explicit request
+/// even when `CWY_PORTABLE_KERNEL` pinned the *default* to portable.
+#[cfg(target_arch = "x86_64")]
+fn simd_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn simd_supported() -> bool {
+    false
+}
+
+/// The process-wide kernel choice: detected once, published to the
+/// telemetry `kernel_dispatch` gauge, then immutable.
+///
+/// `CWY_PORTABLE_KERNEL` set to anything but `0`/empty forces the
+/// portable fallback — CI uses it to exercise that path on AVX2 hosts.
+pub fn active_kernel() -> KernelKind {
+    static ACTIVE: OnceLock<KernelKind> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let forced_portable = std::env::var("CWY_PORTABLE_KERNEL")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        let kind = if !forced_portable && simd_supported() {
+            KernelKind::Avx2Fma
+        } else {
+            KernelKind::Portable
+        };
+        crate::telemetry::global().set_kernel_dispatch(match kind {
+            KernelKind::Portable => crate::telemetry::KERNEL_PORTABLE,
+            KernelKind::Avx2Fma => crate::telemetry::KERNEL_AVX2FMA,
+        });
+        kind
+    })
+}
+
+/// Runtime cap on gemm worker threads (0 = use available parallelism).
+/// Overrides `CWY_GEMM_THREADS`; `benches/rollout_e2e` uses it for the
+/// committed 1/2/4-thread scaling rows.  Band partitioning never changes
+/// per-element arithmetic, so results are identical at any cap.
+pub fn set_thread_cap(cap: usize) {
+    THREAD_CAP.store(cap, Ordering::Relaxed);
+}
+
+static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
+
+fn hardware_threads() -> usize {
+    let cap = THREAD_CAP.load(Ordering::Relaxed);
+    if cap > 0 {
+        return cap;
+    }
+    static ENV_CAP: OnceLock<usize> = OnceLock::new();
+    let env_cap = *ENV_CAP.get_or_init(|| {
+        std::env::var("CWY_GEMM_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+    });
+    if env_cap > 0 {
+        return env_cap;
+    }
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
 
 /// Reference kernel: straightforward (i, k, j) loop, inner loop
 /// contiguous in both `b` and `out` rows.  Kept allocating and simple —
@@ -79,15 +194,11 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     out
 }
 
-fn hardware_threads() -> usize {
-    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
-}
-
 /// GEMMs currently executing on this process.  Concurrent callers (e.g.
 /// serve worker threads each running a fused batch) split the hardware
 /// thread budget instead of each spawning `available_parallelism()`
 /// threads and oversubscribing the CPU.
-static ACTIVE_GEMMS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+static ACTIVE_GEMMS: AtomicUsize = AtomicUsize::new(0);
 
 /// RAII registration in [`ACTIVE_GEMMS`] (panic-safe decrement).
 struct GemmSlot {
@@ -96,7 +207,6 @@ struct GemmSlot {
 
 impl GemmSlot {
     fn acquire() -> GemmSlot {
-        use std::sync::atomic::Ordering;
         let active = ACTIVE_GEMMS.fetch_add(1, Ordering::Relaxed) + 1;
         GemmSlot { budget: (hardware_threads() / active).max(1) }
     }
@@ -104,7 +214,7 @@ impl GemmSlot {
 
 impl Drop for GemmSlot {
     fn drop(&mut self) {
-        ACTIVE_GEMMS.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        ACTIVE_GEMMS.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -115,6 +225,10 @@ thread_local! {
     /// largest transposed operand the workload touches.
     static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
     static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Lane-contiguous `op(B)` panels for the SIMD kernel — same reuse
+    /// discipline as the transpose packs, so the SIMD path adds no
+    /// steady-state allocations (tests/alloc_discipline.rs).
+    static PACK_PANELS: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Pack `src` (r x c, row-major) transposed into `dst` (c x r, row-major),
@@ -132,7 +246,7 @@ fn pack_transposed(src: &Matrix, dst: &mut Vec<f32>) {
     }
 }
 
-/// The microkernel over one band of output rows (`i0..i0 + rows`).
+/// The portable microkernel over one band of output rows (`i0..i0 + rows`).
 ///
 /// `x` is `op(A)` row-major (m x k), `bp` is `op(B)` row-major (k x n);
 /// `cband` holds rows `i0..` of `C`.  Each element's sum is accumulated
@@ -226,6 +340,11 @@ fn band_kernel(
 /// `c = beta * c + alpha * s`, one rounding per term so the fused form
 /// matches `c.scale(beta).add(&product.scale(alpha))` bitwise.  `beta == 0`
 /// never reads `c` (the buffer may hold stale workspace contents).
+///
+/// Deliberately scalar and shared by both microkernels: Rust never
+/// licenses FP contraction, so this compiles to plain mul/add even when
+/// inlined into the FMA kernel, and the fused-beta bitwise guarantees
+/// hold per-kernel.
 #[inline]
 fn combine(crow: &mut [f32], srow: &[f32], alpha: f32, beta: f32) {
     if beta == 0.0 {
@@ -243,8 +362,172 @@ fn combine(crow: &mut [f32], srow: &[f32], alpha: f32, beta: f32) {
     }
 }
 
+/// Explicit AVX2+FMA microkernel (x86_64 only) — see the module docs for
+/// the register-tile shape and the numeric contract it keeps vs. trades.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{combine, LANES, MR, NR};
+    use core::arch::x86_64::*;
+
+    /// Distance (in k-steps) the streaming-panel prefetch runs ahead of
+    /// the FMA loop: 16 steps x 16 lanes x 4 B = two panel cache lines in
+    /// flight — enough to cover L2 latency without thrashing L1.
+    const PREFETCH_K: usize = 16;
+
+    /// Pack `op(B)` (row-major `kdim x n`) into lane-contiguous panels:
+    /// `dst[p*kdim*NR + kk*NR + lane] = b[kk*n + p*NR + lane]`, with the
+    /// rightmost panel zero-padded so the microkernel always loads two
+    /// full vectors per k-step.
+    pub fn pack_panels(b: &[f32], kdim: usize, n: usize, dst: &mut Vec<f32>) {
+        let panels = n.div_ceil(NR);
+        dst.clear();
+        dst.resize(panels * kdim * NR, 0.0);
+        for p in 0..panels {
+            let jb = p * NR;
+            let jw = NR.min(n - jb);
+            let base = p * kdim * NR;
+            for kk in 0..kdim {
+                dst[base + kk * NR..base + kk * NR + jw]
+                    .copy_from_slice(&b[kk * n + jb..kk * n + jb + jw]);
+            }
+        }
+    }
+
+    /// Spill one row's accumulator pair to `stash` (lane order = column
+    /// order within the panel).
+    #[inline]
+    unsafe fn spill(stash: &mut [f32; NR], lo: __m256, hi: __m256) {
+        _mm256_storeu_ps(stash.as_mut_ptr(), lo);
+        _mm256_storeu_ps(stash.as_mut_ptr().add(LANES), hi);
+    }
+
+    /// AVX2+FMA band kernel over output rows `i0..i0+rows` of `C`.
+    ///
+    /// `x` is `op(A)` row-major (full matrix, m x kdim); `panels` is the
+    /// [`pack_panels`] layout of `op(B)`; `cband` holds rows `i0..` of
+    /// `C`.  Each `C` element is one lane of one accumulator register —
+    /// a single ascending-`k` FMA chain, combined once via [`combine`] —
+    /// the same per-element shape as the portable kernel up to FMA
+    /// rounding and the dropped zero-skip.
+    ///
+    /// # Safety
+    /// The host must support avx2 and fma (checked by the dispatcher).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn band_kernel(
+        x: &[f32],
+        kdim: usize,
+        n: usize,
+        i0: usize,
+        alpha: f32,
+        beta: f32,
+        panels: &[f32],
+        cband: &mut [f32],
+    ) {
+        if n == 0 {
+            return;
+        }
+        let rows = cband.len() / n;
+        let mut stash = [0.0f32; NR];
+        for p in 0..n.div_ceil(NR) {
+            let jb = p * NR;
+            let jw = NR.min(n - jb);
+            let pbase = panels.as_ptr().add(p * kdim * NR);
+            let mut i = 0;
+            // 4x16 register tile: eight live accumulators, two panel
+            // loads and four broadcasts feeding eight FMAs per k-step.
+            while i + MR <= rows {
+                let x0 = x.as_ptr().add((i0 + i) * kdim);
+                let x1 = x0.add(kdim);
+                let x2 = x1.add(kdim);
+                let x3 = x2.add(kdim);
+                let mut c00 = _mm256_setzero_ps();
+                let mut c01 = _mm256_setzero_ps();
+                let mut c10 = _mm256_setzero_ps();
+                let mut c11 = _mm256_setzero_ps();
+                let mut c20 = _mm256_setzero_ps();
+                let mut c21 = _mm256_setzero_ps();
+                let mut c30 = _mm256_setzero_ps();
+                let mut c31 = _mm256_setzero_ps();
+                for kk in 0..kdim {
+                    let bptr = pbase.add(kk * NR);
+                    // wrapping_add: running past the panel end is fine
+                    // for a prefetch but must not be `add` UB.
+                    _mm_prefetch::<_MM_HINT_T0>(bptr.wrapping_add(PREFETCH_K * NR) as *const i8);
+                    let b0 = _mm256_loadu_ps(bptr);
+                    let b1 = _mm256_loadu_ps(bptr.add(LANES));
+                    let a0 = _mm256_set1_ps(*x0.add(kk));
+                    c00 = _mm256_fmadd_ps(a0, b0, c00);
+                    c01 = _mm256_fmadd_ps(a0, b1, c01);
+                    let a1 = _mm256_set1_ps(*x1.add(kk));
+                    c10 = _mm256_fmadd_ps(a1, b0, c10);
+                    c11 = _mm256_fmadd_ps(a1, b1, c11);
+                    let a2 = _mm256_set1_ps(*x2.add(kk));
+                    c20 = _mm256_fmadd_ps(a2, b0, c20);
+                    c21 = _mm256_fmadd_ps(a2, b1, c21);
+                    let a3 = _mm256_set1_ps(*x3.add(kk));
+                    c30 = _mm256_fmadd_ps(a3, b0, c30);
+                    c31 = _mm256_fmadd_ps(a3, b1, c31);
+                }
+                for (r, (lo, hi)) in
+                    [(c00, c01), (c10, c11), (c20, c21), (c30, c31)].into_iter().enumerate()
+                {
+                    spill(&mut stash, lo, hi);
+                    let crow = &mut cband[(i + r) * n + jb..(i + r) * n + jb + jw];
+                    combine(crow, &stash[..jw], alpha, beta);
+                }
+                i += MR;
+            }
+            // Row tail: one 1x16 tile per remaining row.
+            while i < rows {
+                let xr = x.as_ptr().add((i0 + i) * kdim);
+                let mut lo = _mm256_setzero_ps();
+                let mut hi = _mm256_setzero_ps();
+                for kk in 0..kdim {
+                    let bptr = pbase.add(kk * NR);
+                    let a = _mm256_set1_ps(*xr.add(kk));
+                    lo = _mm256_fmadd_ps(a, _mm256_loadu_ps(bptr), lo);
+                    hi = _mm256_fmadd_ps(a, _mm256_loadu_ps(bptr.add(LANES)), hi);
+                }
+                spill(&mut stash, lo, hi);
+                let crow = &mut cband[i * n + jb..i * n + jb + jw];
+                combine(crow, &stash[..jw], alpha, beta);
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Split `c` into row bands and run `kernel` on each — single-threaded
+/// below [`PARALLEL_FLOP_CUTOFF`] multiply-adds, scoped threads above,
+/// with the thread budget shared across concurrent gemms and capped by
+/// [`set_thread_cap`] / `CWY_GEMM_THREADS`.
+fn for_each_band<F>(m: usize, k: usize, n: usize, c: &mut [f32], kernel: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if m * k * n < PARALLEL_FLOP_CUTOFF {
+        kernel(0, c);
+        return;
+    }
+    let slot = GemmSlot::acquire();
+    let threads = slot.budget.min(m);
+    if threads <= 1 {
+        kernel(0, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (band_idx, out_band) in c.chunks_mut(rows_per * n).enumerate() {
+            let kernel = &kernel;
+            s.spawn(move || kernel(band_idx * rows_per, out_band));
+        }
+    });
+}
+
 /// General matrix multiply-accumulate: `c = beta*c + alpha*op(a)@op(b)`,
-/// with `op` selected per operand by `trans_a` / `trans_b`.
+/// with `op` selected per operand by `trans_a` / `trans_b`, on the
+/// microkernel chosen by [`active_kernel`].
 ///
 /// * No allocation of the output — `c` must be preshaped to
 ///   `(op(a).rows, op(b).cols)` (asserted).
@@ -264,11 +547,34 @@ pub fn gemm(
     beta: f32,
     c: &mut Matrix,
 ) {
+    gemm_with(active_kernel(), trans_a, trans_b, alpha, a, b, beta, c)
+}
+
+/// [`gemm`] with the microkernel pinned explicitly — the kernel-parity
+/// property tests use this to exercise both dispatch paths in one
+/// process.  An `Avx2Fma` request on a host without avx2+fma falls back
+/// to the portable kernel rather than faulting.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    kind: KernelKind,
+    trans_a: bool,
+    trans_b: bool,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &mut Matrix,
+) {
     let (m, ka) = if trans_a { (a.cols, a.rows) } else { (a.rows, a.cols) };
     let (kb, n) = if trans_b { (b.cols, b.rows) } else { (b.rows, b.cols) };
     assert_eq!(ka, kb, "gemm reduction-dim mismatch");
     assert_eq!((c.rows, c.cols), (m, n), "gemm output shape mismatch");
     let k = ka;
+    let kind = if kind == KernelKind::Avx2Fma && !simd_supported() {
+        KernelKind::Portable
+    } else {
+        kind
+    };
     // Per-variant telemetry: ~two clock reads and three relaxed atomic
     // adds per call — no lock, no allocation (alloc_discipline covers
     // this path with recording live).
@@ -307,24 +613,22 @@ pub fn gemm(
             }
             let x: &[f32] = if trans_a { &pa } else { &a.data };
             let bp: &[f32] = if trans_b { &pb } else { &b.data };
-            if m * k * n < PARALLEL_FLOP_CUTOFF {
-                band_kernel(x, k, n, 0, alpha, beta, bp, &mut c.data);
-                return;
-            }
-            let slot = GemmSlot::acquire();
-            let threads = slot.budget.min(m);
-            if threads <= 1 {
-                band_kernel(x, k, n, 0, alpha, beta, bp, &mut c.data);
-                return;
-            }
-            let rows_per = m.div_ceil(threads);
-            std::thread::scope(|s| {
-                for (band_idx, out_band) in c.data.chunks_mut(rows_per * n).enumerate() {
-                    s.spawn(move || {
-                        band_kernel(x, k, n, band_idx * rows_per, alpha, beta, bp, out_band);
+            match kind {
+                #[cfg(target_arch = "x86_64")]
+                KernelKind::Avx2Fma => PACK_PANELS.with(|pp| {
+                    let mut pp = pp.borrow_mut();
+                    avx2::pack_panels(bp, k, n, &mut pp);
+                    let panels: &[f32] = &pp;
+                    for_each_band(m, k, n, &mut c.data, |i0, band| {
+                        // SAFETY: the `kind` fold above established
+                        // avx2+fma support via `simd_supported`.
+                        unsafe { avx2::band_kernel(x, k, n, i0, alpha, beta, panels, band) }
                     });
-                }
-            });
+                }),
+                _ => for_each_band(m, k, n, &mut c.data, |i0, band| {
+                    band_kernel(x, k, n, i0, alpha, beta, bp, band)
+                }),
+            }
         })
     });
 }
@@ -339,15 +643,19 @@ pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// The frozen PR-4 GEMM: blocked/cache-tiled band kernel with per-call
 /// output allocation and no transpose awareness.  Kept verbatim as (a)
-/// the baseline `benches/bptt_native` and `BENCH_5.json` measure the
+/// the baseline `benches/bptt_native` / `benches/gemm_native` measure the
 /// substrate against, and (b) a bitwise parity oracle — it shares the
-/// ascending-`k` accumulation order and zero-skip with [`gemm`], so the
-/// two must agree to the last bit.
+/// ascending-`k` accumulation order and zero-skip with the portable
+/// [`gemm`] kernel, so those two must agree to the last bit (the SIMD
+/// kernel is held to f32-scaled tolerances instead; module docs).
 pub mod legacy {
     use super::Matrix;
 
     const TILE_K: usize = 64;
-    const TILE_J: usize = 256;
+    /// Frozen PR-4 column-strip width.  Named distinctly from the live
+    /// kernel's `gemm::TILE_J = 128` — it used to shadow it as `TILE_J`,
+    /// which had already confused the bench tile-sweep comments.
+    const LEGACY_TILE_J: usize = 256;
 
     fn band_kernel(a: &[f32], k: usize, n: usize, i0: usize, out_band: &mut [f32], b: &[f32]) {
         if n == 0 {
@@ -359,7 +667,7 @@ pub mod legacy {
             let kend = (kb + TILE_K).min(k);
             let mut jb = 0;
             while jb < n {
-                let jend = (jb + TILE_J).min(n);
+                let jend = (jb + LEGACY_TILE_J).min(n);
                 for i in 0..rows {
                     let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
                     let orow = &mut out_band[i * n + jb..i * n + jend];
@@ -429,6 +737,17 @@ mod tests {
         }
     }
 
+    /// `op(a) @ op(b)` on an explicitly pinned kernel.
+    fn mm_with(kind: KernelKind, ta: bool, tb: bool, a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, n) = (
+            if ta { a.cols } else { a.rows },
+            if tb { b.rows } else { b.cols },
+        );
+        let mut c = Matrix::zeros(m, n);
+        gemm_with(kind, ta, tb, 1.0, a, b, 0.0, &mut c);
+        c
+    }
+
     /// Random shapes spanning the edge cases the satellite demands:
     /// L = 1 / B = 1 rows, dims straddling the strip width and the
     /// microkernel height.
@@ -443,7 +762,7 @@ mod tests {
     }
 
     #[test]
-    fn nn_matches_naive_on_ragged_shapes() {
+    fn portable_nn_bitwise_matches_naive_on_ragged_shapes() {
         forall(
             24,
             |rng| {
@@ -453,13 +772,64 @@ mod tests {
                 (a, b)
             },
             |(a, b)| {
-                let fast = matmul_blocked(a, b);
+                let fast = mm_with(KernelKind::Portable, false, false, a, b);
                 let slow = matmul_naive(a, b);
                 // The accumulation-order contract makes this exact, not
                 // approximate — assert the stronger property.
-                assert_bitwise(&fast, &slow, "NN vs naive")
+                assert_bitwise(&fast, &slow, "portable NN vs naive")
             },
         );
+    }
+
+    #[test]
+    fn simd_nn_matches_naive_within_tolerance_on_ragged_shapes() {
+        // FMA rounds once per multiply-add and skips no zeros, so the
+        // SIMD kernel is held to an f32-scaled tolerance, not bits
+        // (module docs).  On hosts without avx2+fma this exercises the
+        // explicit-fallback path of `gemm_with` instead.
+        forall(
+            24,
+            |rng| {
+                let (m, k, n) = ragged_dims(rng);
+                let a = Matrix::random_normal(rng, m, k, 1.0);
+                let b = Matrix::random_normal(rng, k, n, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let fast = mm_with(KernelKind::Avx2Fma, false, false, a, b);
+                let slow = matmul_naive(a, b);
+                assert_close(&fast.data, &slow.data, 1e-4)
+            },
+        );
+    }
+
+    /// ISSUE 7 satellite: sweep every microkernel tail regime — rows
+    /// around MR, columns around the lane width / register tile / strip
+    /// width, k ∈ {0, 1, odd, pow2, pow2+1} — against the naive oracle on
+    /// BOTH dispatch paths (portable bitwise, SIMD within tolerance).
+    #[test]
+    fn microkernel_tail_sweep_on_both_dispatch_paths() {
+        let row_cases = [MR - 1, MR, MR + 1];
+        let col_cases =
+            [LANES - 1, LANES, LANES + 1, NR - 1, NR, NR + 1, TILE_J - 1, TILE_J + 1];
+        let k_cases = [0usize, 1, 63, 64, 65];
+        let mut rng = Pcg32::seeded(0x51AD);
+        for &m in &row_cases {
+            for &n in &col_cases {
+                for &k in &k_cases {
+                    let a = Matrix::random_normal(&mut rng, m, k, 1.0);
+                    let b = Matrix::random_normal(&mut rng, k, n, 1.0);
+                    let oracle = matmul_naive(&a, &b);
+                    let portable = mm_with(KernelKind::Portable, false, false, &a, &b);
+                    assert_bitwise(&portable, &oracle, &format!("portable m={m} n={n} k={k}"))
+                        .unwrap();
+                    let simd = mm_with(KernelKind::Avx2Fma, false, false, &a, &b);
+                    assert_close(&simd.data, &oracle.data, 1e-5)
+                        .map_err(|e| format!("simd m={m} n={n} k={k}: {e}"))
+                        .unwrap();
+                }
+            }
+        }
     }
 
     #[test]
@@ -483,6 +853,8 @@ mod tests {
 
     /// NT / TN / TT bit-match materializing the transpose(s) and running
     /// the allocating NN path — packing reorders memory, not arithmetic.
+    /// Both sides route through the dispatched kernel, so this holds on
+    /// portable AND SIMD (each kernel is self-consistent across variants).
     #[test]
     fn transpose_variants_bitwise_match_materialized() {
         forall(
@@ -508,8 +880,31 @@ mod tests {
         );
     }
 
+    /// The same within-kernel consistency, pinned to the SIMD path
+    /// explicitly so it is exercised even when dispatch picks portable.
+    #[test]
+    fn simd_transpose_variants_bitwise_match_materialized() {
+        forall(
+            12,
+            |rng| {
+                let (m, k, n) = ragged_dims(rng);
+                let a = Matrix::random_normal(rng, k, m, 1.0); // A^T layout
+                let b = Matrix::random_normal(rng, n, k, 1.0); // B^T layout
+                (a, b, m, n)
+            },
+            |(a, b, m, n)| {
+                let mut c = Matrix::zeros(*m, *n);
+                gemm_with(KernelKind::Avx2Fma, true, true, 1.0, a, b, 0.0, &mut c);
+                let reference = mm_with(KernelKind::Avx2Fma, false, false, &a.t(), &b.t());
+                assert_bitwise(&c, &reference, "simd TT vs materialized")
+            },
+        );
+    }
+
     /// Fused accumulation (`beta = 1`) and scaling (`alpha`) bit-match the
-    /// allocating `add`/`scale` composition they replace in the BPTT.
+    /// allocating `add`/`scale` composition they replace in the BPTT —
+    /// per kernel: `combine` is shared and scalar, so this holds on both
+    /// dispatch paths (both sides here run the same dispatched kernel).
     #[test]
     fn fused_accumulate_bitwise_matches_add_of_product() {
         forall(
@@ -538,10 +933,13 @@ mod tests {
         let mut rng = Pcg32::seeded(9);
         let a = Matrix::random_normal(&mut rng, 5, 7, 1.0);
         let b = Matrix::random_normal(&mut rng, 7, 3, 1.0);
-        let mut c = Matrix::zeros(5, 3);
-        c.data.fill(f32::NAN);
-        gemm(false, false, 1.0, &a, &b, 0.0, &mut c);
-        assert_bitwise(&c, &a.matmul(&b), "beta=0 with NaN-poisoned c").unwrap();
+        for kind in [KernelKind::Portable, KernelKind::Avx2Fma] {
+            let mut c = Matrix::zeros(5, 3);
+            c.data.fill(f32::NAN);
+            gemm_with(kind, false, false, 1.0, &a, &b, 0.0, &mut c);
+            let reference = mm_with(kind, false, false, &a, &b);
+            assert_bitwise(&c, &reference, "beta=0 with NaN-poisoned c").unwrap();
+        }
     }
 
     /// alpha = 0 / k = 0 reduce to the pure beta term.
@@ -564,12 +962,13 @@ mod tests {
         assert_bitwise(&c, &c0.scale(2.0), "alpha=0 scales by beta").unwrap();
     }
 
-    /// The frozen PR-4 kernel shares the accumulation contract, so old
-    /// and new paths agree to the last bit — the property that lets
-    /// `benches/bptt_native` attribute its speedup to structure, not to
-    /// numerics drift.
+    /// The frozen PR-4 kernel shares the accumulation contract with the
+    /// PORTABLE kernel, so the old and new scalar paths agree to the last
+    /// bit — the property that lets `benches/bptt_native` attribute its
+    /// speedup to structure, not numerics drift.  (The SIMD kernel is
+    /// compared by tolerance instead — see the sweep test.)
     #[test]
-    fn legacy_kernel_bitwise_matches_gemm() {
+    fn legacy_kernel_bitwise_matches_portable_gemm() {
         forall(
             16,
             |rng| {
@@ -578,7 +977,10 @@ mod tests {
                 let b = Matrix::random_normal(rng, k, n, 1.0);
                 (a, b)
             },
-            |(a, b)| assert_bitwise(&legacy::matmul(a, b), &a.matmul(b), "legacy vs gemm"),
+            |(a, b)| {
+                let portable = mm_with(KernelKind::Portable, false, false, a, b);
+                assert_bitwise(&legacy::matmul(a, b), &portable, "legacy vs portable gemm")
+            },
         );
     }
 
@@ -601,5 +1003,37 @@ mod tests {
         let c = matmul_blocked(&a, &b);
         assert_eq!((c.rows, c.cols), (3, 4));
         assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    /// Band partitioning never changes per-element arithmetic, so any
+    /// thread cap — including 1 — reproduces the uncapped result exactly.
+    #[test]
+    fn thread_cap_changes_parallelism_not_results() {
+        let mut rng = Pcg32::seeded(11);
+        // Above the cutoff so the cap is actually consulted.
+        let a = Matrix::random_normal(&mut rng, 96, 80, 1.0);
+        let b = Matrix::random_normal(&mut rng, 80, 96, 1.0);
+        let uncapped = matmul_blocked(&a, &b);
+        for cap in [1usize, 2, 4] {
+            set_thread_cap(cap);
+            let capped = matmul_blocked(&a, &b);
+            set_thread_cap(0);
+            assert_bitwise(&capped, &uncapped, &format!("thread cap {cap}")).unwrap();
+        }
+    }
+
+    /// The one-time dispatch is cached and published to the telemetry
+    /// `kernel_dispatch` gauge with a matching label.
+    #[test]
+    fn active_kernel_is_cached_and_published_to_telemetry() {
+        let k = active_kernel();
+        assert_eq!(k, active_kernel(), "dispatch must be one-time");
+        let code = crate::telemetry::global().kernel_dispatch();
+        let expected = match k {
+            KernelKind::Portable => crate::telemetry::KERNEL_PORTABLE,
+            KernelKind::Avx2Fma => crate::telemetry::KERNEL_AVX2FMA,
+        };
+        assert_eq!(code, expected);
+        assert_eq!(crate::telemetry::kernel_dispatch_name(code), k.name());
     }
 }

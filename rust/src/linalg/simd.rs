@@ -1,0 +1,242 @@
+//! Lane-width vector primitives for the reflection hot paths
+//! (`orthogonal::{cwy, householder, backward}`) — the second hot family
+//! after GEMM: per-row dots, squared norms, and axpy updates that
+//! dominate small-N rollouts where gemm tiles don't amortize.
+//!
+//! Dispatch follows [`gemm::active_kernel`]: one process-wide decision
+//! shared with the GEMM microkernel (and the same `CWY_PORTABLE_KERNEL`
+//! override).  The portable versions keep the exact serial ascending
+//! accumulation order of the scalar loops they replaced, so forcing the
+//! portable kernel reproduces pre-SIMD results bit for bit; the AVX2+FMA
+//! versions run four independent accumulator chains (reductions) or fuse
+//! multiply-adds (axpy), so cross-kernel comparisons are tolerance-based
+//! (DESIGN.md §3.3).
+//!
+//! `Matrix::axpy` deliberately does NOT route here: its bitwise contract
+//! against the allocating `add`/`scale` wrappers
+//! (`in_place_ops_bitwise_match_allocating_wrappers`) must hold on every
+//! host regardless of dispatch.
+//!
+//! None of these helpers allocate — they stay inside the
+//! `tests/alloc_discipline.rs` zero-allocation contract.
+
+#[cfg(target_arch = "x86_64")]
+use crate::linalg::gemm::{active_kernel, KernelKind};
+
+/// `sum_i a[i] * b[i]` (lengths asserted equal).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active_kernel() == KernelKind::Avx2Fma {
+        // SAFETY: Avx2Fma is only ever selected after runtime detection.
+        return unsafe { avx2::dot(a, b) };
+    }
+    dot_portable(a, b)
+}
+
+/// `sum_i a[i]^2`.
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if active_kernel() == KernelKind::Avx2Fma {
+        // SAFETY: as in `dot`.
+        return unsafe { avx2::norm_sq(a) };
+    }
+    norm_sq_portable(a)
+}
+
+/// `y[i] += alpha * x[i]` (lengths asserted equal).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active_kernel() == KernelKind::Avx2Fma {
+        // SAFETY: as in `dot`.
+        return unsafe { avx2::axpy(alpha, x, y) };
+    }
+    axpy_portable(alpha, x, y)
+}
+
+/// One serial ascending chain — bitwise identical to the
+/// `iter().zip().map(|(x, y)| x * y).sum()` loops it replaced.
+fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+fn norm_sq_portable(a: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for x in a {
+        s += x * x;
+    }
+    s
+}
+
+/// Independent per-element updates — LLVM may autovectorize this without
+/// changing any rounding (`y + alpha * x` per element, no contraction).
+fn axpy_portable(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 8;
+    /// Independent accumulator chains per reduction: enough ILP to hide
+    /// FMA latency (4-5 cycles) at FMA throughput (0.5 cycles).
+    const CHAINS: usize = 4;
+
+    /// Sum the 8 lanes of one vector.
+    #[inline]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc = [_mm256_setzero_ps(); CHAINS];
+        let mut i = 0;
+        while i + CHAINS * LANES <= n {
+            for (c, chain) in acc.iter_mut().enumerate() {
+                *chain = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(ap.add(i + c * LANES)),
+                    _mm256_loadu_ps(bp.add(i + c * LANES)),
+                    *chain,
+                );
+            }
+            i += CHAINS * LANES;
+        }
+        while i + LANES <= n {
+            acc[0] =
+                _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc[0]);
+            i += LANES;
+        }
+        let v = _mm256_add_ps(_mm256_add_ps(acc[0], acc[1]), _mm256_add_ps(acc[2], acc[3]));
+        let mut s = hsum(v);
+        while i < n {
+            s += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn norm_sq(a: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut acc = [_mm256_setzero_ps(); CHAINS];
+        let mut i = 0;
+        while i + CHAINS * LANES <= n {
+            for (c, chain) in acc.iter_mut().enumerate() {
+                let v = _mm256_loadu_ps(ap.add(i + c * LANES));
+                *chain = _mm256_fmadd_ps(v, v, *chain);
+            }
+            i += CHAINS * LANES;
+        }
+        while i + LANES <= n {
+            let v = _mm256_loadu_ps(ap.add(i));
+            acc[0] = _mm256_fmadd_ps(v, v, acc[0]);
+            i += LANES;
+        }
+        let v = _mm256_add_ps(_mm256_add_ps(acc[0], acc[1]), _mm256_add_ps(acc[2], acc[3]));
+        let mut s = hsum(v);
+        while i < n {
+            let x = *ap.add(i);
+            s += x * x;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+        let mut i = 0;
+        while i + LANES <= n {
+            let r = _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), r);
+            i += LANES;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Length grid straddling every vector-body boundary: the 4-chain
+    /// stride (32), the single-vector stride (8), and the scalar tail.
+    const SIZES: [usize; 14] = [0, 1, 7, 8, 9, 15, 16, 31, 32, 33, 63, 64, 65, 257];
+
+    #[test]
+    fn dispatched_reductions_match_portable_within_tolerance() {
+        let mut rng = Pcg32::seeded(41);
+        for n in SIZES {
+            let a: Vec<f32> = rng.normal_vec(n, 1.0);
+            let b: Vec<f32> = rng.normal_vec(n, 1.0);
+            let tol = 1e-5 * (n.max(1) as f32).sqrt();
+            let (d, dp) = (dot(&a, &b), dot_portable(&a, &b));
+            assert!((d - dp).abs() <= tol, "dot n={n}: {d} vs {dp}");
+            let (q, qp) = (norm_sq(&a), norm_sq_portable(&a));
+            assert!((q - qp).abs() <= tol * 4.0, "norm_sq n={n}: {q} vs {qp}");
+        }
+    }
+
+    #[test]
+    fn dispatched_axpy_matches_portable_per_element() {
+        let mut rng = Pcg32::seeded(43);
+        for n in SIZES {
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let y0: Vec<f32> = rng.normal_vec(n, 1.0);
+            let mut y1 = y0.clone();
+            axpy(0.37, &x, &mut y1);
+            let mut y2 = y0.clone();
+            axpy_portable(0.37, &x, &mut y2);
+            for (i, (p, q)) in y1.iter().zip(&y2).enumerate() {
+                // Elementwise: at most one rounding difference (FMA).
+                assert!((p - q).abs() <= 1e-6, "axpy n={n} elt {i}: {p} vs {q}");
+            }
+        }
+    }
+
+    /// The portable forms ARE the serial scalar loops the call sites used
+    /// before — bit for bit, so `CWY_PORTABLE_KERNEL=1` reproduces
+    /// pre-SIMD numerics exactly.
+    #[test]
+    fn portable_ops_keep_the_serial_scalar_order() {
+        let mut rng = Pcg32::seeded(42);
+        let a: Vec<f32> = rng.normal_vec(37, 1.0);
+        let b: Vec<f32> = rng.normal_vec(37, 1.0);
+        let serial: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot_portable(&a, &b).to_bits(), serial.to_bits());
+        let nsq: f32 = a.iter().map(|x| x * x).sum();
+        assert_eq!(norm_sq_portable(&a).to_bits(), nsq.to_bits());
+        let mut y = b.clone();
+        axpy_portable(-0.5, &a, &mut y);
+        for (i, (yi, (&ai, &bi))) in y.iter().zip(a.iter().zip(&b)).enumerate() {
+            let want = bi - 0.5 * ai;
+            assert_eq!(yi.to_bits(), want.to_bits(), "axpy elt {i}");
+        }
+    }
+}

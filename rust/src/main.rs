@@ -527,11 +527,23 @@ fn cmd_client(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// CI gate over the perf-trajectory files: every kernel key staked in the
-/// committed `BENCH_*.json` must be present in the freshly measured file
-/// (a kernel silently vanishing from a bench is a failure, not a skip),
-/// and the ISSUE 5 fused/PR-4 BPTT ratio is re-enforced whenever the
-/// measured run covered the acceptance shape.
+/// CI gate over the perf-trajectory files:
+///
+/// * every kernel key staked in the committed `BENCH_*.json` must be
+///   present in the freshly measured file (a kernel silently vanishing
+///   from a bench is a failure, not a skip);
+/// * every **measured** median must be non-zero — a 0.0 median means the
+///   bench never actually timed anything, the blind spot that let
+///   placeholder trajectory files ride through CI unmeasured.  Committed
+///   files may stake keys at 0.0 (awaiting their first CI measurement);
+///   the measured side may not;
+/// * the ISSUE 5 fused/PR-4 BPTT ratio (>= 1.5x at N=128 L=64) is
+///   re-enforced whenever the measured run covered the acceptance shape;
+/// * when the measured run dispatched the `avx2fma` microkernel (the
+///   top-level `kernel` stamp), the SIMD GEMM must beat the frozen
+///   `gemm::legacy` oracle by >= 2x at N=128 and N=256.  On a
+///   portable-only host the stamp says `portable` and this gate is
+///   reported as skipped rather than measuring a meaningless ratio.
 fn cmd_bench_check(args: &Args) -> Result<()> {
     use cwy::util::json::{self, Json};
 
@@ -553,12 +565,16 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     let measured = read(measured_path)?;
 
     let mut checked = 0usize;
+    let mut staked = 0usize;
     let mut missing: Vec<String> = Vec::new();
     if let Json::Obj(benches) = committed.path(&["benches"]) {
         for (bench, kernels) in benches {
             if let Json::Obj(ks) = kernels {
-                for kernel in ks.keys() {
+                for (kernel, median) in ks {
                     checked += 1;
+                    if median.as_f64() == Some(0.0) {
+                        staked += 1; // committed stake awaiting first CI run
+                    }
                     if measured.path(&["benches", bench, kernel]).as_f64().is_none() {
                         missing.push(format!("{bench}.{kernel}"));
                     }
@@ -574,7 +590,32 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
             missing.join(", ")
         );
     }
+    if staked > 0 {
+        println!("# bench-check: {staked} committed stake keys awaiting first CI measurement");
+    }
     println!("# bench-check: all {checked} committed kernels present in the measured run");
+
+    // Measured 0.0 medians are a hard failure everywhere, not just on the
+    // keys the ratio gates read.
+    let mut zeros: Vec<String> = Vec::new();
+    if let Json::Obj(benches) = measured.path(&["benches"]) {
+        for (bench, kernels) in benches {
+            if let Json::Obj(ks) = kernels {
+                for (kernel, median) in ks {
+                    if median.as_f64().map(|x| x <= 0.0).unwrap_or(true) {
+                        zeros.push(format!("{bench}.{kernel}"));
+                    }
+                }
+            }
+        }
+    }
+    if !zeros.is_empty() {
+        bail!(
+            "{} measured medians are 0.0 (the bench never timed them): {}",
+            zeros.len(),
+            zeros.join(", ")
+        );
+    }
 
     let fused = measured
         .path(&["benches", "bptt_native", "rollout_bwd_fused_n128_l64"])
@@ -594,6 +635,43 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
             }
         }
         _ => println!("# bench-check: acceptance shape not measured; ratio gate skipped"),
+    }
+
+    // SIMD microkernel acceptance (ISSUE 7): gemm_nn must beat the frozen
+    // legacy oracle >= 2x at both acceptance sizes — but only when the
+    // measuring host actually ran the avx2+fma kernel.
+    match measured.path(&["kernel"]).as_str() {
+        Some("avx2fma") => {
+            for n in [128usize, 256] {
+                let simd = measured
+                    .path(&["benches", "gemm_native", &format!("gemm_nn_n{n}")])
+                    .as_f64();
+                let legacy = measured
+                    .path(&["benches", "gemm_native", &format!("legacy_nn_n{n}")])
+                    .as_f64();
+                match (simd, legacy) {
+                    (Some(s), Some(l)) if s > 0.0 => {
+                        let ratio = l / s;
+                        println!(
+                            "# bench-check: simd gemm_nn is {ratio:.2}x legacy at N={n} \
+                             (target >= 2.0x)"
+                        );
+                        if ratio < 2.0 {
+                            bail!(
+                                "simd gemm_nn is only {ratio:.2}x legacy at N={n} \
+                                 (target >= 2.0x)"
+                            );
+                        }
+                    }
+                    _ => bail!(
+                        "avx2fma run is missing gemm_nn_n{n}/legacy_nn_n{n} medians \
+                         needed for the SIMD ratio gate"
+                    ),
+                }
+            }
+        }
+        Some(k) => println!("# bench-check: measured kernel is `{k}`; SIMD ratio gate skipped"),
+        None => println!("# bench-check: measured file has no kernel stamp; SIMD gate skipped"),
     }
     println!("bench-check OK");
     Ok(())

@@ -28,8 +28,11 @@
 //! materialized transposes, no temporaries beyond pooled scratch), and
 //! [`CwyGrad::finish_into`] runs the S-chain once per rollout into a
 //! caller buffer.  The PR-4 allocating implementation is frozen verbatim
-//! in [`reference`] as the `BENCH_5` measurement baseline and a bitwise
-//! parity oracle — the fused path must agree with it to the last bit.
+//! in [`reference`] as the `BENCH_5` measurement baseline and a parity
+//! oracle — under the portable GEMM kernel the fused path must agree
+//! with it to the last bit; under the AVX2+FMA kernel (different
+//! accumulation grouping, fused rounding) agreement is asserted within
+//! f32-scaled tolerances instead (`linalg::gemm` module docs).
 //!
 //! Degenerate reflection rows (norm ≤ [`cwy::DEGENERATE_NORM`]) carry
 //! **zero** gradient on every path — never NaN: the CWY chain maps them
@@ -38,7 +41,7 @@
 //! see [`householder`]).  The two parametrizations agree as functions
 //! only on non-degenerate rows.
 
-use crate::linalg::{gemm, triu_inv_into, Matrix, Workspace};
+use crate::linalg::{gemm, simd, triu_inv_into, Matrix, Workspace};
 
 use super::cwy::{self, apply_with_operands, normalize_with_norms_into, row_norms_into, CwyOperator};
 use super::householder;
@@ -320,10 +323,11 @@ impl TcwyGrad {
         gemm(false, false, 1.0, &dw, &self.u1, 1.0, &mut tape.da);
         let mut du1 = ws.take(m, m);
         gemm(true, false, 1.0, &dw, &tape.sinv, 0.0, &mut du1);
+        // du has exactly M columns, so the leading M×M block spans whole
+        // rows — one lane-width axpy per row (alpha = 1 adds exactly,
+        // fused or not, so this is bitwise-neutral to the scalar loop).
         for i in 0..m {
-            for j in 0..m {
-                tape.du[(i, j)] += du1[(i, j)];
-            }
+            simd::axpy(1.0, du1.row(i), tape.du.row_mut(i));
         }
         ws.give(dw);
         ws.give(du1);
@@ -363,7 +367,7 @@ pub fn hr_chain_backward(vs: &Matrix, h: &Matrix, g: &Matrix) -> (Matrix, Matrix
     for i in 0..l {
         let v = vs.row(i).to_vec();
         let mut next = inters[i].clone();
-        if v.iter().map(|x| x * x).sum::<f32>() > degenerate_s {
+        if simd::norm_sq(&v) > degenerate_s {
             for b in 0..next.rows {
                 householder::reflect_vec(&v, next.row_mut(b));
             }
@@ -372,37 +376,35 @@ pub fn hr_chain_backward(vs: &Matrix, h: &Matrix, g: &Matrix) -> (Matrix, Matrix
     }
     let mut dvs = Matrix::zeros(vs.rows, vs.cols);
     let mut gcur = g.clone();
+    // Row-major rank-1 accumulator for the dv sum — the old j-outer loop
+    // walked H and G column-strided; accumulating row axpys instead
+    // streams both matrices contiguously through the lane-width kernels.
+    let mut dv_acc = vec![0.0f32; vs.cols];
     for i in (0..l).rev() {
         let v = vs.row(i);
-        let s: f32 = v.iter().map(|x| x * x).sum();
+        let s = simd::norm_sq(v);
         if s <= degenerate_s {
             continue; // identity reflection: zero dV row, g passes through
         }
         let hin = &inters[i];
         let b = hin.rows;
-        let n = hin.cols;
         // Per-row dots hv = H v, gv = G v.
-        let hv: Vec<f32> = (0..b)
-            .map(|r| hin.row(r).iter().zip(v).map(|(a, c)| a * c).sum())
-            .collect();
-        let gv: Vec<f32> = (0..b)
-            .map(|r| gcur.row(r).iter().zip(v).map(|(a, c)| a * c).sum())
-            .collect();
+        let hv: Vec<f32> = (0..b).map(|r| simd::dot(hin.row(r), v)).collect();
+        let gv: Vec<f32> = (0..b).map(|r| simd::dot(gcur.row(r), v)).collect();
         let beta: f32 = gv.iter().zip(&hv).map(|(a, c)| a * c).sum();
         // dv = −(2/s)(Hᵀ gv + Gᵀ hv) + (4β/s²) v
-        for j in 0..n {
-            let mut acc = 0.0f32;
-            for r in 0..b {
-                acc += hin[(r, j)] * gv[r] + gcur[(r, j)] * hv[r];
-            }
-            dvs[(i, j)] = -(2.0 / s) * acc + (4.0 * beta / (s * s)) * v[j];
+        dv_acc.fill(0.0);
+        for r in 0..b {
+            simd::axpy(gv[r], hin.row(r), &mut dv_acc);
+            simd::axpy(hv[r], gcur.row(r), &mut dv_acc);
+        }
+        let (cg, cv) = (-(2.0 / s), 4.0 * beta / (s * s));
+        for (dst, (&aj, &vj)) in dvs.row_mut(i).iter_mut().zip(dv_acc.iter().zip(v)) {
+            *dst = cg * aj + cv * vj;
         }
         // dH = G − (2/s) gv vᵀ  (the reflection is symmetric)
-        for r in 0..b {
-            let c = 2.0 * gv[r] / s;
-            for (gj, vj) in gcur.row_mut(r).iter_mut().zip(v) {
-                *gj -= c * vj;
-            }
+        for (r, &gvr) in gv.iter().enumerate() {
+            simd::axpy(-2.0 * gvr / s, v, gcur.row_mut(r));
         }
     }
     (gcur, dvs)
@@ -440,7 +442,7 @@ pub fn hr_rollout_states(v: &Matrix, h0: &Matrix, xs: &[Matrix]) -> Vec<Matrix> 
 /// `h_{t+1} = h_t Q(V) + x_t`.  Returns `(dL/dh_0, dL/dV)`.  One
 /// [`CwyGrad::apply_backward_in_place`] per step, one `S`-chain finish
 /// total, all scratch pooled.  Bitwise-identical to the frozen PR-4 path
-/// in [`reference`].
+/// in [`reference`] under the portable kernel (see module docs).
 pub fn cwy_rollout_backward(
     v: &Matrix,
     h0: &Matrix,
@@ -859,11 +861,18 @@ mod tests {
     }
 
     /// The zero-allocation contract's numeric half: the fused in-place
-    /// rollout backward reproduces the frozen PR-4 implementation
-    /// bit-for-bit (shared accumulation order end to end), across random
-    /// shapes including L = 1 / B = 1 / T = 1.
+    /// rollout backward reproduces the frozen PR-4 implementation,
+    /// across random shapes including L = 1 / B = 1 / T = 1.  Under the
+    /// portable kernel the two share the ascending-`k` accumulation
+    /// order end to end, so the comparison is bit-for-bit; under the
+    /// AVX2+FMA kernel the fused path groups the reduction differently
+    /// (lane accumulators, single-rounded madds) and the comparison is
+    /// f32-scaled instead.  CI exercises both regimes: the default leg
+    /// dispatches AVX2 where supported, a matrix leg forces the portable
+    /// kernel via `CWY_PORTABLE_KERNEL=1` and takes the bitwise branch.
     #[test]
     fn prop_fused_rollout_bitwise_matches_pr4_reference() {
+        let bitwise = gemm::active_kernel() == gemm::KernelKind::Portable;
         forall(
             10,
             |rng| {
@@ -884,16 +893,24 @@ mod tests {
             |(v, h0, xs, gs)| {
                 let (dh_new, dv_new) = cwy_rollout_backward(v, h0, xs, gs);
                 let (dh_ref, dv_ref) = reference::cwy_rollout_backward(v, h0, xs, gs);
-                let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-                if bits(&dh_new) == bits(&dh_ref) && bits(&dv_new) == bits(&dv_ref) {
-                    Ok(())
+                if bitwise {
+                    let bits =
+                        |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    if bits(&dh_new) == bits(&dh_ref) && bits(&dv_new) == bits(&dv_ref) {
+                        return Ok(());
+                    }
                 } else {
-                    Err(format!(
-                        "fused vs PR-4 drift: |dh| {} |dv| {}",
-                        dh_new.max_abs_diff(&dh_ref),
-                        dv_new.max_abs_diff(&dv_ref)
-                    ))
+                    let (eh, ev) =
+                        (scaled_diff(&dh_new, &dh_ref), scaled_diff(&dv_new, &dv_ref));
+                    if eh < 5e-4 && ev < 5e-4 {
+                        return Ok(());
+                    }
                 }
+                Err(format!(
+                    "fused vs PR-4 drift (bitwise={bitwise}): |dh| {} |dv| {}",
+                    dh_new.max_abs_diff(&dh_ref),
+                    dv_new.max_abs_diff(&dv_ref)
+                ))
             },
         );
     }

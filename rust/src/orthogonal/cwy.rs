@@ -9,7 +9,7 @@
 //! pooled scratch; the allocating forms remain as bitwise-identical
 //! wrappers.
 
-use crate::linalg::{gemm, triu_inv, Matrix, Workspace};
+use crate::linalg::{gemm, simd, triu_inv, Matrix, Workspace};
 
 /// Precomputed CWY operands for a rollout.
 pub struct CwyOperator {
@@ -39,7 +39,9 @@ pub fn row_norms(v: &Matrix) -> Vec<f32> {
 pub fn row_norms_into(v: &Matrix, out: &mut [f32]) {
     assert_eq!(out.len(), v.rows);
     for (i, o) in out.iter_mut().enumerate() {
-        *o = v.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+        // Dispatched lane-width reduction; the portable path keeps the
+        // exact serial sum-of-squares order this loop always had.
+        *o = simd::norm_sq(v.row(i)).sqrt();
     }
 }
 

@@ -10,20 +10,21 @@
 //! vector — the two parametrizations agree only on non-degenerate rows.)
 
 use super::cwy;
-use crate::linalg::Matrix;
+use crate::linalg::{simd, Matrix};
 
 /// Apply H(v) = I - 2 v v^T / ||v||^2 to a vector in place; a degenerate
 /// `v` (see module docs) is the identity.
+///
+/// Norm, dot, and the rank-1 update run on the dispatched lane-width
+/// primitives (`linalg::simd`); the portable path keeps the exact serial
+/// order of the scalar loops this function always had.
 pub fn reflect_vec(v: &[f32], h: &mut [f32]) {
-    let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+    let vnorm2 = simd::norm_sq(v);
     if vnorm2 <= cwy::DEGENERATE_NORM * cwy::DEGENERATE_NORM {
         return;
     }
-    let dot: f32 = v.iter().zip(h.iter()).map(|(a, b)| a * b).sum();
-    let c = 2.0 * dot / vnorm2;
-    for (hi, vi) in h.iter_mut().zip(v) {
-        *hi -= c * vi;
-    }
+    let c = 2.0 * simd::dot(v, h) / vnorm2;
+    simd::axpy(-c, v, h);
 }
 
 /// h <- (H(v_1) ... H(v_L))^T h applied row-wise to a batch (B, N);
@@ -45,16 +46,13 @@ pub fn matrix(vs: &Matrix) -> Matrix {
     // Q <- Q H(v): subtract 2 (Q v) v^T / ||v||^2
     for l in 0..vs.rows {
         let v = vs.row(l);
-        let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+        let vnorm2 = simd::norm_sq(v);
         if vnorm2 <= cwy::DEGENERATE_NORM * cwy::DEGENERATE_NORM {
             continue;
         }
         let qv = q.matvec(v);
-        for i in 0..n {
-            let c = 2.0 * qv[i] / vnorm2;
-            for j in 0..n {
-                q[(i, j)] -= c * v[j];
-            }
+        for (i, &qvi) in qv.iter().enumerate() {
+            simd::axpy(-2.0 * qvi / vnorm2, v, q.row_mut(i));
         }
     }
     q

@@ -201,6 +201,14 @@ impl BenchJson {
             "schema".to_string(),
             Json::Str("cwy-bench-trajectory-v1".to_string()),
         );
+        // Stamp which GEMM microkernel produced the medians: `bench-check`
+        // only enforces the SIMD-speedup ratio gate when the measuring run
+        // actually dispatched avx2+fma, so a portable-only CI host fails
+        // loudly on 0.0 medians but not on a meaningless ratio.
+        top.insert(
+            "kernel".to_string(),
+            Json::Str(crate::linalg::active_kernel().name().to_string()),
+        );
         let benches = top
             .entry("benches".to_string())
             .or_insert_with(|| Json::Obj(BTreeMap::new()));
@@ -288,6 +296,11 @@ mod tests {
 
         let root = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
         assert_eq!(root.path(&["schema"]).as_str(), Some("cwy-bench-trajectory-v1"));
+        // The kernel stamp reflects the dispatcher of the writing process.
+        assert_eq!(
+            root.path(&["kernel"]).as_str(),
+            Some(crate::linalg::active_kernel().name())
+        );
         assert_eq!(
             root.path(&["benches", "gemm_native", "gemm_nn_n64"]).as_f64(),
             Some(1500.0)

@@ -371,8 +371,15 @@ pub fn metrics_table(metrics: &Json) -> Table {
             })
             .unwrap_or_else(|| "-".to_string())
     };
+    // The dispatched GEMM microkernel is a string gauge, not a number —
+    // read it directly rather than through the numeric formatter.
+    let kernel = match metrics.path(&["telemetry", "gauges", "kernel"]) {
+        Json::Str(s) => s.clone(),
+        _ => "-".to_string(),
+    };
     let mut t = Table::new(&["metric", "value"]);
     let rows: Vec<(&str, String)> = vec![
+        ("gemm kernel", kernel),
         ("requests completed", g(&["serve", "completed"])),
         ("latency p50 (us)", g(&["serve", "latency_p50_us"])),
         ("latency p95 (us)", g(&["serve", "latency_p95_us"])),
@@ -462,7 +469,8 @@ mod tests {
                  "latency_p99_us":300,"latency_p999_us":400,"latency_mean_us":123.4,
                  "shed_deadline":1,"rejected_full":0,"mean_occupancy":3.5,
                  "max_occupancy":4},
-                "telemetry":{"phases":{"queue_wait_us":{"p50":10,"p99":20},
+                "telemetry":{"gauges":{"kernel":"avx2fma"},
+                 "phases":{"queue_wait_us":{"p50":10,"p99":20},
                  "batch_assemble_us":{"p50":1,"p99":2},
                  "execute_us":{"p50":500,"p99":900},
                  "write_back_us":{"p50":5,"p99":9}}}}"#,
@@ -472,6 +480,8 @@ mod tests {
         assert!(md.contains("latency p999 (us)"));
         assert!(md.contains("123.4"));
         assert!(md.contains("500 / 900"));
+        assert!(md.contains("gemm kernel"));
+        assert!(md.contains("avx2fma"));
         // Missing keys degrade to "-", not panics.
         let empty = metrics_table(&Json::Obj(Default::default())).to_markdown();
         assert!(empty.contains('-'));

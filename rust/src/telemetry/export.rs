@@ -13,8 +13,20 @@ use anyhow::{Context, Result};
 use crate::telemetry::span::{trace_buffer, TraceEvent};
 
 /// Render events as a Chrome trace JSON array, one event per line.
+///
+/// The first element is always a `process_name` metadata event naming
+/// the dispatched GEMM microkernel (`cwy kernel=avx2fma|portable`), so
+/// a Perfetto timeline says which kernel produced the spans it shows.
 pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let kernel = crate::telemetry::registry::kernel_dispatch_name(
+        crate::telemetry::registry::global().kernel_dispatch(),
+    );
     let mut out = String::from("[\n");
+    out.push_str(&format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\
+         \"args\":{{\"name\":\"cwy kernel={kernel}\"}}}}{}\n",
+        if events.is_empty() { "" } else { "," },
+    ));
     for (i, e) in events.iter().enumerate() {
         let sep = if i + 1 == events.len() { "" } else { "," };
         out.push_str(&format!(
@@ -58,16 +70,22 @@ mod tests {
         let text = chrome_trace_json(&events);
         let j = parse(&text).expect("chrome trace must be valid JSON");
         let arr = j.as_arr().expect("top level is an array");
-        assert_eq!(arr.len(), 2);
-        assert_eq!(arr[0].path(&["name"]).as_str(), Some("rollout_forward"));
-        assert_eq!(arr[0].path(&["ph"]).as_str(), Some("X"));
-        assert_eq!(arr[1].path(&["ts"]).as_f64(), Some(1.5));
-        assert_eq!(arr[1].path(&["dur"]).as_f64(), Some(2.0));
+        assert_eq!(arr.len(), 3);
+        // Metadata header names the dispatched kernel.
+        assert_eq!(arr[0].path(&["ph"]).as_str(), Some("M"));
+        let pname = arr[0].path(&["args", "name"]).as_str().unwrap();
+        assert!(pname.starts_with("cwy kernel="), "got {pname}");
+        assert_eq!(arr[1].path(&["name"]).as_str(), Some("rollout_forward"));
+        assert_eq!(arr[1].path(&["ph"]).as_str(), Some("X"));
+        assert_eq!(arr[2].path(&["ts"]).as_f64(), Some(1.5));
+        assert_eq!(arr[2].path(&["dur"]).as_f64(), Some(2.0));
     }
 
     #[test]
-    fn empty_trace_is_an_empty_array() {
+    fn empty_trace_still_carries_the_kernel_header() {
         let j = parse(&chrome_trace_json(&[])).unwrap();
-        assert_eq!(j.as_arr().map(|a| a.len()), Some(0));
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].path(&["ph"]).as_str(), Some("M"));
     }
 }

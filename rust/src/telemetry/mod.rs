@@ -25,7 +25,10 @@ pub mod span;
 pub use export::{chrome_trace_json, write_chrome_trace};
 pub use histogram::{HistSnapshot, Histogram};
 pub use prom::{registry_json, registry_json_of, render_prometheus};
-pub use registry::{global, HistId, Registry, SpanId, SpanTotals, SPAN_COUNT};
+pub use registry::{
+    global, kernel_dispatch_name, HistId, Registry, SpanId, SpanTotals, KERNEL_AVX2FMA,
+    KERNEL_PORTABLE, KERNEL_UNDETECTED, SPAN_COUNT,
+};
 pub use span::{
     enable_tracing, now_ns, trace_buffer, tracing_enabled, SpanGuard, TraceBuffer, TraceEvent,
 };

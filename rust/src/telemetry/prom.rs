@@ -82,7 +82,23 @@ pub fn registry_json_of(reg: &Registry) -> Json {
         ("spans", Json::Obj(spans)),
         ("gemm", Json::Obj(gemm)),
         ("phases", Json::Obj(phases)),
-        ("gauges", obj(vec![("queue_depth", num(reg.queue_depth() as f64))])),
+        (
+            "gauges",
+            obj(vec![
+                ("queue_depth", num(reg.queue_depth() as f64)),
+                ("kernel_dispatch", num(reg.kernel_dispatch() as f64)),
+                // String label alongside the numeric code; skipped by the
+                // Prometheus renderer (gauges must be numeric) but shown
+                // by `cwy client --stats`.
+                (
+                    "kernel",
+                    Json::Str(
+                        crate::telemetry::registry::kernel_dispatch_name(reg.kernel_dispatch())
+                            .to_string(),
+                    ),
+                ),
+            ]),
+        ),
         ("trace", obj(vec![("events", num(events)), ("dropped", num(dropped))])),
     ])
 }
@@ -166,6 +182,8 @@ mod tests {
         assert_eq!(j.path(&["phases", "execute_us", "count"]).as_f64(), Some(1.0));
         assert_eq!(j.path(&["phases", "queue_wait_us", "p999"]).as_f64(), Some(15.0));
         assert!(j.path(&["gauges", "queue_depth"]).as_f64().is_some());
+        assert!(j.path(&["gauges", "kernel_dispatch"]).as_f64().is_some());
+        assert!(matches!(j.path(&["gauges", "kernel"]), Json::Str(_)));
         // Serde-free round trip: the frame must survive the wire.
         let back = crate::util::json::parse(&j.dump()).unwrap();
         assert_eq!(back, j);
@@ -179,6 +197,9 @@ mod tests {
         let text = render_prometheus(&registry_json_of(&r));
         assert!(text.contains("cwy_span_calls_total{span=\"bptt_backward\"} 1"));
         assert!(text.contains("cwy_queue_depth 3"));
+        assert!(text.contains("# TYPE cwy_kernel_dispatch gauge"));
+        // The string label must NOT leak into the numeric exposition.
+        assert!(!text.contains("cwy_kernel "));
         assert!(text.contains("cwy_phase_us{phase=\"execute_us\",quantile=\"0.5\"} 0"));
         for line in text.lines() {
             assert!(

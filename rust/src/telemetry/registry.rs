@@ -125,10 +125,31 @@ pub struct SpanTotals {
     pub ns: u64,
 }
 
+/// `kernel_dispatch` gauge: no kernel selected yet (gemm never ran).
+pub const KERNEL_UNDETECTED: u64 = 0;
+/// `kernel_dispatch` gauge: the portable (bitwise-stable) microkernel.
+pub const KERNEL_PORTABLE: u64 = 1;
+/// `kernel_dispatch` gauge: the explicit AVX2+FMA microkernel.
+pub const KERNEL_AVX2FMA: u64 = 2;
+
+/// Human label for a `kernel_dispatch` gauge value — must match
+/// `linalg::gemm::KernelKind::name()` for the selected codes (asserted
+/// by the gemm dispatch test).
+pub fn kernel_dispatch_name(code: u64) -> &'static str {
+    match code {
+        KERNEL_PORTABLE => "portable",
+        KERNEL_AVX2FMA => "avx2fma",
+        _ => "undetected",
+    }
+}
+
 pub struct Registry {
     spans: [SpanStat; SPAN_COUNT],
     gemm_flops: [AtomicU64; GEMM_VARIANTS],
     queue_depth: AtomicU64,
+    /// Which GEMM/reduction microkernel the one-time dispatch selected
+    /// ([`KERNEL_UNDETECTED`] until `linalg::gemm::active_kernel` runs).
+    kernel_dispatch: AtomicU64,
     hists: [Histogram; HIST_COUNT],
 }
 
@@ -151,6 +172,7 @@ impl Registry {
             spans: [STAT; SPAN_COUNT],
             gemm_flops: [ZERO; GEMM_VARIANTS],
             queue_depth: AtomicU64::new(0),
+            kernel_dispatch: AtomicU64::new(KERNEL_UNDETECTED),
             hists: [HIST; HIST_COUNT],
         }
     }
@@ -187,6 +209,16 @@ impl Registry {
 
     pub fn queue_depth(&self) -> u64 {
         self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Published once by `linalg::gemm::active_kernel` when the process
+    /// decides its microkernel (const-init slot; no allocation).
+    pub fn set_kernel_dispatch(&self, code: u64) {
+        self.kernel_dispatch.store(code, Ordering::Relaxed);
+    }
+
+    pub fn kernel_dispatch(&self) -> u64 {
+        self.kernel_dispatch.load(Ordering::Relaxed)
     }
 
     pub fn hist(&self, id: HistId) -> &Histogram {
@@ -250,6 +282,17 @@ mod tests {
         assert_eq!(r.hist(HistId::ExecuteUs).percentile(1.0), 4_095);
         r.record_queue_wait(7);
         assert_eq!(r.hist(HistId::QueueWaitUs).count(), 1);
+    }
+
+    #[test]
+    fn kernel_dispatch_gauge_and_labels() {
+        let r = Registry::new();
+        assert_eq!(r.kernel_dispatch(), KERNEL_UNDETECTED);
+        assert_eq!(kernel_dispatch_name(r.kernel_dispatch()), "undetected");
+        r.set_kernel_dispatch(KERNEL_AVX2FMA);
+        assert_eq!(kernel_dispatch_name(r.kernel_dispatch()), "avx2fma");
+        r.set_kernel_dispatch(KERNEL_PORTABLE);
+        assert_eq!(kernel_dispatch_name(r.kernel_dispatch()), "portable");
     }
 
     #[test]

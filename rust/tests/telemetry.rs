@@ -154,24 +154,31 @@ fn chrome_trace_export_golden() {
     let Json::Arr(items) = &root else {
         panic!("trace root must be a JSON array")
     };
-    assert_eq!(items.len(), 4);
-    for item in items {
+    // Metadata header (dispatched GEMM kernel) + the four span events.
+    assert_eq!(items.len(), 5);
+    assert_eq!(items[0].path(&["ph"]).as_str(), Some("M"));
+    assert!(items[0]
+        .path(&["args", "name"])
+        .as_str()
+        .unwrap()
+        .starts_with("cwy kernel="));
+    for item in &items[1..] {
         assert_eq!(item.path(&["ph"]).as_str(), Some("X"));
         assert_eq!(item.path(&["cat"]).as_str(), Some("cwy"));
         assert_eq!(item.path(&["pid"]).as_f64(), Some(1.0));
         assert!(item.path(&["name"]).as_str().is_some());
     }
     // Events are sorted by start; ts/dur are microseconds.
-    assert_eq!(items[0].path(&["name"]).as_str(), Some("rollout_forward"));
-    assert_eq!(items[0].path(&["ts"]).as_f64(), Some(1.0));
-    assert_eq!(items[0].path(&["dur"]).as_f64(), Some(10.0));
-    assert_eq!(items[0].path(&["tid"]).as_f64(), Some(1.0));
-    assert_eq!(items[2].path(&["name"]).as_str(), Some("sgd_step"));
-    assert_eq!(items[2].path(&["tid"]).as_f64(), Some(2.0));
+    assert_eq!(items[1].path(&["name"]).as_str(), Some("rollout_forward"));
+    assert_eq!(items[1].path(&["ts"]).as_f64(), Some(1.0));
+    assert_eq!(items[1].path(&["dur"]).as_f64(), Some(10.0));
+    assert_eq!(items[1].path(&["tid"]).as_f64(), Some(1.0));
+    assert_eq!(items[3].path(&["name"]).as_str(), Some("sgd_step"));
+    assert_eq!(items[3].path(&["tid"]).as_f64(), Some(2.0));
     // Nesting survives the round trip: both gemm events sit inside the
     // forward span's [ts, ts+dur] window on the same tid.
     let fwd = (1.0, 11.0);
-    for idx in [1usize, 3] {
+    for idx in [2usize, 4] {
         let ts = items[idx].path(&["ts"]).as_f64().unwrap();
         let dur = items[idx].path(&["dur"]).as_f64().unwrap();
         assert!(items[idx].path(&["name"]).as_str().unwrap().starts_with("gemm_"));
