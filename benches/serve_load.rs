@@ -1,0 +1,111 @@
+//! Closed-loop serve benchmark at production concurrency (ISSUE 8): an
+//! in-process `cwy serve` event loop driven by the session harness —
+//! thousands of logical sessions multiplexed over pipelined connections,
+//! each keeping one request in flight.
+//!
+//! What it measures (and commits into the BENCH_8 trajectory):
+//!
+//! * `closed_loop_p50_ns` / `closed_loop_p99_ns` — client-observed
+//!   round-trip latency under full concurrency;
+//! * `mean_occupancy_milli` — mean rows per fused execution x1000
+//!   (occupancy is the whole point of continuous batching: requests
+//!   arriving while workers are busy coalesce into the next batch).
+//!
+//! The run hard-fails unless every request is answered exactly once —
+//! the bench doubles as the 10k-session acceptance run.
+//!
+//!   cargo bench --bench serve_load                   # 10k sessions
+//!   cargo bench --bench serve_load -- --smoke --json BENCH_8.json
+
+use std::sync::Arc;
+
+use cwy::report::{BenchJson, Table};
+use cwy::serve::{
+    run_sessions, serve, AdmissionCfg, BatchCfg, FakeModel, ModelFactory, ServeCfg, ServeModel,
+    SessionCfg, SessionLoadCfg,
+};
+use cwy::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let sessions = if smoke { 200 } else { args.get_usize("sessions", 10_000) };
+    let rounds = if smoke { 2 } else { args.get_usize("rounds", 3) };
+    let conns = if smoke { 16 } else { args.get_usize("conns", 128) };
+    let workers = args.get_usize("workers", 2);
+
+    let fake_batch = 32usize;
+    let factory: Arc<ModelFactory> = Arc::new(move || {
+        Ok(Box::new(FakeModel::new(fake_batch, 16, 100)) as Box<dyn ServeModel>)
+    });
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        batch: BatchCfg {
+            max_batch: fake_batch,
+            max_wait_us: 1_000,
+            queue_cap: 65_536,
+            continuous: true,
+        },
+        session: SessionCfg { capacity: (2 * sessions).max(1_024), ..SessionCfg::default() },
+        admission: AdmissionCfg {
+            max_connections: conns + 16,
+            ..AdmissionCfg::default()
+        },
+        lr: 0.0,
+    };
+    let server = serve(cfg, factory).expect("starting in-process server");
+    let addr = server.local_addr().to_string();
+
+    println!(
+        "# serve_load: {sessions} sessions x {rounds} rounds over {conns} connections \
+         ({workers} workers, continuous batching) -> {addr}\n"
+    );
+    let load = SessionLoadCfg {
+        addr,
+        sessions,
+        rounds,
+        conns,
+        deadline_us: None,
+        use_sessions: true,
+    };
+    let report = run_sessions(&load).expect("closed-loop run");
+    server.stop();
+
+    print!("{}", report.to_table().to_markdown());
+    assert!(
+        report.complete(),
+        "closed-loop invariant violated: sent {} answered {} (unanswered {}, duplicates {}, \
+         stray {}, conn failures {})",
+        report.sent,
+        report.answered(),
+        report.unanswered,
+        report.duplicates,
+        report.stray,
+        report.conn_failures
+    );
+    println!("\n# every request answered exactly once");
+
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["p50 (us)".to_string(), report.lat_p50_us.to_string()]);
+    table.row(&["p99 (us)".to_string(), report.lat_p99_us.to_string()]);
+    table.row(&["mean occupancy".to_string(), format!("{:.2}", report.mean_batch)]);
+    table.row(&["throughput (req/s)".to_string(), format!("{:.1}", report.rps())]);
+    println!("\n## closed-loop latency and occupancy\n");
+    print!("{}", table.to_markdown());
+
+    let mut json = BenchJson::new("serve_load");
+    // Latencies are measured in whole microseconds; clamp to 1ns so a
+    // sub-microsecond p50 can never commit a 0.0 median (which
+    // bench-check treats as "never measured").
+    json.push("closed_loop_p50_ns", ((report.lat_p50_us * 1_000) as f64).max(1.0));
+    json.push("closed_loop_p99_ns", ((report.lat_p99_us * 1_000) as f64).max(1.0));
+    json.push("mean_occupancy_milli", (report.mean_batch * 1_000.0).max(1.0));
+    if let Some(path) = args.get("json") {
+        json.merge_write(path).expect("writing bench json");
+        println!(
+            "\n# medians merged into {}",
+            BenchJson::resolve_trajectory_path(path).display()
+        );
+    }
+}

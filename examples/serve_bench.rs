@@ -17,8 +17,8 @@ use std::sync::Arc;
 use cwy::runtime::fixture::TempDir;
 use cwy::runtime::Backend;
 use cwy::serve::{
-    probe_serve_spec, run_load, serve, BatchCfg, ClientCfg, EngineModel, FakeModel, ModelFactory,
-    ServeCfg, ServeModel, SessionCfg,
+    probe_serve_spec, run_load, serve, AdmissionCfg, BatchCfg, ClientCfg, EngineModel, FakeModel,
+    ModelFactory, ServeCfg, ServeModel, SessionCfg,
 };
 use cwy::util::cli::Args;
 
@@ -68,8 +68,9 @@ fn main() -> anyhow::Result<()> {
         ServeCfg {
             addr: "127.0.0.1:0".to_string(),
             workers,
-            batch: BatchCfg { max_batch, max_wait_us, queue_cap: 4_096 },
+            batch: BatchCfg { max_batch, max_wait_us, queue_cap: 4_096, continuous: true },
             session: SessionCfg::default(),
+            admission: AdmissionCfg::default(),
             lr: 0.0,
         },
         factory,

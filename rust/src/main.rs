@@ -7,7 +7,7 @@
 //!   tables --t 1000 --n 1024 --l 128   print the analytical Tables 1-2
 //!   verify                             orthogonality cross-checks vs native
 //!   serve  --artifact copy_cwy_step    micro-batching inference server
-//!   client --requests 1000             closed-loop load generator
+//!   client --requests 1000             load generator (--closed-loop: session harness)
 //!   bench-check --committed J --measured J   perf-trajectory CI gate
 
 use anyhow::{bail, Context, Result};
@@ -42,8 +42,10 @@ fn main() -> Result<()> {
                  tables:   [--t 1000 --n 1024 --l 128 --m 128]\n\
                  serve:    --addr HOST:PORT --artifact NAME --workers W --max-batch B --max-wait-us U\n\
                  \x20         [--backend auto|native|pjrt|fake --queue-cap N --lr F]\n\
+                 \x20         [--batching continuous|timed --max-conns N --max-inflight N]\n\
                  \x20         (--backend native with no --artifact serves the toy fixture)\n\
                  client:   --addr HOST:PORT --requests N --concurrency C [--deadline-us U --sessions]\n\
+                 \x20         or --closed-loop --sessions N --rounds R --conns C (exactly-once harness)\n\
                  \x20         [--stats fetch+print the server metrics frame only] [--prom]\n\
                  bench-check: --committed BENCH.json --measured BENCH.json (CI perf gate)\n\
                  --backend auto (default) prefers PJRT and falls back to the native rust backend."
@@ -386,8 +388,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
 /// the deterministic in-process `fake` model.
 fn cmd_serve(args: &Args) -> Result<()> {
     use cwy::serve::{
-        probe_serve_spec, serve, BatchCfg, EngineModel, FakeModel, ModelFactory, ServeCfg,
-        ServeModel, SessionCfg,
+        probe_serve_spec, serve, AdmissionCfg, BatchCfg, EngineModel, FakeModel, ModelFactory,
+        ServeCfg, ServeModel, SessionCfg,
     };
     use std::sync::Arc;
 
@@ -396,6 +398,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut max_batch = args.get_usize("max-batch", 8);
     let max_wait_us = args.get_usize("max-wait-us", 2_000) as u64;
     let queue_cap = args.get_usize("queue-cap", 1_024);
+    let continuous = match args.get_or("batching", "continuous").as_str() {
+        "continuous" => true,
+        "timed" => false,
+        other => bail!("--batching must be `continuous` or `timed`, got `{other}`"),
+    };
+    let admission_defaults = AdmissionCfg::default();
+    let admission = AdmissionCfg {
+        max_connections: args.get_usize("max-conns", admission_defaults.max_connections),
+        max_inflight_per_conn: args
+            .get_usize("max-inflight", admission_defaults.max_inflight_per_conn),
+        ..admission_defaults
+    };
     let lr = args.get_f32("lr", 0.0);
     let default_backend = if args.get("artifact").is_some() { "auto" } else { "fake" };
     let backend = args.get_or("backend", default_backend);
@@ -461,18 +475,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ServeCfg {
         addr,
         workers,
-        batch: BatchCfg { max_batch, max_wait_us, queue_cap },
+        batch: BatchCfg { max_batch, max_wait_us, queue_cap, continuous },
         session: SessionCfg::default(),
+        admission,
         lr,
     };
     let server = serve(cfg, factory)?;
     println!(
-        "# cwy serve: {} backend on {} ({} workers, max-batch {}, max-wait {}us)",
+        "# cwy serve: {} backend on {} ({} workers, max-batch {}, max-wait {}us, \
+         {} batching, max-conns {})",
         backend,
         server.local_addr(),
         workers,
         max_batch,
-        max_wait_us
+        max_wait_us,
+        if continuous { "continuous" } else { "timed" },
+        admission.max_connections,
     );
     server.join();
     Ok(())
@@ -487,7 +505,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// percentiles from the telemetry registry.  `--prom` additionally dumps
 /// the Prometheus text exposition of the same frame.
 fn cmd_client(args: &Args) -> Result<()> {
-    use cwy::serve::{fetch_metrics, fetch_stats, metrics_table, run_load, ClientCfg};
+    use cwy::serve::{
+        fetch_metrics, fetch_stats, metrics_table, run_load, run_sessions, ClientCfg,
+        SessionLoadCfg,
+    };
 
     let addr = args.get_or("addr", "127.0.0.1:7070");
     let show_metrics = |addr: &str| -> Result<()> {
@@ -500,6 +521,39 @@ fn cmd_client(args: &Args) -> Result<()> {
     };
     if args.has_flag("stats") {
         return show_metrics(&addr);
+    }
+
+    if args.has_flag("closed-loop") {
+        let defaults = SessionLoadCfg::default();
+        let cfg = SessionLoadCfg {
+            addr,
+            sessions: args.get_usize("sessions", defaults.sessions),
+            rounds: args.get_usize("rounds", defaults.rounds),
+            conns: args.get_usize("conns", defaults.conns),
+            deadline_us: args.get("deadline-us").and_then(|v| v.parse().ok()),
+            use_sessions: !args.has_flag("no-session-state"),
+        };
+        println!(
+            "# cwy client --closed-loop: {} sessions x {} rounds over {} connections -> {}",
+            cfg.sessions, cfg.rounds, cfg.conns, cfg.addr
+        );
+        let report = run_sessions(&cfg)?;
+        print!("{}", report.to_table().to_markdown());
+        let _ = show_metrics(&cfg.addr);
+        if !report.complete() {
+            bail!(
+                "closed-loop invariant violated: sent {} answered {} \
+                 (unanswered {}, duplicates {}, stray {}, conn failures {})",
+                report.sent,
+                report.answered(),
+                report.unanswered,
+                report.duplicates,
+                report.stray,
+                report.conn_failures
+            );
+        }
+        println!("closed-loop OK: every request answered exactly once");
+        return Ok(());
     }
 
     let cfg = ClientCfg {
@@ -672,6 +726,39 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         }
         Some(k) => println!("# bench-check: measured kernel is `{k}`; SIMD ratio gate skipped"),
         None => println!("# bench-check: measured file has no kernel stamp; SIMD gate skipped"),
+    }
+
+    // Continuous-batching acceptance (ISSUE 8): when the closed-loop
+    // serve_load bench ran, its mean occupancy must show real coalescing
+    // (>= 1.5 rows per fused execution at production concurrency) and the
+    // latency tail must be ordered sanely (p99 >= p50 — a crossed tail
+    // means the percentile accounting itself is broken).
+    let occ = measured
+        .path(&["benches", "serve_load", "mean_occupancy_milli"])
+        .as_f64();
+    let p50 = measured.path(&["benches", "serve_load", "closed_loop_p50_ns"]).as_f64();
+    let p99 = measured.path(&["benches", "serve_load", "closed_loop_p99_ns"]).as_f64();
+    match (occ, p50, p99) {
+        (Some(occ), Some(p50), Some(p99)) if occ > 0.0 => {
+            println!(
+                "# bench-check: closed-loop occupancy {:.2} rows/exec, \
+                 p50 {:.0}ns p99 {:.0}ns (target occupancy >= 1.5)",
+                occ / 1000.0,
+                p50,
+                p99
+            );
+            if occ < 1_500.0 {
+                bail!(
+                    "closed-loop mean occupancy {:.2} rows/exec: continuous batching \
+                     is not coalescing (target >= 1.5)",
+                    occ / 1000.0
+                );
+            }
+            if p99 < p50 {
+                bail!("closed-loop p99 ({p99:.0}ns) below p50 ({p50:.0}ns): broken percentiles");
+            }
+        }
+        _ => println!("# bench-check: serve_load not measured; occupancy gate skipped"),
     }
     println!("bench-check OK");
     Ok(())

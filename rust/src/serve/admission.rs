@@ -1,0 +1,186 @@
+//! Typed admission control and overload shedding for the serve front
+//! end (DESIGN.md §6.6): every way the server refuses work is an
+//! explicit [`ShedReason`] mapped to a protocol error code, decided
+//! *before* the request touches the batch queue.
+//!
+//! Admission states, in the order a request meets them:
+//!
+//! 1. **connection** — at `max_connections` the event loop stops polling
+//!    the listener; new dials wait in the kernel backlog instead of
+//!    burning an accept+close round trip.
+//! 2. **frame** — a line longer than `max_line_bytes` (or a write buffer
+//!    past `max_conn_buffer`) closes the connection: the peer is either
+//!    broken or not consuming its responses.
+//! 3. **in-flight** — more than `max_inflight_per_conn` unanswered
+//!    `infer` frames on one socket sheds `overloaded` (per-connection
+//!    fairness: one greedy pipeliner cannot monopolize the queue).
+//! 4. **queue** — the batcher's bounded queue sheds `overloaded`
+//!    (global backpressure), and post-shutdown submits shed
+//!    `unavailable`.
+
+use crate::serve::protocol::ErrCode;
+
+/// Admission limits (`cwy serve` flags map onto these).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionCfg {
+    /// Concurrent sockets the event loop will service.
+    pub max_connections: usize,
+    /// Unanswered `infer` frames allowed per connection.
+    pub max_inflight_per_conn: usize,
+    /// Longest accepted request line, bytes.
+    pub max_line_bytes: usize,
+    /// Write-buffer bytes per connection before it is dropped as a
+    /// non-consuming peer.
+    pub max_conn_buffer: usize,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> AdmissionCfg {
+        AdmissionCfg {
+            max_connections: 10_240,
+            max_inflight_per_conn: 256,
+            max_line_bytes: 1 << 20,
+            max_conn_buffer: 16 << 20,
+        }
+    }
+}
+
+/// Every typed way the front end refuses work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// `max_connections` sockets already open.
+    ConnLimit,
+    /// This connection has `max_inflight_per_conn` unanswered infers.
+    InflightLimit,
+    /// The batch queue is at `queue_cap`.
+    QueueFull,
+    /// The server is draining for shutdown.
+    Shutdown,
+}
+
+impl ShedReason {
+    /// The protocol error code this shed answers with.
+    pub fn err_code(self) -> ErrCode {
+        match self {
+            ShedReason::ConnLimit | ShedReason::InflightLimit | ShedReason::QueueFull => {
+                ErrCode::Overloaded
+            }
+            ShedReason::Shutdown => ErrCode::Unavailable,
+        }
+    }
+
+    pub fn msg(self) -> &'static str {
+        match self {
+            ShedReason::ConnLimit => "connection limit reached",
+            ShedReason::InflightLimit => "per-connection in-flight limit reached",
+            ShedReason::QueueFull => "queue full",
+            ShedReason::Shutdown => "server shutting down",
+        }
+    }
+}
+
+/// Event-loop-owned admission state (single-threaded: plain counters).
+pub struct AdmissionCtl {
+    cfg: AdmissionCfg,
+    conns: usize,
+}
+
+impl AdmissionCtl {
+    pub fn new(cfg: AdmissionCfg) -> AdmissionCtl {
+        AdmissionCtl { cfg, conns: 0 }
+    }
+
+    pub fn cfg(&self) -> &AdmissionCfg {
+        &self.cfg
+    }
+
+    pub fn conns(&self) -> usize {
+        self.conns
+    }
+
+    /// Whether the listener should be polled for new connections.
+    pub fn has_capacity(&self) -> bool {
+        self.conns < self.cfg.max_connections
+    }
+
+    /// Admit one accepted socket.  Returns `false` at the limit (the
+    /// loop should not have polled the listener, but an accept can race
+    /// one tick past the threshold).
+    pub fn try_accept(&mut self) -> bool {
+        if self.conns >= self.cfg.max_connections {
+            return false;
+        }
+        self.conns += 1;
+        true
+    }
+
+    pub fn release(&mut self) {
+        self.conns = self.conns.saturating_sub(1);
+    }
+
+    /// Admission decision for one `infer` frame on a connection that
+    /// already has `inflight` unanswered requests.
+    pub fn check_infer(&self, inflight: usize) -> Option<ShedReason> {
+        if inflight >= self.cfg.max_inflight_per_conn {
+            return Some(ShedReason::InflightLimit);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connection_limit_gates_accepts() {
+        let mut ctl = AdmissionCtl::new(AdmissionCfg {
+            max_connections: 2,
+            ..AdmissionCfg::default()
+        });
+        assert!(ctl.has_capacity());
+        assert!(ctl.try_accept());
+        assert!(ctl.try_accept());
+        assert!(!ctl.has_capacity());
+        assert!(!ctl.try_accept());
+        ctl.release();
+        assert!(ctl.has_capacity());
+        assert!(ctl.try_accept());
+        assert_eq!(ctl.conns(), 2);
+    }
+
+    #[test]
+    fn release_never_underflows() {
+        let mut ctl = AdmissionCtl::new(AdmissionCfg::default());
+        ctl.release();
+        assert_eq!(ctl.conns(), 0);
+    }
+
+    #[test]
+    fn inflight_limit_sheds_overloaded() {
+        let ctl = AdmissionCtl::new(AdmissionCfg {
+            max_inflight_per_conn: 3,
+            ..AdmissionCfg::default()
+        });
+        assert_eq!(ctl.check_infer(0), None);
+        assert_eq!(ctl.check_infer(2), None);
+        assert_eq!(ctl.check_infer(3), Some(ShedReason::InflightLimit));
+        assert_eq!(ctl.check_infer(1000), Some(ShedReason::InflightLimit));
+    }
+
+    #[test]
+    fn shed_taxonomy_maps_to_protocol_codes() {
+        assert_eq!(ShedReason::ConnLimit.err_code(), ErrCode::Overloaded);
+        assert_eq!(ShedReason::InflightLimit.err_code(), ErrCode::Overloaded);
+        assert_eq!(ShedReason::QueueFull.err_code(), ErrCode::Overloaded);
+        assert_eq!(ShedReason::Shutdown.err_code(), ErrCode::Unavailable);
+        for r in [
+            ShedReason::ConnLimit,
+            ShedReason::InflightLimit,
+            ShedReason::QueueFull,
+            ShedReason::Shutdown,
+        ] {
+            assert!(!r.msg().is_empty());
+        }
+    }
+}

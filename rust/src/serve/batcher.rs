@@ -1,35 +1,63 @@
 //! Micro-batching request queue: coalesce up to `max_batch` compatible
-//! requests within `max_wait_us` into one fused execution, with bounded-
-//! queue backpressure and shed-on-deadline (DESIGN.md §6.3).
+//! requests into one fused execution, with bounded-queue backpressure
+//! and shed-on-deadline (DESIGN.md §6.3).
 //!
 //! Split in two layers so the policy is deterministic under test:
 //!
 //! * [`BatchQueue`] — the pure state machine.  Every method takes `now_us`
 //!   explicitly, so unit tests drive it with a fake clock and no threads.
+//!   Requests are bucketed per artifact, so a full group of artifact B is
+//!   dispatchable even while an older artifact-A request is still waiting
+//!   out its window (the pre-PR-8 head-of-line bug).
 //! * [`Batcher`] — the thread-safe wrapper (`Mutex` + `Condvar`) the
-//!   server submits into and worker threads block on.
+//!   server submits into and worker threads block on.  In *continuous*
+//!   mode (the default) an idle worker dispatches whatever is queued
+//!   immediately — batches form from requests that arrive while every
+//!   worker is busy, not from holding work back for `max_wait_us`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::serve::completion::CompletionHub;
 use crate::serve::protocol::{ErrCode, InferRequest, Response};
 use crate::serve::stats::{Clock, ServeStats};
 
-/// A queued request plus its response channel and timing bookkeeping.
+/// Where a finished request's response frames go.
+///
+/// Worker code only ever calls [`Pending::reply`]; the sink decides
+/// whether that lands on a per-thread mpsc channel (tests, in-process
+/// harnesses) or on the event loop's [`CompletionHub`] keyed by
+/// connection id (the `cwy serve` front end).
+#[derive(Clone)]
+pub enum ReplySink {
+    /// Direct channel to a dedicated reader (tests, embedded use).
+    Channel(mpsc::Sender<Response>),
+    /// Completion queue of the serve event loop; `conn` routes the frame
+    /// back to the socket that submitted the request.
+    Loop { conn: u64, hub: Arc<CompletionHub> },
+}
+
+impl From<mpsc::Sender<Response>> for ReplySink {
+    fn from(tx: mpsc::Sender<Response>) -> ReplySink {
+        ReplySink::Channel(tx)
+    }
+}
+
+/// A queued request plus its response sink and timing bookkeeping.
 pub struct Pending {
     pub req: InferRequest,
     pub enqueued_us: u64,
     /// Absolute shed time on the server clock (enqueue + deadline budget).
     pub expiry_us: Option<u64>,
-    tx: mpsc::Sender<Response>,
+    sink: ReplySink,
 }
 
 impl Pending {
-    pub fn new(req: InferRequest, now_us: u64, tx: mpsc::Sender<Response>) -> Pending {
+    pub fn new(req: InferRequest, now_us: u64, sink: impl Into<ReplySink>) -> Pending {
         let expiry_us = req.deadline_us.map(|d| now_us.saturating_add(d));
-        Pending { req, enqueued_us: now_us, expiry_us, tx }
+        Pending { req, enqueued_us: now_us, expiry_us, sink: sink.into() }
     }
 
     pub fn expired(&self, now_us: u64) -> bool {
@@ -38,7 +66,12 @@ impl Pending {
 
     /// Send a response frame; a disconnected client is not an error.
     pub fn reply(&self, resp: Response) {
-        let _ = self.tx.send(resp);
+        match &self.sink {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplySink::Loop { conn, hub } => hub.push(*conn, resp),
+        }
     }
 
     fn deadline_error(&self) -> Response {
@@ -70,32 +103,48 @@ pub enum FlushDecision {
     Idle,
 }
 
-/// Pure micro-batching state machine over a bounded FIFO.
+/// One artifact's FIFO of pending requests.
+struct Group {
+    artifact: String,
+    items: VecDeque<Pending>,
+}
+
+/// Pure micro-batching state machine: a bounded queue bucketed per
+/// artifact.  FIFO order is preserved within a group, and groups are
+/// scanned in creation order so ties break toward the earliest arrival.
 pub struct BatchQueue {
     cap: usize,
-    items: VecDeque<Pending>,
+    groups: Vec<Group>,
 }
 
 impl BatchQueue {
     pub fn new(cap: usize) -> BatchQueue {
-        BatchQueue { cap: cap.max(1), items: VecDeque::new() }
+        BatchQueue { cap: cap.max(1), groups: Vec::new() }
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.groups.iter().map(|g| g.items.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.groups.is_empty()
     }
 
     /// Enqueue, or hand the request back when the queue is full
     /// (backpressure: the caller sheds it with an `overloaded` frame).
     pub fn push(&mut self, p: Pending) -> Result<(), Pending> {
-        if self.items.len() >= self.cap {
+        if self.len() >= self.cap {
             return Err(p);
         }
-        self.items.push_back(p);
+        match self.groups.iter_mut().find(|g| g.artifact == p.req.artifact) {
+            Some(g) => g.items.push_back(p),
+            None => {
+                let artifact = p.req.artifact.clone();
+                let mut items = VecDeque::new();
+                items.push_back(p);
+                self.groups.push(Group { artifact, items });
+            }
+        }
         Ok(())
     }
 
@@ -103,63 +152,87 @@ impl BatchQueue {
     /// preserving the relative order of the survivors.
     pub fn shed_expired(&mut self, now_us: u64) -> Vec<Pending> {
         let mut shed = Vec::new();
-        let mut keep = VecDeque::with_capacity(self.items.len());
-        while let Some(p) = self.items.pop_front() {
-            if p.expired(now_us) {
-                shed.push(p);
-            } else {
-                keep.push_back(p);
+        for g in &mut self.groups {
+            let mut keep = VecDeque::with_capacity(g.items.len());
+            while let Some(p) = g.items.pop_front() {
+                if p.expired(now_us) {
+                    shed.push(p);
+                } else {
+                    keep.push_back(p);
+                }
             }
+            g.items = keep;
         }
-        self.items = keep;
+        self.groups.retain(|g| !g.items.is_empty());
         shed
     }
 
-    /// Decide whether a batch is ready.  Compatible = same artifact as the
-    /// oldest request (they fuse into one execution).
+    /// Index of the group whose head request has waited longest.
+    fn oldest_group(&self) -> Option<usize> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, g) in self.groups.iter().enumerate() {
+            if let Some(p) = g.items.front() {
+                if best.is_none_or(|(_, t)| p.enqueued_us < t) {
+                    best = Some((i, p.enqueued_us));
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Decide whether a batch is ready.  *Any* artifact group reaching
+    /// `max_batch` flushes `Full` — a full group of artifact B must not
+    /// wait behind an aged artifact-A head (the PR-8 HOL fix); otherwise
+    /// the oldest head's wait budget decides `Timeout` vs `WaitUs`.
     pub fn poll(&self, max_batch: usize, max_wait_us: u64, now_us: u64) -> FlushDecision {
-        let Some(front) = self.items.front() else {
+        if self.groups.is_empty() {
             return FlushDecision::Idle;
-        };
-        let group = self
-            .items
-            .iter()
-            .filter(|p| p.req.artifact == front.req.artifact)
-            .count();
-        if group >= max_batch.max(1) {
+        }
+        let max_batch = max_batch.max(1);
+        if self.groups.iter().any(|g| g.items.len() >= max_batch) {
             return FlushDecision::Flush(FlushReason::Full);
         }
-        let waited = now_us.saturating_sub(front.enqueued_us);
+        let oldest = self
+            .groups
+            .iter()
+            .filter_map(|g| g.items.front().map(|p| p.enqueued_us))
+            .min()
+            .unwrap_or(now_us);
+        let waited = now_us.saturating_sub(oldest);
         if waited >= max_wait_us {
             return FlushDecision::Flush(FlushReason::Timeout);
         }
         let mut wait = max_wait_us - waited;
-        for p in &self.items {
-            if let Some(e) = p.expiry_us {
-                wait = wait.min(e.saturating_sub(now_us));
+        for g in &self.groups {
+            for p in &g.items {
+                if let Some(e) = p.expiry_us {
+                    wait = wait.min(e.saturating_sub(now_us));
+                }
             }
         }
         FlushDecision::WaitUs(wait)
     }
 
-    /// Dequeue the next batch: up to `max_batch` requests sharing the
-    /// oldest request's artifact, in FIFO order.  Requests for other
-    /// artifacts keep their relative order for the next flush.
+    /// Dequeue the next batch: up to `max_batch` requests from one
+    /// artifact group, preferring a group that already reached
+    /// `max_batch`, else the one whose head has waited longest.  FIFO
+    /// order is preserved within the group and among the survivors.
     pub fn take_batch(&mut self, max_batch: usize) -> Vec<Pending> {
-        let Some(front) = self.items.front() else {
+        let max_batch = max_batch.max(1);
+        let idx = self
+            .groups
+            .iter()
+            .position(|g| g.items.len() >= max_batch)
+            .or_else(|| self.oldest_group());
+        let Some(idx) = idx else {
             return Vec::new();
         };
-        let artifact = front.req.artifact.clone();
-        let mut batch = Vec::new();
-        let mut rest = VecDeque::with_capacity(self.items.len());
-        while let Some(p) = self.items.pop_front() {
-            if batch.len() < max_batch.max(1) && p.req.artifact == artifact {
-                batch.push(p);
-            } else {
-                rest.push_back(p);
-            }
+        let g = &mut self.groups[idx];
+        let take = g.items.len().min(max_batch);
+        let batch: Vec<Pending> = g.items.drain(..take).collect();
+        if g.items.is_empty() {
+            self.groups.remove(idx);
         }
-        self.items = rest;
         batch
     }
 }
@@ -170,12 +243,26 @@ pub struct BatchCfg {
     pub max_batch: usize,
     pub max_wait_us: u64,
     pub queue_cap: usize,
+    /// Continuous batching: an idle worker dispatches queued work
+    /// immediately instead of waiting out `max_wait_us` for a fuller
+    /// batch.  Occupancy then comes from requests arriving while all
+    /// workers are busy — the production default.  `false` restores the
+    /// timed window (useful to force coalescing in tests/benches).
+    pub continuous: bool,
 }
 
 impl Default for BatchCfg {
     fn default() -> BatchCfg {
-        BatchCfg { max_batch: 8, max_wait_us: 2_000, queue_cap: 1_024 }
+        BatchCfg { max_batch: 8, max_wait_us: 2_000, queue_cap: 1_024, continuous: true }
     }
+}
+
+/// Sleep granted to a timed-mode worker between polls.  The wait from
+/// [`BatchQueue::poll`] is honored exactly (a sub-100µs earliest-expiry
+/// cap must not be inflated, or tight deadlines shed late — the PR-8
+/// clamp fix), bounded to 50ms so shutdown is never far away.
+pub fn flush_wait(us: u64) -> Duration {
+    Duration::from_micros(us.clamp(1, 50_000))
 }
 
 /// Thread-safe micro-batching queue shared by connections and workers.
@@ -206,9 +293,9 @@ impl Batcher {
 
     /// Submit one request.  On a full queue the request is answered
     /// immediately with an `overloaded` error frame and `false` returned.
-    pub fn submit(&self, req: InferRequest, tx: mpsc::Sender<Response>) -> bool {
+    pub fn submit(&self, req: InferRequest, sink: impl Into<ReplySink>) -> bool {
         let now = self.clock.now_us();
-        let pending = Pending::new(req, now, tx);
+        let pending = Pending::new(req, now, sink);
         let mut q = self.queue.lock().unwrap();
         // Checked under the queue lock: shutdown() sets the flag before
         // draining, so a request either lands pre-drain (and is answered
@@ -243,6 +330,22 @@ impl Batcher {
         }
     }
 
+    /// Shed every expired request (deadline frames + stats + gauge) with
+    /// the queue lock held.  Returns how many were shed.
+    fn shed_locked(&self, q: &mut BatchQueue, now_us: u64) -> usize {
+        let shed = q.shed_expired(now_us);
+        if shed.is_empty() {
+            return 0;
+        }
+        crate::telemetry::global().set_queue_depth(q.len() as u64);
+        let n = shed.len();
+        for p in shed {
+            self.stats.record_shed_deadline();
+            p.reply(p.deadline_error());
+        }
+        n
+    }
+
     /// Block until a batch is ready (or shutdown).  Expired requests are
     /// answered with `deadline` error frames as they are discovered.
     pub fn next_batch(&self) -> Option<Vec<Pending>> {
@@ -252,9 +355,18 @@ impl Batcher {
                 return None;
             }
             let now = self.clock.now_us();
-            for p in q.shed_expired(now) {
-                self.stats.record_shed_deadline();
-                p.reply(p.deadline_error());
+            self.shed_locked(&mut q, now);
+            if self.cfg.continuous {
+                // Continuous batching: dispatch whatever is ready the
+                // moment a worker is free.  take_batch prefers a full
+                // group, so a saturated artifact still fuses maximally.
+                if !q.is_empty() {
+                    let batch = q.take_batch(self.cfg.max_batch);
+                    crate::telemetry::global().set_queue_depth(q.len() as u64);
+                    return Some(batch);
+                }
+                q = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+                continue;
             }
             match q.poll(self.cfg.max_batch, self.cfg.max_wait_us, now) {
                 FlushDecision::Flush(_) => {
@@ -263,14 +375,22 @@ impl Batcher {
                     return Some(batch);
                 }
                 FlushDecision::WaitUs(us) => {
-                    let dur = Duration::from_micros(us.clamp(100, 50_000));
-                    q = self.notify.wait_timeout(q, dur).unwrap().0;
+                    q = self.notify.wait_timeout(q, flush_wait(us)).unwrap().0;
                 }
                 FlushDecision::Idle => {
                     q = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
                 }
             }
         }
+    }
+
+    /// Shed expired requests without dispatching — the event loop calls
+    /// this on its tick so deadline frames go out even while every worker
+    /// is busy.  Returns how many were shed.
+    pub fn reap(&self) -> usize {
+        let mut q = self.queue.lock().unwrap();
+        let now = self.clock.now_us();
+        self.shed_locked(&mut q, now)
     }
 
     pub fn depth(&self) -> usize {
@@ -294,6 +414,7 @@ impl Batcher {
                 });
             }
         }
+        crate::telemetry::global().set_queue_depth(q.len() as u64);
         drop(q);
         self.notify.notify_all();
     }
@@ -398,6 +519,25 @@ mod tests {
         q.push(p).ok().unwrap();
         // Flush timeout would be 2000us away, but the deadline is at 500.
         assert_eq!(q.poll(8, 2_000, 0), FlushDecision::WaitUs(500));
+
+        // The clamp path (PR-8 satellite): a sub-100us expiry cap must
+        // survive the worker's sleep conversion exactly — the old
+        // `clamp(100, …)` floor answered these deadlines up to 100us late.
+        let mut q2 = BatchQueue::new(16);
+        let (p2, _rx2) = pend(2, "a", 0, Some(50));
+        q2.push(p2).ok().unwrap();
+        assert_eq!(q2.poll(8, 2_000, 0), FlushDecision::WaitUs(50));
+        assert_eq!(flush_wait(50), Duration::from_micros(50));
+    }
+
+    #[test]
+    fn flush_wait_honors_sub_100us_deadlines() {
+        assert_eq!(flush_wait(50), Duration::from_micros(50));
+        assert_eq!(flush_wait(99), Duration::from_micros(99));
+        // Zero still sleeps one tick (yield), and huge waits are bounded
+        // so shutdown/shed checks come around at least every 50ms.
+        assert_eq!(flush_wait(0), Duration::from_micros(1));
+        assert_eq!(flush_wait(10_000_000), Duration::from_millis(50));
     }
 
     #[test]
@@ -411,6 +551,29 @@ mod tests {
         // without reordering them.
         assert_eq!(ids(&q.take_batch(8)), vec![1, 3, 5]);
         assert_eq!(ids(&q.take_batch(8)), vec![2, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_group_behind_other_artifact_flushes_full() {
+        // The PR-8 HOL regression: one aged artifact-A request at the
+        // head, then a full max_batch group of artifact B.  The pre-PR
+        // poll() only counted the head's group (1 < max_batch) and sat in
+        // WaitUs until A timed out; take_batch() then dispatched [1]
+        // alone.  The group queue flushes B's full batch immediately.
+        let mut q = BatchQueue::new(16);
+        let (p, _rx) = pend(1, "a", 0, None);
+        q.push(p).ok().unwrap();
+        let mut rxs = Vec::new();
+        for id in 2..=5 {
+            let (p, rx) = pend(id, "b", 100, None);
+            q.push(p).ok().unwrap();
+            rxs.push(rx);
+        }
+        assert_eq!(q.poll(4, 10_000, 200), FlushDecision::Flush(FlushReason::Full));
+        assert_eq!(ids(&q.take_batch(4)), vec![2, 3, 4, 5]);
+        // The aged A head is next out, not lost.
+        assert_eq!(ids(&q.take_batch(4)), vec![1]);
         assert!(q.is_empty());
     }
 
@@ -461,7 +624,7 @@ mod tests {
         let clock = Arc::new(Clock::new());
         let stats = Arc::new(ServeStats::new());
         let b = Batcher::new(
-            BatchCfg { max_batch: 2, max_wait_us: 200_000, queue_cap: 8 },
+            BatchCfg { max_batch: 2, max_wait_us: 200_000, queue_cap: 8, continuous: false },
             clock,
             stats.clone(),
         );
@@ -475,5 +638,48 @@ mod tests {
         assert_eq!(stats.snapshot().submitted, 2);
         b.shutdown();
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn continuous_mode_dispatches_partials_immediately() {
+        // max_wait_us is effectively infinite; continuous mode must still
+        // hand a lone request to the idle worker right away.
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let b = Batcher::new(
+            BatchCfg { max_batch: 8, max_wait_us: 10_000_000, queue_cap: 8, continuous: true },
+            clock,
+            stats,
+        );
+        let (tx, _rx) = mpsc::channel();
+        assert!(b.submit(req(1, "a", None), tx));
+        let t0 = std::time::Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(ids(&batch), vec![1]);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "continuous dispatch waited out the window"
+        );
+        b.shutdown();
+    }
+
+    #[test]
+    fn reap_sheds_expired_and_updates_depth() {
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let b = Batcher::new(BatchCfg::default(), clock, stats.clone());
+        let (tx, rx) = mpsc::channel();
+        assert!(b.submit(req(1, "a", Some(1)), tx.clone()));
+        assert!(b.submit(req(2, "a", None), tx));
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.reap(), 1);
+        assert_eq!(b.depth(), 1);
+        match rx.try_recv().unwrap() {
+            Response::Err { id, code, .. } => {
+                assert_eq!((id, code), (1, ErrCode::Deadline));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert_eq!(stats.snapshot().shed_deadline, 1);
     }
 }

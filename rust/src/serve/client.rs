@@ -1,15 +1,25 @@
 //! Closed-loop load generator for `cwy client` and the serve tests.
 //!
-//! Each of `concurrency` threads opens its own connection and keeps one
-//! request in flight (send, wait, repeat).  The server's micro-batcher
-//! coalesces across connections, so client-side latency plus server-side
-//! occupancy together demonstrate the fusing the paper's parametrization
-//! makes cheap.
+//! Two harnesses share the connection/payload plumbing:
+//!
+//! * [`run_load`] — `concurrency` threads, one connection each, one
+//!   request in flight per thread (send, wait, repeat);
+//! * [`run_sessions`] — the production-concurrency harness
+//!   (`cwy client --closed-loop --sessions N`): N logical sessions
+//!   multiplexed over `conns` pipelined connections, each session
+//!   keeping exactly one request in flight for `rounds` rounds, with
+//!   per-(session, round) accounting that proves the every-request-
+//!   answered-exactly-once invariant (zero silent drops, zero dupes).
+//!
+//! The server's micro-batcher coalesces across connections, so
+//! client-side latency plus server-side occupancy together demonstrate
+//! the fusing the paper's parametrization makes cheap.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -137,6 +147,10 @@ impl Conn {
                 return protocol::decode_response(&line);
             }
         }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(d)
     }
 }
 
@@ -321,6 +335,322 @@ pub fn run_load(cfg: &ClientCfg) -> Result<LoadReport> {
     Ok(report)
 }
 
+/// Closed-loop session-harness configuration
+/// (`cwy client --closed-loop` flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct SessionLoadCfg {
+    pub addr: String,
+    /// Concurrent logical sessions, each serially issuing `rounds`
+    /// requests (one in flight per session at all times).
+    pub sessions: usize,
+    pub rounds: usize,
+    /// TCP connections the sessions are multiplexed over (pipelined).
+    pub conns: usize,
+    pub deadline_us: Option<u64>,
+    /// Attach a per-session key to every request, exercising the
+    /// server-side recurrent-state path at full concurrency.
+    pub use_sessions: bool,
+}
+
+impl Default for SessionLoadCfg {
+    fn default() -> SessionLoadCfg {
+        SessionLoadCfg {
+            addr: "127.0.0.1:7070".to_string(),
+            sessions: 1_000,
+            rounds: 3,
+            conns: 64,
+            deadline_us: None,
+            use_sessions: true,
+        }
+    }
+}
+
+/// Request id for (session, round): session+1 in the high bits so id 0 —
+/// the protocol's "unattributable" fallback — never collides with a real
+/// request, and the answer decodes back to its exact (session, round).
+pub fn session_request_id(sess: usize, round: usize) -> u64 {
+    (((sess + 1) as u64) << 16) | round as u64
+}
+
+fn split_session_id(id: u64) -> Option<(usize, usize)> {
+    let sess = (id >> 16) as usize;
+    if sess == 0 {
+        return None;
+    }
+    Some((sess - 1, (id & 0xffff) as usize))
+}
+
+/// Aggregated results of one closed-loop session run.  The acceptance
+/// invariant is [`SessionLoadReport::complete`]: every submitted request
+/// answered exactly once — ok, deadline, overloaded, or unavailable all
+/// count as answers; silent drops, duplicates, and unattributable frames
+/// all fail it.
+#[derive(Clone, Debug, Default)]
+pub struct SessionLoadReport {
+    pub sessions: u64,
+    pub rounds: u64,
+    pub sent: u64,
+    pub ok: u64,
+    pub err_deadline: u64,
+    pub err_overloaded: u64,
+    pub err_unavailable: u64,
+    pub err_other: u64,
+    /// Requests sent but never answered before the harness timed out.
+    pub unanswered: u64,
+    /// Extra answers for a (session, round) already answered.
+    pub duplicates: u64,
+    /// Frames whose id maps to no in-flight (session, round).
+    pub stray: u64,
+    /// Connections that failed to open (their sessions never sent).
+    pub conn_failures: u64,
+    pub wall_s: f64,
+    pub lat_p50_us: u64,
+    pub lat_p95_us: u64,
+    pub lat_p99_us: u64,
+    /// Mean server-side batch occupancy observed in `ok` frames.
+    pub mean_batch: f64,
+}
+
+impl SessionLoadReport {
+    pub fn answered(&self) -> u64 {
+        self.ok + self.err_deadline + self.err_overloaded + self.err_unavailable + self.err_other
+    }
+
+    /// Every sent request answered exactly once, nothing unattributable.
+    pub fn exactly_once(&self) -> bool {
+        self.unanswered == 0
+            && self.duplicates == 0
+            && self.stray == 0
+            && self.answered() == self.sent
+    }
+
+    /// [`exactly_once`](Self::exactly_once) *and* the full schedule went
+    /// out: `sessions * rounds` requests sent on healthy connections.
+    pub fn complete(&self) -> bool {
+        self.exactly_once()
+            && self.conn_failures == 0
+            && self.sent == self.sessions * self.rounds
+    }
+
+    pub fn rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.answered() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]);
+        let rows: Vec<(&str, String)> = vec![
+            ("sessions", self.sessions.to_string()),
+            ("rounds per session", self.rounds.to_string()),
+            ("requests sent", self.sent.to_string()),
+            ("ok", self.ok.to_string()),
+            ("err deadline", self.err_deadline.to_string()),
+            ("err overloaded", self.err_overloaded.to_string()),
+            ("err unavailable", self.err_unavailable.to_string()),
+            ("err other", self.err_other.to_string()),
+            ("unanswered", self.unanswered.to_string()),
+            ("duplicates", self.duplicates.to_string()),
+            ("stray frames", self.stray.to_string()),
+            ("conn failures", self.conn_failures.to_string()),
+            ("wall (s)", format!("{:.3}", self.wall_s)),
+            ("throughput (req/s)", format!("{:.1}", self.rps())),
+            ("latency p50 (us)", self.lat_p50_us.to_string()),
+            ("latency p95 (us)", self.lat_p95_us.to_string()),
+            ("latency p99 (us)", self.lat_p99_us.to_string()),
+            ("mean server batch", format!("{:.2}", self.mean_batch)),
+            ("answered exactly once", self.exactly_once().to_string()),
+        ];
+        for (k, v) in rows {
+            t.row(&[k.to_string(), v]);
+        }
+        t
+    }
+}
+
+#[derive(Default)]
+struct SessionOutcome {
+    sent: u64,
+    ok: u64,
+    err_deadline: u64,
+    err_overloaded: u64,
+    err_unavailable: u64,
+    err_other: u64,
+    unanswered: u64,
+    duplicates: u64,
+    stray: u64,
+    conn_failed: bool,
+    latencies_us: Vec<u64>,
+    batch_sum: u64,
+    batch_n: u64,
+}
+
+fn session_infer(cfg: &SessionLoadCfg, spec: &SpecInfo, sess: usize, round: usize) -> Request {
+    let id = session_request_id(sess, round);
+    Request::Infer(InferRequest {
+        id,
+        artifact: spec.artifact.clone(),
+        session: cfg.use_sessions.then(|| format!("cl-{sess}")),
+        deadline_us: cfg.deadline_us,
+        inputs: payload(spec, id),
+    })
+}
+
+/// One connection's worth of sessions: fire round 0 for every owned
+/// session (pipelined), then advance each session to its next round as
+/// its answer arrives — the closed loop.
+fn run_session_thread(
+    cfg: &SessionLoadCfg,
+    spec: &SpecInfo,
+    thread_idx: usize,
+) -> SessionOutcome {
+    let mut out = SessionOutcome::default();
+    let conns = cfg.conns.max(1);
+    let rounds = cfg.rounds.max(1);
+    let owned: Vec<usize> = (0..cfg.sessions).filter(|s| s % conns == thread_idx).collect();
+    if owned.is_empty() {
+        return out;
+    }
+    let mut conn = match Conn::open(&cfg.addr) {
+        Ok(c) => c,
+        Err(_) => {
+            out.conn_failed = true;
+            return out;
+        }
+    };
+    let _ = conn.set_read_timeout(Some(Duration::from_secs(30)));
+
+    let n = owned.len();
+    let local_of: HashMap<usize, usize> =
+        owned.iter().enumerate().map(|(l, &s)| (s, l)).collect();
+    // answers[local][round]: how many frames answered that request.
+    let mut answers: Vec<Vec<u8>> = vec![vec![0u8; rounds]; n];
+    let mut sent_rounds: Vec<usize> = vec![0; n];
+    let mut send_at: Vec<Instant> = vec![Instant::now(); n];
+    let mut in_flight = 0usize;
+
+    for local in 0..n {
+        let req = session_infer(cfg, spec, owned[local], 0);
+        send_at[local] = Instant::now();
+        if conn.send(&req).is_err() {
+            break;
+        }
+        out.sent += 1;
+        sent_rounds[local] = 1;
+        in_flight += 1;
+    }
+
+    while in_flight > 0 {
+        let resp = match conn.recv() {
+            Ok(r) => r,
+            Err(_) => break, // timeout or closed: the rest is unanswered
+        };
+        let Some((sess, round)) = resp.id().and_then(split_session_id) else {
+            out.stray += 1;
+            continue;
+        };
+        let Some(&local) = local_of.get(&sess) else {
+            out.stray += 1;
+            continue;
+        };
+        if round >= sent_rounds[local] {
+            // An answer for a round this session never sent.
+            out.stray += 1;
+            continue;
+        }
+        answers[local][round] += 1;
+        if answers[local][round] > 1 {
+            out.duplicates += 1;
+            continue;
+        }
+        in_flight -= 1;
+        out.latencies_us.push(send_at[local].elapsed().as_micros() as u64);
+        match &resp {
+            Response::Ok { batch, .. } => {
+                out.ok += 1;
+                out.batch_sum += *batch as u64;
+                out.batch_n += 1;
+            }
+            Response::Err { code, .. } => match code {
+                ErrCode::Deadline => out.err_deadline += 1,
+                ErrCode::Overloaded => out.err_overloaded += 1,
+                ErrCode::Unavailable => out.err_unavailable += 1,
+                _ => out.err_other += 1,
+            },
+            _ => out.err_other += 1,
+        }
+        // Closed loop: any answer (ok or typed shed) advances the session.
+        if sent_rounds[local] < rounds {
+            let next = sent_rounds[local];
+            let req = session_infer(cfg, spec, owned[local], next);
+            send_at[local] = Instant::now();
+            if conn.send(&req).is_err() {
+                break;
+            }
+            out.sent += 1;
+            sent_rounds[local] = next + 1;
+            in_flight += 1;
+        }
+    }
+    out.unanswered += in_flight as u64;
+    out
+}
+
+/// Run the closed-loop session harness: `cfg.sessions` logical sessions
+/// over `cfg.conns` pipelined connections, each issuing `cfg.rounds`
+/// serial requests.  Per-request errors are counted, never fatal; the
+/// caller checks [`SessionLoadReport::complete`] for the zero-silent-
+/// drops invariant.
+pub fn run_sessions(cfg: &SessionLoadCfg) -> Result<SessionLoadReport> {
+    let spec = fetch_spec(&cfg.addr)?;
+    let threads = cfg.conns.max(1);
+
+    let t0 = Instant::now();
+    let outcomes: Vec<SessionOutcome> = thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let cfg = &*cfg;
+            let spec = &spec;
+            handles.push(s.spawn(move || run_session_thread(cfg, spec, w)));
+        }
+        handles.into_iter().map(|h| h.join().expect("session thread")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut report = SessionLoadReport {
+        sessions: cfg.sessions as u64,
+        rounds: cfg.rounds.max(1) as u64,
+        wall_s,
+        ..Default::default()
+    };
+    let mut all_lat: Vec<u64> = Vec::with_capacity(cfg.sessions * cfg.rounds.max(1));
+    let mut batch_sum = 0u64;
+    let mut batch_n = 0u64;
+    for o in outcomes {
+        report.sent += o.sent;
+        report.ok += o.ok;
+        report.err_deadline += o.err_deadline;
+        report.err_overloaded += o.err_overloaded;
+        report.err_unavailable += o.err_unavailable;
+        report.err_other += o.err_other;
+        report.unanswered += o.unanswered;
+        report.duplicates += o.duplicates;
+        report.stray += o.stray;
+        report.conn_failures += u64::from(o.conn_failed);
+        batch_sum += o.batch_sum;
+        batch_n += o.batch_n;
+        all_lat.extend(o.latencies_us);
+    }
+    all_lat.sort_unstable();
+    report.lat_p50_us = exact_percentile(&all_lat, 0.50);
+    report.lat_p95_us = exact_percentile(&all_lat, 0.95);
+    report.lat_p99_us = exact_percentile(&all_lat, 0.99);
+    report.mean_batch = if batch_n > 0 { batch_sum as f64 / batch_n as f64 } else { 0.0 };
+    Ok(report)
+}
+
 /// One ping round-trip; returns the measured latency.
 pub fn ping(addr: &str) -> Result<f64> {
     let mut conn = Conn::open(addr)?;
@@ -485,5 +815,52 @@ mod tests {
         // Missing keys degrade to "-", not panics.
         let empty = metrics_table(&Json::Obj(Default::default())).to_markdown();
         assert!(empty.contains('-'));
+    }
+
+    #[test]
+    fn session_ids_roundtrip_and_never_collide_with_zero() {
+        for sess in [0usize, 1, 41, 9_999, 65_000] {
+            for round in [0usize, 1, 2, 100] {
+                let id = session_request_id(sess, round);
+                assert_ne!(id, 0, "id 0 is the unattributable fallback");
+                assert_eq!(split_session_id(id), Some((sess, round)));
+            }
+        }
+        // id 0 and low raw ids (round-only bits) decode to no session.
+        assert_eq!(split_session_id(0), None);
+        assert_eq!(split_session_id(7), None);
+    }
+
+    #[test]
+    fn session_report_invariants() {
+        let mut r = SessionLoadReport {
+            sessions: 4,
+            rounds: 3,
+            sent: 12,
+            ok: 10,
+            err_deadline: 1,
+            err_overloaded: 1,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(r.answered(), 12);
+        assert!(r.exactly_once());
+        assert!(r.complete());
+        assert!((r.rps() - 6.0).abs() < 1e-9);
+        let md = r.to_table().to_markdown();
+        assert!(md.contains("answered exactly once"));
+        assert!(md.contains("conn failures"));
+
+        // One silent drop breaks the invariant.
+        r.unanswered = 1;
+        assert!(!r.exactly_once());
+        r.unanswered = 0;
+        // A duplicate answer breaks it even with counts balanced.
+        r.duplicates = 1;
+        assert!(!r.exactly_once());
+        r.duplicates = 0;
+        // A failed connection means the schedule never fully went out.
+        r.conn_failures = 1;
+        assert!(r.exactly_once() && !r.complete());
     }
 }

@@ -1,0 +1,117 @@
+//! Completion plumbing between worker threads and the serve event loop.
+//!
+//! Workers finish requests on their own threads; the event loop owns
+//! every socket.  The [`CompletionHub`] is the hand-off point: workers
+//! push `(conn, frame)` pairs and ring the [`Waker`], the loop wakes
+//! from `poll`, drains the queue, and serializes each frame onto the
+//! owning connection's write buffer (DESIGN.md §6.6).
+//!
+//! The waker is one byte down a nonblocking `UnixStream` pair — the
+//! self-pipe trick, with no dependency beyond std.  A full pipe means a
+//! wakeup is already in flight, so `WouldBlock` is success.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+
+use crate::serve::protocol::Response;
+
+/// Cloneable handle that interrupts the event loop's `poll` sleep.
+#[derive(Clone)]
+pub struct Waker {
+    stream: Arc<UnixStream>,
+}
+
+impl Waker {
+    /// Ring the event loop.  Never blocks; a saturated pipe or a closed
+    /// peer (loop already exiting) are both fine to ignore.
+    pub fn wake(&self) {
+        let _ = (&*self.stream).write(&[1u8]);
+    }
+}
+
+/// Build the waker and the read half the event loop polls on.
+pub fn wake_pair() -> io::Result<(Waker, UnixStream)> {
+    let (tx, rx) = UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((Waker { stream: Arc::new(tx) }, rx))
+}
+
+/// Drain every queued wakeup byte so the next `poll` sleeps again.
+pub fn drain_wakeups(rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    loop {
+        match (&*rx).read(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+/// MPSC queue of finished response frames, keyed by connection id.
+pub struct CompletionHub {
+    queue: Mutex<VecDeque<(u64, Response)>>,
+    waker: Waker,
+}
+
+impl CompletionHub {
+    pub fn new(waker: Waker) -> CompletionHub {
+        CompletionHub { queue: Mutex::new(VecDeque::new()), waker }
+    }
+
+    /// Queue one frame for `conn` and ring the loop.
+    pub fn push(&self, conn: u64, resp: Response) {
+        self.queue.lock().unwrap().push_back((conn, resp));
+        self.waker.wake();
+    }
+
+    /// Take everything queued so far (event-loop side).
+    pub fn drain(&self) -> VecDeque<(u64, Response)> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::ErrCode;
+
+    #[test]
+    fn hub_routes_frames_by_connection() {
+        let (waker, rx) = wake_pair().unwrap();
+        let hub = CompletionHub::new(waker);
+        assert!(hub.is_empty());
+        hub.push(3, Response::Pong { id: 1 });
+        hub.push(
+            7,
+            Response::Err { id: 2, code: ErrCode::Overloaded, msg: "q".to_string() },
+        );
+        let drained = hub.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].0, 3);
+        assert_eq!(drained[1].0, 7);
+        assert!(hub.is_empty());
+        // Both pushes rang the waker; draining leaves the pipe empty.
+        drain_wakeups(&rx);
+        let mut buf = [0u8; 8];
+        assert!((&rx).read(&mut buf).is_err(), "pipe should be drained");
+    }
+
+    #[test]
+    fn waker_tolerates_saturation_and_closed_peer() {
+        let (waker, rx) = wake_pair().unwrap();
+        for _ in 0..100_000 {
+            waker.wake(); // fills the pipe; later wakes hit WouldBlock
+        }
+        drain_wakeups(&rx);
+        drop(rx);
+        waker.wake(); // EPIPE after the loop exits — still must not panic
+    }
+}

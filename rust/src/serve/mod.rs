@@ -7,30 +7,38 @@
 //! clients' requests into a single fused artifact execution:
 //!
 //! ```text
-//! TCP clients ── protocol (JSON lines) ── Batcher (coalesce/shed)
-//!                                             │ fused batches
-//!                workers (one Engine each) ◄──┘
+//! TCP clients ── event loop (poll, admission) ── Batcher (coalesce/shed)
+//!                      ▲                              │ fused batches
+//!                CompletionHub ◄── workers (one Engine each)
 //!                   │ stack rows → execute → split rows
 //!                sessions (per-client RNN state)   stats (p50/p95/p99)
 //! ```
 //!
-//! Module map: [`protocol`] wire format · [`batcher`] coalescing queue ·
-//! [`session`] recurrent-state cache · [`worker`] pool + fused execution ·
-//! [`server`] TCP front end · [`client`] load generator · [`stats`]
-//! latency/occupancy accounting.
+//! Module map: [`protocol`] wire format · [`admission`] typed overload
+//! shedding · [`batcher`] coalescing queue (continuous batching) ·
+//! [`completion`] worker→loop reply hub · [`session`] recurrent-state
+//! cache · [`worker`] pool + fused execution · [`server`] nonblocking
+//! event-loop front end · [`client`] load generator + closed-loop
+//! harness · [`stats`] latency/occupancy accounting.
 
+pub mod admission;
 pub mod batcher;
 pub mod client;
+pub mod completion;
 pub mod protocol;
 pub mod server;
 pub mod session;
 pub mod stats;
+mod sys;
 pub mod worker;
 
-pub use batcher::{BatchCfg, Batcher};
+pub use admission::{AdmissionCfg, AdmissionCtl, ShedReason};
+pub use batcher::{BatchCfg, Batcher, ReplySink};
 pub use client::{
-    fetch_metrics, fetch_spec, fetch_stats, metrics_table, ping, run_load, ClientCfg, LoadReport,
+    fetch_metrics, fetch_spec, fetch_stats, metrics_table, ping, run_load, run_sessions,
+    ClientCfg, LoadReport, SessionLoadCfg, SessionLoadReport,
 };
+pub use completion::{CompletionHub, Waker};
 pub use protocol::{ErrCode, InferRequest, Request, Response};
 pub use server::{serve, ServeCfg, Server};
 pub use session::{SessionCfg, SessionStore};

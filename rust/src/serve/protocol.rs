@@ -339,6 +339,32 @@ pub fn decode_response(line: &str) -> Result<Response> {
     }
 }
 
+/// Best-effort `id` recovery from a malformed request line.
+///
+/// A decode failure is still answered with an `err` frame, and a
+/// pipelining client can only match that frame to its request if the id
+/// survives (DESIGN.md §6.1).  The line failed JSON parsing, so this
+/// scans textually: the first `"id"` key followed by `:` and an unsigned
+/// integer wins.  Returns 0 — the documented "unattributable" id, which
+/// no well-formed client request uses — when nothing recoverable is
+/// found.
+pub fn recover_id(line: &str) -> u64 {
+    let mut rest = line;
+    while let Some(at) = rest.find("\"id\"") {
+        let after = &rest[at + 4..];
+        let after = after.trim_start();
+        if let Some(v) = after.strip_prefix(':') {
+            let v = v.trim_start();
+            let end = v.find(|c: char| !c.is_ascii_digit()).unwrap_or(v.len());
+            if let Ok(id) = v[..end].parse::<u64>() {
+                return id;
+            }
+        }
+        rest = &rest[at + 4..];
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,5 +486,22 @@ mod tests {
             let back = tensor_from_json(&parse(&tensor_to_json(&t).dump()).unwrap()).unwrap();
             assert_eq!(back, t);
         }
+    }
+
+    #[test]
+    fn recovers_id_from_malformed_lines() {
+        // The PR-8 satellite: err frames for undecodable lines must carry
+        // the request id whenever it is textually recoverable.
+        assert_eq!(recover_id(r#"{"type":"infer","id":7,"artifact""#), 7);
+        assert_eq!(recover_id(r#"{"id": 42, "type":"bogus"}"#), 42);
+        assert_eq!(recover_id(r#"{"id"   :   9001}"#), 9001);
+        // First recoverable "id" key wins; lookalikes are skipped.
+        assert_eq!(recover_id(r#"{"ids":[1,2],"id":9}"#), 9);
+        assert_eq!(recover_id(r#"{"id":"not-a-number","id":5}"#), 5);
+        // Nothing recoverable falls back to the documented id 0.
+        assert_eq!(recover_id("not json at all"), 0);
+        assert_eq!(recover_id(r#"{"id":"abc"}"#), 0);
+        assert_eq!(recover_id(r#"{"id":-3}"#), 0);
+        assert_eq!(recover_id(""), 0);
     }
 }

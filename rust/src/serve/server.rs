@@ -1,24 +1,37 @@
 //! TCP front end for `cwy serve` (DESIGN.md §6.6).
 //!
-//! One acceptor thread; per connection, a reader thread (decode frames,
-//! feed the batcher) and a writer thread (drain the connection's response
-//! channel back onto the socket).  Worker replies travel through the same
-//! per-connection channel, so a request's response can arrive after the
-//! client has pipelined more requests — frames carry ids for matching.
+//! One event-loop thread drives every client socket through a readiness
+//! `poll`: nonblocking reads feed the frame decoder, decoded `infer`
+//! frames pass admission control into the batcher, and worker replies
+//! come back through the [`CompletionHub`] to be serialized onto the
+//! owning connection's write buffer (with per-connection backpressure).
+//! This replaces the two-threads-per-connection model, so 10k+ sockets
+//! cost one thread plus per-connection buffers, and `stop()` is a waker
+//! byte instead of a throwaway TCP dial (which hung on wildcard binds).
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 
 use anyhow::{Context, Result};
 
-use crate::serve::batcher::{BatchCfg, Batcher};
+use crate::serve::admission::{AdmissionCfg, AdmissionCtl};
+use crate::serve::batcher::{BatchCfg, Batcher, ReplySink};
+use crate::serve::completion::{drain_wakeups, wake_pair, CompletionHub, Waker};
 use crate::serve::protocol::{self, ErrCode, Request, Response};
 use crate::serve::session::{SessionCfg, SessionStore};
 use crate::serve::stats::{Clock, ServeStats, Snapshot};
+use crate::serve::sys::{poll_fds, PollFd, POLLIN, POLLOUT};
 use crate::serve::worker::{ModelFactory, ServeSpec, WorkerPool};
+
+/// Event-loop tick: the longest `poll` sleeps before housekeeping
+/// (deadline reap, session purge) runs even with no socket activity.
+const TICK_MS: i32 = 25;
 
 /// Server configuration (`cwy serve` flags map 1:1 onto these).
 #[derive(Clone, Debug)]
@@ -27,6 +40,7 @@ pub struct ServeCfg {
     pub workers: usize,
     pub batch: BatchCfg,
     pub session: SessionCfg,
+    pub admission: AdmissionCfg,
     /// Learning rate injected into hyper inputs of step artifacts; 0.0
     /// serves without moving the resident parameters.
     pub lr: f32,
@@ -39,8 +53,380 @@ impl Default for ServeCfg {
             workers: 2,
             batch: BatchCfg::default(),
             session: SessionCfg::default(),
+            admission: AdmissionCfg::default(),
             lr: 0.0,
         }
+    }
+}
+
+/// One client socket owned by the event loop.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet terminated by `\n`.
+    rbuf: Vec<u8>,
+    /// Frames serialized but not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// How many of `wbuf`'s bytes are already written.
+    wpos: usize,
+    /// Unanswered `infer` frames submitted on this connection.
+    inflight: usize,
+    /// Peer sent EOF (or a fatal frame): stop reading, finish writes.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn { stream, rbuf: Vec::new(), wbuf: Vec::new(), wpos: 0, inflight: 0, closing: false }
+    }
+
+    fn queue_frame(&mut self, resp: &Response) {
+        self.wbuf.extend_from_slice(protocol::encode_response(resp).as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// Write as much of the buffer as the socket accepts right now.
+    /// `Ok(())` on progress or `WouldBlock`; `Err` means the peer is gone.
+    fn flush(&mut self) -> io::Result<()> {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 64 * 1024 {
+            // Compact so a slow reader does not pin the written prefix.
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        Ok(())
+    }
+
+    /// Pending (unwritten) output bytes.
+    fn backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Split complete lines out of the read buffer.
+    fn drain_lines(&mut self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while let Some(pos) = self.rbuf[start..].iter().position(|&b| b == b'\n') {
+            let end = start + pos;
+            out.push(String::from_utf8_lossy(&self.rbuf[start..end]).into_owned());
+            start = end + 1;
+        }
+        self.rbuf.drain(..start);
+        out
+    }
+}
+
+/// The single-threaded readiness loop: listener + waker + every client
+/// socket through one `poll`, admission ahead of the queue, completions
+/// fanned back in from the worker pool.
+struct EventLoop {
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    hub: Arc<CompletionHub>,
+    conns: HashMap<u64, Conn>,
+    next_conn: u64,
+    admission: AdmissionCtl,
+    batcher: Arc<Batcher>,
+    sessions: Arc<SessionStore>,
+    stats: Arc<ServeStats>,
+    clock: Arc<Clock>,
+    spec: ServeSpec,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut slots: Vec<u64> = Vec::new();
+        let mut scratch = vec![0u8; 64 * 1024];
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                self.final_drain();
+                return;
+            }
+            fds.clear();
+            slots.clear();
+            fds.push(PollFd::new(self.wake_rx.as_raw_fd(), POLLIN));
+            let listener_slot = if self.admission.has_capacity() {
+                fds.push(PollFd::new(self.listener.as_raw_fd(), POLLIN));
+                Some(fds.len() - 1)
+            } else {
+                None
+            };
+            let conn_base = fds.len();
+            for (&id, conn) in &self.conns {
+                let mut events = 0i16;
+                if !conn.closing {
+                    events |= POLLIN;
+                }
+                if conn.wants_write() {
+                    events |= POLLOUT;
+                }
+                fds.push(PollFd::new(conn.stream.as_raw_fd(), events));
+                slots.push(id);
+            }
+            let n = match poll_fds(&mut fds, TICK_MS) {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("serve: poll failed: {e}");
+                    self.final_drain();
+                    return;
+                }
+            };
+
+            let span = if n > 0 { Some(crate::span!(event_loop)) } else { None };
+            if fds[0].readable() {
+                drain_wakeups(&self.wake_rx);
+            }
+            if listener_slot.is_some_and(|s| fds[s].readable()) {
+                self.accept_ready();
+            }
+            for (i, &id) in slots.iter().enumerate() {
+                let pfd = fds[conn_base + i];
+                if pfd.error() {
+                    self.close_conn(id);
+                    continue;
+                }
+                if pfd.readable() {
+                    self.read_ready(id, &mut scratch);
+                }
+                if pfd.writable() {
+                    if let Some(conn) = self.conns.get_mut(&id) {
+                        if conn.flush().is_err() {
+                            self.close_conn(id);
+                        }
+                    }
+                }
+            }
+            self.drain_completions();
+            self.batcher.reap();
+            self.sessions.purge(self.clock.now_us());
+            self.sweep();
+            drop(span);
+        }
+    }
+
+    /// Accept until the listener runs dry or admission closes the gate.
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if !self.admission.try_accept() {
+                        // Raced one tick past the limit; the listener
+                        // stops being polled until a slot frees up.
+                        drop(stream);
+                        return;
+                    }
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let id = self.next_conn;
+                    self.next_conn += 1;
+                    self.conns.insert(id, Conn::new(stream));
+                    self.stats.record_conn_open();
+                    crate::telemetry::global().set_connections(self.conns.len() as u64);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("serve: accept failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Nonblocking read + frame decode for one connection.
+    fn read_ready(&mut self, id: u64, scratch: &mut [u8]) {
+        let mut eof = false;
+        let mut dead = false;
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        loop {
+            match conn.stream.read(scratch) {
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(n) => conn.rbuf.extend_from_slice(&scratch[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        if dead {
+            self.close_conn(id);
+            return;
+        }
+        let lines = conn.drain_lines();
+        let oversized = conn.rbuf.len() > self.admission.cfg().max_line_bytes;
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            self.handle_line(id, &line);
+        }
+        if oversized {
+            // The partial line already exceeds the frame limit: answer
+            // once and stop reading — the peer is broken or hostile.
+            self.stats.record_bad_request();
+            self.queue_to(
+                id,
+                Response::Err {
+                    id: 0,
+                    code: ErrCode::BadRequest,
+                    msg: "request line exceeds max_line_bytes".to_string(),
+                },
+            );
+            if let Some(conn) = self.conns.get_mut(&id) {
+                conn.rbuf.clear();
+                conn.closing = true;
+            }
+        }
+        if eof {
+            if let Some(conn) = self.conns.get_mut(&id) {
+                conn.closing = true;
+            }
+        }
+    }
+
+    /// Decode and dispatch one frame from connection `id`.
+    fn handle_line(&mut self, id: u64, line: &str) {
+        match protocol::decode_request(line) {
+            Ok(Request::Infer(req)) => {
+                let inflight = self.conns.get(&id).map_or(0, |c| c.inflight);
+                if let Some(reason) = self.admission.check_infer(inflight) {
+                    self.stats.record_rejected_inflight();
+                    self.queue_to(
+                        id,
+                        Response::Err {
+                            id: req.id,
+                            code: reason.err_code(),
+                            msg: reason.msg().to_string(),
+                        },
+                    );
+                    return;
+                }
+                if let Some(conn) = self.conns.get_mut(&id) {
+                    conn.inflight += 1;
+                }
+                // submit() answers overloaded/unavailable through the
+                // sink, so every admitted infer yields exactly one
+                // completion (which decrements `inflight`).
+                self.batcher
+                    .submit(req, ReplySink::Loop { conn: id, hub: self.hub.clone() });
+            }
+            Ok(Request::Ping { id: rid }) => self.queue_to(id, Response::Pong { id: rid }),
+            Ok(Request::Spec) => {
+                let frame = Response::Spec(self.spec.to_json());
+                self.queue_to(id, frame);
+            }
+            Ok(Request::Stats) => {
+                let frame = Response::Stats(self.stats.snapshot().to_json());
+                self.queue_to(id, frame);
+            }
+            Ok(Request::Metrics) => {
+                let frame = Response::Metrics(self.stats.metrics_json());
+                self.queue_to(id, frame);
+            }
+            Err(e) => {
+                // Best-effort id recovery (DESIGN.md §6.1): a pipelining
+                // client can only match the error frame to its request if
+                // the id survives the malformed line.
+                self.stats.record_bad_request();
+                self.queue_to(
+                    id,
+                    Response::Err {
+                        id: protocol::recover_id(line),
+                        code: ErrCode::BadRequest,
+                        msg: format!("{e:#}"),
+                    },
+                );
+            }
+        }
+    }
+
+    fn queue_to(&mut self, id: u64, resp: Response) {
+        if let Some(conn) = self.conns.get_mut(&id) {
+            conn.queue_frame(&resp);
+        }
+    }
+
+    /// Route finished worker replies back onto their connections.
+    fn drain_completions(&mut self) {
+        for (conn_id, resp) in self.hub.drain() {
+            if let Some(conn) = self.conns.get_mut(&conn_id) {
+                conn.inflight = conn.inflight.saturating_sub(1);
+                conn.queue_frame(&resp);
+            }
+            // A closed connection drops its late replies on the floor —
+            // there is no socket left to answer on.
+        }
+    }
+
+    /// Opportunistic flush + overflow/close bookkeeping for every
+    /// connection that has pending output or a finished lifecycle.
+    fn sweep(&mut self) {
+        let mut to_close: Vec<u64> = Vec::new();
+        let max_buf = self.admission.cfg().max_conn_buffer;
+        for (&id, conn) in &mut self.conns {
+            if conn.wants_write() && conn.flush().is_err() {
+                to_close.push(id);
+                continue;
+            }
+            if conn.backlog() > max_buf {
+                // The peer is not consuming responses; shed the socket
+                // rather than buffer without bound.
+                self.stats.record_conn_overflow();
+                to_close.push(id);
+                continue;
+            }
+            if conn.closing && !conn.wants_write() && conn.inflight == 0 {
+                to_close.push(id);
+            }
+        }
+        for id in to_close {
+            self.close_conn(id);
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if self.conns.remove(&id).is_some() {
+            self.admission.release();
+            self.stats.record_conn_close();
+            crate::telemetry::global().set_connections(self.conns.len() as u64);
+        }
+    }
+
+    /// Shutdown path: flush what the sockets will take right now (the
+    /// batcher drain queued `unavailable` frames), then drop everything.
+    fn final_drain(&mut self) {
+        self.drain_completions();
+        for conn in self.conns.values_mut() {
+            let _ = conn.flush();
+        }
+        let n = self.conns.len();
+        for _ in 0..n {
+            self.stats.record_conn_close();
+        }
+        self.admission = AdmissionCtl::new(*self.admission.cfg());
+        self.conns.clear();
+        crate::telemetry::global().set_connections(0);
     }
 }
 
@@ -50,11 +436,12 @@ pub struct Server {
     stats: Arc<ServeStats>,
     batcher: Arc<Batcher>,
     shutdown: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
+    waker: Waker,
+    event_loop: Option<JoinHandle<()>>,
     pool: Option<WorkerPool>,
 }
 
-/// Bind, spawn the worker pool and acceptor, and return immediately.
+/// Bind, spawn the worker pool and event loop, and return immediately.
 ///
 /// `factory` is invoked once on the calling thread to probe the served
 /// signature, then once per worker thread (each worker owns its model —
@@ -62,6 +449,7 @@ pub struct Server {
 pub fn serve(cfg: ServeCfg, factory: Arc<ModelFactory>) -> Result<Server> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
+    listener.set_nonblocking(true).context("listener nonblocking")?;
     let addr = listener.local_addr().context("reading bound address")?;
 
     let clock = Arc::new(Clock::new());
@@ -74,35 +462,34 @@ pub fn serve(cfg: ServeCfg, factory: Arc<ModelFactory>) -> Result<Server> {
         cfg.workers,
         factory,
         batcher.clone(),
-        sessions,
+        sessions.clone(),
         stats.clone(),
         clock.clone(),
         cfg.lr,
     );
 
+    let (waker, wake_rx) = wake_pair().context("creating event-loop waker")?;
+    let hub = Arc::new(CompletionHub::new(waker.clone()));
     let shutdown = Arc::new(AtomicBool::new(false));
-    let acceptor = {
-        let shutdown = shutdown.clone();
-        let batcher = batcher.clone();
-        let stats = stats.clone();
+    let event_loop = {
+        let ev = EventLoop {
+            listener,
+            wake_rx,
+            hub,
+            conns: HashMap::new(),
+            next_conn: 1,
+            admission: AdmissionCtl::new(cfg.admission),
+            batcher: batcher.clone(),
+            sessions,
+            stats: stats.clone(),
+            clock,
+            spec,
+            shutdown: shutdown.clone(),
+        };
         thread::Builder::new()
-            .name("cwy-serve-accept".to_string())
-            .spawn(move || {
-                for stream in listener.incoming() {
-                    if shutdown.load(Ordering::Acquire) {
-                        break;
-                    }
-                    match stream {
-                        Ok(s) => {
-                            spawn_connection(s, batcher.clone(), stats.clone(), spec.clone());
-                        }
-                        Err(e) => {
-                            eprintln!("serve: accept failed: {e}");
-                        }
-                    }
-                }
-            })
-            .expect("spawning acceptor thread")
+            .name("cwy-serve-loop".to_string())
+            .spawn(move || ev.run())
+            .expect("spawning event-loop thread")
     };
 
     Ok(Server {
@@ -110,88 +497,10 @@ pub fn serve(cfg: ServeCfg, factory: Arc<ModelFactory>) -> Result<Server> {
         stats,
         batcher,
         shutdown,
-        acceptor: Some(acceptor),
+        waker,
+        event_loop: Some(event_loop),
         pool: Some(pool),
     })
-}
-
-fn spawn_connection(
-    stream: TcpStream,
-    batcher: Arc<Batcher>,
-    stats: Arc<ServeStats>,
-    spec: ServeSpec,
-) {
-    let _ = stream.set_nodelay(true);
-    let write_half = match stream.try_clone() {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("serve: cloning connection failed: {e}");
-            return;
-        }
-    };
-    let (tx, rx) = mpsc::channel::<Response>();
-
-    // Writer: drains until every sender (reader + in-flight requests) is
-    // gone, so responses still land after the client stops sending.
-    let writer = thread::Builder::new().name("cwy-serve-write".to_string()).spawn(move || {
-        let mut out = write_half;
-        for resp in rx {
-            let line = protocol::encode_response(&resp);
-            if out.write_all(line.as_bytes()).is_err()
-                || out.write_all(b"\n").is_err()
-                || out.flush().is_err()
-            {
-                break;
-            }
-        }
-    });
-    if writer.is_err() {
-        eprintln!("serve: spawning writer thread failed");
-        return;
-    }
-
-    let reader = thread::Builder::new().name("cwy-serve-read".to_string()).spawn(move || {
-        let buf = BufReader::new(stream);
-        for line in buf.lines() {
-            let line = match line {
-                Ok(l) => l,
-                Err(_) => break,
-            };
-            if line.trim().is_empty() {
-                continue;
-            }
-            match protocol::decode_request(&line) {
-                Ok(Request::Infer(req)) => {
-                    // submit() answers overloaded/deadline internally.
-                    batcher.submit(req, tx.clone());
-                }
-                Ok(Request::Ping { id }) => {
-                    let _ = tx.send(Response::Pong { id });
-                }
-                Ok(Request::Spec) => {
-                    let _ = tx.send(Response::Spec(spec.to_json()));
-                }
-                Ok(Request::Stats) => {
-                    let _ = tx.send(Response::Stats(stats.snapshot().to_json()));
-                }
-                Ok(Request::Metrics) => {
-                    let _ = tx.send(Response::Metrics(stats.metrics_json()));
-                }
-                Err(e) => {
-                    stats.record_bad_request();
-                    let _ = tx.send(Response::Err {
-                        id: 0,
-                        code: ErrCode::BadRequest,
-                        msg: format!("{e:#}"),
-                    });
-                }
-            }
-        }
-        // tx drops here; the writer exits once in-flight replies land.
-    });
-    if reader.is_err() {
-        eprintln!("serve: spawning reader thread failed");
-    }
 }
 
 impl Server {
@@ -207,9 +516,9 @@ impl Server {
         self.batcher.depth()
     }
 
-    /// Block on the acceptor (the `cwy serve` foreground mode).
+    /// Block on the event loop (the `cwy serve` foreground mode).
     pub fn join(mut self) {
-        if let Some(h) = self.acceptor.take() {
+        if let Some(h) = self.event_loop.take() {
             let _ = h.join();
         }
         if let Some(p) = self.pool.take() {
@@ -217,15 +526,14 @@ impl Server {
         }
     }
 
-    /// Graceful-enough stop for tests and embedders: stop accepting,
-    /// shed the queue, and join the worker pool.  Existing connection
-    /// threads exit as their clients disconnect.
+    /// Graceful-enough stop for tests and embedders: shed the queue,
+    /// wake the event loop (works for wildcard binds — no TCP dial),
+    /// and join the loop and worker pool.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Release);
         self.batcher.shutdown();
-        // Unblock the acceptor with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.acceptor.take() {
+        self.waker.wake();
+        if let Some(h) = self.event_loop.take() {
             let _ = h.join();
         }
         if let Some(p) = self.pool.take() {

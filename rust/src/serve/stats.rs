@@ -25,7 +25,11 @@ struct Inner {
     exec_errors: u64,
     shed_deadline: u64,
     rejected_full: u64,
+    rejected_inflight: u64,
     bad_requests: u64,
+    conns_accepted: u64,
+    conns_closed: u64,
+    conn_overflow: u64,
     batches: u64,
     /// occupancy[b] = number of batches that fused exactly `b+1` requests.
     occupancy: Vec<u64>,
@@ -60,8 +64,27 @@ impl ServeStats {
         self.inner.lock().unwrap().shed_deadline += 1;
     }
 
+    /// Shed before the queue: the per-connection in-flight cap.
+    pub fn record_rejected_inflight(&self) {
+        self.inner.lock().unwrap().rejected_inflight += 1;
+    }
+
     pub fn record_bad_request(&self) {
         self.inner.lock().unwrap().bad_requests += 1;
+    }
+
+    pub fn record_conn_open(&self) {
+        self.inner.lock().unwrap().conns_accepted += 1;
+    }
+
+    pub fn record_conn_close(&self) {
+        self.inner.lock().unwrap().conns_closed += 1;
+    }
+
+    /// A connection dropped for not consuming its responses (write
+    /// buffer grew past `max_conn_buffer`).
+    pub fn record_conn_overflow(&self) {
+        self.inner.lock().unwrap().conn_overflow += 1;
     }
 
     /// One fused execution: `occupancy` requests coalesced, per-request
@@ -108,7 +131,11 @@ impl ServeStats {
             exec_errors: g.exec_errors,
             shed_deadline: g.shed_deadline,
             rejected_full: g.rejected_full,
+            rejected_inflight: g.rejected_inflight,
             bad_requests: g.bad_requests,
+            conns_accepted: g.conns_accepted,
+            conns_closed: g.conns_closed,
+            conn_overflow: g.conn_overflow,
             batches: g.batches,
             occupancy: g.occupancy.clone(),
             mean_occupancy: if g.batches == 0 {
@@ -149,7 +176,11 @@ pub struct Snapshot {
     pub exec_errors: u64,
     pub shed_deadline: u64,
     pub rejected_full: u64,
+    pub rejected_inflight: u64,
     pub bad_requests: u64,
+    pub conns_accepted: u64,
+    pub conns_closed: u64,
+    pub conn_overflow: u64,
     pub batches: u64,
     pub occupancy: Vec<u64>,
     pub mean_occupancy: f64,
@@ -185,7 +216,11 @@ impl Snapshot {
             ("exec errors", self.exec_errors.to_string()),
             ("shed (deadline)", self.shed_deadline.to_string()),
             ("rejected (queue full)", self.rejected_full.to_string()),
+            ("rejected (in-flight cap)", self.rejected_inflight.to_string()),
             ("bad requests", self.bad_requests.to_string()),
+            ("connections accepted", self.conns_accepted.to_string()),
+            ("connections closed", self.conns_closed.to_string()),
+            ("connections dropped (overflow)", self.conn_overflow.to_string()),
             ("fused batches", self.batches.to_string()),
             ("mean batch occupancy", format!("{:.2}", self.mean_occupancy)),
             ("max batch occupancy", self.max_occupancy().to_string()),
@@ -217,7 +252,11 @@ impl Snapshot {
         num("exec_errors", self.exec_errors as f64, &mut m);
         num("shed_deadline", self.shed_deadline as f64, &mut m);
         num("rejected_full", self.rejected_full as f64, &mut m);
+        num("rejected_inflight", self.rejected_inflight as f64, &mut m);
         num("bad_requests", self.bad_requests as f64, &mut m);
+        num("conns_accepted", self.conns_accepted as f64, &mut m);
+        num("conns_closed", self.conns_closed as f64, &mut m);
+        num("conn_overflow", self.conn_overflow as f64, &mut m);
         num("batches", self.batches as f64, &mut m);
         num("mean_occupancy", self.mean_occupancy, &mut m);
         num("max_occupancy", self.max_occupancy() as f64, &mut m);
@@ -298,6 +337,25 @@ mod tests {
         let j = snap.to_json();
         assert_eq!(j.path(&["completed"]).as_f64(), Some(1.0));
         assert_eq!(j.path(&["latency_p999_us"]).as_f64(), Some(511.0));
+    }
+
+    #[test]
+    fn connection_and_admission_counters() {
+        let s = ServeStats::new();
+        s.record_conn_open();
+        s.record_conn_open();
+        s.record_conn_close();
+        s.record_conn_overflow();
+        s.record_rejected_inflight();
+        let snap = s.snapshot();
+        assert_eq!(snap.conns_accepted, 2);
+        assert_eq!(snap.conns_closed, 1);
+        assert_eq!(snap.conn_overflow, 1);
+        assert_eq!(snap.rejected_inflight, 1);
+        let j = snap.to_json();
+        assert_eq!(j.path(&["conns_accepted"]).as_f64(), Some(2.0));
+        assert_eq!(j.path(&["rejected_inflight"]).as_f64(), Some(1.0));
+        assert!(snap.to_table().to_markdown().contains("in-flight cap"));
     }
 
     #[test]

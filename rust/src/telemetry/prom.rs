@@ -86,6 +86,7 @@ pub fn registry_json_of(reg: &Registry) -> Json {
             "gauges",
             obj(vec![
                 ("queue_depth", num(reg.queue_depth() as f64)),
+                ("connections", num(reg.connections() as f64)),
                 ("kernel_dispatch", num(reg.kernel_dispatch() as f64)),
                 // String label alongside the numeric code; skipped by the
                 // Prometheus renderer (gauges must be numeric) but shown
@@ -182,6 +183,7 @@ mod tests {
         assert_eq!(j.path(&["phases", "execute_us", "count"]).as_f64(), Some(1.0));
         assert_eq!(j.path(&["phases", "queue_wait_us", "p999"]).as_f64(), Some(15.0));
         assert!(j.path(&["gauges", "queue_depth"]).as_f64().is_some());
+        assert!(j.path(&["gauges", "connections"]).as_f64().is_some());
         assert!(j.path(&["gauges", "kernel_dispatch"]).as_f64().is_some());
         assert!(matches!(j.path(&["gauges", "kernel"]), Json::Str(_)));
         // Serde-free round trip: the frame must survive the wire.
@@ -194,9 +196,11 @@ mod tests {
         let r = Registry::new();
         r.record_span(SpanId::BpttBackward, 5_000);
         r.set_queue_depth(3);
+        r.set_connections(17);
         let text = render_prometheus(&registry_json_of(&r));
         assert!(text.contains("cwy_span_calls_total{span=\"bptt_backward\"} 1"));
         assert!(text.contains("cwy_queue_depth 3"));
+        assert!(text.contains("cwy_connections 17"));
         assert!(text.contains("# TYPE cwy_kernel_dispatch gauge"));
         // The string label must NOT leak into the numeric exposition.
         assert!(!text.contains("cwy_kernel "));

@@ -30,9 +30,11 @@ pub enum SpanId {
     BatchAssemble = 7,
     Execute = 8,
     WriteBack = 9,
+    /// One non-idle iteration of the serve front end's readiness loop.
+    EventLoop = 10,
 }
 
-pub const SPAN_COUNT: usize = 10;
+pub const SPAN_COUNT: usize = 11;
 
 /// The four GEMM transpose variants lead the [`SpanId`] numbering, so a
 /// span index below this doubles as a FLOP-counter index.
@@ -50,6 +52,7 @@ impl SpanId {
         SpanId::BatchAssemble,
         SpanId::Execute,
         SpanId::WriteBack,
+        SpanId::EventLoop,
     ];
 
     pub fn name(self) -> &'static str {
@@ -64,6 +67,7 @@ impl SpanId {
             SpanId::BatchAssemble => "batch_assemble",
             SpanId::Execute => "execute",
             SpanId::WriteBack => "write_back",
+            SpanId::EventLoop => "event_loop",
         }
     }
 
@@ -78,6 +82,7 @@ impl SpanId {
             SpanId::BatchAssemble => Some(HistId::BatchAssembleUs),
             SpanId::Execute => Some(HistId::ExecuteUs),
             SpanId::WriteBack => Some(HistId::WriteBackUs),
+            SpanId::EventLoop => Some(HistId::LoopIterUs),
             _ => None,
         }
     }
@@ -90,9 +95,10 @@ pub enum HistId {
     BatchAssembleUs = 1,
     ExecuteUs = 2,
     WriteBackUs = 3,
+    LoopIterUs = 4,
 }
 
-pub const HIST_COUNT: usize = 4;
+pub const HIST_COUNT: usize = 5;
 
 impl HistId {
     pub const ALL: [HistId; HIST_COUNT] = [
@@ -100,6 +106,7 @@ impl HistId {
         HistId::BatchAssembleUs,
         HistId::ExecuteUs,
         HistId::WriteBackUs,
+        HistId::LoopIterUs,
     ];
 
     pub fn name(self) -> &'static str {
@@ -108,6 +115,7 @@ impl HistId {
             HistId::BatchAssembleUs => "batch_assemble_us",
             HistId::ExecuteUs => "execute_us",
             HistId::WriteBackUs => "write_back_us",
+            HistId::LoopIterUs => "loop_iter_us",
         }
     }
 }
@@ -147,6 +155,8 @@ pub struct Registry {
     spans: [SpanStat; SPAN_COUNT],
     gemm_flops: [AtomicU64; GEMM_VARIANTS],
     queue_depth: AtomicU64,
+    /// Sockets currently owned by the serve event loop.
+    connections: AtomicU64,
     /// Which GEMM/reduction microkernel the one-time dispatch selected
     /// ([`KERNEL_UNDETECTED`] until `linalg::gemm::active_kernel` runs).
     kernel_dispatch: AtomicU64,
@@ -172,6 +182,7 @@ impl Registry {
             spans: [STAT; SPAN_COUNT],
             gemm_flops: [ZERO; GEMM_VARIANTS],
             queue_depth: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
             kernel_dispatch: AtomicU64::new(KERNEL_UNDETECTED),
             hists: [HIST; HIST_COUNT],
         }
@@ -209,6 +220,14 @@ impl Registry {
 
     pub fn queue_depth(&self) -> u64 {
         self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn set_connections(&self, n: u64) {
+        self.connections.store(n, Ordering::Relaxed);
+    }
+
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
     }
 
     /// Published once by `linalg::gemm::active_kernel` when the process
@@ -282,6 +301,17 @@ mod tests {
         assert_eq!(r.hist(HistId::ExecuteUs).percentile(1.0), 4_095);
         r.record_queue_wait(7);
         assert_eq!(r.hist(HistId::QueueWaitUs).count(), 1);
+    }
+
+    #[test]
+    fn event_loop_span_and_connection_gauge() {
+        let r = Registry::new();
+        r.record_span(SpanId::EventLoop, 2_000_000); // 2 ms
+        assert_eq!(r.span_calls(SpanId::EventLoop), 1);
+        assert_eq!(r.hist(HistId::LoopIterUs).count(), 1);
+        assert_eq!(r.connections(), 0);
+        r.set_connections(128);
+        assert_eq!(r.connections(), 128);
     }
 
     #[test]

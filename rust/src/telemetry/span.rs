@@ -115,6 +115,9 @@ macro_rules! span {
     (write_back) => {
         $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::WriteBack)
     };
+    (event_loop) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::EventLoop)
+    };
 }
 
 /// One exported trace event (a closed span).

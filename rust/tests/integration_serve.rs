@@ -13,9 +13,9 @@ use std::sync::Arc;
 
 use cwy::runtime::{Dtype, HostTensor};
 use cwy::serve::{
-    fetch_spec, fetch_stats, ping, protocol, run_load, serve, BatchCfg, ClientCfg, ErrCode,
-    FakeModel, InferRequest, ModelFactory, Request, Response, ServeCfg, ServeModel, Server,
-    SessionCfg,
+    fetch_spec, fetch_stats, ping, protocol, run_load, run_sessions, serve, AdmissionCfg,
+    BatchCfg, ClientCfg, ErrCode, FakeModel, InferRequest, ModelFactory, Request, Response,
+    ServeCfg, ServeModel, Server, SessionCfg, SessionLoadCfg,
 };
 
 fn start_server(
@@ -32,8 +32,11 @@ fn start_server(
         ServeCfg {
             addr: "127.0.0.1:0".to_string(),
             workers,
-            batch: BatchCfg { max_batch, max_wait_us, queue_cap },
+            // Timed batching: these tests predate continuous mode and
+            // assert its window semantics (max_wait-driven coalescing).
+            batch: BatchCfg { max_batch, max_wait_us, queue_cap, continuous: false },
             session: SessionCfg::default(),
+            admission: AdmissionCfg::default(),
             lr: 0.0,
         },
         factory,
@@ -234,6 +237,142 @@ fn malformed_lines_get_error_frames_not_disconnects() {
     server.stop();
 }
 
+#[test]
+fn malformed_lines_answer_with_the_recovered_id() {
+    // PR-8 satellite: a frame that fails to decode but still carries a
+    // readable `"id"` must be answered under that id, not id 0 — the
+    // client can then attribute the failure to the request it sent.
+    let server = start_server(1, 4, 200, 0, 64);
+    let addr = server.local_addr().to_string();
+    let mut conn = RawConn::open(&addr);
+    conn.writer
+        .write_all(b"{\"type\":\"infer\",\"id\":1234,\"artifact\":42}\n")
+        .unwrap();
+    conn.writer.flush().unwrap();
+    match conn.recv() {
+        Response::Err { id, code, .. } => {
+            assert_eq!(code, ErrCode::BadRequest);
+            assert_eq!(id, 1234, "bad-request frames must carry the recovered id");
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+    // Truly unattributable garbage still falls back to id 0.
+    conn.writer.write_all(b"garbage with no id at all\n").unwrap();
+    conn.writer.flush().unwrap();
+    match conn.recv() {
+        Response::Err { id, code, .. } => {
+            assert_eq!(code, ErrCode::BadRequest);
+            assert_eq!(id, 0);
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+    server.stop();
+}
+
+#[test]
+fn stop_returns_promptly_on_a_wildcard_bind() {
+    // PR-8 satellite: `Server::stop` used to dial self.addr to unstick
+    // the accept loop — which fails for 0.0.0.0 (a bind address, not a
+    // destination) and left shutdown hanging until the next connection.
+    // The event loop's wakeup fd makes stop address-independent.
+    let factory: Arc<ModelFactory> =
+        Arc::new(|| Ok(Box::new(FakeModel::new(4, 4, 0)) as Box<dyn ServeModel>));
+    let server = serve(
+        ServeCfg { addr: "0.0.0.0:0".to_string(), workers: 1, ..ServeCfg::default() },
+        factory,
+    )
+    .expect("wildcard server start");
+    let port = server.local_addr().port();
+    // Sanity: the wildcard bind really serves (reach it via loopback).
+    assert!(ping(&format!("127.0.0.1:{port}")).unwrap() >= 0.0);
+    let t0 = std::time::Instant::now();
+    server.stop();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "stop must not hang on a wildcard bind (took {:?})",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn closed_loop_sessions_are_answered_exactly_once() {
+    // The tentpole invariant end-to-end: continuous batching + event
+    // loop + admission under a few hundred pipelined sessions, every
+    // request answered exactly once.
+    let factory: Arc<ModelFactory> =
+        Arc::new(|| Ok(Box::new(FakeModel::new(8, 4, 100)) as Box<dyn ServeModel>));
+    let server = serve(
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            batch: BatchCfg { max_batch: 8, max_wait_us: 1_000, queue_cap: 4_096, continuous: true },
+            session: SessionCfg::default(),
+            admission: AdmissionCfg::default(),
+            lr: 0.0,
+        },
+        factory,
+    )
+    .expect("server start");
+    let report = run_sessions(&SessionLoadCfg {
+        addr: server.local_addr().to_string(),
+        sessions: 200,
+        rounds: 3,
+        conns: 8,
+        deadline_us: None,
+        use_sessions: true,
+    })
+    .unwrap();
+    assert!(report.complete(), "closed-loop invariant violated: {report:?}");
+    assert_eq!(report.sent, 600);
+    assert_eq!(report.ok + report.err_deadline, 600, "fake backend never sheds: {report:?}");
+    assert_eq!(server.snapshot().completed, report.ok);
+    server.stop();
+}
+
+#[test]
+fn per_connection_inflight_cap_sheds_typed_overload() {
+    // Admission control ahead of the queue: a connection pipelining past
+    // its in-flight budget gets typed `overloaded` frames (counted as
+    // rejected_inflight), while everything admitted still completes.
+    let factory: Arc<ModelFactory> =
+        Arc::new(|| Ok(Box::new(FakeModel::new(1, 4, 50_000)) as Box<dyn ServeModel>));
+    let server = serve(
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            batch: BatchCfg { max_batch: 1, max_wait_us: 100, queue_cap: 64, continuous: true },
+            session: SessionCfg::default(),
+            admission: AdmissionCfg { max_inflight_per_conn: 2, ..AdmissionCfg::default() },
+            lr: 0.0,
+        },
+        factory,
+    )
+    .expect("server start");
+    let addr = server.local_addr().to_string();
+    let mut conn = RawConn::open(&addr);
+    for id in 1..=4u64 {
+        conn.send(&infer(id, None, None, [1.0; 4]));
+    }
+    let mut ok = Vec::new();
+    let mut overloaded = Vec::new();
+    for _ in 0..4 {
+        match conn.recv() {
+            Response::Ok { id, .. } => ok.push(id),
+            Response::Err { id, code, .. } => {
+                assert_eq!(code, ErrCode::Overloaded);
+                overloaded.push(id);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+    ok.sort_unstable();
+    overloaded.sort_unstable();
+    assert_eq!(ok, vec![1, 2], "the admitted in-flight budget completes");
+    assert_eq!(overloaded, vec![3, 4], "past-budget pipelining sheds typed overload");
+    assert_eq!(server.snapshot().rejected_inflight, 2);
+    server.stop();
+}
+
 mod native_backend {
     use super::*;
     use cwy::linalg::Matrix;
@@ -260,8 +399,10 @@ mod native_backend {
                     max_batch: fixture::CELL_B,
                     max_wait_us: 500,
                     queue_cap: 256,
+                    continuous: false,
                 },
                 session: SessionCfg::default(),
+                admission: AdmissionCfg::default(),
                 lr: 0.0,
             },
             factory,

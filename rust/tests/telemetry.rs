@@ -186,6 +186,70 @@ fn chrome_trace_export_golden() {
     }
 }
 
+/// The queue-depth gauge lives in the process-global registry, so the
+/// two tests that assert exact gauge values must not interleave.
+static GAUGE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn gauge_infer(id: u64, deadline_us: Option<u64>) -> cwy::serve::InferRequest {
+    cwy::serve::InferRequest {
+        id,
+        artifact: "a".to_string(),
+        session: None,
+        deadline_us,
+        inputs: vec![],
+    }
+}
+
+fn gauge_batcher() -> cwy::serve::Batcher {
+    cwy::serve::Batcher::new(
+        cwy::serve::BatchCfg { max_batch: 8, max_wait_us: 1_000_000, queue_cap: 64, continuous: false },
+        Arc::new(cwy::serve::Clock::new()),
+        Arc::new(cwy::serve::ServeStats::new()),
+    )
+}
+
+#[test]
+fn queue_depth_gauge_tracks_reaped_deadlines() {
+    // PR-8 satellite: shed_expired used to bypass the gauge, leaving a
+    // stale depth until the next submit.  Reaping must update it.
+    let _g = GAUGE_LOCK.lock().unwrap();
+    let reg = cwy::telemetry::global();
+    let b = gauge_batcher();
+    let (tx, _rx) = std::sync::mpsc::channel();
+    assert!(b.submit(gauge_infer(1, Some(1)), tx.clone()));
+    assert!(b.submit(gauge_infer(2, None), tx));
+    assert_eq!(reg.queue_depth(), 2);
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    assert_eq!(b.reap(), 1);
+    assert_eq!(
+        reg.queue_depth(),
+        1,
+        "reaping an expired request must update the queue-depth gauge"
+    );
+}
+
+#[test]
+fn queue_depth_gauge_zeroes_after_shutdown_drain() {
+    // PR-8 satellite: the shutdown drain answers everything unavailable;
+    // a monitoring scrape afterwards must see depth 0, not the last
+    // pre-shutdown value.
+    let _g = GAUGE_LOCK.lock().unwrap();
+    let reg = cwy::telemetry::global();
+    let b = gauge_batcher();
+    let (tx, _rx) = std::sync::mpsc::channel();
+    for id in 1..=5 {
+        assert!(b.submit(gauge_infer(id, None), tx.clone()));
+    }
+    assert_eq!(reg.queue_depth(), 5);
+    b.shutdown();
+    assert_eq!(b.depth(), 0);
+    assert_eq!(
+        reg.queue_depth(),
+        0,
+        "the shutdown drain must zero the queue-depth gauge"
+    );
+}
+
 #[test]
 fn span_macro_feeds_registry_and_ring() {
     cwy::telemetry::enable_tracing(64);
