@@ -14,7 +14,9 @@
 //!   cargo bench --bench rollout_e2e                  # default sweep
 //!   cargo bench --bench rollout_e2e -- --smoke --json BENCH_5.json
 
-use cwy::linalg::{set_thread_cap, Matrix};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cwy::linalg::{parallel_for, pool_workers, set_thread_cap, Matrix};
 use cwy::report::{BenchJson, Table};
 use cwy::runtime::native::ops_rnn::{
     forward_backward_ws, CopyBatchRef, CopyRnnParams, RolloutWorkspace, IN_VOCAB, OUT_CLASSES,
@@ -80,6 +82,11 @@ fn main() {
     let mut table = Table::new(&[
         "L", "N", "B", "T", "step ms (workspace)", "step ms (fresh)", "ws speedup", "eval ms",
     ]);
+    // Operand-cache effectiveness across every training row below
+    // (ISSUE 9): each tape recompute is 4 misses, each timestep's packed
+    // gemms are hits, so a healthy run sits near 1000 milli.
+    let telemetry = cwy::telemetry::global();
+    let (hits0, misses0) = (telemetry.pack_hits(), telemetry.pack_misses());
     for &(l, n, b, t) in &shapes {
         let mut s = setup((l * 131 + n) as u64, l, n, b, t);
         let mut rws = RolloutWorkspace::new();
@@ -197,6 +204,89 @@ fn main() {
             json.push_phase(&format!("eval_forward_l{l}_n{n}_b{b}_t{t}"), span, ns as f64);
         }
     }
+    let (hits, misses) =
+        (telemetry.pack_hits() - hits0, telemetry.pack_misses() - misses0);
+    let hit_rate_milli = if hits + misses == 0 { 0 } else { hits * 1000 / (hits + misses) };
+    json.push("pack_cache_hit_rate_milli", hit_rate_milli as f64);
+    println!(
+        "\npack cache: {hits} hits / {misses} misses ({hit_rate_milli} milli) over all rows"
+    );
+
+    // Pool-scaling acceptance shape (ISSUE 9): large enough that every
+    // apply/backward gemm clears PARALLEL_FLOP_CUTOFF, run in smoke AND
+    // full so `cwy bench-check` can gate threads4 >= 1.8x threads1 on
+    // multi-core hosts.  Medians of 3 iterations keep the smoke rows
+    // stable enough to gate on.
+    {
+        let (l, n, b, t) = (64usize, 256usize, 32usize, 16usize);
+        let mut s = setup(0x5CA1E, l, n, b, t);
+        let mut rws = RolloutWorkspace::new();
+        forward_backward_ws(CellKind::Cwy, &s.params, &s.data(), true, &mut rws).unwrap();
+        for cap in [1usize, 4] {
+            set_thread_cap(cap);
+            let s_cap = bench_n(&format!("scaling_train_step_threads{cap}"), 1, 3, || {
+                let data = CopyBatchRef {
+                    tokens: &s.tokens,
+                    targets: &s.targets,
+                    batch: s.batch,
+                    t_total: s.t_total,
+                };
+                forward_backward_ws(CellKind::Cwy, &s.params, &data, true, &mut rws).unwrap();
+                s.params.sgd_step(rws.grads(), 1e-3);
+                std::hint::black_box(&s.params);
+            });
+            println!(
+                "scaling L={l} N={n} B={b} T={t} step {:>9.3} ms @ {cap} thread(s)",
+                s_cap.median_ms()
+            );
+            json.push(&format!("scaling_train_step_threads{cap}"), s_cap.median_ns());
+        }
+        set_thread_cap(0);
+    }
+
+    // Dispatch overhead head-to-head: 100 eight-band fan-outs through
+    // the persistent pool vs the pre-ISSUE-9 `thread::scope` spawn/join
+    // per dispatch.  Bodies are trivial on purpose — this measures the
+    // handoff, not the kernel.
+    let s_pool = timed("pool_dispatch_bands8", &mut || {
+        for _ in 0..100 {
+            let ran = AtomicUsize::new(0);
+            parallel_for(8, &|_| {
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(ran.load(Ordering::Relaxed), 8);
+        }
+    });
+    let s_scope = timed("scoped_spawn_bands8", &mut || {
+        for _ in 0..100 {
+            let ran = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..8 {
+                    scope.spawn(|| {
+                        ran.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(ran.load(Ordering::Relaxed), 8);
+        }
+    });
+    json.push("pool_dispatch_bands8", s_pool.median_ns());
+    json.push("scoped_spawn_bands8", s_scope.median_ns());
+    println!(
+        "dispatch x100 (8 bands): pool {:>9.3} ms, scoped spawn {:>9.3} ms ({:.2}x), {} pool worker(s), {} pool tasks, {} steals",
+        s_pool.median_ms(),
+        s_scope.median_ms(),
+        s_scope.median_s / s_pool.median_s.max(1e-12),
+        pool_workers(),
+        telemetry.pool_tasks(),
+        telemetry.pool_steals(),
+    );
+    // Only emitted with live workers: bench-check treats a measured 0.0
+    // as a hard failure, and a single-core host legitimately has none.
+    if pool_workers() > 0 {
+        json.push("pool_workers", pool_workers() as f64);
+    }
+
     println!("\n## rnn_copy end-to-end training step (f32, param=cwy)\n");
     print!("{}", table.to_markdown());
     if let Some(path) = args.get("json") {

@@ -83,8 +83,11 @@ pub const MR: usize = 4;
 pub const NR: usize = 16;
 /// f32 lanes per AVX2 vector.
 pub const LANES: usize = 8;
-/// Multiply-add count below which thread spawn overhead dominates and
-/// the single-threaded kernel wins.
+/// Multiply-add count below which parallel-dispatch overhead dominates
+/// and the single-threaded kernel wins.  The persistent pool
+/// ([`crate::linalg::pool`]) made dispatch much cheaper than the old
+/// per-call `thread::scope` spawn, but a band handoff still costs
+/// cross-core cache traffic, so small products stay inline.
 pub const PARALLEL_FLOP_CUTOFF: usize = 1 << 18;
 
 /// Which microkernel a [`gemm_with`] call runs.
@@ -146,6 +149,30 @@ pub fn active_kernel() -> KernelKind {
     })
 }
 
+/// Fold an explicit kernel request onto what the host can actually run:
+/// `Avx2Fma` without avx2+fma support (or off x86_64) becomes
+/// `Portable`.  The operand cache keys packs by the RESOLVED kernel so a
+/// pack built on one host layout is never consumed by the other.
+pub(crate) fn resolve_kernel(kind: KernelKind) -> KernelKind {
+    if kind == KernelKind::Avx2Fma && !simd_supported() {
+        KernelKind::Portable
+    } else {
+        kind
+    }
+}
+
+/// SIMD panel packing for the operand cache — same routine the per-call
+/// path uses, so cached panels are byte-identical to per-call panels.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn pack_panels_for(src: &[f32], k: usize, n: usize, dst: &mut Vec<f32>) {
+    avx2::pack_panels(src, k, n, dst);
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn pack_panels_for(_src: &[f32], _k: usize, _n: usize, _dst: &mut Vec<f32>) {
+    unreachable!("SIMD panels are only packed when the avx2 kernel resolves (x86_64 only)");
+}
+
 /// Runtime cap on gemm worker threads (0 = use available parallelism).
 /// Overrides `CWY_GEMM_THREADS`; `benches/rollout_e2e` uses it for the
 /// committed 1/2/4-thread scaling rows.  Band partitioning never changes
@@ -156,11 +183,13 @@ pub fn set_thread_cap(cap: usize) {
 
 static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
 
-fn hardware_threads() -> usize {
-    let cap = THREAD_CAP.load(Ordering::Relaxed);
-    if cap > 0 {
-        return cap;
-    }
+/// Threads the process is configured for, BEFORE any runtime
+/// [`set_thread_cap`] override: `CWY_GEMM_THREADS` if set, else
+/// `available_parallelism`.  The persistent pool sizes its worker set
+/// from this once at start (`CWY_GEMM_THREADS=1` degrades it to zero
+/// workers); [`hardware_threads`] layers the runtime cap on top for
+/// per-dispatch band counts.
+pub(crate) fn configured_threads() -> usize {
     static ENV_CAP: OnceLock<usize> = OnceLock::new();
     let env_cap = *ENV_CAP.get_or_init(|| {
         std::env::var("CWY_GEMM_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
@@ -169,6 +198,14 @@ fn hardware_threads() -> usize {
         return env_cap;
     }
     std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+fn hardware_threads() -> usize {
+    let cap = THREAD_CAP.load(Ordering::Relaxed);
+    if cap > 0 {
+        return cap;
+    }
+    configured_threads()
 }
 
 /// Reference kernel: straightforward (i, k, j) loop, inner loop
@@ -203,19 +240,39 @@ static ACTIVE_GEMMS: AtomicUsize = AtomicUsize::new(0);
 /// RAII registration in [`ACTIVE_GEMMS`] (panic-safe decrement).
 struct GemmSlot {
     budget: usize,
+    registered: bool,
 }
 
 impl GemmSlot {
     fn acquire() -> GemmSlot {
+        // Pool-aware budget (ISSUE 9): a gemm issued from inside a
+        // pooled band already owns exactly one pool thread's share of
+        // the machine, so it runs inline — and does NOT register in
+        // ACTIVE_GEMMS, so sibling top-level gemms keep their split of
+        // the one shared cap.  This is what lets rollout-over-batch-rows
+        // parallelism compose with GEMM band parallelism without
+        // oversubscription.
+        if crate::linalg::pool::in_pool_context() {
+            return GemmSlot { budget: 1, registered: false };
+        }
         let active = ACTIVE_GEMMS.fetch_add(1, Ordering::Relaxed) + 1;
-        GemmSlot { budget: (hardware_threads() / active).max(1) }
+        GemmSlot { budget: (hardware_threads() / active).max(1), registered: true }
     }
 }
 
 impl Drop for GemmSlot {
     fn drop(&mut self) {
-        ACTIVE_GEMMS.fetch_sub(1, Ordering::Relaxed);
+        if self.registered {
+            ACTIVE_GEMMS.fetch_sub(1, Ordering::Relaxed);
+        }
     }
+}
+
+/// The thread budget a gemm issued right now would get — test hook for
+/// the nested-parallelism regression in `linalg::pool`.
+#[cfg(test)]
+pub(crate) fn current_gemm_budget() -> usize {
+    GemmSlot::acquire().budget
 }
 
 thread_local! {
@@ -233,8 +290,10 @@ thread_local! {
 
 /// Pack `src` (r x c, row-major) transposed into `dst` (c x r, row-major),
 /// reusing `dst`'s capacity.  Reorders memory only — every later
-/// multiply-add sees the same values in the same `k` order.
-fn pack_transposed(src: &Matrix, dst: &mut Vec<f32>) {
+/// multiply-add sees the same values in the same `k` order.  Shared with
+/// the [`crate::linalg::pack`] operand cache, which stores exactly this
+/// layout so packed calls stay bitwise-identical to per-call packing.
+pub(crate) fn pack_transposed(src: &Matrix, dst: &mut Vec<f32>) {
     let (r, c) = (src.rows, src.cols);
     dst.clear();
     dst.resize(r * c, 0.0);
@@ -499,9 +558,16 @@ mod avx2 {
 }
 
 /// Split `c` into row bands and run `kernel` on each — single-threaded
-/// below [`PARALLEL_FLOP_CUTOFF`] multiply-adds, scoped threads above,
-/// with the thread budget shared across concurrent gemms and capped by
+/// below [`PARALLEL_FLOP_CUTOFF`] multiply-adds, dispatched to the
+/// persistent pool ([`crate::linalg::pool`]) above, with the thread
+/// budget shared across concurrent gemms and capped by
 /// [`set_thread_cap`] / `CWY_GEMM_THREADS`.
+///
+/// The band partition is exactly the pre-pool `chunks_mut(rows_per * n)`
+/// split — `rows_per = m.div_ceil(threads)`, last band ragged — so the
+/// ascending-`k` accumulation contract (module docs) is untouched: band
+/// boundaries reorder which thread computes a row, never the arithmetic
+/// inside it.
 fn for_each_band<F>(m: usize, k: usize, n: usize, c: &mut [f32], kernel: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -517,11 +583,18 @@ where
         return;
     }
     let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (band_idx, out_band) in c.chunks_mut(rows_per * n).enumerate() {
-            let kernel = &kernel;
-            s.spawn(move || kernel(band_idx * rows_per, out_band));
-        }
+    let band_elems = rows_per * n;
+    let len = c.len();
+    let base = c.as_mut_ptr() as usize;
+    crate::linalg::pool::parallel_for(len.div_ceil(band_elems), &|band_idx| {
+        let start = band_idx * band_elems;
+        let end = (start + band_elems).min(len);
+        // SAFETY: band indices address disjoint half-open ranges of `c`,
+        // and `parallel_for` blocks until every band completes, so no
+        // band slice outlives (or aliases within) the `c` borrow.
+        let band =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut f32).add(start), end - start) };
+        kernel(band_idx * rows_per, band);
     });
 }
 
@@ -536,8 +609,9 @@ where
 ///   temporaries (transpose-variant cheat sheet in DESIGN.md §3.3).
 /// * `beta = 0.0` overwrites (never reads) `c`; `beta = 1.0` fuses the
 ///   `d += a@b` accumulation pattern of the BPTT.
-/// * Output rows split across scoped threads above
-///   [`PARALLEL_FLOP_CUTOFF`] multiply-adds, as before.
+/// * Output rows split across the persistent pool above
+///   [`PARALLEL_FLOP_CUTOFF`] multiply-adds — same band partition the
+///   scoped-thread path used, now without a spawn/join per call.
 pub fn gemm(
     trans_a: bool,
     trans_b: bool,
@@ -570,11 +644,7 @@ pub fn gemm_with(
     assert_eq!(ka, kb, "gemm reduction-dim mismatch");
     assert_eq!((c.rows, c.cols), (m, n), "gemm output shape mismatch");
     let k = ka;
-    let kind = if kind == KernelKind::Avx2Fma && !simd_supported() {
-        KernelKind::Portable
-    } else {
-        kind
-    };
+    let kind = resolve_kernel(kind);
     // Per-variant telemetry: ~two clock reads and three relaxed atomic
     // adds per call — no lock, no allocation (alloc_discipline covers
     // this path with recording live).
@@ -630,6 +700,88 @@ pub fn gemm_with(
                 }),
             }
         })
+    });
+}
+
+/// [`gemm`] with `op(b)`'s packing stage served from a
+/// [`crate::linalg::pack::PackedOperand`] built by `ensure` — the
+/// per-call `PACK_B`/`PACK_PANELS` work drops out.  This is the operand
+/// cache's win: a rollout multiplies against the same CWY operator
+/// matrices at all T timesteps, so the operator is packed once per tape
+/// rebuild instead of once per gemm call.
+///
+/// `trans_b` and the active kernel must match what the pack was built
+/// for (asserted — a stale pack fails loudly, it never multiplies
+/// against dead bytes).  Results are bitwise identical to the
+/// equivalent [`gemm`] call: the cached pack holds exactly the bytes the
+/// per-call path would have packed, consumed in the same order by the
+/// same kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed(
+    trans_a: bool,
+    trans_b: bool,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    pack: &crate::linalg::pack::PackedOperand,
+    beta: f32,
+    c: &mut Matrix,
+) {
+    let (m, ka) = if trans_a { (a.cols, a.rows) } else { (a.rows, a.cols) };
+    let (kb, n) = if trans_b { (b.cols, b.rows) } else { (b.rows, b.cols) };
+    assert_eq!(ka, kb, "gemm reduction-dim mismatch");
+    assert_eq!((c.rows, c.cols), (m, n), "gemm output shape mismatch");
+    let k = ka;
+    let kind = resolve_kernel(active_kernel());
+    assert!(
+        pack.matches(b, trans_b, kind),
+        "gemm_packed: operand pack is stale or keyed for a different operand/kernel"
+    );
+    let gemm_span = match (trans_a, trans_b) {
+        (false, false) => crate::span!(gemm_nn),
+        (false, true) => crate::span!(gemm_nt),
+        (true, false) => crate::span!(gemm_tn),
+        (true, true) => crate::span!(gemm_tt),
+    };
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 || alpha == 0.0 {
+        if beta == 0.0 {
+            c.data.fill(0.0);
+        } else if beta != 1.0 {
+            for v in &mut c.data {
+                *v *= beta;
+            }
+        }
+        return;
+    }
+    crate::telemetry::global()
+        .add_gemm_flops(gemm_span.id(), crate::orthogonal::flops::gemm_flops(m, k, n));
+    crate::telemetry::global().add_pack_hit();
+    PACK_A.with(|pa| {
+        let mut pa = pa.borrow_mut();
+        if trans_a {
+            pack_transposed(a, &mut pa);
+        }
+        let x: &[f32] = if trans_a { &pa } else { &a.data };
+        match kind {
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2Fma => {
+                let panels: &[f32] = &pack.panels;
+                for_each_band(m, k, n, &mut c.data, |i0, band| {
+                    // SAFETY: `resolve_kernel` only yields Avx2Fma when
+                    // `simd_supported` confirmed avx2+fma.
+                    unsafe { avx2::band_kernel(x, k, n, i0, alpha, beta, panels, band) }
+                });
+            }
+            _ => {
+                let bp: &[f32] = if trans_b { &pack.bt } else { &b.data };
+                for_each_band(m, k, n, &mut c.data, |i0, band| {
+                    band_kernel(x, k, n, i0, alpha, beta, bp, band)
+                });
+            }
+        }
     });
 }
 
@@ -707,13 +859,19 @@ pub mod legacy {
             return out;
         }
         let rows_per = m.div_ceil(threads);
+        let band_elems = rows_per * n;
+        let len = out.data.len();
+        let base = out.data.as_mut_ptr() as usize;
         let (a_data, b_data) = (&a.data[..], &b.data[..]);
-        std::thread::scope(|s| {
-            for (band_idx, out_band) in out.data.chunks_mut(rows_per * n).enumerate() {
-                s.spawn(move || {
-                    band_kernel(a_data, k, n, band_idx * rows_per, out_band, b_data);
-                });
-            }
+        crate::linalg::pool::parallel_for(len.div_ceil(band_elems), &|band_idx| {
+            let start = band_idx * band_elems;
+            let end = (start + band_elems).min(len);
+            // SAFETY: disjoint bands of `out.data`; the dispatch blocks
+            // until every band completes.
+            let band = unsafe {
+                std::slice::from_raw_parts_mut((base as *mut f32).add(start), end - start)
+            };
+            band_kernel(a_data, k, n, band_idx * rows_per, band, b_data);
         });
         out
     }
@@ -1020,6 +1178,97 @@ mod tests {
             set_thread_cap(0);
             assert_bitwise(&capped, &uncapped, &format!("thread cap {cap}")).unwrap();
         }
+    }
+
+    /// ISSUE 9 satellite: pooled GEMM is bitwise-equal to single-threaded
+    /// under the portable kernel for thread counts {1, 2, 4} on ragged
+    /// band splits — prime-ish row counts so `m.div_ceil(threads)` leaves
+    /// a short last band at every cap.
+    #[test]
+    fn pooled_gemm_bitwise_matches_single_thread_on_ragged_bands() {
+        forall(
+            6,
+            |rng| {
+                // m chosen ragged; k, n sized so m*k*n clears the cutoff
+                // and the pool is actually dispatched.
+                let m = [37, 53, 61, 97][rng.below(4) as usize];
+                let a = Matrix::random_normal(rng, m, 96, 1.0);
+                let b = Matrix::random_normal(rng, 96, 96, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                assert!(a.rows * a.cols * b.cols >= PARALLEL_FLOP_CUTOFF);
+                set_thread_cap(1);
+                let serial = mm_with(KernelKind::Portable, false, false, a, b);
+                let mut result = Ok(());
+                for cap in [2usize, 4] {
+                    set_thread_cap(cap);
+                    let pooled = mm_with(KernelKind::Portable, false, false, a, b);
+                    result = result.and(assert_bitwise(
+                        &pooled,
+                        &serial,
+                        &format!("pooled portable gemm, cap {cap}, m {}", a.rows),
+                    ));
+                }
+                set_thread_cap(0);
+                result
+            },
+        );
+    }
+
+    /// ISSUE 9: a packed-operand call is bitwise identical to the plain
+    /// call it replaces, across transpose variants, fused beta, and
+    /// repacks after an in-place operand update (epoch bump).
+    #[test]
+    fn packed_gemm_bitwise_matches_plain_gemm() {
+        use crate::linalg::pack::PackedOperand;
+        let mut rng = Pcg32::seeded(0x9AC5);
+        let kind = active_kernel();
+        let mut pack = PackedOperand::new();
+        for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)] {
+            for beta in [0.0f32, 1.0] {
+                let (m, k, n) = ragged_dims(&mut rng);
+                let a_dims = if ta { (k, m) } else { (m, k) };
+                let b_dims = if tb { (n, k) } else { (k, n) };
+                let a = Matrix::random_normal(&mut rng, a_dims.0, a_dims.1, 1.0);
+                let mut b = Matrix::random_normal(&mut rng, b_dims.0, b_dims.1, 1.0);
+                let c0 = Matrix::random_normal(&mut rng, m, n, 1.0);
+                for epoch in [1u64, 2] {
+                    if epoch == 2 {
+                        // In-place update behind the same pointer: the
+                        // epoch bump must force a repack that sees it.
+                        for v in &mut b.data {
+                            *v += 0.25;
+                        }
+                    }
+                    pack.ensure(&b, tb, kind, epoch);
+                    let mut plain = c0.clone();
+                    gemm(ta, tb, 1.0, &a, &b, beta, &mut plain);
+                    let mut packed = c0.clone();
+                    gemm_packed(ta, tb, 1.0, &a, &b, &pack, beta, &mut packed);
+                    assert_bitwise(
+                        &packed,
+                        &plain,
+                        &format!("packed vs plain ta={ta} tb={tb} beta={beta} epoch={epoch}"),
+                    )
+                    .unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "stale")]
+    fn packed_gemm_rejects_a_stale_pack() {
+        use crate::linalg::pack::PackedOperand;
+        let mut rng = Pcg32::seeded(0x57A1);
+        let b = Matrix::random_normal(&mut rng, 8, 8, 1.0);
+        let other = Matrix::random_normal(&mut rng, 8, 8, 1.0);
+        let mut pack = PackedOperand::new();
+        pack.ensure(&other, false, active_kernel(), 1);
+        let a = Matrix::random_normal(&mut rng, 4, 8, 1.0);
+        let mut c = Matrix::zeros(4, 8);
+        gemm_packed(false, false, 1.0, &a, &b, &pack, 0.0, &mut c);
     }
 
     /// The one-time dispatch is cached and published to the telemetry

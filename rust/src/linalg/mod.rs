@@ -9,14 +9,19 @@
 pub mod expm;
 pub mod gemm;
 pub mod matrix;
+pub mod pack;
+pub mod pool;
 pub mod qr;
 pub mod simd;
 pub mod tri;
 
 pub use expm::{cayley, expm, expm_default};
 pub use gemm::{
-    active_kernel, gemm, gemm_with, matmul_blocked, matmul_naive, set_thread_cap, KernelKind,
+    active_kernel, gemm, gemm_packed, gemm_with, matmul_blocked, matmul_naive, set_thread_cap,
+    KernelKind,
 };
 pub use matrix::{Matrix, ShapeError, Workspace};
+pub use pack::PackedOperand;
+pub use pool::{in_pool_context, parallel_for, pool_workers};
 pub use qr::{gauss_jordan_inv, householder_qr};
 pub use tri::{triu_inv, triu_inv_into, triu_inv_neumann, triu_solve, triu_solve_vec};

@@ -1,0 +1,135 @@
+//! Cached pre-packed GEMM operands (DESIGN.md §3.4).
+//!
+//! A CWY rollout applies the SAME operator `Q = I - U S^{-1} U^T` at
+//! every one of its T timesteps, and a serve batch applies the same
+//! artifact weights to every request row — yet `gemm` repacks the
+//! operator operand (transpose copy and/or SIMD lane panels) on every
+//! call.  A [`PackedOperand`] amortizes that: the owner packs once per
+//! operator rebuild via [`PackedOperand::ensure`] and every later
+//! [`super::gemm::gemm_packed`] call consumes the cached panels
+//! directly.  The cached bytes are exactly what the per-call path would
+//! have packed, so packed calls stay bitwise-identical to plain `gemm`.
+//!
+//! # Keying and invalidation
+//!
+//! The cache key is `(data pointer, shape, trans, resolved kernel,
+//! version)`.  Pointer+shape catch reallocation and shape changes;
+//! `version` is the owner's invalidation epoch and is the load-bearing
+//! part: an in-place update (SGD stepping `U`, a tape `recompute`)
+//! changes contents behind a stable pointer, which no pointer key can
+//! see.  Owners bump their epoch on every rebuild — `CwyPacks` in
+//! `orthogonal::cwy` ties it to the tape-recompute cycle.  A mismatched
+//! key repacks (counted as a `pack_misses`); `gemm_packed` asserts the
+//! key matches its operands so a stale pack fails loudly instead of
+//! multiplying against dead bytes.
+
+use super::gemm::{self, KernelKind};
+use super::Matrix;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct PackKey {
+    ptr: usize,
+    rows: usize,
+    cols: usize,
+    trans: bool,
+    kernel: KernelKind,
+    version: u64,
+}
+
+/// One cached, pre-packed `op(B)` operand.  Reuses its buffers across
+/// rebuilds, so steady-state `ensure` calls (same shape, new epoch)
+/// allocate nothing.
+#[derive(Default)]
+pub struct PackedOperand {
+    key: Option<PackKey>,
+    /// Row-major transposed copy of `B` (`trans` packs only) — what the
+    /// per-call `PACK_B` thread-local would hold.
+    pub(crate) bt: Vec<f32>,
+    /// Lane-contiguous SIMD panels of `op(B)` (`Avx2Fma` packs only) —
+    /// what the per-call `PACK_PANELS` thread-local would hold.
+    pub(crate) panels: Vec<f32>,
+}
+
+impl PackedOperand {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (Re)build the pack for `op(b)` under `kind` unless the cached one
+    /// already matches; returns `true` on a cache hit.  Bump `version`
+    /// whenever `b`'s contents change in place (module docs).
+    pub fn ensure(&mut self, b: &Matrix, trans: bool, kind: KernelKind, version: u64) -> bool {
+        let kind = gemm::resolve_kernel(kind);
+        let key = PackKey {
+            ptr: b.data.as_ptr() as usize,
+            rows: b.rows,
+            cols: b.cols,
+            trans,
+            kernel: kind,
+            version,
+        };
+        if self.key == Some(key) {
+            return true;
+        }
+        crate::telemetry::global().add_pack_miss();
+        let (k, n) = if trans { (b.cols, b.rows) } else { (b.rows, b.cols) };
+        if trans {
+            gemm::pack_transposed(b, &mut self.bt);
+        }
+        if kind == KernelKind::Avx2Fma {
+            let src: &[f32] = if trans { &self.bt } else { &b.data };
+            gemm::pack_panels_for(src, k, n, &mut self.panels);
+        }
+        self.key = Some(key);
+        false
+    }
+
+    /// Whether the cached pack was built from `op(b)` under `kind`
+    /// (any version — the epoch is the owner's contract, not the
+    /// call site's).
+    pub fn matches(&self, b: &Matrix, trans: bool, kind: KernelKind) -> bool {
+        let kind = gemm::resolve_kernel(kind);
+        matches!(self.key, Some(key) if key.ptr == b.data.as_ptr() as usize
+            && key.rows == b.rows
+            && key.cols == b.cols
+            && key.trans == trans
+            && key.kernel == kind)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.key.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::active_kernel;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn ensure_hits_until_the_version_bumps() {
+        let mut rng = Pcg32::seeded(0xAC4E);
+        let b = Matrix::random_normal(&mut rng, 12, 20, 1.0);
+        let kind = active_kernel();
+        let mut pack = PackedOperand::new();
+        assert!(pack.is_empty());
+        assert!(!pack.ensure(&b, true, kind, 1), "first build is a miss");
+        assert!(pack.ensure(&b, true, kind, 1), "same key must hit");
+        assert!(pack.matches(&b, true, kind));
+        assert!(!pack.matches(&b, false, kind), "trans is part of the key");
+        assert!(!pack.ensure(&b, true, kind, 2), "an epoch bump must repack");
+    }
+
+    #[test]
+    fn reshaped_or_moved_operand_misses() {
+        let mut rng = Pcg32::seeded(0xAC4F);
+        let b = Matrix::random_normal(&mut rng, 8, 8, 1.0);
+        let kind = active_kernel();
+        let mut pack = PackedOperand::new();
+        pack.ensure(&b, false, kind, 1);
+        let moved = b.clone();
+        assert!(!pack.matches(&moved, false, kind), "a fresh buffer must not match");
+        assert!(!pack.ensure(&moved, false, kind, 1));
+    }
+}

@@ -1,0 +1,431 @@
+//! Persistent work-stealing thread pool for band-parallel kernels
+//! (DESIGN.md §3.4).
+//!
+//! PR 5/7 made the GEMM hot path allocation-free and vectorized, but the
+//! threading layer still paid a full OS `thread::scope` spawn/join on
+//! every call above [`super::gemm::PARALLEL_FLOP_CUTOFF`] — tens of
+//! microseconds of kernel time per dispatch, serialized against the very
+//! GEMMs the CWY parametrization exists to parallelize.  This module
+//! replaces that with a process-wide pool:
+//!
+//! * **Lazy, one-time start.** The first parallel dispatch spawns
+//!   `configured_threads() - 1` workers (the dispatching thread is the
+//!   +1); `CWY_GEMM_THREADS=1` degrades the pool to zero workers and
+//!   every dispatch runs inline — the CI single-thread leg.
+//! * **Zero allocation per dispatch.** A [`parallel_for`] call publishes
+//!   a stack-allocated job (erased closure + atomic band cursor) into a
+//!   fixed slot table; workers claim band indices with `fetch_add`.  No
+//!   queues, no boxing, no channel — the steady-state training loop
+//!   stays inside the `tests/alloc_discipline.rs` zero-byte window with
+//!   the pool live.
+//! * **Work-stealing at band granularity.** Every worker scans all
+//!   published jobs, so an idle worker steals bands from whichever
+//!   dispatch is running — concurrent serve-worker GEMMs share the one
+//!   worker set instead of oversubscribing the machine.
+//! * **Nesting runs inline.** Workers (and dispatchers while they chew
+//!   their own bands) are marked [`in_pool_context`]; a GEMM issued from
+//!   inside a pooled band sees that flag, takes a budget of 1, and runs
+//!   serially — rollout-over-batch-rows parallelism composes with GEMM
+//!   band parallelism without thread explosion.
+//!
+//! # Safety protocol (stack job + hazard counters)
+//!
+//! The job lives on the dispatcher's stack, so retraction must prove no
+//! worker can still touch it.  Two counters make that airtight:
+//!
+//! 1. a worker holds `visitors[slot] > 0` for the whole window in which
+//!    it may dereference the slot's pointer;
+//! 2. a claimed band holds `job.inflight > 0` until its body returns.
+//!
+//! The dispatcher waits for every band to finish (`executed == bands`),
+//! nulls the slot, then spins until the slot's visitor count drains.
+//! Only then does `parallel_for` return and the job die.  Band bodies
+//! run under `catch_unwind`, so a panicking kernel poisons the job (the
+//! dispatcher re-panics after retraction) instead of deadlocking it.
+//!
+//! Telemetry: every band executed counts into `pool_tasks`; bands
+//! executed by a worker other than the dispatcher count into
+//! `pool_steals`; published-but-unfinished bands are the
+//! `pool_queue_depth` gauge; worker park durations feed the
+//! `pool_park_us` histogram.  All preregistered, all lock-free.
+
+use std::cell::Cell;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Concurrent dispatchers the slot table supports.  A dispatch that
+/// finds every slot occupied runs its bands inline instead of waiting —
+/// the pool degrades, it never blocks.
+const MAX_JOBS: usize = 16;
+
+/// Spin iterations before a waiter starts yielding the CPU, and before
+/// an idle worker parks on the condvar.
+const SPIN_LIMIT: u32 = 256;
+
+/// One published `parallel_for` call.  Lives on the dispatcher's stack;
+/// see the module docs for the retraction protocol that makes the raw
+/// `body` pointer sound.
+struct Job {
+    /// Lifetime-erased band closure; valid until retraction completes.
+    body: *const (dyn Fn(usize) + Sync),
+    /// Next band index to hand out (`fetch_add` issues each exactly once).
+    cursor: AtomicUsize,
+    /// Bands claimed but not yet finished.
+    inflight: AtomicUsize,
+    /// Bands finished (panicked bands count — they are done claiming).
+    executed: AtomicUsize,
+    /// Set when a band body panicked; the dispatcher re-raises.
+    panicked: AtomicBool,
+    bands: usize,
+}
+
+struct Pool {
+    slots: [AtomicPtr<Job>; MAX_JOBS],
+    /// Per-slot hazard counters (module docs, step 1).
+    visitors: [AtomicUsize; MAX_JOBS],
+    /// Count of workers parked on `wake`.
+    sleepers: Mutex<usize>,
+    wake: Condvar,
+    /// Worker threads spawned at start (dispatchers are the +1).
+    workers: usize,
+}
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on pool worker threads and on a dispatcher while it executes its
+/// own bands: a parallel region is already running on this thread, so
+/// nested parallelism should run inline (`GemmSlot::acquire` checks
+/// this).
+pub fn in_pool_context() -> bool {
+    IN_POOL.with(Cell::get)
+}
+
+static POOL: OnceLock<&'static Pool> = OnceLock::new();
+
+fn get() -> &'static Pool {
+    POOL.get_or_init(|| {
+        // Sized once from the env/hardware configuration, deliberately
+        // ignoring the runtime `set_thread_cap` override: the cap varies
+        // per bench row, the worker set cannot.  A cap below the worker
+        // count simply publishes fewer bands per dispatch.
+        let workers = super::gemm::configured_threads().saturating_sub(1);
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            slots: [const { AtomicPtr::new(ptr::null_mut()) }; MAX_JOBS],
+            visitors: [const { AtomicUsize::new(0) }; MAX_JOBS],
+            sleepers: Mutex::new(0),
+            wake: Condvar::new(),
+            workers,
+        }));
+        crate::telemetry::global().set_pool_workers(workers as u64);
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("cwy-pool-{i}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawning pool worker");
+        }
+        pool
+    })
+}
+
+/// Worker threads in the pool (0 when `CWY_GEMM_THREADS=1` or on a
+/// single-core host — every dispatch then runs inline).  First call
+/// starts the pool.
+pub fn pool_workers() -> usize {
+    get().workers
+}
+
+impl Pool {
+    fn publish(&self, job: &Job) -> Option<usize> {
+        let ptr = job as *const Job as *mut Job;
+        for s in 0..MAX_JOBS {
+            if self.slots[s]
+                .compare_exchange(ptr::null_mut(), ptr, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    fn retract(&self, s: usize) {
+        self.slots[s].store(ptr::null_mut(), Ordering::Release);
+        let mut spins = 0u32;
+        while self.visitors[s].load(Ordering::Acquire) != 0 {
+            spins += 1;
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        self.slots.iter().any(|s| !s.load(Ordering::Acquire).is_null())
+    }
+
+    fn wake_workers(&self) {
+        let sleepers = self.sleepers.lock().unwrap();
+        if *sleepers > 0 {
+            self.wake.notify_all();
+        }
+    }
+}
+
+/// Claim and run bands of `job` until its cursor is exhausted; returns
+/// whether any band ran here.  `stolen` marks execution by a pool worker
+/// (vs the dispatching thread) for the steal counter.  Never unwinds:
+/// band panics are caught and recorded on the job.
+fn run_bands(job: &Job, stolen: bool) -> bool {
+    let telemetry = crate::telemetry::global();
+    let mut ran = false;
+    loop {
+        // inflight is raised BEFORE the claim so a cancelling dispatcher
+        // that sees inflight == 0 after exhausting the cursor knows no
+        // band body can still start.
+        job.inflight.fetch_add(1, Ordering::AcqRel);
+        let band = job.cursor.fetch_add(1, Ordering::AcqRel);
+        if band >= job.bands {
+            job.inflight.fetch_sub(1, Ordering::Release);
+            return ran;
+        }
+        ran = true;
+        let body = std::panic::AssertUnwindSafe(|| {
+            let _task_span = crate::span!(pool_task);
+            // SAFETY: the dispatcher keeps the job (and the closure
+            // behind `body`) alive until `executed == bands` and the
+            // slot's visitors drain — we hold both pins here.
+            (unsafe { &*job.body })(band);
+        });
+        if std::panic::catch_unwind(body).is_err() {
+            job.panicked.store(true, Ordering::Release);
+        }
+        job.executed.fetch_add(1, Ordering::Release);
+        job.inflight.fetch_sub(1, Ordering::Release);
+        telemetry.add_pool_task();
+        if stolen {
+            telemetry.add_pool_steal();
+        }
+        telemetry.pool_queue_sub(1);
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    IN_POOL.with(|c| c.set(true));
+    let mut idle_spins = 0u32;
+    loop {
+        let mut ran = false;
+        for s in 0..MAX_JOBS {
+            // Cheap pre-check without touching the hazard counter keeps
+            // idle scans off the visitors cache lines.
+            if pool.slots[s].load(Ordering::Acquire).is_null() {
+                continue;
+            }
+            pool.visitors[s].fetch_add(1, Ordering::AcqRel);
+            let p = pool.slots[s].load(Ordering::Acquire);
+            if !p.is_null() {
+                // SAFETY: visitors[s] > 0 pins the job against
+                // retraction for this whole block.
+                ran |= run_bands(unsafe { &*p }, true);
+            }
+            pool.visitors[s].fetch_sub(1, Ordering::Release);
+        }
+        if ran {
+            idle_spins = 0;
+            continue;
+        }
+        idle_spins += 1;
+        if idle_spins < SPIN_LIMIT {
+            std::hint::spin_loop();
+            continue;
+        }
+        // Park until a dispatcher publishes (the timeout is a safety net
+        // against a lost wakeup, not a poll interval).  Publishers store
+        // the slot before taking the lock, so a worker that sees no work
+        // under the lock is guaranteed a later notify.
+        let parked = Instant::now();
+        let mut sleepers = pool.sleepers.lock().unwrap();
+        if pool.has_work() {
+            drop(sleepers);
+            idle_spins = 0;
+            continue;
+        }
+        *sleepers += 1;
+        let (mut sleepers, _) =
+            pool.wake.wait_timeout(sleepers, Duration::from_millis(100)).unwrap();
+        *sleepers -= 1;
+        drop(sleepers);
+        crate::telemetry::global().record_pool_park(parked.elapsed().as_micros() as u64);
+        idle_spins = 0;
+    }
+}
+
+/// Run `body(band)` for every `band in 0..bands`, spreading bands across
+/// the pool.  Blocks until every band has finished; the dispatching
+/// thread claims bands itself, so the call is work-conserving even when
+/// all workers are busy elsewhere.  Allocation-free after the one-time
+/// pool start.
+///
+/// Bands are claimed in ascending order but may run concurrently in any
+/// interleaving: bodies must write disjoint data per band (the GEMM band
+/// split — disjoint output row ranges — is the canonical caller, and
+/// partitioning never changes per-element arithmetic, so results stay
+/// bitwise-identical at any worker count).
+///
+/// Runs inline (plain serial loop) when: `bands <= 1`, this thread is
+/// already inside a pooled band ([`in_pool_context`]), the pool has no
+/// workers (`CWY_GEMM_THREADS=1`), or the slot table is full.
+pub fn parallel_for(bands: usize, body: &(dyn Fn(usize) + Sync)) {
+    if bands == 0 {
+        return;
+    }
+    if bands == 1 || in_pool_context() {
+        for band in 0..bands {
+            body(band);
+        }
+        return;
+    }
+    let pool = get();
+    if pool.workers == 0 {
+        for band in 0..bands {
+            body(band);
+        }
+        return;
+    }
+    // SAFETY: erases the borrow lifetime only; this frame outlives every
+    // dereference because it does not return before retraction proves
+    // all claimed bands finished and all slot readers left.
+    #[allow(clippy::missing_transmute_annotations)]
+    let erased: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(body) };
+    let job = Job {
+        body: erased,
+        cursor: AtomicUsize::new(0),
+        inflight: AtomicUsize::new(0),
+        executed: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        bands,
+    };
+    // Gauge up BEFORE the job becomes visible: a worker may start
+    // executing (and decrementing) the instant the slot is published.
+    let telemetry = crate::telemetry::global();
+    telemetry.pool_queue_add(bands as u64);
+    let Some(slot) = pool.publish(&job) else {
+        telemetry.pool_queue_sub(bands as u64);
+        for band in 0..bands {
+            body(band);
+        }
+        return;
+    };
+    pool.wake_workers();
+    // The dispatcher is a full participant — the pool ADDS workers, it
+    // never idles the submitting thread.  Mark it in-pool for the
+    // duration so a nested dispatch from its own bands runs inline.
+    IN_POOL.with(|c| c.set(true));
+    run_bands(&job, false);
+    IN_POOL.with(|c| c.set(false));
+    let mut spins = 0u32;
+    while job.executed.load(Ordering::Acquire) < bands {
+        spins += 1;
+        if spins < SPIN_LIMIT {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+    pool.retract(slot);
+    if job.panicked.load(Ordering::Acquire) {
+        panic!("a pooled band panicked (original payload on the worker's stderr)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{self, set_thread_cap, KernelKind};
+    use crate::linalg::Matrix;
+    use crate::util::rng::Pcg32;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_band_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(hits.len(), &|band| {
+            hits[band].fetch_add(1, Ordering::Relaxed);
+        });
+        for (band, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "band {band}");
+        }
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_and_still_covers_all_bands() {
+        let outer: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let inner = AtomicU64::new(0);
+        parallel_for(outer.len(), &|band| {
+            assert!(in_pool_context(), "bands must observe pool context");
+            outer[band].fetch_add(1, Ordering::Relaxed);
+            // A dispatch from inside a band must run inline, not deadlock
+            // or recurse into the slot table.
+            parallel_for(5, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(outer.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(inner.load(Ordering::Relaxed), 8 * 5);
+        assert!(!in_pool_context(), "dispatcher flag must be restored");
+    }
+
+    /// ISSUE 9 satellite: nested parallelism shares one cap.  With the
+    /// runtime cap at 2 (the `CWY_GEMM_THREADS=2` scenario), a GEMM
+    /// issued from inside a pooled band must see a thread budget of 1 —
+    /// rollout-level and GEMM-level parallelism never multiply — and the
+    /// results must stay bitwise-identical to the serial path.
+    #[test]
+    fn nested_gemm_inside_pool_band_gets_inline_budget() {
+        let mut rng = Pcg32::seeded(0x900f);
+        // Above PARALLEL_FLOP_CUTOFF so the budget is actually consulted.
+        let a = Matrix::random_normal(&mut rng, 96, 80, 1.0);
+        let b = Matrix::random_normal(&mut rng, 80, 96, 1.0);
+        let mut reference = Matrix::zeros(96, 96);
+        gemm::gemm_with(KernelKind::Portable, false, false, 1.0, &a, &b, 0.0, &mut reference);
+        let outs: Vec<std::sync::Mutex<Matrix>> =
+            (0..4).map(|_| std::sync::Mutex::new(Matrix::zeros(96, 96))).collect();
+        set_thread_cap(2);
+        parallel_for(outs.len(), &|band| {
+            assert_eq!(
+                gemm::current_gemm_budget(),
+                1,
+                "a gemm inside a pooled band must run inline"
+            );
+            let mut out = outs[band].lock().unwrap();
+            gemm::gemm_with(KernelKind::Portable, false, false, 1.0, &a, &b, 0.0, &mut out);
+        });
+        set_thread_cap(0);
+        for out in &outs {
+            let out = out.lock().unwrap();
+            assert_eq!(
+                out.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                reference.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "nested pooled gemm drifted from the serial result"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatch_records_pool_telemetry() {
+        let t = crate::telemetry::global();
+        let before = t.pool_tasks();
+        parallel_for(12, &|_| std::hint::black_box(()));
+        if pool_workers() > 0 {
+            assert!(t.pool_tasks() >= before + 12, "pooled bands must be counted");
+        }
+        // The gauge is shared with concurrently-running tests, so only
+        // its invariant (never underflows into huge values) is checked.
+        assert!(t.pool_queue_depth() < 1 << 32, "queue gauge underflowed");
+    }
+}

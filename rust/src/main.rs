@@ -597,7 +597,12 @@ fn cmd_client(args: &Args) -> Result<()> {
 ///   top-level `kernel` stamp), the SIMD GEMM must beat the frozen
 ///   `gemm::legacy` oracle by >= 2x at N=128 and N=256.  On a
 ///   portable-only host the stamp says `portable` and this gate is
-///   reported as skipped rather than measuring a meaningless ratio.
+///   reported as skipped rather than measuring a meaningless ratio;
+/// * the ISSUE 9 pool-scaling gate: with >= 3 pool workers on the
+///   measuring host, the threads=4 training step must be >= 1.8x the
+///   threads=1 step at the dedicated scaling shape;
+/// * the ISSUE 9 operand-cache gate: a measured pack-cache hit rate of
+///   exactly 0 fails (the packed hot path stopped consulting the cache).
 fn cmd_bench_check(args: &Args) -> Result<()> {
     use cwy::util::json::{self, Json};
 
@@ -759,6 +764,57 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
             }
         }
         _ => println!("# bench-check: serve_load not measured; occupancy gate skipped"),
+    }
+
+    // Persistent-pool scaling acceptance (ISSUE 9): on hosts where the
+    // pool actually has workers to scale onto (>= 3, i.e. >= 4 usable
+    // cores — the bench only emits `pool_workers` when it saw any), the
+    // threads=4 training step at the dedicated scaling shape must beat
+    // threads=1 by >= 1.8x.  Fewer workers means the ratio measures the
+    // host, not the pool, so the gate reports a loud skip instead.
+    let t1 = measured
+        .path(&["benches", "rollout_e2e", "scaling_train_step_threads1"])
+        .as_f64();
+    let t4 = measured
+        .path(&["benches", "rollout_e2e", "scaling_train_step_threads4"])
+        .as_f64();
+    let workers = measured.path(&["benches", "rollout_e2e", "pool_workers"]).as_f64();
+    match (t1, t4, workers) {
+        (Some(t1), Some(t4), Some(w)) if w >= 3.0 && t4 > 0.0 => {
+            let ratio = t1 / t4;
+            println!(
+                "# bench-check: pooled train step is {ratio:.2}x threads=1 at threads=4 \
+                 ({w:.0} workers; target >= 1.8x)"
+            );
+            if ratio < 1.8 {
+                bail!(
+                    "pooled threads=4 train step is only {ratio:.2}x threads=1 \
+                     (target >= 1.8x)"
+                );
+            }
+        }
+        (Some(_), Some(_), _) => println!(
+            "# bench-check: fewer than 3 pool workers on the measuring host; \
+             pool scaling gate skipped"
+        ),
+        _ => println!("# bench-check: rollout_e2e scaling rows not measured; pool gate skipped"),
+    }
+
+    // Operand-cache acceptance (ISSUE 9): the packed-gemm hot path must
+    // actually be served from the cache.  A measured rate of 0 means the
+    // tape/serve paths silently fell back to per-call packing.
+    match measured
+        .path(&["benches", "rollout_e2e", "pack_cache_hit_rate_milli"])
+        .as_f64()
+    {
+        Some(rate) if rate > 0.0 => {
+            println!("# bench-check: operand-pack cache hit rate {:.1}% (target > 0)", rate / 10.0)
+        }
+        Some(_) => bail!(
+            "operand-pack cache hit rate is 0: the packed-gemm hot path stopped \
+             using the cache"
+        ),
+        None => println!("# bench-check: pack-cache rate not measured; cache gate skipped"),
     }
     println!("bench-check OK");
     Ok(())

@@ -41,9 +41,11 @@
 //! see [`householder`]).  The two parametrizations agree as functions
 //! only on non-degenerate rows.
 
-use crate::linalg::{gemm, simd, triu_inv_into, Matrix, Workspace};
+use crate::linalg::{gemm, gemm_packed, simd, triu_inv_into, Matrix, Workspace};
 
-use super::cwy::{self, apply_with_operands, normalize_with_norms_into, row_norms_into, CwyOperator};
+use super::cwy::{
+    self, apply_with_packed, normalize_with_norms_into, row_norms_into, CwyOperator, CwyPacks,
+};
 use super::householder;
 
 /// Shared backward context for the CWY-family parametrizations: the
@@ -65,6 +67,10 @@ struct ParamTape {
     degenerate: Vec<bool>,
     du: Matrix, // accumulated dL/dU, (N, L)
     da: Matrix, // accumulated dL/dA, (L, L)
+    /// Pre-packed `U`/`S⁻¹` panels (ISSUE 9), rebuilt once per
+    /// `recompute` and reused by every forward apply and backward step of
+    /// the rollout that shares this tape.
+    packs: CwyPacks,
 }
 
 impl ParamTape {
@@ -77,6 +83,7 @@ impl ParamTape {
             degenerate: Vec::new(),
             du: Matrix::zeros(0, 0),
             da: Matrix::zeros(0, 0),
+            packs: CwyPacks::new(),
         };
         let mut ws = Workspace::new();
         tape.recompute(v, &mut ws);
@@ -103,6 +110,9 @@ impl ParamTape {
         triu_inv_into(&self.s, &mut self.sinv, ws);
         self.du.resize_zeroed(n, l);
         self.da.resize_zeroed(l, l);
+        // Operands just changed in place — re-pack their panels once so
+        // all T timesteps of the coming rollout reuse them.
+        self.packs.repack(&self.u, &self.sinv);
     }
 
     /// Finish the chain: `dS = −Aᵀ dA Aᵀ`, keep the strict upper triangle
@@ -172,13 +182,14 @@ impl CwyGrad {
     /// The forward operator sharing this tape's operands (for rollouts
     /// that interleave applies and backward accumulation).
     pub fn operator(&self) -> CwyOperator {
-        CwyOperator { u: self.tape.u.clone(), sinv: self.tape.sinv.clone() }
+        CwyOperator::from_parts(self.tape.u.clone(), self.tape.sinv.clone())
     }
 
     /// Fused forward apply `out = h Q(V)` using the tape's operands
     /// directly (no operator clone), allocation-free with pooled scratch.
+    /// Reuses the tape's pre-packed panels across all T timesteps.
     pub fn apply_forward_into(&self, h: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
-        apply_with_operands(&self.tape.u, &self.tape.sinv, h, out, ws);
+        apply_with_packed(&self.tape.u, &self.tape.sinv, &self.tape.packs, h, out, ws);
     }
 
     /// Backward of one fused apply `Y = H Q(V)`: given the apply's input
@@ -200,24 +211,27 @@ impl CwyGrad {
     pub fn apply_backward_in_place(&mut self, h: &Matrix, g: &mut Matrix, ws: &mut Workspace) {
         let tape = &mut self.tape;
         let (b, l, n) = (h.rows, tape.u.cols, tape.u.rows);
+        // The six gemms whose B operand is tape-owned (`U`, `S⁻¹`, their
+        // transposes) run packed against the tape's panels; the three TN
+        // gemms keep per-call packing — their B operand varies per step.
         let mut gu = ws.take(b, l);
-        gemm(false, false, 1.0, g, &tape.u, 0.0, &mut gu); // G U
+        gemm_packed(false, false, 1.0, g, &tape.u, &tape.packs.u_nn, 0.0, &mut gu); // G U
         let mut hu = ws.take(b, l);
-        gemm(false, false, 1.0, h, &tape.u, 0.0, &mut hu); // H U
+        gemm_packed(false, false, 1.0, h, &tape.u, &tape.packs.u_nn, 0.0, &mut hu); // H U
         // dU −= Hᵀ(G U) Aᵀ  then  dU −= Gᵀ(H U) A
         // (from M = U A Uᵀ, dL/dM = −Hᵀ G; same order as the reference)
         let mut m1 = ws.take(n, l);
         gemm(true, false, 1.0, h, &gu, 0.0, &mut m1); // Hᵀ (G U)
-        gemm(false, true, -1.0, &m1, &tape.sinv, 1.0, &mut tape.du);
+        gemm_packed(false, true, -1.0, &m1, &tape.sinv, &tape.packs.sinv_nt, 1.0, &mut tape.du);
         gemm(true, false, 1.0, g, &hu, 0.0, &mut m1); // Gᵀ (H U)
-        gemm(false, false, -1.0, &m1, &tape.sinv, 1.0, &mut tape.du);
+        gemm_packed(false, false, -1.0, &m1, &tape.sinv, &tape.packs.sinv_nn, 1.0, &mut tape.du);
         // dA −= (H U)ᵀ (G U)
         gemm(true, false, -1.0, &hu, &gu, 1.0, &mut tape.da);
         // dH = G (I − U A Uᵀ)ᵀ = G − (G U) Aᵀ Uᵀ — last, so the V-path
         // above saw the original G.
         let mut t = ws.take(b, l);
-        gemm(false, true, 1.0, &gu, &tape.sinv, 0.0, &mut t); // (G U) Aᵀ
-        gemm(false, true, -1.0, &t, &tape.u, 1.0, g);
+        gemm_packed(false, true, 1.0, &gu, &tape.sinv, &tape.packs.sinv_nt, 0.0, &mut t); // (G U) Aᵀ
+        gemm_packed(false, true, -1.0, &t, &tape.u, &tape.packs.u_nt, 1.0, g);
         ws.give(gu);
         ws.give(hu);
         ws.give(m1);

@@ -9,14 +9,57 @@
 //! pooled scratch; the allocating forms remain as bitwise-identical
 //! wrappers.
 
-use crate::linalg::{gemm, simd, triu_inv, Matrix, Workspace};
+use crate::linalg::{
+    active_kernel, gemm, gemm_packed, simd, triu_inv, Matrix, PackedOperand, Workspace,
+};
 
 /// Precomputed CWY operands for a rollout.
 pub struct CwyOperator {
-    /// Column-normalized reflection vectors, (N, L).
+    /// Column-normalized reflection vectors, (N, L).  Mutating this in
+    /// place stales [`CwyPacks`] undetectably — rebuild the operator (or
+    /// go through a tape `recompute`, which re-packs) instead.
     pub u: Matrix,
-    /// Inverse of S = 0.5 I + striu(U^T U), (L, L).
+    /// Inverse of S = 0.5 I + striu(U^T U), (L, L).  Same in-place
+    /// mutation caveat as `u`.
     pub sinv: Matrix,
+    /// Pre-packed GEMM panels for `u`/`sinv` — built once at
+    /// construction, reused by every `apply_into` across a rollout or a
+    /// serve batch.
+    packs: CwyPacks,
+}
+
+/// The four operand packs the CWY forward/backward hot loops consume,
+/// plus the invalidation epoch that ties them to one operator rebuild
+/// (ISSUE 9).  The forward applies `U` (NN), `S⁻¹` (NN), and `Uᵀ` (NT)
+/// at every timestep; the backward additionally streams `S⁻¹ᵀ` (NT) —
+/// so one `repack` per tape rebuild serves 9 packed gemms per timestep.
+#[derive(Default)]
+pub struct CwyPacks {
+    epoch: u64,
+    pub(crate) u_nn: PackedOperand,
+    pub(crate) u_nt: PackedOperand,
+    pub(crate) sinv_nn: PackedOperand,
+    pub(crate) sinv_nt: PackedOperand,
+}
+
+impl CwyPacks {
+    pub fn new() -> CwyPacks {
+        CwyPacks::default()
+    }
+
+    /// Rebuild all four packs from freshly (re)computed operands.  Bumps
+    /// the epoch first: tape recomputes update `u`/`sinv` in place behind
+    /// stable pointers, which a pointer/shape key alone cannot see.
+    /// Steady-state calls reuse the pack buffers — no allocation once
+    /// shapes have settled (tests/alloc_discipline.rs).
+    pub fn repack(&mut self, u: &Matrix, sinv: &Matrix) {
+        self.epoch = self.epoch.wrapping_add(1);
+        let kind = active_kernel();
+        self.u_nn.ensure(u, false, kind, self.epoch);
+        self.u_nt.ensure(u, true, kind, self.epoch);
+        self.sinv_nn.ensure(sinv, false, kind, self.epoch);
+        self.sinv_nt.ensure(sinv, true, kind, self.epoch);
+    }
 }
 
 /// Rows of V with norm at or below this are **degenerate**: the direction
@@ -144,12 +187,43 @@ pub(crate) fn apply_with_operands(
     ws.give(ta);
 }
 
+/// [`apply_with_operands`] over pre-packed operand panels (ISSUE 9): the
+/// operator is identical at every timestep of a rollout, so `U`/`S⁻¹`
+/// are packed once per rebuild and each step only packs its varying A
+/// side.  Bitwise-identical to the unpacked form — the packs hold the
+/// same bytes per-call packing would produce.
+pub(crate) fn apply_with_packed(
+    u: &Matrix,
+    sinv: &Matrix,
+    packs: &CwyPacks,
+    batch: &Matrix,
+    out: &mut Matrix,
+    ws: &mut Workspace,
+) {
+    let (b, l) = (batch.rows, u.cols);
+    let mut t = ws.take(b, l);
+    gemm_packed(false, false, 1.0, batch, u, &packs.u_nn, 0.0, &mut t); // (B, L)
+    let mut ta = ws.take(b, l);
+    gemm_packed(false, false, 1.0, &t, sinv, &packs.sinv_nn, 0.0, &mut ta); // (B, L)
+    out.copy_from(batch);
+    gemm_packed(false, true, -1.0, &ta, u, &packs.u_nt, 1.0, out); // out -= ta @ Uᵀ
+    ws.give(t);
+    ws.give(ta);
+}
+
 impl CwyOperator {
     /// Precompute from raw reflection vectors V (L, N).
     pub fn new(v: &Matrix) -> CwyOperator {
         let u = normalize(v);
         let sinv = triu_inv(&build_s(&u));
-        CwyOperator { u, sinv }
+        CwyOperator::from_parts(u, sinv)
+    }
+
+    /// Assemble from already-derived operands, packing their panels once.
+    pub fn from_parts(u: Matrix, sinv: Matrix) -> CwyOperator {
+        let mut packs = CwyPacks::new();
+        packs.repack(&u, &sinv);
+        CwyOperator { u, sinv, packs }
     }
 
     /// Apply to a batch (B, N) of row-vector hidden states: `out = h @ Q`,
@@ -165,7 +239,7 @@ impl CwyOperator {
     /// scratch pooled in `ws`.  Bitwise-identical to the wrapper.
     pub fn apply_into(&self, batch: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
         assert_eq!((out.rows, out.cols), (batch.rows, batch.cols), "apply output shape");
-        apply_with_operands(&self.u, &self.sinv, batch, out, ws);
+        apply_with_packed(&self.u, &self.sinv, &self.packs, batch, out, ws);
     }
 
     /// Materialize Q = I - U S^{-1} U^T.
@@ -266,6 +340,39 @@ mod tests {
                     .zip(&out.data)
                     .all(|(a, b)| a.to_bits() == b.to_bits());
                 if same { Ok(()) } else { Err("apply_into drifted from apply".into()) }
+            },
+        );
+    }
+
+    /// ISSUE 9: the pre-packed apply path must be bitwise-identical to
+    /// the per-call-packing path it replaced, across ragged shapes.
+    #[test]
+    fn packed_apply_bitwise_matches_unpacked() {
+        let mut ws = Workspace::new();
+        forall(
+            16,
+            |rng| {
+                let l = 1 + rng.below(8) as usize;
+                let n = l + 1 + rng.below(12) as usize;
+                let b = 1 + rng.below(5) as usize;
+                (
+                    Matrix::random_normal(rng, l, n, 1.0),
+                    Matrix::random_normal(rng, b, n, 1.0),
+                )
+            },
+            |(v, h)| {
+                let op = CwyOperator::new(v);
+                let mut unpacked = Matrix::zeros(h.rows, h.cols);
+                apply_with_operands(&op.u, &op.sinv, h, &mut unpacked, &mut ws);
+                let mut packed = Matrix::zeros(h.rows, h.cols);
+                packed.fill(f32::NAN);
+                op.apply_into(h, &mut packed, &mut ws);
+                let same = unpacked
+                    .data
+                    .iter()
+                    .zip(&packed.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if same { Ok(()) } else { Err("packed apply drifted from unpacked".into()) }
             },
         );
     }

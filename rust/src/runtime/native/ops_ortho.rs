@@ -18,7 +18,7 @@
 //! runs step artifacts with `lr = 0` by convention (DESIGN.md §6.2).  The
 //! *trainable* recurrent family is `rnn_copy_*` ([`super::ops_rnn`]).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 
 use anyhow::{bail, Result};
 
@@ -30,10 +30,102 @@ use crate::runtime::manifest::{ArtifactSpec, Role};
 use crate::runtime::tensor::HostTensor;
 
 thread_local! {
-    /// Per-thread gemm scratch for the fused apply paths: each serve
-    /// worker reuses its own pool across requests instead of allocating
-    /// operator temporaries per call (DESIGN.md §3.3).
-    static WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+    /// Caller-installed [`OperatorCache`] (see [`with_operator_cache`]).
+    /// Null when no scope is active; the `LOCAL` fallback serves then.
+    static INSTALLED: Cell<*mut OperatorCache> = const { Cell::new(std::ptr::null_mut()) };
+
+    /// Fallback cache for threads that never install one (tests, the CLI
+    /// demo paths) — still amortizes repeated applies on one thread.
+    static LOCAL: RefCell<OperatorCache> = RefCell::new(OperatorCache::new());
+}
+
+/// Cached CWY operator for the serve hot path (ISSUE 9).  A serve worker
+/// runs the same artifact (same `V`) for every request of a batch and
+/// across batches, yet `run` receives `V` as a fresh tensor copy each
+/// call — so the cache keys by *value*: an FNV-1a hash of the bits as a
+/// fast reject, then exact equality against the retained copy (hash
+/// collisions must not alias distinct operators).  On a hit the
+/// normalize / `S` build / `triu_inv` / panel packing all drop out.
+pub struct OperatorCache {
+    hash: u64,
+    v: Matrix,
+    op: Option<cwy::CwyOperator>,
+    ws: Workspace,
+}
+
+impl Default for OperatorCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OperatorCache {
+    pub fn new() -> OperatorCache {
+        OperatorCache {
+            hash: 0,
+            v: Matrix::zeros(0, 0),
+            op: None,
+            ws: Workspace::new(),
+        }
+    }
+
+    fn hash_of(v: &Matrix) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |x: u64| h = (h ^ x).wrapping_mul(0x100000001b3);
+        mix(v.rows as u64);
+        mix(v.cols as u64);
+        for x in &v.data {
+            mix(x.to_bits() as u64);
+        }
+        h
+    }
+
+    /// `out = batch @ Q(v)`, rebuilding the cached operator only when `v`
+    /// actually changed.  Returns `true` on a cache hit.
+    pub fn apply(&mut self, v: &Matrix, batch: &Matrix, out: &mut Matrix) -> bool {
+        let hash = Self::hash_of(v);
+        let hit = self.op.is_some() && self.hash == hash && self.v == *v;
+        if !hit {
+            self.op = Some(cwy::CwyOperator::new(v));
+            self.v = v.clone();
+            self.hash = hash;
+        }
+        let op = self.op.as_ref().expect("operator was just ensured");
+        op.apply_into(batch, out, &mut self.ws);
+        hit
+    }
+}
+
+/// Run `f` with `cache` installed as this thread's operator cache: every
+/// CWY apply inside (the `rollout_cwy` / `cell_cwy` ops) consults it
+/// instead of rebuilding the operator per call.  Serve workers wrap each
+/// model execution so the cache lives in [`crate::serve::worker`]'s
+/// per-worker scratch and survives across batches.  Scopes nest; the
+/// previous installation is restored even on panic.
+pub fn with_operator_cache<R>(cache: &mut OperatorCache, f: impl FnOnce() -> R) -> R {
+    struct Restore(*mut OperatorCache);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            INSTALLED.with(|c| c.set(self.0));
+        }
+    }
+    let prev = INSTALLED.with(|c| c.replace(cache as *mut OperatorCache));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The installed-or-local cached apply used by the op bodies.
+fn cached_cwy_apply(v: &Matrix, batch: &Matrix, out: &mut Matrix) {
+    let installed = INSTALLED.with(|c| c.get());
+    if !installed.is_null() {
+        // SAFETY: the pointer was installed from an exclusive borrow by
+        // `with_operator_cache`, is only visible to this thread, and the
+        // scope guard clears it before that borrow ends.  Op bodies never
+        // re-enter `run`, so the cache is not aliased re-entrantly.
+        unsafe { (*installed).apply(v, batch, out) };
+    } else {
+        LOCAL.with(|c| c.borrow_mut().apply(v, batch, out));
+    }
 }
 
 pub static FAMILY: FamilyDef = FamilyDef {
@@ -144,9 +236,7 @@ fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec
             let v = mat(inputs[0])?;
             let h = mat(inputs[1])?;
             let mut out = Matrix::zeros(h.rows, h.cols);
-            WS.with(|ws| {
-                cwy::CwyOperator::new(&v).apply_into(&h, &mut out, &mut ws.borrow_mut())
-            });
+            cached_cwy_apply(&v, &h, &mut out);
             Ok(vec![tensor(out)])
         }
         NativeOp::RolloutHr => {
@@ -162,9 +252,7 @@ fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec
             let h_next = match kind {
                 CellKind::Cwy => {
                     let mut out = Matrix::zeros(h.rows, h.cols);
-                    WS.with(|ws| {
-                        cwy::CwyOperator::new(&v).apply_into(&h, &mut out, &mut ws.borrow_mut())
-                    });
+                    cached_cwy_apply(&v, &h, &mut out);
                     out.add_assign(&x);
                     out
                 }
@@ -185,5 +273,54 @@ fn run(_spec: &ArtifactSpec, op: NativeOp, inputs: &[&HostTensor]) -> Result<Vec
             Ok(vec![inputs[0].clone(), tensor(h_next.clone()), tensor(h_next)])
         }
         other => bail!("op {other:?} is not in the ortho family"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// The serve operator cache must key by value: same bits hit, any
+    /// changed bit (or shape) rebuilds, and hits are bitwise-identical
+    /// to a fresh operator.
+    #[test]
+    fn operator_cache_hits_by_value_and_stays_bitwise() {
+        let mut rng = Pcg32::seeded(0x0C0A);
+        let v = Matrix::random_normal(&mut rng, 6, 16, 1.0);
+        let h = Matrix::random_normal(&mut rng, 4, 16, 1.0);
+        let mut cache = OperatorCache::new();
+        let mut first = Matrix::zeros(4, 16);
+        assert!(!cache.apply(&v, &h, &mut first), "cold cache must miss");
+        // A fresh copy of the same values must hit, with identical bits.
+        let mut again = Matrix::zeros(4, 16);
+        assert!(cache.apply(&v.clone(), &h, &mut again), "same value must hit");
+        assert!(first.data.iter().zip(&again.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let reference = cwy::CwyOperator::new(&v).apply(&h);
+        assert!(reference.data.iter().zip(&again.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // One flipped bit must rebuild.
+        let mut v2 = v.clone();
+        v2[(0, 0)] += 1.0;
+        let mut third = Matrix::zeros(4, 16);
+        assert!(!cache.apply(&v2, &h, &mut third), "changed value must miss");
+        assert!(!cache.apply(&v, &h, &mut third), "old value was evicted");
+    }
+
+    /// `with_operator_cache` installs for the scope, restores the prior
+    /// installation afterwards, and the op bodies actually consult it.
+    #[test]
+    fn installed_cache_scopes_and_serves_the_ops() {
+        let mut rng = Pcg32::seeded(0x0C0B);
+        let v = Matrix::random_normal(&mut rng, 5, 12, 1.0);
+        let h = Matrix::random_normal(&mut rng, 3, 12, 1.0);
+        let mut cache = OperatorCache::new();
+        let mut out = Matrix::zeros(3, 12);
+        with_operator_cache(&mut cache, || {
+            cached_cwy_apply(&v, &h, &mut out);
+        });
+        // Warmed inside the scope: a direct apply on the same cache hits.
+        let mut out2 = Matrix::zeros(3, 12);
+        assert!(cache.apply(&v, &h, &mut out2), "scope must have warmed the cache");
+        assert!(out.data.iter().zip(&out2.data).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

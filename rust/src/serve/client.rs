@@ -752,6 +752,33 @@ pub fn metrics_table(metrics: &Json) -> Table {
                 g(&["telemetry", "phases", "write_back_us", "p99"]),
             ),
         ),
+        // Persistent-pool + operand-cache health (ISSUE 9).
+        ("pool workers", g(&["telemetry", "gauges", "pool_workers"])),
+        (
+            "pool tasks / steals",
+            format!(
+                "{} / {}",
+                g(&["telemetry", "gauges", "pool_tasks"]),
+                g(&["telemetry", "gauges", "pool_steals"]),
+            ),
+        ),
+        ("pool queue depth", g(&["telemetry", "gauges", "pool_queue_depth"])),
+        (
+            "pool park p50/p99 (us)",
+            format!(
+                "{} / {}",
+                g(&["telemetry", "phases", "pool_park_us", "p50"]),
+                g(&["telemetry", "phases", "pool_park_us", "p99"]),
+            ),
+        ),
+        (
+            "pack cache hits / misses",
+            format!(
+                "{} / {}",
+                g(&["telemetry", "gauges", "pack_hits"]),
+                g(&["telemetry", "gauges", "pack_misses"]),
+            ),
+        ),
     ];
     for (k, v) in rows {
         t.row(&[k.to_string(), v]);
@@ -799,11 +826,14 @@ mod tests {
                  "latency_p99_us":300,"latency_p999_us":400,"latency_mean_us":123.4,
                  "shed_deadline":1,"rejected_full":0,"mean_occupancy":3.5,
                  "max_occupancy":4},
-                "telemetry":{"gauges":{"kernel":"avx2fma"},
+                "telemetry":{"gauges":{"kernel":"avx2fma","pool_workers":3,
+                 "pool_tasks":640,"pool_steals":412,"pool_queue_depth":0,
+                 "pack_hits":960,"pack_misses":4},
                  "phases":{"queue_wait_us":{"p50":10,"p99":20},
                  "batch_assemble_us":{"p50":1,"p99":2},
                  "execute_us":{"p50":500,"p99":900},
-                 "write_back_us":{"p50":5,"p99":9}}}}"#,
+                 "write_back_us":{"p50":5,"p99":9},
+                 "pool_park_us":{"p50":40,"p99":80}}}}"#,
         )
         .unwrap();
         let md = metrics_table(&frame).to_markdown();
@@ -812,6 +842,10 @@ mod tests {
         assert!(md.contains("500 / 900"));
         assert!(md.contains("gemm kernel"));
         assert!(md.contains("avx2fma"));
+        assert!(md.contains("pool workers"));
+        assert!(md.contains("640 / 412"));
+        assert!(md.contains("40 / 80"));
+        assert!(md.contains("960 / 4"));
         // Missing keys degrade to "-", not panics.
         let empty = metrics_table(&Json::Obj(Default::default())).to_markdown();
         assert!(empty.contains('-'));

@@ -436,6 +436,10 @@ pub struct WorkerScratch {
     rows_by_port: Vec<Option<Vec<HostTensor>>>,
     /// Per-request queue waits for the stats record.
     queue_waits: Vec<u64>,
+    /// Cached CWY operator + packed panels (ISSUE 9): a worker serves
+    /// the same artifact weights batch after batch, so the operator
+    /// build and its operand packs are reused until the weights change.
+    op_cache: crate::runtime::native::ops_ortho::OperatorCache,
 }
 
 /// Typed shape check for stored session state against the served per-row
@@ -709,7 +713,12 @@ fn run_chunk(
     let outputs = match assembly {
         Ok(()) => {
             let _execute_span = crate::span!(execute);
-            model.run(inputs)
+            // Execute with this worker's operator cache installed, so
+            // CWY ops inside reuse the cached operator + packed panels
+            // across every batch this worker serves (ISSUE 9).
+            crate::runtime::native::ops_ortho::with_operator_cache(&mut scratch.op_cache, || {
+                model.run(inputs)
+            })
         }
         Err(e) => Err(e),
     };

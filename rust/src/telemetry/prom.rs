@@ -88,6 +88,16 @@ pub fn registry_json_of(reg: &Registry) -> Json {
                 ("queue_depth", num(reg.queue_depth() as f64)),
                 ("connections", num(reg.connections() as f64)),
                 ("kernel_dispatch", num(reg.kernel_dispatch() as f64)),
+                // Persistent-pool + operand-cache counters (ISSUE 9).
+                // Monotonic, but exposed through the generic gauge
+                // renderer like kernel_dispatch — the wire contract is
+                // "numeric gauges render, strings don't".
+                ("pool_workers", num(reg.pool_workers() as f64)),
+                ("pool_tasks", num(reg.pool_tasks() as f64)),
+                ("pool_steals", num(reg.pool_steals() as f64)),
+                ("pool_queue_depth", num(reg.pool_queue_depth() as f64)),
+                ("pack_hits", num(reg.pack_hits() as f64)),
+                ("pack_misses", num(reg.pack_misses() as f64)),
                 // String label alongside the numeric code; skipped by the
                 // Prometheus renderer (gauges must be numeric) but shown
                 // by `cwy client --stats`.
@@ -186,6 +196,17 @@ mod tests {
         assert!(j.path(&["gauges", "connections"]).as_f64().is_some());
         assert!(j.path(&["gauges", "kernel_dispatch"]).as_f64().is_some());
         assert!(matches!(j.path(&["gauges", "kernel"]), Json::Str(_)));
+        // Pool + pack-cache telemetry rides the same gauges object.
+        r.add_pool_task();
+        r.add_pack_hit();
+        r.record_pool_park(40);
+        let j = registry_json_of(&r);
+        assert_eq!(j.path(&["gauges", "pool_tasks"]).as_f64(), Some(1.0));
+        assert_eq!(j.path(&["gauges", "pack_hits"]).as_f64(), Some(1.0));
+        assert!(j.path(&["gauges", "pool_steals"]).as_f64().is_some());
+        assert!(j.path(&["gauges", "pool_queue_depth"]).as_f64().is_some());
+        assert!(j.path(&["gauges", "pool_workers"]).as_f64().is_some());
+        assert_eq!(j.path(&["phases", "pool_park_us", "count"]).as_f64(), Some(1.0));
         // Serde-free round trip: the frame must survive the wire.
         let back = crate::util::json::parse(&j.dump()).unwrap();
         assert_eq!(back, j);
@@ -202,6 +223,9 @@ mod tests {
         assert!(text.contains("cwy_queue_depth 3"));
         assert!(text.contains("cwy_connections 17"));
         assert!(text.contains("# TYPE cwy_kernel_dispatch gauge"));
+        assert!(text.contains("# TYPE cwy_pool_tasks gauge"));
+        assert!(text.contains("# TYPE cwy_pack_hits gauge"));
+        assert!(text.contains("cwy_phase_us{phase=\"pool_park_us\",quantile=\"0.99\"} 0"));
         // The string label must NOT leak into the numeric exposition.
         assert!(!text.contains("cwy_kernel "));
         assert!(text.contains("cwy_phase_us{phase=\"execute_us\",quantile=\"0.5\"} 0"));

@@ -32,9 +32,12 @@ pub enum SpanId {
     WriteBack = 9,
     /// One non-idle iteration of the serve front end's readiness loop.
     EventLoop = 10,
+    /// One band executed through the persistent parallel pool
+    /// (`linalg::pool`).
+    PoolTask = 11,
 }
 
-pub const SPAN_COUNT: usize = 11;
+pub const SPAN_COUNT: usize = 12;
 
 /// The four GEMM transpose variants lead the [`SpanId`] numbering, so a
 /// span index below this doubles as a FLOP-counter index.
@@ -53,6 +56,7 @@ impl SpanId {
         SpanId::Execute,
         SpanId::WriteBack,
         SpanId::EventLoop,
+        SpanId::PoolTask,
     ];
 
     pub fn name(self) -> &'static str {
@@ -68,6 +72,7 @@ impl SpanId {
             SpanId::Execute => "execute",
             SpanId::WriteBack => "write_back",
             SpanId::EventLoop => "event_loop",
+            SpanId::PoolTask => "pool_task",
         }
     }
 
@@ -96,9 +101,11 @@ pub enum HistId {
     ExecuteUs = 2,
     WriteBackUs = 3,
     LoopIterUs = 4,
+    /// Durations pool workers spent parked waiting for work.
+    PoolParkUs = 5,
 }
 
-pub const HIST_COUNT: usize = 5;
+pub const HIST_COUNT: usize = 6;
 
 impl HistId {
     pub const ALL: [HistId; HIST_COUNT] = [
@@ -107,6 +114,7 @@ impl HistId {
         HistId::ExecuteUs,
         HistId::WriteBackUs,
         HistId::LoopIterUs,
+        HistId::PoolParkUs,
     ];
 
     pub fn name(self) -> &'static str {
@@ -116,6 +124,7 @@ impl HistId {
             HistId::ExecuteUs => "execute_us",
             HistId::WriteBackUs => "write_back_us",
             HistId::LoopIterUs => "loop_iter_us",
+            HistId::PoolParkUs => "pool_park_us",
         }
     }
 }
@@ -160,6 +169,19 @@ pub struct Registry {
     /// Which GEMM/reduction microkernel the one-time dispatch selected
     /// ([`KERNEL_UNDETECTED`] until `linalg::gemm::active_kernel` runs).
     kernel_dispatch: AtomicU64,
+    /// Bands executed through the persistent pool (by anyone).
+    pool_tasks: AtomicU64,
+    /// Pooled bands executed by a worker OTHER than the dispatching
+    /// thread — the work-stealing half of `pool_tasks`.
+    pool_steals: AtomicU64,
+    /// Pooled bands published but not yet finished.
+    pool_queue_depth: AtomicU64,
+    /// Worker threads the pool started with (0 = inline/degraded).
+    pool_workers: AtomicU64,
+    /// `gemm_packed` calls served from a cached operand pack.
+    pack_hits: AtomicU64,
+    /// `PackedOperand::ensure` rebuilds (key mismatch or epoch bump).
+    pack_misses: AtomicU64,
     hists: [Histogram; HIST_COUNT],
 }
 
@@ -184,6 +206,12 @@ impl Registry {
             queue_depth: AtomicU64::new(0),
             connections: AtomicU64::new(0),
             kernel_dispatch: AtomicU64::new(KERNEL_UNDETECTED),
+            pool_tasks: AtomicU64::new(0),
+            pool_steals: AtomicU64::new(0),
+            pool_queue_depth: AtomicU64::new(0),
+            pool_workers: AtomicU64::new(0),
+            pack_hits: AtomicU64::new(0),
+            pack_misses: AtomicU64::new(0),
             hists: [HIST; HIST_COUNT],
         }
     }
@@ -238,6 +266,67 @@ impl Registry {
 
     pub fn kernel_dispatch(&self) -> u64 {
         self.kernel_dispatch.load(Ordering::Relaxed)
+    }
+
+    // --- persistent-pool + operand-cache instrumentation (ISSUE 9) ---
+    // All relaxed single-atomic ops: the pool's dispatch path must stay
+    // inside the zero-allocation, lock-free recording contract.
+
+    pub fn add_pool_task(&self) {
+        self.pool_tasks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn pool_tasks(&self) -> u64 {
+        self.pool_tasks.load(Ordering::Relaxed)
+    }
+
+    pub fn add_pool_steal(&self) {
+        self.pool_steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn pool_steals(&self) -> u64 {
+        self.pool_steals.load(Ordering::Relaxed)
+    }
+
+    pub fn pool_queue_add(&self, n: u64) {
+        self.pool_queue_depth.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn pool_queue_sub(&self, n: u64) {
+        self.pool_queue_depth.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn pool_queue_depth(&self) -> u64 {
+        self.pool_queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Published once when the pool starts.
+    pub fn set_pool_workers(&self, n: u64) {
+        self.pool_workers.store(n, Ordering::Relaxed);
+    }
+
+    pub fn pool_workers(&self) -> u64 {
+        self.pool_workers.load(Ordering::Relaxed)
+    }
+
+    pub fn record_pool_park(&self, us: u64) {
+        self.hists[HistId::PoolParkUs as usize].record(us);
+    }
+
+    pub fn add_pack_hit(&self) {
+        self.pack_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn pack_hits(&self) -> u64 {
+        self.pack_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn add_pack_miss(&self) {
+        self.pack_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn pack_misses(&self) -> u64 {
+        self.pack_misses.load(Ordering::Relaxed)
     }
 
     pub fn hist(&self, id: HistId) -> &Histogram {
@@ -323,6 +412,31 @@ mod tests {
         assert_eq!(kernel_dispatch_name(r.kernel_dispatch()), "avx2fma");
         r.set_kernel_dispatch(KERNEL_PORTABLE);
         assert_eq!(kernel_dispatch_name(r.kernel_dispatch()), "portable");
+    }
+
+    #[test]
+    fn pool_and_pack_counters() {
+        let r = Registry::new();
+        r.add_pool_task();
+        r.add_pool_task();
+        r.add_pool_steal();
+        assert_eq!(r.pool_tasks(), 2);
+        assert_eq!(r.pool_steals(), 1);
+        r.pool_queue_add(8);
+        r.pool_queue_sub(3);
+        assert_eq!(r.pool_queue_depth(), 5);
+        r.set_pool_workers(7);
+        assert_eq!(r.pool_workers(), 7);
+        r.record_pool_park(150);
+        assert_eq!(r.hist(HistId::PoolParkUs).count(), 1);
+        r.add_pack_hit();
+        r.add_pack_miss();
+        r.add_pack_hit();
+        assert_eq!(r.pack_hits(), 2);
+        assert_eq!(r.pack_misses(), 1);
+        // Pool-task spans share the generic span slots.
+        r.record_span(SpanId::PoolTask, 5_000);
+        assert_eq!(r.span_calls(SpanId::PoolTask), 1);
     }
 
     #[test]

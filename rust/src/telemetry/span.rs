@@ -118,6 +118,9 @@ macro_rules! span {
     (event_loop) => {
         $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::EventLoop)
     };
+    (pool_task) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::PoolTask)
+    };
 }
 
 /// One exported trace event (a closed span).

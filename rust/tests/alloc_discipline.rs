@@ -14,15 +14,18 @@
 //! This binary intentionally holds a single `#[test]` so no concurrent
 //! test thread can contribute allocations to the window.
 //!
-//! Shapes are kept under `gemm::PARALLEL_FLOP_CUTOFF` so every product
-//! stays on the single-threaded kernel path — spawning scoped threads
-//! allocates by design, and large-matrix parallelism is outside the
-//! zero-allocation contract (DESIGN.md §3.3).
+//! ISSUE 9 extends the contract once more: the persistent work-stealing
+//! pool replaced per-call `thread::scope` spawns, so **pooled** GEMM
+//! dispatch is now inside the zero-allocation window too — the pool is
+//! warmed (threads spawned, slot table static) before counting, then
+//! above-cutoff products dispatch bands through it with the counter
+//! live.  The training window additionally asserts the operand cache is
+//! actually serving hits (packed gemms) while allocating nothing.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use cwy::linalg::{Matrix, Workspace};
+use cwy::linalg::{gemm, pool_workers, Matrix, Workspace};
 use cwy::runtime::native::ops_rnn::{
     forward_backward_ws, CopyBatchRef, CopyRnnParams, RolloutWorkspace, IN_VOCAB, OUT_CLASSES,
 };
@@ -113,6 +116,7 @@ fn steady_state_training_step_allocates_zero() {
         train_step(&mut params, &tokens, &targets, batch, t_total, &mut rws);
     }
 
+    let hits_before = cwy::telemetry::global().pack_hits();
     let before = allocs();
     let mut losses = [0.0f32; 5];
     for loss in &mut losses {
@@ -124,6 +128,11 @@ fn steady_state_training_step_allocates_zero() {
         "steady-state training step allocated {delta} times over 5 steps \
          (the ISSUE 5 zero-allocation contract)"
     );
+    // ISSUE 9: those steps must have run on cached operand packs — the
+    // tape repacks once per recompute and every timestep's packed gemm
+    // counts a hit, all allocation-free (asserted above).
+    let pack_hits = cwy::telemetry::global().pack_hits() - hits_before;
+    assert!(pack_hits > 0, "counted training window served no operand-pack hits");
     // The zero-allocation claim above covered live telemetry, not an
     // idle registry: the counted steps recorded spans and trace events.
     let bptt = cwy::telemetry::SpanId::BpttBackward;
@@ -173,4 +182,31 @@ fn steady_state_training_step_allocates_zero() {
         0,
         "Workspace::take allocated for already-pooled shapes"
     );
+
+    // ISSUE 9: pooled GEMM dispatch is inside the contract now.  Warm
+    // the persistent pool first (worker spawn and slot table init are
+    // the one-time cost, like the trace ring above), then count a
+    // window of above-cutoff products whose bands run on the workers.
+    let pa = Matrix::random_normal(&mut rng, 96, 64, 1.0);
+    let pb = Matrix::random_normal(&mut rng, 64, 96, 1.0);
+    let mut pc = Matrix::zeros(96, 96); // 96·64·96 ≥ PARALLEL_FLOP_CUTOFF
+    for _ in 0..3 {
+        gemm(false, false, 1.0, &pa, &pb, 0.0, &mut pc);
+    }
+    let tasks_before = cwy::telemetry::global().pool_tasks();
+    let before = allocs();
+    for _ in 0..8 {
+        gemm(false, false, 1.0, &pa, &pb, 0.0, &mut pc);
+    }
+    let delta = allocs() - before;
+    assert_eq!(delta, 0, "pooled GEMM dispatch allocated {delta} times over 8 calls");
+    if pool_workers() > 0 {
+        // With live workers these products must actually have dispatched
+        // bands (under CWY_GEMM_THREADS=1 everything legitimately runs
+        // inline and zero-allocation was still enforced above).
+        assert!(
+            cwy::telemetry::global().pool_tasks() > tasks_before,
+            "no bands went through the pool in the counted window"
+        );
+    }
 }
