@@ -52,7 +52,7 @@ fn main() {
             max_connections: conns + 16,
             ..AdmissionCfg::default()
         },
-        lr: 0.0,
+        ..ServeCfg::default()
     };
     let server = serve(cfg, factory).expect("starting in-process server");
     let addr = server.local_addr().to_string();
@@ -66,8 +66,8 @@ fn main() {
         sessions,
         rounds,
         conns,
-        deadline_us: None,
         use_sessions: true,
+        ..SessionLoadCfg::default()
     };
     let report = run_sessions(&load).expect("closed-loop run");
     server.stop();

@@ -17,8 +17,8 @@ use std::sync::Arc;
 use cwy::runtime::fixture::TempDir;
 use cwy::runtime::Backend;
 use cwy::serve::{
-    probe_serve_spec, run_load, serve, AdmissionCfg, BatchCfg, ClientCfg, EngineModel, FakeModel,
-    ModelFactory, ServeCfg, ServeModel, SessionCfg,
+    probe_serve_spec, run_load, serve, BatchCfg, ClientCfg, EngineModel, FakeModel,
+    ModelFactory, ServeCfg, ServeModel,
 };
 use cwy::util::cli::Args;
 
@@ -69,9 +69,7 @@ fn main() -> anyhow::Result<()> {
             addr: "127.0.0.1:0".to_string(),
             workers,
             batch: BatchCfg { max_batch, max_wait_us, queue_cap: 4_096, continuous: true },
-            session: SessionCfg::default(),
-            admission: AdmissionCfg::default(),
-            lr: 0.0,
+            ..ServeCfg::default()
         },
         factory,
     )?;
@@ -85,8 +83,8 @@ fn main() -> anyhow::Result<()> {
         addr,
         requests,
         concurrency,
-        deadline_us: None,
         use_sessions: args.has_flag("sessions"),
+        ..ClientCfg::default()
     })?;
     println!("\n## client\n");
     print!("{}", report.to_table().to_markdown());

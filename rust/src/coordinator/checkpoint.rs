@@ -3,10 +3,18 @@
 //! Format (little-endian):
 //!   magic "CWYCKPT1" | u64 step | u64 n_tensors |
 //!   per tensor: u64 rank, u64 dims..., u64 elem_count, f32 data...
+//!
+//! [`save`] is crash-safe (ISSUE 10): the bytes land in a same-directory
+//! temp file that is fsynced before an atomic rename over the
+//! destination, and the parent directory is fsynced after.  A crash at
+//! any point leaves either the old complete checkpoint or the new one —
+//! never a torn file under the real name.  [`load`] validates magic and
+//! length, so a torn *temp* (or a checkpoint written by a dying pre-PR10
+//! binary) is rejected instead of restoring garbage.
 
 use std::fs;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -14,7 +22,8 @@ use crate::runtime::tensor::HostTensor;
 
 const MAGIC: &[u8; 8] = b"CWYCKPT1";
 
-pub fn save(path: impl AsRef<Path>, step: usize, state: &[HostTensor]) -> Result<()> {
+/// Serialize the checkpoint body (shared by [`save`] and tests).
+fn encode(step: usize, state: &[HostTensor]) -> Result<Vec<u8>> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
     buf.extend_from_slice(&(step as u64).to_le_bytes());
@@ -32,10 +41,57 @@ pub fn save(path: impl AsRef<Path>, step: usize, state: &[HostTensor]) -> Result
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
-    let mut f = fs::File::create(path.as_ref())
-        .with_context(|| format!("creating {}", path.as_ref().display()))?;
-    f.write_all(&buf)?;
+    Ok(buf)
+}
+
+/// Same-directory temp name: the rename that publishes it must not cross
+/// a filesystem boundary, and the pid suffix keeps concurrent writers
+/// from clobbering each other's temp.
+fn tmp_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "ckpt".to_string());
+    path.with_file_name(format!(".{name}.tmp.{}", std::process::id()))
+}
+
+/// Write + fsync the temp file (the torn-write window lives here, on a
+/// name `load` never reads).
+fn write_durable(tmp: &Path, buf: &[u8]) -> Result<()> {
+    let mut f = fs::File::create(tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(buf)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all()
+        .with_context(|| format!("fsync {}", tmp.display()))?;
     Ok(())
+}
+
+/// Publish the temp atomically, then fsync the parent directory so the
+/// rename itself survives power loss.  The directory fsync is
+/// best-effort: some filesystems refuse to sync a directory handle.
+fn commit(tmp: &Path, path: &Path) -> Result<()> {
+    fs::rename(tmp, path)
+        .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+pub fn save(path: impl AsRef<Path>, step: usize, state: &[HostTensor]) -> Result<()> {
+    let path = path.as_ref();
+    let buf = encode(step, state)?;
+    let tmp = tmp_path(path);
+    let res = write_durable(&tmp, &buf).and_then(|()| commit(&tmp, path));
+    if res.is_err() {
+        // Never leave a stale temp behind; the published checkpoint (old
+        // or new) is untouched either way.
+        let _ = fs::remove_file(&tmp);
+    }
+    res
 }
 
 pub fn load(path: impl AsRef<Path>) -> Result<(usize, Vec<HostTensor>)> {
@@ -106,5 +162,71 @@ mod tests {
         let path = dir.join("bad.ckpt");
         fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    /// ISSUE 10 satellite: every truncation point of a valid image must
+    /// be rejected by `load`, not half-restored.
+    #[test]
+    fn rejects_every_truncation_point() {
+        let dir = std::env::temp_dir().join("cwy_ckpt_torn");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cut.ckpt");
+        let state = vec![HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0])];
+        let full = encode(7, &state).unwrap();
+        for cut in 0..full.len() {
+            fs::write(&path, &full[..cut]).unwrap();
+            assert!(load(&path).is_err(), "truncation at byte {cut} must be rejected");
+        }
+        fs::write(&path, &full).unwrap();
+        assert!(load(&path).is_ok());
+    }
+
+    /// ISSUE 10 satellite: a crash mid-write (simulated by writing a torn
+    /// temp and never committing) must leave the previously saved
+    /// checkpoint fully readable, and the next successful save must clean
+    /// the temp up.
+    #[test]
+    fn torn_write_never_replaces_a_valid_checkpoint() {
+        let dir = std::env::temp_dir().join("cwy_ckpt_atomic");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.ckpt");
+        let old = vec![HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0])];
+        save(&path, 10, &old).unwrap();
+
+        // Simulated crash: the new image gets halfway into the temp file
+        // and the process dies before the rename.
+        let new = vec![HostTensor::f32(vec![3], vec![9.0, 9.0, 9.0])];
+        let torn = encode(11, &new).unwrap();
+        let tmp = tmp_path(&path);
+        write_durable(&tmp, &torn[..torn.len() / 2]).unwrap();
+
+        let (step, got) = load(&path).expect("published checkpoint must survive the crash");
+        assert_eq!(step, 10);
+        assert_eq!(got, old);
+        assert!(load(&tmp).is_err(), "the torn temp itself is invalid");
+
+        // The next save publishes atomically and leaves no temp behind.
+        save(&path, 11, &new).unwrap();
+        let (step, got) = load(&path).unwrap();
+        assert_eq!(step, 11);
+        assert_eq!(got, new);
+        assert!(!tmp.exists(), "save must not leave temp files around");
+    }
+
+    /// A failing encode (non-f32 state) must not clobber the existing
+    /// checkpoint or leave a temp file.
+    #[test]
+    fn failed_save_leaves_previous_checkpoint_intact() {
+        let dir = std::env::temp_dir().join("cwy_ckpt_failsave");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.ckpt");
+        let old = vec![HostTensor::f32(vec![1], vec![5.0])];
+        save(&path, 3, &old).unwrap();
+        let bad = vec![HostTensor::i32(vec![1], vec![1])];
+        assert!(save(&path, 4, &bad).is_err());
+        let (step, got) = load(&path).unwrap();
+        assert_eq!(step, 3);
+        assert_eq!(got, old);
+        assert!(!tmp_path(&path).exists());
     }
 }

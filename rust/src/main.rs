@@ -43,9 +43,12 @@ fn main() -> Result<()> {
                  serve:    --addr HOST:PORT --artifact NAME --workers W --max-batch B --max-wait-us U\n\
                  \x20         [--backend auto|native|pjrt|fake --queue-cap N --lr F]\n\
                  \x20         [--batching continuous|timed --max-conns N --max-inflight N]\n\
+                 \x20         [--faults SEED:SPEC deterministic chaos, e.g. 42:panic=0.15,slow=0.05@500;\n\
+                 \x20          the CWY_FAULTS env var is the fallback] \n\
                  \x20         (--backend native with no --artifact serves the toy fixture)\n\
                  client:   --addr HOST:PORT --requests N --concurrency C [--deadline-us U --sessions]\n\
                  \x20         or --closed-loop --sessions N --rounds R --conns C (exactly-once harness)\n\
+                 \x20         [--retries N resend budget for overloaded/stale_state/worker_failed]\n\
                  \x20         [--stats fetch+print the server metrics frame only] [--prom]\n\
                  bench-check: --committed BENCH.json --measured BENCH.json (CI perf gate)\n\
                  --backend auto (default) prefers PJRT and falls back to the native rust backend."
@@ -388,8 +391,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
 /// the deterministic in-process `fake` model.
 fn cmd_serve(args: &Args) -> Result<()> {
     use cwy::serve::{
-        probe_serve_spec, serve, AdmissionCfg, BatchCfg, EngineModel, FakeModel, ModelFactory,
-        ServeCfg, ServeModel, SessionCfg,
+        probe_serve_spec, serve, AdmissionCfg, BatchCfg, EngineModel, FakeModel, FaultPlan,
+        ModelFactory, RestartPolicy, ServeCfg, ServeModel, SessionCfg,
     };
     use std::sync::Arc;
 
@@ -411,6 +414,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..admission_defaults
     };
     let lr = args.get_f32("lr", 0.0);
+    // Deterministic chaos: `--faults seed:spec` wins over the CWY_FAULTS
+    // env var (the CI chaos matrix sets the env; a flag overrides it for
+    // local repros).  DESIGN.md §6.8 documents the grammar.
+    let fault_spec = args
+        .get("faults")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("CWY_FAULTS").ok());
+    let faults = match fault_spec {
+        Some(s) if !s.trim().is_empty() => Some(FaultPlan::parse(&s)?),
+        _ => None,
+    };
     let default_backend = if args.get("artifact").is_some() { "auto" } else { "fake" };
     let backend = args.get_or("backend", default_backend);
 
@@ -479,6 +493,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         session: SessionCfg::default(),
         admission,
         lr,
+        restart: RestartPolicy::default(),
+        faults,
     };
     let server = serve(cfg, factory)?;
     println!(
@@ -532,6 +548,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             conns: args.get_usize("conns", defaults.conns),
             deadline_us: args.get("deadline-us").and_then(|v| v.parse().ok()),
             use_sessions: !args.has_flag("no-session-state"),
+            max_retries: args.get_usize("retries", defaults.max_retries as usize) as u32,
         };
         println!(
             "# cwy client --closed-loop: {} sessions x {} rounds over {} connections -> {}",
@@ -562,6 +579,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         concurrency: args.get_usize("concurrency", 32),
         deadline_us: args.get("deadline-us").and_then(|v| v.parse().ok()),
         use_sessions: args.has_flag("sessions"),
+        max_retries: args.get_usize("retries", 3) as u32,
     };
     println!(
         "# cwy client: {} requests over {} connections -> {}",

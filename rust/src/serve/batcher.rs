@@ -21,6 +21,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::serve::completion::CompletionHub;
+use crate::serve::lock_recover;
 use crate::serve::protocol::{ErrCode, InferRequest, Response};
 use crate::serve::stats::{Clock, ServeStats};
 
@@ -52,12 +53,22 @@ pub struct Pending {
     /// Absolute shed time on the server clock (enqueue + deadline budget).
     pub expiry_us: Option<u64>,
     sink: ReplySink,
+    /// Set by [`Pending::reply`].  Shared with any [`FailoverRoute`]
+    /// cloned off this request, so the supervisor can tell an answered
+    /// request from one a panicking worker left hanging (ISSUE 10).
+    answered: Arc<AtomicBool>,
 }
 
 impl Pending {
     pub fn new(req: InferRequest, now_us: u64, sink: impl Into<ReplySink>) -> Pending {
         let expiry_us = req.deadline_us.map(|d| now_us.saturating_add(d));
-        Pending { req, enqueued_us: now_us, expiry_us, sink: sink.into() }
+        Pending {
+            req,
+            enqueued_us: now_us,
+            expiry_us,
+            sink: sink.into(),
+            answered: Arc::new(AtomicBool::new(false)),
+        }
     }
 
     pub fn expired(&self, now_us: u64) -> bool {
@@ -66,11 +77,22 @@ impl Pending {
 
     /// Send a response frame; a disconnected client is not an error.
     pub fn reply(&self, resp: Response) {
+        self.answered.store(true, Ordering::Release);
         match &self.sink {
             ReplySink::Channel(tx) => {
                 let _ = tx.send(resp);
             }
             ReplySink::Loop { conn, hub } => hub.push(*conn, resp),
+        }
+    }
+
+    /// Detachable reply route for supervisor fail-over: survives the
+    /// `Pending` being dropped by an unwinding worker stack.
+    pub fn failover_route(&self) -> FailoverRoute {
+        FailoverRoute {
+            id: self.req.id,
+            sink: self.sink.clone(),
+            answered: Arc::clone(&self.answered),
         }
     }
 
@@ -80,6 +102,50 @@ impl Pending {
             code: ErrCode::Deadline,
             msg: "deadline budget elapsed while queued".to_string(),
         }
+    }
+}
+
+/// A request's reply address, detached from its [`Pending`].
+///
+/// The worker moves the `Pending`s into the execution call, so when that
+/// call panics they are dropped mid-unwind — but their clients are still
+/// waiting.  The supervisor captures one `FailoverRoute` per in-flight
+/// request before execution and uses it to emit the typed
+/// `worker_failed` frame for everything the panic left unanswered,
+/// preserving the exactly-one-completion-per-admitted-infer invariant.
+pub struct FailoverRoute {
+    id: u64,
+    sink: ReplySink,
+    answered: Arc<AtomicBool>,
+}
+
+impl FailoverRoute {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn answered(&self) -> bool {
+        self.answered.load(Ordering::Acquire)
+    }
+
+    /// Answer with a `worker_failed` frame unless the request already got
+    /// its one completion.  Returns whether a frame was sent.
+    pub fn fail_worker(&self, msg: &str) -> bool {
+        if self.answered.swap(true, Ordering::AcqRel) {
+            return false;
+        }
+        let resp = Response::Err {
+            id: self.id,
+            code: ErrCode::WorkerFailed,
+            msg: msg.to_string(),
+        };
+        match &self.sink {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplySink::Loop { conn, hub } => hub.push(*conn, resp),
+        }
+        true
     }
 }
 
@@ -235,6 +301,25 @@ impl BatchQueue {
         }
         batch
     }
+
+    /// Put already-admitted requests back at the FRONT of their artifact
+    /// groups, preserving their relative order.  Used by the supervisor
+    /// to return the untouched tail of a panicked worker's batch; the
+    /// entries were admitted (and counted) once, so the capacity check is
+    /// deliberately skipped — dropping them would break exactly-once.
+    pub fn requeue_front(&mut self, entries: Vec<Pending>) {
+        for p in entries.into_iter().rev() {
+            match self.groups.iter_mut().find(|g| g.artifact == p.req.artifact) {
+                Some(g) => g.items.push_front(p),
+                None => {
+                    let artifact = p.req.artifact.clone();
+                    let mut items = VecDeque::new();
+                    items.push_back(p);
+                    self.groups.push(Group { artifact, items });
+                }
+            }
+        }
+    }
 }
 
 /// Batcher configuration (`cwy serve` flags map 1:1 onto these).
@@ -296,7 +381,7 @@ impl Batcher {
     pub fn submit(&self, req: InferRequest, sink: impl Into<ReplySink>) -> bool {
         let now = self.clock.now_us();
         let pending = Pending::new(req, now, sink);
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_recover(&self.queue);
         // Checked under the queue lock: shutdown() sets the flag before
         // draining, so a request either lands pre-drain (and is answered
         // by the drain) or sees the flag here — never a silent hang.
@@ -349,7 +434,7 @@ impl Batcher {
     /// Block until a batch is ready (or shutdown).  Expired requests are
     /// answered with `deadline` error frames as they are discovered.
     pub fn next_batch(&self) -> Option<Vec<Pending>> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_recover(&self.queue);
         loop {
             if self.stop.load(Ordering::Acquire) {
                 return None;
@@ -365,7 +450,7 @@ impl Batcher {
                     crate::telemetry::global().set_queue_depth(q.len() as u64);
                     return Some(batch);
                 }
-                q = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+                q = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap_or_else(|e| e.into_inner()).0;
                 continue;
             }
             match q.poll(self.cfg.max_batch, self.cfg.max_wait_us, now) {
@@ -375,32 +460,63 @@ impl Batcher {
                     return Some(batch);
                 }
                 FlushDecision::WaitUs(us) => {
-                    q = self.notify.wait_timeout(q, flush_wait(us)).unwrap().0;
+                    q = self.notify.wait_timeout(q, flush_wait(us)).unwrap_or_else(|e| e.into_inner()).0;
                 }
                 FlushDecision::Idle => {
-                    q = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+                    q = self.notify.wait_timeout(q, Duration::from_millis(50)).unwrap_or_else(|e| e.into_inner()).0;
                 }
             }
         }
+    }
+
+    /// Return the untouched tail of a panicked worker's batch to the
+    /// front of the queue (supervisor fail-over path).
+    ///
+    /// The entries were admitted and counted at `submit` time, so no
+    /// capacity check and no re-counting happens here; they go back at
+    /// the head of their artifact groups so a respawned (or sibling)
+    /// worker picks them up first.  During shutdown they are answered
+    /// `unavailable` instead — the drain already ran, and parking them in
+    /// the queue would leave them hanging forever.
+    pub fn requeue(&self, entries: Vec<Pending>) {
+        if entries.is_empty() {
+            return;
+        }
+        let mut q = lock_recover(&self.queue);
+        if self.stop.load(Ordering::Acquire) {
+            drop(q);
+            for p in entries {
+                p.reply(Response::Err {
+                    id: p.req.id,
+                    code: ErrCode::Unavailable,
+                    msg: "server shutting down".to_string(),
+                });
+            }
+            return;
+        }
+        q.requeue_front(entries);
+        crate::telemetry::global().set_queue_depth(q.len() as u64);
+        drop(q);
+        self.notify.notify_all();
     }
 
     /// Shed expired requests without dispatching — the event loop calls
     /// this on its tick so deadline frames go out even while every worker
     /// is busy.  Returns how many were shed.
     pub fn reap(&self) -> usize {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_recover(&self.queue);
         let now = self.clock.now_us();
         self.shed_locked(&mut q, now)
     }
 
     pub fn depth(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        lock_recover(&self.queue).len()
     }
 
     /// Ask workers to exit; pending requests are answered `unavailable`.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_recover(&self.queue);
         loop {
             let batch = q.take_batch(usize::MAX);
             if batch.is_empty() {
@@ -661,6 +777,100 @@ mod tests {
             "continuous dispatch waited out the window"
         );
         b.shutdown();
+    }
+
+    #[test]
+    fn failover_route_answers_exactly_once() {
+        let (p, rx) = pend(5, "a", 0, None);
+        let route = p.failover_route();
+        assert!(!route.answered());
+        // A panic with no prior reply: the route delivers worker_failed.
+        assert!(route.fail_worker("worker panicked"));
+        match rx.try_recv().unwrap() {
+            Response::Err { id, code, .. } => {
+                assert_eq!((id, code), (5, ErrCode::WorkerFailed));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // Second fail-over attempt is a no-op — exactly one completion.
+        assert!(!route.fail_worker("again"));
+        assert!(rx.try_recv().is_err());
+
+        // A request the worker already answered must NOT get a second
+        // frame from the fail-over path.
+        let (p2, rx2) = pend(6, "a", 0, None);
+        let route2 = p2.failover_route();
+        p2.reply(Response::Pong { id: 6 });
+        assert!(route2.answered());
+        assert!(!route2.fail_worker("late panic"));
+        assert!(matches!(rx2.try_recv().unwrap(), Response::Pong { id: 6 }));
+        assert!(rx2.try_recv().is_err());
+    }
+
+    #[test]
+    fn requeue_restores_entries_at_the_front() {
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let b = Batcher::new(
+            BatchCfg { max_batch: 8, max_wait_us: 1, queue_cap: 4, continuous: true },
+            clock,
+            stats.clone(),
+        );
+        let (tx, _rx) = mpsc::channel::<Response>();
+        assert!(b.submit(req(1, "a", None), tx.clone()));
+        assert!(b.submit(req(2, "a", None), tx.clone()));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(ids(&batch), vec![1, 2]);
+        // A later request arrives, then the "panicked" batch's untouched
+        // tail goes back: it must come out FIRST, in its original order.
+        assert!(b.submit(req(3, "a", None), tx));
+        b.requeue(batch);
+        assert_eq!(b.depth(), 3);
+        assert_eq!(ids(&b.next_batch().unwrap()), vec![1, 2, 3]);
+        // Requeue bypasses the submitted counter: 1 and 2 were already
+        // counted once at submit time.
+        assert_eq!(stats.snapshot().submitted, 3);
+        b.shutdown();
+    }
+
+    #[test]
+    fn requeue_during_shutdown_answers_unavailable() {
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let b = Batcher::new(BatchCfg::default(), clock, stats);
+        let (tx, rx) = mpsc::channel();
+        assert!(b.submit(req(4, "a", None), tx));
+        let batch = b.next_batch().unwrap();
+        b.shutdown();
+        b.requeue(batch);
+        match rx.try_recv().unwrap() {
+            Response::Err { id, code, .. } => {
+                assert_eq!((id, code), (4, ErrCode::Unavailable));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batcher_survives_a_poisoned_queue_lock() {
+        // A thread panicking with the queue mutex held (the pre-ISSUE-10
+        // failure mode when a worker died inside next_batch bookkeeping)
+        // must not take down every subsequent submit/depth/shutdown call.
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let b = Batcher::new(BatchCfg::default(), clock, stats);
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = b.queue.lock().unwrap();
+            panic!("injected panic while holding the batcher lock");
+        }));
+        assert!(poison.is_err());
+        assert!(b.queue.is_poisoned());
+        let (tx, _rx) = mpsc::channel::<Response>();
+        assert!(b.submit(req(11, "a", None), tx));
+        assert_eq!(b.depth(), 1);
+        assert_eq!(ids(&b.next_batch().unwrap()), vec![11]);
+        b.shutdown();
+        assert!(b.next_batch().is_none());
     }
 
     #[test]

@@ -27,6 +27,27 @@ use crate::report::Table;
 use crate::runtime::tensor::{Dtype, HostTensor};
 use crate::serve::protocol::{self, ErrCode, InferRequest, Request, Response};
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Typed errors worth resending: transient server conditions where the
+/// request itself is fine (ISSUE 10 taxonomy — DESIGN.md §6.1).
+/// `overloaded` clears when the queue drains, `stale_state` after the
+/// discarded session restarts fresh, `worker_failed` once the supervisor
+/// respawns the panicked worker.
+pub fn retriable(code: ErrCode) -> bool {
+    matches!(code, ErrCode::Overloaded | ErrCode::StaleState | ErrCode::WorkerFailed)
+}
+
+/// Capped exponential backoff with deterministic jitter for retries:
+/// 500us base doubling to a 20ms cap, plus up to +25% seeded jitter so
+/// synchronized clients don't re-land in one thundering herd.
+fn retry_backoff(rng: &mut Pcg32, attempt: u32) -> Duration {
+    let base_us = 500u64;
+    let cap_us = 20_000u64;
+    let us = base_us.saturating_mul(1u64 << attempt.saturating_sub(1).min(10)).min(cap_us);
+    let jitter = ((rng.uniform() * 0.25) * us as f32) as u64;
+    Duration::from_micros(us + jitter)
+}
 
 /// Load-run configuration (`cwy client` flags map 1:1 onto these).
 #[derive(Clone, Debug)]
@@ -40,6 +61,9 @@ pub struct ClientCfg {
     /// Attach a per-connection session key to every request, exercising
     /// the server-side recurrent-state path.
     pub use_sessions: bool,
+    /// Resend budget per request for [`retriable`] typed errors; retries
+    /// are reported, not counted as failures (ISSUE 10).
+    pub max_retries: u32,
 }
 
 impl Default for ClientCfg {
@@ -50,6 +74,7 @@ impl Default for ClientCfg {
             concurrency: 32,
             deadline_us: None,
             use_sessions: false,
+            max_retries: 3,
         }
     }
 }
@@ -71,6 +96,9 @@ pub struct LoadReport {
     pub err_deadline: u64,
     pub err_overloaded: u64,
     pub err_other: u64,
+    /// Resends after retriable typed errors (`overloaded`, `stale_state`,
+    /// `worker_failed`) that were absorbed by the retry budget.
+    pub retries: u64,
     pub wall_s: f64,
     pub lat_p50_us: u64,
     pub lat_p95_us: u64,
@@ -100,6 +128,7 @@ impl LoadReport {
             ("err deadline", self.err_deadline.to_string()),
             ("err overloaded", self.err_overloaded.to_string()),
             ("err other", self.err_other.to_string()),
+            ("retries (recovered)", self.retries.to_string()),
             ("wall (s)", format!("{:.3}", self.wall_s)),
             ("throughput (req/s)", format!("{:.1}", self.rps())),
             ("latency p50 (us)", self.lat_p50_us.to_string()),
@@ -226,6 +255,7 @@ struct ThreadOutcome {
     err_deadline: u64,
     err_overloaded: u64,
     err_other: u64,
+    retries: u64,
     latencies_us: Vec<u64>,
     batch_sum: u64,
 }
@@ -241,6 +271,7 @@ fn run_thread(
         err_deadline: 0,
         err_overloaded: 0,
         err_other: 0,
+        retries: 0,
         latencies_us: Vec::with_capacity(count),
         batch_sum: 0,
     };
@@ -252,7 +283,8 @@ fn run_thread(
         }
     };
     let session = cfg.use_sessions.then(|| format!("load-{thread_idx}"));
-    for i in 0..count {
+    let mut rng = Pcg32::new(0xC11E_4700 + thread_idx as u64, 1);
+    'requests: for i in 0..count {
         let id = ((thread_idx as u64) << 32) | i as u64;
         let req = Request::Infer(InferRequest {
             id,
@@ -266,25 +298,49 @@ fn run_thread(
             out.err_other += (count - i) as u64;
             break;
         }
-        match conn.recv() {
-            Ok(Response::Ok { id: rid, batch, .. }) => {
-                out.latencies_us.push(t0.elapsed().as_micros() as u64);
-                if rid == id {
-                    out.ok += 1;
-                    out.batch_sum += batch as u64;
-                } else {
-                    out.err_other += 1;
+        let mut attempt = 0u32;
+        loop {
+            match conn.recv() {
+                Ok(Response::Ok { id: rid, batch, .. }) => {
+                    out.latencies_us.push(t0.elapsed().as_micros() as u64);
+                    if rid == id {
+                        out.ok += 1;
+                        out.batch_sum += batch as u64;
+                    } else {
+                        out.err_other += 1;
+                    }
+                    break;
                 }
-            }
-            Ok(Response::Err { code, .. }) => match code {
-                ErrCode::Deadline => out.err_deadline += 1,
-                ErrCode::Overloaded => out.err_overloaded += 1,
-                _ => out.err_other += 1,
-            },
-            Ok(_) => out.err_other += 1,
-            Err(_) => {
-                out.err_other += (count - i) as u64;
-                break;
+                // Transient typed errors resend the same request after a
+                // capped, jittered backoff; only budget exhaustion turns
+                // them into a counted failure.
+                Ok(Response::Err { code, .. })
+                    if retriable(code) && attempt < cfg.max_retries =>
+                {
+                    attempt += 1;
+                    out.retries += 1;
+                    thread::sleep(retry_backoff(&mut rng, attempt));
+                    if conn.send(&req).is_err() {
+                        out.err_other += (count - i) as u64;
+                        break 'requests;
+                    }
+                }
+                Ok(Response::Err { code, .. }) => {
+                    match code {
+                        ErrCode::Deadline => out.err_deadline += 1,
+                        ErrCode::Overloaded => out.err_overloaded += 1,
+                        _ => out.err_other += 1,
+                    }
+                    break;
+                }
+                Ok(_) => {
+                    out.err_other += 1;
+                    break;
+                }
+                Err(_) => {
+                    out.err_other += (count - i) as u64;
+                    break 'requests;
+                }
             }
         }
     }
@@ -320,6 +376,7 @@ pub fn run_load(cfg: &ClientCfg) -> Result<LoadReport> {
         report.err_deadline += o.err_deadline;
         report.err_overloaded += o.err_overloaded;
         report.err_other += o.err_other;
+        report.retries += o.retries;
         batch_sum += o.batch_sum;
         all_lat.extend(o.latencies_us);
     }
@@ -350,6 +407,10 @@ pub struct SessionLoadCfg {
     /// Attach a per-session key to every request, exercising the
     /// server-side recurrent-state path at full concurrency.
     pub use_sessions: bool,
+    /// Resend budget per request for [`retriable`] typed errors
+    /// (refreshed each round); recovered retries are reported, never
+    /// counted as failures.
+    pub max_retries: u32,
 }
 
 impl Default for SessionLoadCfg {
@@ -361,6 +422,7 @@ impl Default for SessionLoadCfg {
             conns: 64,
             deadline_us: None,
             use_sessions: true,
+            max_retries: 3,
         }
     }
 }
@@ -403,6 +465,9 @@ pub struct SessionLoadReport {
     pub stray: u64,
     /// Connections that failed to open (their sessions never sent).
     pub conn_failures: u64,
+    /// Resends of [`retriable`] typed errors that stayed within budget
+    /// (each retried request still resolves to exactly one final answer).
+    pub retries: u64,
     pub wall_s: f64,
     pub lat_p50_us: u64,
     pub lat_p95_us: u64,
@@ -455,6 +520,7 @@ impl SessionLoadReport {
             ("duplicates", self.duplicates.to_string()),
             ("stray frames", self.stray.to_string()),
             ("conn failures", self.conn_failures.to_string()),
+            ("retries (recovered)", self.retries.to_string()),
             ("wall (s)", format!("{:.3}", self.wall_s)),
             ("throughput (req/s)", format!("{:.1}", self.rps())),
             ("latency p50 (us)", self.lat_p50_us.to_string()),
@@ -482,6 +548,7 @@ struct SessionOutcome {
     duplicates: u64,
     stray: u64,
     conn_failed: bool,
+    retries: u64,
     latencies_us: Vec<u64>,
     batch_sum: u64,
     batch_n: u64,
@@ -529,6 +596,9 @@ fn run_session_thread(
     let mut answers: Vec<Vec<u8>> = vec![vec![0u8; rounds]; n];
     let mut sent_rounds: Vec<usize> = vec![0; n];
     let mut send_at: Vec<Instant> = vec![Instant::now(); n];
+    // Per-session resend budget for retriable errors, refreshed each round.
+    let mut retries_left: Vec<u32> = vec![cfg.max_retries; n];
+    let mut rng = Pcg32::new(0x5E55_1400 + thread_idx as u64, 1);
     let mut in_flight = 0usize;
 
     for local in 0..n {
@@ -565,6 +635,25 @@ fn run_session_thread(
             out.duplicates += 1;
             continue;
         }
+        // Retriable typed errors resend the *same* (session, round) id
+        // with backoff, so the request still resolves exactly once:
+        // `sent`/`in_flight` are untouched and the answer slot is
+        // reopened for the resend's reply.
+        if let Response::Err { code, .. } = &resp {
+            if retriable(*code) && retries_left[local] > 0 {
+                retries_left[local] -= 1;
+                out.retries += 1;
+                answers[local][round] = 0;
+                let attempt = cfg.max_retries - retries_left[local];
+                thread::sleep(retry_backoff(&mut rng, attempt));
+                let req = session_infer(cfg, spec, owned[local], round);
+                send_at[local] = Instant::now();
+                if conn.send(&req).is_err() {
+                    break;
+                }
+                continue;
+            }
+        }
         in_flight -= 1;
         out.latencies_us.push(send_at[local].elapsed().as_micros() as u64);
         match &resp {
@@ -591,6 +680,7 @@ fn run_session_thread(
             }
             out.sent += 1;
             sent_rounds[local] = next + 1;
+            retries_left[local] = cfg.max_retries;
             in_flight += 1;
         }
     }
@@ -639,6 +729,7 @@ pub fn run_sessions(cfg: &SessionLoadCfg) -> Result<SessionLoadReport> {
         report.duplicates += o.duplicates;
         report.stray += o.stray;
         report.conn_failures += u64::from(o.conn_failed);
+        report.retries += o.retries;
         batch_sum += o.batch_sum;
         batch_n += o.batch_n;
         all_lat.extend(o.latencies_us);
@@ -779,6 +870,10 @@ pub fn metrics_table(metrics: &Json) -> Table {
                 g(&["telemetry", "gauges", "pack_misses"]),
             ),
         ),
+        // Supervision + chaos health (ISSUE 10).
+        ("worker restarts", g(&["telemetry", "gauges", "worker_restarts"])),
+        ("batches requeued", g(&["telemetry", "gauges", "batches_requeued"])),
+        ("faults injected", g(&["telemetry", "gauges", "faults_injected"])),
     ];
     for (k, v) in rows {
         t.row(&[k.to_string(), v]);
@@ -789,6 +884,35 @@ pub fn metrics_table(metrics: &Json) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn retry_policy_covers_transient_codes_only() {
+        assert!(retriable(ErrCode::Overloaded));
+        assert!(retriable(ErrCode::StaleState));
+        assert!(retriable(ErrCode::WorkerFailed));
+        assert!(!retriable(ErrCode::Deadline));
+        assert!(!retriable(ErrCode::BadRequest));
+        assert!(!retriable(ErrCode::Exec));
+        assert!(!retriable(ErrCode::Unavailable));
+    }
+
+    #[test]
+    fn retry_backoff_doubles_caps_and_jitters_deterministically() {
+        let mut rng = Pcg32::new(1, 1);
+        let base = retry_backoff(&mut rng, 1);
+        assert!(base >= Duration::from_micros(500));
+        assert!(base < Duration::from_micros(625 + 1), "jitter tops out at +25%");
+        // Far past the doubling range: capped at 20ms (+25% jitter).
+        let capped = retry_backoff(&mut rng, 30);
+        assert!(capped >= Duration::from_micros(20_000));
+        assert!(capped <= Duration::from_micros(25_000));
+        // Same seed, same sequence.
+        let mut a = Pcg32::new(9, 1);
+        let mut b = Pcg32::new(9, 1);
+        for attempt in 1..6 {
+            assert_eq!(retry_backoff(&mut a, attempt), retry_backoff(&mut b, attempt));
+        }
+    }
 
     #[test]
     fn percentile_is_exact_on_small_sets() {
@@ -828,7 +952,8 @@ mod tests {
                  "max_occupancy":4},
                 "telemetry":{"gauges":{"kernel":"avx2fma","pool_workers":3,
                  "pool_tasks":640,"pool_steals":412,"pool_queue_depth":0,
-                 "pack_hits":960,"pack_misses":4},
+                 "pack_hits":960,"pack_misses":4,
+                 "worker_restarts":2,"batches_requeued":1,"faults_injected":9},
                  "phases":{"queue_wait_us":{"p50":10,"p99":20},
                  "batch_assemble_us":{"p50":1,"p99":2},
                  "execute_us":{"p50":500,"p99":900},
@@ -846,6 +971,9 @@ mod tests {
         assert!(md.contains("640 / 412"));
         assert!(md.contains("40 / 80"));
         assert!(md.contains("960 / 4"));
+        assert!(md.contains("worker restarts"));
+        assert!(md.contains("batches requeued"));
+        assert!(md.contains("faults injected"));
         // Missing keys degrade to "-", not panics.
         let empty = metrics_table(&Json::Obj(Default::default())).to_markdown();
         assert!(empty.contains('-'));

@@ -15,6 +15,7 @@ use std::io::{self, Read, Write};
 use std::os::unix::net::UnixStream;
 use std::sync::{Arc, Mutex};
 
+use crate::serve::lock_recover;
 use crate::serve::protocol::Response;
 
 /// Cloneable handle that interrupts the event loop's `poll` sleep.
@@ -62,19 +63,21 @@ impl CompletionHub {
         CompletionHub { queue: Mutex::new(VecDeque::new()), waker }
     }
 
-    /// Queue one frame for `conn` and ring the loop.
+    /// Queue one frame for `conn` and ring the loop.  Recovers from a
+    /// poisoned queue: the hub is the only road completions travel, so
+    /// it must outlive any panicking producer.
     pub fn push(&self, conn: u64, resp: Response) {
-        self.queue.lock().unwrap().push_back((conn, resp));
+        lock_recover(&self.queue).push_back((conn, resp));
         self.waker.wake();
     }
 
     /// Take everything queued so far (event-loop side).
     pub fn drain(&self) -> VecDeque<(u64, Response)> {
-        std::mem::take(&mut *self.queue.lock().unwrap())
+        std::mem::take(&mut *lock_recover(&self.queue))
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.lock().unwrap().is_empty()
+        lock_recover(&self.queue).is_empty()
     }
 }
 

@@ -1,0 +1,291 @@
+//! Deterministic fault injection for the serve runtime (ISSUE 10).
+//!
+//! Chaos testing only proves something if a failing run can be replayed,
+//! so every fault decision comes from a seeded [`Pcg32`] stream — the
+//! same seed and spec produce the same fault schedule at every site.
+//! The plan is pure configuration ([`FaultPlan`], parsed from
+//! `CWY_FAULTS=seed:spec` or `cwy serve --faults seed:spec`); each
+//! injection site owns a [`FaultInjector`] with its own RNG streams, so
+//! worker threads and the event loop never contend and per-site
+//! schedules are independent of thread interleaving.
+//!
+//! Spec grammar (rates are probabilities in [0, 1]):
+//!
+//! ```text
+//! spec   := seed ":" clause ("," clause)*
+//! clause := "panic=" rate          worker panics before/within a batch
+//!         | "slow=" rate ["@" us]  injected execution delay (default 1000us)
+//!         | "partial=" rate        short socket writes in the event loop
+//!         | "malformed=" rate      corrupt an inbound frame before parse
+//! ```
+//!
+//! Example: `CWY_FAULTS=42:panic=0.1,slow=0.05@2000,malformed=0.01`.
+//!
+//! Every fired fault bumps the process-wide `faults_injected` telemetry
+//! counter and writes one line to stderr — the "fault log" the CI chaos
+//! job uploads on failure.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg32;
+
+/// Which injection site is asking (also the RNG stream selector, so each
+/// site's schedule is an independent deterministic sequence).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Site {
+    Panic = 0,
+    Slow = 1,
+    PartialWrite = 2,
+    Malformed = 3,
+}
+
+/// Parsed, immutable fault configuration.  `Copy`-cheap on purpose: the
+/// server config clones it into every worker's injector.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a supervised batch execution panics.
+    pub panic_rate: f32,
+    /// Probability a batch execution is delayed by `slow_us`.
+    pub slow_rate: f32,
+    pub slow_us: u64,
+    /// Probability a socket flush writes only half its backlog.
+    pub partial_write_rate: f32,
+    /// Probability an inbound request line is corrupted before parsing
+    /// (the server must still answer `bad_request` under the recovered
+    /// id — exactly-once survives).
+    pub malformed_rate: f32,
+}
+
+impl FaultPlan {
+    /// Parse a `seed:spec` string (see the module grammar).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let s = s.trim();
+        let (seed_s, spec) = s
+            .split_once(':')
+            .with_context(|| format!("fault spec '{s}' missing 'seed:' prefix"))?;
+        let seed: u64 = seed_s
+            .trim()
+            .parse()
+            .with_context(|| format!("bad fault seed '{seed_s}'"))?;
+        let mut plan = FaultPlan { seed, slow_us: 1_000, ..FaultPlan::default() };
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, val) = clause
+                .split_once('=')
+                .with_context(|| format!("fault clause '{clause}' missing '='"))?;
+            let rate_of = |v: &str| -> Result<f32> {
+                let r: f32 = v
+                    .parse()
+                    .with_context(|| format!("bad fault rate '{v}' in '{clause}'"))?;
+                if !(0.0..=1.0).contains(&r) {
+                    bail!("fault rate {r} in '{clause}' outside [0, 1]");
+                }
+                Ok(r)
+            };
+            match key.trim() {
+                "panic" => plan.panic_rate = rate_of(val)?,
+                "slow" => match val.split_once('@') {
+                    Some((rate, us)) => {
+                        plan.slow_rate = rate_of(rate)?;
+                        plan.slow_us = us
+                            .parse()
+                            .with_context(|| format!("bad slow delay '{us}' in '{clause}'"))?;
+                    }
+                    None => plan.slow_rate = rate_of(val)?,
+                },
+                "partial" => plan.partial_write_rate = rate_of(val)?,
+                "malformed" => plan.malformed_rate = rate_of(val)?,
+                other => bail!("unknown fault kind '{other}' (panic|slow|partial|malformed)"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when at least one site can ever fire.
+    pub fn is_active(&self) -> bool {
+        self.panic_rate > 0.0
+            || self.slow_rate > 0.0
+            || self.partial_write_rate > 0.0
+            || self.malformed_rate > 0.0
+    }
+
+    /// Injector for worker `w` — distinct workers get distinct streams so
+    /// the schedule does not depend on which thread wins a batch.
+    pub fn injector_for_worker(&self, w: usize) -> FaultInjector {
+        FaultInjector::new(*self, 1 + w as u64)
+    }
+
+    /// Injector for the (single-threaded) event loop.
+    pub fn injector_for_loop(&self) -> FaultInjector {
+        FaultInjector::new(*self, 0)
+    }
+}
+
+/// Per-site fault decision maker: one seeded RNG stream per fault kind,
+/// owned by exactly one thread (no locks on any hot path).
+pub struct FaultInjector {
+    plan: FaultPlan,
+    label: u64,
+    streams: [Pcg32; 4],
+}
+
+impl FaultInjector {
+    fn new(plan: FaultPlan, label: u64) -> FaultInjector {
+        let stream = |site: Site| Pcg32::new(plan.seed, label * 16 + site as u64);
+        FaultInjector {
+            plan,
+            label,
+            streams: [
+                stream(Site::Panic),
+                stream(Site::Slow),
+                stream(Site::PartialWrite),
+                stream(Site::Malformed),
+            ],
+        }
+    }
+
+    fn fire(&mut self, site: Site, rate: f32) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        let hit = self.streams[site as usize].uniform() < rate;
+        if hit {
+            crate::telemetry::global().add_fault_injected();
+            eprintln!(
+                "cwy-fault: {:?} injected (seed {}, stream {})",
+                site, self.plan.seed, self.label
+            );
+        }
+        hit
+    }
+
+    /// Should the supervised batch execution panic now?  (The caller
+    /// panics; the supervisor's `catch_unwind` turns it into
+    /// `worker_failed` frames + a requeue + a respawn.)
+    pub fn should_panic(&mut self) -> bool {
+        self.fire(Site::Panic, self.plan.panic_rate)
+    }
+
+    /// Injected execution delay, when the slow fault fires.
+    pub fn slow_delay_us(&mut self) -> Option<u64> {
+        self.fire(Site::Slow, self.plan.slow_rate).then_some(self.plan.slow_us)
+    }
+
+    /// Cap a socket flush to `pending / 2` bytes (min 1) when the
+    /// partial-write fault fires; `None` writes normally.  Correctness
+    /// must not care — TCP is a stream and the write buffer keeps its
+    /// cursor — which is exactly what the chaos suite asserts.
+    pub fn partial_write_cap(&mut self, pending: usize) -> Option<usize> {
+        if pending < 2 {
+            return None;
+        }
+        self.fire(Site::PartialWrite, self.plan.partial_write_rate)
+            .then_some((pending / 2).max(1))
+    }
+
+    /// Corrupt an inbound request line when the malformed fault fires.
+    /// The corruption prepends junk, so the textual `"id":N` stays
+    /// recoverable and the `bad_request` answer keeps its attribution.
+    pub fn corrupt_line(&mut self, line: &str) -> Option<String> {
+        self.fire(Site::Malformed, self.plan.malformed_rate)
+            .then(|| format!("\u{1}garbage{line}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("42:panic=0.1,slow=0.05@2000,partial=0.2,malformed=0.01")
+            .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.panic_rate, 0.1);
+        assert_eq!(p.slow_rate, 0.05);
+        assert_eq!(p.slow_us, 2_000);
+        assert_eq!(p.partial_write_rate, 0.2);
+        assert_eq!(p.malformed_rate, 0.01);
+        assert!(p.is_active());
+
+        // Slow without an explicit delay keeps the 1ms default.
+        let p = FaultPlan::parse("7:slow=0.5").unwrap();
+        assert_eq!(p.slow_us, 1_000);
+        assert_eq!(p.panic_rate, 0.0);
+
+        assert!(!FaultPlan::parse("3:").unwrap().is_active());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("no-seed").is_err());
+        assert!(FaultPlan::parse("x:panic=0.1").is_err());
+        assert!(FaultPlan::parse("1:panic").is_err());
+        assert!(FaultPlan::parse("1:panic=1.5").is_err());
+        assert!(FaultPlan::parse("1:panic=-0.1").is_err());
+        assert!(FaultPlan::parse("1:explode=0.5").is_err());
+        assert!(FaultPlan::parse("1:slow=0.1@abc").is_err());
+    }
+
+    #[test]
+    fn schedules_are_deterministic_per_seed_and_site() {
+        let plan = FaultPlan::parse("42:panic=0.3,slow=0.3").unwrap();
+        let schedule = |mut inj: FaultInjector| -> Vec<bool> {
+            (0..64).map(|_| inj.should_panic()).collect()
+        };
+        let a = schedule(plan.injector_for_worker(0));
+        let b = schedule(plan.injector_for_worker(0));
+        assert_eq!(a, b, "same seed + site must replay identically");
+        assert!(a.iter().any(|&x| x), "rate 0.3 over 64 draws should fire");
+        assert!(!a.iter().all(|&x| x), "rate 0.3 must not always fire");
+
+        // Distinct workers draw from distinct streams.
+        let c = schedule(plan.injector_for_worker(1));
+        assert_ne!(a, c);
+
+        // The panic stream is independent of how often slow is consulted.
+        let mut mixed = plan.injector_for_worker(0);
+        let mut panics = Vec::new();
+        for _ in 0..64 {
+            let _ = mixed.slow_delay_us();
+            panics.push(mixed.should_panic());
+        }
+        assert_eq!(a, panics, "sites must not share a stream");
+    }
+
+    #[test]
+    fn rates_are_respected_statistically() {
+        let plan = FaultPlan::parse("9:panic=0.25").unwrap();
+        let mut inj = plan.injector_for_worker(0);
+        let fired = (0..4000).filter(|_| inj.should_panic()).count();
+        let rate = fired as f64 / 4000.0;
+        assert!((rate - 0.25).abs() < 0.03, "measured rate {rate}");
+        // A zero-rate site never fires no matter how often it's asked.
+        let mut none = FaultPlan::parse("9:slow=0").unwrap().injector_for_worker(0);
+        assert!((0..1000).all(|_| none.slow_delay_us().is_none()));
+    }
+
+    #[test]
+    fn corrupted_lines_keep_the_id_recoverable() {
+        let plan = FaultPlan::parse("4:malformed=1").unwrap();
+        let mut inj = plan.injector_for_loop();
+        let line = r#"{"type":"infer","id":77,"artifact":"a","inputs":[]}"#;
+        let bad = inj.corrupt_line(line).expect("rate 1 must fire");
+        assert!(crate::serve::protocol::decode_request(&bad).is_err());
+        assert_eq!(crate::serve::protocol::recover_id(&bad), 77);
+    }
+
+    #[test]
+    fn partial_write_caps_but_never_zeroes() {
+        let plan = FaultPlan::parse("4:partial=1").unwrap();
+        let mut inj = plan.injector_for_loop();
+        assert_eq!(inj.partial_write_cap(100), Some(50));
+        assert_eq!(inj.partial_write_cap(3), Some(1));
+        // A 1-byte backlog can't be split.
+        assert_eq!(inj.partial_write_cap(1), None);
+    }
+}

@@ -17,18 +17,24 @@
 //! Module map: [`protocol`] wire format · [`admission`] typed overload
 //! shedding · [`batcher`] coalescing queue (continuous batching) ·
 //! [`completion`] worker→loop reply hub · [`session`] recurrent-state
-//! cache · [`worker`] pool + fused execution · [`server`] nonblocking
-//! event-loop front end · [`client`] load generator + closed-loop
-//! harness · [`stats`] latency/occupancy accounting.
+//! cache · [`worker`] pool + fused execution · [`supervisor`]
+//! panic-isolated batch execution + worker respawn · [`faults`]
+//! deterministic fault injection · [`server`] nonblocking event-loop
+//! front end · [`client`] load generator + closed-loop harness ·
+//! [`stats`] latency/occupancy accounting.
+
+use std::sync::{Mutex, MutexGuard};
 
 pub mod admission;
 pub mod batcher;
 pub mod client;
 pub mod completion;
+pub mod faults;
 pub mod protocol;
 pub mod server;
 pub mod session;
 pub mod stats;
+pub mod supervisor;
 mod sys;
 pub mod worker;
 
@@ -39,10 +45,25 @@ pub use client::{
     ClientCfg, LoadReport, SessionLoadCfg, SessionLoadReport,
 };
 pub use completion::{CompletionHub, Waker};
+pub use faults::{FaultInjector, FaultPlan};
 pub use protocol::{ErrCode, InferRequest, Request, Response};
 pub use server::{serve, ServeCfg, Server};
 pub use session::{SessionCfg, SessionStore};
 pub use stats::{Clock, ServeStats, Snapshot};
+pub use supervisor::RestartPolicy;
 pub use worker::{
     probe_serve_spec, EngineModel, FakeModel, ModelFactory, ServeModel, ServeSpec, WorkerPool,
 };
+
+/// Lock a serve-internal mutex, recovering from poisoning.
+///
+/// A panicking worker must not cascade-kill the stats path, the batcher,
+/// or the completion hub: every guarded structure here keeps simple
+/// counter/queue invariants that hold between individual mutations, so a
+/// poisoned lock's data is still consistent and the right response is to
+/// keep serving (ISSUE 10).  The supervisor converts the panic itself
+/// into typed `worker_failed` frames; this helper makes sure the rest of
+/// the runtime survives to deliver them.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

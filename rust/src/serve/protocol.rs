@@ -69,6 +69,11 @@ pub enum ErrCode {
     /// worker-thread shape assert).  Clients should drop or re-key the
     /// session and retry.
     StaleState,
+    /// The worker executing this request's fused batch panicked.  The
+    /// supervisor (serve::supervisor) converts the panic into this typed
+    /// frame for every in-flight request instead of hanging the client;
+    /// the request itself may be retried safely.
+    WorkerFailed,
     /// The server is shutting down.
     Unavailable,
 }
@@ -81,6 +86,7 @@ impl ErrCode {
             ErrCode::BadRequest => "bad_request",
             ErrCode::Exec => "exec",
             ErrCode::StaleState => "stale_state",
+            ErrCode::WorkerFailed => "worker_failed",
             ErrCode::Unavailable => "unavailable",
         }
     }
@@ -92,6 +98,7 @@ impl ErrCode {
             "bad_request" => ErrCode::BadRequest,
             "exec" => ErrCode::Exec,
             "stale_state" => ErrCode::StaleState,
+            "worker_failed" => ErrCode::WorkerFailed,
             "unavailable" => ErrCode::Unavailable,
             other => bail!("unknown error code '{other}'"),
         })
@@ -433,6 +440,22 @@ mod tests {
             }
             other => panic!("wrong frame: {other:?}"),
         }
+    }
+
+    #[test]
+    fn every_err_code_roundtrips() {
+        for code in [
+            ErrCode::Deadline,
+            ErrCode::Overloaded,
+            ErrCode::BadRequest,
+            ErrCode::Exec,
+            ErrCode::StaleState,
+            ErrCode::WorkerFailed,
+            ErrCode::Unavailable,
+        ] {
+            assert_eq!(ErrCode::parse(code.as_str()).unwrap(), code);
+        }
+        assert_eq!(ErrCode::WorkerFailed.as_str(), "worker_failed");
     }
 
     #[test]

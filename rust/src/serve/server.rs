@@ -23,9 +23,11 @@ use anyhow::{Context, Result};
 use crate::serve::admission::{AdmissionCfg, AdmissionCtl};
 use crate::serve::batcher::{BatchCfg, Batcher, ReplySink};
 use crate::serve::completion::{drain_wakeups, wake_pair, CompletionHub, Waker};
+use crate::serve::faults::{FaultInjector, FaultPlan};
 use crate::serve::protocol::{self, ErrCode, Request, Response};
 use crate::serve::session::{SessionCfg, SessionStore};
 use crate::serve::stats::{Clock, ServeStats, Snapshot};
+use crate::serve::supervisor::RestartPolicy;
 use crate::serve::sys::{poll_fds, PollFd, POLLIN, POLLOUT};
 use crate::serve::worker::{ModelFactory, ServeSpec, WorkerPool};
 
@@ -44,6 +46,12 @@ pub struct ServeCfg {
     /// Learning rate injected into hyper inputs of step artifacts; 0.0
     /// serves without moving the resident parameters.
     pub lr: f32,
+    /// Supervisor restart discipline for panicking workers (ISSUE 10).
+    pub restart: RestartPolicy,
+    /// Deterministic fault injection (`--faults` / `CWY_FAULTS`); `None`
+    /// in production.  Carried in the config — not a process global — so
+    /// embedded servers and tests in one process stay independent.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServeCfg {
@@ -55,6 +63,8 @@ impl Default for ServeCfg {
             session: SessionCfg::default(),
             admission: AdmissionCfg::default(),
             lr: 0.0,
+            restart: RestartPolicy::default(),
+            faults: None,
         }
     }
 }
@@ -90,9 +100,18 @@ impl Conn {
 
     /// Write as much of the buffer as the socket accepts right now.
     /// `Ok(())` on progress or `WouldBlock`; `Err` means the peer is gone.
-    fn flush(&mut self) -> io::Result<()> {
-        while self.wpos < self.wbuf.len() {
-            match self.stream.write(&self.wbuf[self.wpos..]) {
+    ///
+    /// `cap` bounds how many bytes this round may write — the chaos
+    /// partial-write fault.  A capped flush leaves the tail buffered with
+    /// its cursor intact, exactly like a short kernel write; correctness
+    /// must not notice, which is what the chaos suite asserts.
+    fn flush(&mut self, cap: Option<usize>) -> io::Result<()> {
+        let end = match cap {
+            Some(c) => (self.wpos + c).min(self.wbuf.len()),
+            None => self.wbuf.len(),
+        };
+        while self.wpos < end {
+            match self.stream.write(&self.wbuf[self.wpos..end]) {
                 Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
                 Ok(n) => self.wpos += n,
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -146,6 +165,9 @@ struct EventLoop {
     clock: Arc<Clock>,
     spec: ServeSpec,
     shutdown: Arc<AtomicBool>,
+    /// Event-loop-side chaos injector (partial writes, malformed frames);
+    /// `None` outside fault-injection runs.
+    injector: Option<FaultInjector>,
 }
 
 impl EventLoop {
@@ -205,8 +227,9 @@ impl EventLoop {
                     self.read_ready(id, &mut scratch);
                 }
                 if pfd.writable() {
+                    let cap = self.partial_cap(id);
                     if let Some(conn) = self.conns.get_mut(&id) {
-                        if conn.flush().is_err() {
+                        if conn.flush(cap).is_err() {
                             self.close_conn(id);
                         }
                     }
@@ -305,8 +328,22 @@ impl EventLoop {
         }
     }
 
+    /// Fault-injection write cap for the next flush on `id` (`None`
+    /// writes normally).
+    fn partial_cap(&mut self, id: u64) -> Option<usize> {
+        let injector = self.injector.as_mut()?;
+        let backlog = self.conns.get(&id).map_or(0, |c| c.backlog());
+        injector.partial_write_cap(backlog)
+    }
+
     /// Decode and dispatch one frame from connection `id`.
     fn handle_line(&mut self, id: u64, line: &str) {
+        // Malformed-frame fault: corrupt the line before the decoder sees
+        // it.  The typed `bad_request` answer must still carry the
+        // request id (recovered textually), so exactly-once accounting
+        // survives the corruption.
+        let corrupted = self.injector.as_mut().and_then(|f| f.corrupt_line(line));
+        let line = corrupted.as_deref().unwrap_or(line);
         match protocol::decode_request(line) {
             Ok(Request::Infer(req)) => {
                 let inflight = self.conns.get(&id).map_or(0, |c| c.inflight);
@@ -384,8 +421,12 @@ impl EventLoop {
     fn sweep(&mut self) {
         let mut to_close: Vec<u64> = Vec::new();
         let max_buf = self.admission.cfg().max_conn_buffer;
+        // The injector steps out of `self` for the iteration so each
+        // connection's flush can consult it without aliasing `conns`.
+        let mut injector = self.injector.take();
         for (&id, conn) in &mut self.conns {
-            if conn.wants_write() && conn.flush().is_err() {
+            let cap = injector.as_mut().and_then(|f| f.partial_write_cap(conn.backlog()));
+            if conn.wants_write() && conn.flush(cap).is_err() {
                 to_close.push(id);
                 continue;
             }
@@ -400,6 +441,7 @@ impl EventLoop {
                 to_close.push(id);
             }
         }
+        self.injector = injector;
         for id in to_close {
             self.close_conn(id);
         }
@@ -418,7 +460,9 @@ impl EventLoop {
     fn final_drain(&mut self) {
         self.drain_completions();
         for conn in self.conns.values_mut() {
-            let _ = conn.flush();
+            // No fault cap here: shutdown flushes whatever the sockets
+            // will take in one last round.
+            let _ = conn.flush(None);
         }
         let n = self.conns.len();
         for _ in 0..n {
@@ -458,6 +502,9 @@ pub fn serve(cfg: ServeCfg, factory: Arc<ModelFactory>) -> Result<Server> {
     let sessions = Arc::new(SessionStore::new(cfg.session));
     let spec: ServeSpec = factory().context("initializing model")?.spec().clone();
 
+    if let Some(plan) = cfg.faults.filter(|p| p.is_active()) {
+        eprintln!("cwy-fault: injection active ({plan:?})");
+    }
     let pool = WorkerPool::spawn(
         cfg.workers,
         factory,
@@ -466,6 +513,8 @@ pub fn serve(cfg: ServeCfg, factory: Arc<ModelFactory>) -> Result<Server> {
         stats.clone(),
         clock.clone(),
         cfg.lr,
+        cfg.restart,
+        cfg.faults,
     );
 
     let (waker, wake_rx) = wake_pair().context("creating event-loop waker")?;
@@ -485,6 +534,10 @@ pub fn serve(cfg: ServeCfg, factory: Arc<ModelFactory>) -> Result<Server> {
             clock,
             spec,
             shutdown: shutdown.clone(),
+            injector: cfg
+                .faults
+                .filter(|p| p.is_active())
+                .map(|p| p.injector_for_loop()),
         };
         thread::Builder::new()
             .name("cwy-serve-loop".to_string())
@@ -516,6 +569,13 @@ impl Server {
         self.batcher.depth()
     }
 
+    /// Workers currently serving (spawned minus quarantined/exited).  The
+    /// chaos suite asserts this equals the configured pool size after a
+    /// run with injected panics — capacity self-heals via respawn.
+    pub fn live_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, |p| p.live_workers())
+    }
+
     /// Block on the event loop (the `cwy serve` foreground mode).
     pub fn join(mut self) {
         if let Some(h) = self.event_loop.take() {
@@ -526,18 +586,26 @@ impl Server {
         }
     }
 
-    /// Graceful-enough stop for tests and embedders: shed the queue,
-    /// wake the event loop (works for wildcard binds — no TCP dial),
-    /// and join the loop and worker pool.
+    /// Graceful drain (ISSUE 10 satellite): every admitted request is
+    /// answered before the sockets close.  Ordering matters —
+    ///
+    /// 1. `batcher.shutdown()` sheds the queue as typed `unavailable`
+    ///    and makes `next_batch` return `None`, so workers wind down;
+    /// 2. the pool is joined **while the event loop still runs**, so
+    ///    completions from mid-execution batches (and the shutdown
+    ///    drain) keep flowing out to the sockets;
+    /// 3. only then does the loop get its shutdown flag: its
+    ///    `final_drain` sees every completion already posted, flushes,
+    ///    and closes.  Works for wildcard binds — no TCP dial.
     pub fn stop(mut self) {
-        self.shutdown.store(true, Ordering::Release);
         self.batcher.shutdown();
+        if let Some(p) = self.pool.take() {
+            p.join();
+        }
+        self.shutdown.store(true, Ordering::Release);
         self.waker.wake();
         if let Some(h) = self.event_loop.take() {
             let _ = h.join();
-        }
-        if let Some(p) = self.pool.take() {
-            p.join();
         }
     }
 }

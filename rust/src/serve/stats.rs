@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::report::Table;
+use crate::serve::lock_recover;
 use crate::util::json::Json;
 
 // Clock and Histogram moved to `telemetry` in PR 6 — serve records into
@@ -51,46 +52,46 @@ impl ServeStats {
     }
 
     pub fn record_submit(&self, queue_depth: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.submitted += 1;
         g.queue_depth_peak = g.queue_depth_peak.max(queue_depth);
     }
 
     pub fn record_rejected_full(&self) {
-        self.inner.lock().unwrap().rejected_full += 1;
+        lock_recover(&self.inner).rejected_full += 1;
     }
 
     pub fn record_shed_deadline(&self) {
-        self.inner.lock().unwrap().shed_deadline += 1;
+        lock_recover(&self.inner).shed_deadline += 1;
     }
 
     /// Shed before the queue: the per-connection in-flight cap.
     pub fn record_rejected_inflight(&self) {
-        self.inner.lock().unwrap().rejected_inflight += 1;
+        lock_recover(&self.inner).rejected_inflight += 1;
     }
 
     pub fn record_bad_request(&self) {
-        self.inner.lock().unwrap().bad_requests += 1;
+        lock_recover(&self.inner).bad_requests += 1;
     }
 
     pub fn record_conn_open(&self) {
-        self.inner.lock().unwrap().conns_accepted += 1;
+        lock_recover(&self.inner).conns_accepted += 1;
     }
 
     pub fn record_conn_close(&self) {
-        self.inner.lock().unwrap().conns_closed += 1;
+        lock_recover(&self.inner).conns_closed += 1;
     }
 
     /// A connection dropped for not consuming its responses (write
     /// buffer grew past `max_conn_buffer`).
     pub fn record_conn_overflow(&self) {
-        self.inner.lock().unwrap().conn_overflow += 1;
+        lock_recover(&self.inner).conn_overflow += 1;
     }
 
     /// One fused execution: `occupancy` requests coalesced, per-request
     /// queue waits, and the execution wall time.
     pub fn record_batch(&self, occupancy: usize, queue_waits_us: &[u64], exec_us: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.batches += 1;
         if g.occupancy.len() < occupancy {
             g.occupancy.resize(occupancy, 0);
@@ -105,17 +106,17 @@ impl ServeStats {
     }
 
     pub fn record_completed(&self, latency_us: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.completed += 1;
         g.latency_us.record(latency_us);
     }
 
     pub fn record_exec_error(&self, n_requests: u64) {
-        self.inner.lock().unwrap().exec_errors += n_requests;
+        lock_recover(&self.inner).exec_errors += n_requests;
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         let fused: u64 = g
             .occupancy
             .iter()
@@ -356,6 +357,26 @@ mod tests {
         assert_eq!(j.path(&["conns_accepted"]).as_f64(), Some(2.0));
         assert_eq!(j.path(&["rejected_inflight"]).as_f64(), Some(1.0));
         assert!(snap.to_table().to_markdown().contains("in-flight cap"));
+    }
+
+    #[test]
+    fn stats_survive_a_poisoned_lock() {
+        // A worker panicking while holding the stats mutex poisons it;
+        // every subsequent record/snapshot must recover instead of
+        // cascading the panic into the event loop (ISSUE 10).
+        let s = ServeStats::new();
+        s.record_submit(1);
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = s.inner.lock().unwrap();
+            panic!("injected panic while holding the stats lock");
+        }));
+        assert!(poison.is_err());
+        assert!(s.inner.is_poisoned());
+        s.record_submit(2);
+        s.record_completed(150);
+        let snap = s.snapshot();
+        assert_eq!(snap.submitted, 2);
+        assert_eq!(snap.completed, 1);
     }
 
     #[test]

@@ -1,0 +1,421 @@
+//! Worker supervision: panic isolation, batch fail-over, and capped
+//! respawn for the serve pool (ISSUE 10, DESIGN.md §6.8).
+//!
+//! A worker panic — a genuine bug or an injected chaos fault — must cost
+//! exactly the in-flight chunk: one typed `worker_failed` frame per
+//! request the dead execution owed, never silence and never a duplicate.
+//! Everything still waiting in the worker's inbox was untouched by the
+//! panic and goes back to the batcher's queue front, so the surviving
+//! workers (or this one, once respawned) serve it in order.
+//!
+//! ```text
+//!          ┌──────────── batch ok (failure count ← 0) ─────────────┐
+//!          ▼                                                       │
+//!  INIT ─► SERVING ── panic caught ─► FAIL-OVER ─── backoff ─► RESPAWN
+//!   │                                 │ in-flight → worker_failed  │
+//!   │ init error                      │ untouched inbox → requeue  │ rebuild error
+//!   ▼                                 ▼                            │ (counts as a
+//!  batcher.shutdown()            QUARANTINE ◄─ failures > max ─────┘  failure too)
+//!  (pool-wide fail-fast)         (last worker down → batcher.shutdown())
+//! ```
+//!
+//! The supervisor owns the loop a pool thread runs: pull a batch, feed
+//! it through [`execute_batch_shared`] under `catch_unwind`, and on a
+//! panic convert the wreckage into accounted outcomes before rebuilding
+//! the model with capped exponential backoff.  The shared inbox/inflight
+//! pair is the contract that makes the conversion exact: routes in
+//! `inflight` identify the chunk the panic killed, entries in `inbox`
+//! are provably untouched.  Respawn telemetry (`worker_restarts`,
+//! `batches_requeued`) is process-global and surfaces through the
+//! `metrics` frame and the Prometheus export.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+use std::time::Duration;
+
+use crate::runtime::tensor::HostTensor;
+use crate::serve::batcher::{Batcher, FailoverRoute, Pending};
+use crate::serve::faults::{FaultInjector, FaultPlan};
+use crate::serve::lock_recover;
+use crate::serve::session::SessionStore;
+use crate::serve::stats::{Clock, ServeStats};
+use crate::serve::worker::{
+    execute_batch_shared, ModelFactory, ServeModel, ServeSpec, WorkerScratch,
+};
+
+/// Restart discipline for a panicking worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RestartPolicy {
+    /// Backoff before the first respawn attempt.
+    pub base_delay_ms: u64,
+    /// Backoff ceiling — exponential doubling stops here.
+    pub max_delay_ms: u64,
+    /// Consecutive failures (panics or rebuild errors, with no clean
+    /// batch in between) tolerated before the worker is quarantined.
+    pub max_restarts: u32,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> RestartPolicy {
+        RestartPolicy { base_delay_ms: 10, max_delay_ms: 1_000, max_restarts: 8 }
+    }
+}
+
+impl RestartPolicy {
+    /// Capped exponential backoff: `base * 2^(k-1)` milliseconds for the
+    /// k-th consecutive failure, clamped to `max_delay_ms`.
+    pub fn backoff(&self, consecutive: u32) -> Duration {
+        let exp = consecutive.saturating_sub(1).min(20);
+        let ms = self.base_delay_ms.saturating_mul(1u64 << exp).min(self.max_delay_ms);
+        Duration::from_millis(ms)
+    }
+}
+
+/// Fresh model + resident state + signature from the pool's factory.
+fn build(
+    factory: &ModelFactory,
+) -> anyhow::Result<(Box<dyn ServeModel>, Vec<HostTensor>, ServeSpec)> {
+    let model = factory()?;
+    let resident = model.initial_resident()?;
+    let spec = model.spec().clone();
+    Ok((model, resident, spec))
+}
+
+/// Supervised body of one pool thread (spawned by `WorkerPool`).
+///
+/// `live` counts workers still serving; every exit path decrements it
+/// exactly once, and the last worker out shuts the batcher down so
+/// queued and future requests get typed `unavailable` frames instead of
+/// waiting on a pool that no longer exists.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_worker(
+    w: usize,
+    factory: &ModelFactory,
+    batcher: &Batcher,
+    sessions: &SessionStore,
+    stats: &ServeStats,
+    clock: &Clock,
+    lr: f32,
+    policy: RestartPolicy,
+    faults: Option<FaultPlan>,
+    live: &AtomicUsize,
+) {
+    let mut injector: Option<FaultInjector> =
+        faults.filter(|p| p.is_active()).map(|p| p.injector_for_worker(w));
+
+    // Initial build keeps the pool's historical fail-fast contract
+    // (DESIGN.md §6.5): a pool that cannot build its model must not
+    // accept work nobody serves, so the whole batcher shuts down
+    // regardless of how many siblings are healthy.
+    let (mut model, mut resident, spec) = match build(factory) {
+        Ok(parts) => parts,
+        Err(e) => {
+            eprintln!("worker {w}: model init failed: {e:#}");
+            live.fetch_sub(1, Ordering::AcqRel);
+            batcher.shutdown();
+            return;
+        }
+    };
+    let mut scratch = WorkerScratch::default();
+    let inbox: Mutex<VecDeque<Pending>> = Mutex::new(VecDeque::new());
+    let inflight: Mutex<Vec<FailoverRoute>> = Mutex::new(Vec::new());
+    let mut consecutive = 0u32;
+
+    while let Some(batch) = batcher.next_batch() {
+        lock_recover(&inbox).extend(batch);
+        while !lock_recover(&inbox).is_empty() {
+            let outcome = {
+                let _span = crate::span!(supervisor);
+                catch_unwind(AssertUnwindSafe(|| {
+                    execute_batch_shared(
+                        model.as_mut(),
+                        &spec,
+                        &mut resident,
+                        &inbox,
+                        &inflight,
+                        sessions,
+                        stats,
+                        clock,
+                        lr,
+                        &mut scratch,
+                        injector.as_mut(),
+                    )
+                }))
+            };
+            match outcome {
+                Ok(()) => consecutive = 0,
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    fail_over(w, &inbox, &inflight, batcher, stats, &msg);
+                    // The scratch may hold half-written control state
+                    // from the dead execution; rebuild it with the model.
+                    scratch = WorkerScratch::default();
+                    if !respawn(w, factory, policy, &mut consecutive, &mut model, &mut resident)
+                    {
+                        quarantine(w, batcher, live);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+    live.fetch_sub(1, Ordering::AcqRel);
+}
+
+/// Convert a caught panic into visible, accounted outcomes: every
+/// in-flight route gets exactly one `worker_failed` frame (unless the
+/// dead execution already answered it), and every untouched inbox entry
+/// goes back to the batcher's queue front in arrival order.
+fn fail_over(
+    w: usize,
+    inbox: &Mutex<VecDeque<Pending>>,
+    inflight: &Mutex<Vec<FailoverRoute>>,
+    batcher: &Batcher,
+    stats: &ServeStats,
+    panic_msg: &str,
+) {
+    let routes = std::mem::take(&mut *lock_recover(inflight));
+    let mut failed = 0u64;
+    for route in &routes {
+        if route
+            .fail_worker(&format!("worker panicked during batch execution ({panic_msg}); retry"))
+        {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        stats.record_exec_error(failed);
+    }
+    let untouched: Vec<Pending> = lock_recover(inbox).drain(..).collect();
+    let requeued = untouched.len();
+    if requeued > 0 {
+        crate::telemetry::global().add_batch_requeued();
+        batcher.requeue(untouched);
+    }
+    eprintln!(
+        "cwy-supervisor: worker {w} panicked: {panic_msg} \
+         ({failed} in-flight failed over, {requeued} requeued)"
+    );
+}
+
+/// Backed-off rebuild loop.  Bumps `consecutive` per attempt (a rebuild
+/// error is a failure too) and returns false once the budget is spent —
+/// the caller quarantines the worker.
+fn respawn(
+    w: usize,
+    factory: &ModelFactory,
+    policy: RestartPolicy,
+    consecutive: &mut u32,
+    model: &mut Box<dyn ServeModel>,
+    resident: &mut Vec<HostTensor>,
+) -> bool {
+    loop {
+        *consecutive += 1;
+        if *consecutive > policy.max_restarts {
+            return false;
+        }
+        let delay = policy.backoff(*consecutive);
+        eprintln!(
+            "cwy-supervisor: worker {w} respawning in {}ms (failure {}/{})",
+            delay.as_millis(),
+            *consecutive,
+            policy.max_restarts
+        );
+        thread::sleep(delay);
+        match build(factory) {
+            Ok((m, r, _spec)) => {
+                *model = m;
+                *resident = r;
+                crate::telemetry::global().add_worker_restart();
+                return true;
+            }
+            Err(e) => eprintln!("cwy-supervisor: worker {w} rebuild failed: {e:#}"),
+        }
+    }
+}
+
+/// Permanent removal after the restart budget is spent.  When the last
+/// worker quarantines, the batcher shuts down so queued and future
+/// requests get `unavailable` frames instead of waiting forever.
+fn quarantine(w: usize, batcher: &Batcher, live: &AtomicUsize) {
+    let remaining = live.fetch_sub(1, Ordering::AcqRel) - 1;
+    eprintln!("cwy-supervisor: worker {w} quarantined ({remaining} workers left)");
+    if remaining == 0 {
+        batcher.shutdown();
+    }
+}
+
+/// Human-readable panic payload (`panic!` carries `&str` or `String`;
+/// anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::HostTensor;
+    use crate::serve::batcher::{BatchCfg, Batcher};
+    use crate::serve::protocol::{ErrCode, InferRequest, Response};
+    use crate::serve::session::{SessionCfg, SessionStore};
+    use crate::serve::worker::{FakeModel, WorkerPool};
+    use anyhow::Result;
+    use std::sync::atomic::AtomicU32;
+    use std::sync::{mpsc, Arc};
+    use std::time::Duration;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RestartPolicy { base_delay_ms: 10, max_delay_ms: 100, max_restarts: 8 };
+        assert_eq!(p.backoff(1), Duration::from_millis(10));
+        assert_eq!(p.backoff(2), Duration::from_millis(20));
+        assert_eq!(p.backoff(3), Duration::from_millis(40));
+        assert_eq!(p.backoff(4), Duration::from_millis(80));
+        assert_eq!(p.backoff(5), Duration::from_millis(100));
+        assert_eq!(p.backoff(60), Duration::from_millis(100), "shift must not overflow");
+    }
+
+    /// FakeModel wrapper whose `run` panics on globally chosen call
+    /// indices (shared across respawns via the counter).
+    struct PanicOn {
+        inner: FakeModel,
+        calls: Arc<AtomicU32>,
+        panic_calls: &'static [u32],
+    }
+
+    impl crate::serve::worker::ServeModel for PanicOn {
+        fn spec(&self) -> &ServeSpec {
+            self.inner.spec()
+        }
+
+        fn run(&mut self, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            let n = self.calls.fetch_add(1, Ordering::SeqCst);
+            if self.panic_calls.contains(&n) {
+                panic!("test panic on call {n}");
+            }
+            self.inner.run(inputs)
+        }
+
+        fn initial_resident(&self) -> Result<Vec<HostTensor>> {
+            self.inner.initial_resident()
+        }
+    }
+
+    fn harness(
+        panic_calls: &'static [u32],
+        policy: RestartPolicy,
+    ) -> (Arc<Batcher>, WorkerPool, Arc<AtomicU32>) {
+        let clock = Arc::new(Clock::new());
+        let stats = Arc::new(ServeStats::new());
+        let cfg = BatchCfg { max_batch: 4, max_wait_us: 500, queue_cap: 64, continuous: true };
+        let batcher = Arc::new(Batcher::new(cfg, clock.clone(), stats.clone()));
+        let sessions = Arc::new(SessionStore::new(SessionCfg::default()));
+        let calls = Arc::new(AtomicU32::new(0));
+        let factory_calls = calls.clone();
+        let factory: Arc<ModelFactory> = Arc::new(move || {
+            Ok(Box::new(PanicOn {
+                inner: FakeModel::new(4, 2, 0),
+                calls: factory_calls.clone(),
+                panic_calls,
+            }) as Box<dyn ServeModel>)
+        });
+        let pool = WorkerPool::spawn(
+            1, factory, batcher.clone(), sessions, stats, clock, 0.0, policy, None,
+        );
+        (batcher, pool, calls)
+    }
+
+    fn infer(id: u64) -> InferRequest {
+        InferRequest {
+            id,
+            artifact: FakeModel::ARTIFACT.to_string(),
+            session: None,
+            deadline_us: None,
+            inputs: vec![HostTensor::f32(vec![2], vec![1.0, 1.0])],
+        }
+    }
+
+    #[test]
+    fn panicking_batch_fails_over_and_worker_respawns() {
+        let policy = RestartPolicy { base_delay_ms: 1, max_delay_ms: 8, max_restarts: 8 };
+        let (batcher, pool, _calls) = harness(&[0], policy);
+        let restarts_before = crate::telemetry::global().worker_restarts();
+
+        // First request hits the panicking call: its one completion must
+        // be a typed worker_failed frame.
+        let (tx, rx) = mpsc::channel();
+        assert!(batcher.submit(infer(1), tx));
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Response::Err { id, code, msg } => {
+                assert_eq!(id, 1);
+                assert_eq!(code, ErrCode::WorkerFailed);
+                assert!(msg.contains("panicked"), "{msg}");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+
+        // The respawned worker serves the next request normally.
+        let (tx, rx) = mpsc::channel();
+        assert!(batcher.submit(infer(2), tx));
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Response::Ok { id, .. } => assert_eq!(id, 2),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert_eq!(pool.live_workers(), 1, "capacity must self-heal");
+        assert!(
+            crate::telemetry::global().worker_restarts() > restarts_before,
+            "respawn must bump the worker_restarts counter"
+        );
+
+        batcher.shutdown();
+        pool.join();
+    }
+
+    #[test]
+    fn exhausted_restart_budget_quarantines_and_fails_fast() {
+        // Every call panics; one tolerated restart means the second panic
+        // quarantines the (only) worker, which must shut the batcher down
+        // rather than leave future submits hanging.
+        let policy = RestartPolicy { base_delay_ms: 1, max_delay_ms: 4, max_restarts: 1 };
+        let (batcher, pool, _calls) =
+            harness(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15], policy);
+
+        let (tx, rx) = mpsc::channel();
+        assert!(batcher.submit(infer(1), tx));
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::Err { code: ErrCode::WorkerFailed, .. }
+        ));
+        let (tx, rx) = mpsc::channel();
+        // This submit either lands before the quarantine (worker_failed)
+        // or after the shutdown (unavailable) — either way it is answered.
+        let accepted = batcher.submit(infer(2), tx);
+        if accepted {
+            assert!(matches!(
+                rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+                Response::Err {
+                    code: ErrCode::WorkerFailed | ErrCode::Unavailable,
+                    ..
+                }
+            ));
+        }
+        // Quarantine of the only worker must fail the pool fast: the
+        // batcher shuts down and the live count hits zero.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !batcher.is_shutdown() && std::time::Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(batcher.is_shutdown(), "last quarantine must fail the pool fast");
+        assert_eq!(pool.live_workers(), 0);
+        pool.join();
+    }
+}

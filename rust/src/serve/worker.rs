@@ -7,8 +7,10 @@
 //! into the artifact's fused batch dimension, execute once, and scatter
 //! the outputs back to the per-request response channels.
 
+use std::collections::VecDeque;
 use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 
 use anyhow::{anyhow, bail, Result};
@@ -17,10 +19,13 @@ use crate::linalg::ShapeError;
 use crate::runtime::engine::{Backend, Compiled, Engine};
 use crate::runtime::manifest::{ArtifactSpec, Manifest, Role};
 use crate::runtime::tensor::{Dtype, HostTensor};
-use crate::serve::batcher::{Batcher, Pending};
+use crate::serve::batcher::{Batcher, FailoverRoute, Pending};
+use crate::serve::faults::{FaultInjector, FaultPlan};
+use crate::serve::lock_recover;
 use crate::serve::protocol::{ErrCode, InferRequest, Response};
 use crate::serve::session::SessionStore;
 use crate::serve::stats::{Clock, ServeStats};
+use crate::serve::supervisor::{self, RestartPolicy};
 use crate::util::json::Json;
 
 /// One input or output of the served signature, in fused-batch shape.
@@ -488,6 +493,9 @@ pub fn session_state_shape_error(
 /// cached copy of `model.spec()` and `scratch` its reusable buffers —
 /// both are per-worker state so the hot loop neither re-clones the
 /// signature nor reallocates its control vectors per batch.
+///
+/// Thin wrapper over [`execute_batch_shared`] for callers (tests,
+/// embedders) that own the batch outright and need no panic fail-over.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_batch(
     model: &mut dyn ServeModel,
@@ -500,47 +508,98 @@ pub fn execute_batch(
     lr: f32,
     scratch: &mut WorkerScratch,
 ) {
-    let mut good = Vec::new();
-    for p in batch {
-        match validate_request(spec, &p.req) {
-            Ok(()) => good.push(p),
-            Err(e) => {
-                stats.record_bad_request();
-                p.reply(Response::Err {
-                    id: p.req.id,
-                    code: ErrCode::BadRequest,
-                    msg: format!("{e:#}"),
-                });
-            }
-        }
-    }
+    let inbox = Mutex::new(VecDeque::from(batch));
+    let inflight = Mutex::new(Vec::new());
+    execute_batch_shared(
+        model, spec, resident, &inbox, &inflight, sessions, stats, clock, lr, scratch, None,
+    );
+}
+
+/// Supervised batch execution (ISSUE 10): drain `inbox` chunk by chunk,
+/// registering every chunk's reply routes in `inflight` before running
+/// it.  The supervisor wraps this call in `catch_unwind`; on a panic the
+/// routes still registered identify exactly the requests the dead chunk
+/// owed answers to (they get typed `worker_failed` frames), while
+/// whatever remains in `inbox` was never touched and can be requeued for
+/// the surviving workers.  `faults` is the worker's deterministic chaos
+/// injector (`None` outside chaos runs).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_batch_shared(
+    model: &mut dyn ServeModel,
+    spec: &ServeSpec,
+    resident: &mut Vec<HostTensor>,
+    inbox: &Mutex<VecDeque<Pending>>,
+    inflight: &Mutex<Vec<FailoverRoute>>,
+    sessions: &SessionStore,
+    stats: &ServeStats,
+    clock: &Clock,
+    lr: f32,
+    scratch: &mut WorkerScratch,
+    mut faults: Option<&mut FaultInjector>,
+) {
     let cap = spec.batch.max(1);
-    let mut rest = good;
-    while !rest.is_empty() {
-        // A fused chunk may hold at most one request per session key: a
-        // second would read state the first has not written yet.  Cutting
-        // the chunk at the duplicate keeps FIFO order, and the duplicate
-        // runs in the next sequential chunk, after the state lands.  The
-        // scan is quadratic in the chunk length, which is bounded by the
-        // fused batch — no per-batch set allocation.
-        let mut chunk_len = 0usize;
-        for (idx, p) in rest.iter().enumerate() {
-            if chunk_len >= cap {
-                break;
-            }
-            if let Some(s) = &p.req.session {
-                if rest[..idx]
-                    .iter()
-                    .any(|q| q.req.session.as_deref() == Some(s.as_str()))
-                {
+    loop {
+        // Carve the next fused chunk off the inbox front.  A fused chunk
+        // may hold at most one request per session key: a second would
+        // read state the first has not written yet.  Cutting the chunk at
+        // the duplicate keeps FIFO order, and the duplicate runs in the
+        // next sequential chunk, after the state lands.  The scan is
+        // quadratic in the chunk length, which is bounded by the fused
+        // batch — no per-batch set allocation.  Invalid requests are
+        // answered inline and never occupy a chunk slot.
+        let mut chunk: Vec<Pending> = Vec::with_capacity(cap);
+        let mut rejected: Vec<(Pending, anyhow::Error)> = Vec::new();
+        {
+            let mut q = lock_recover(inbox);
+            while chunk.len() < cap {
+                let dup = match q.front() {
+                    None => break,
+                    Some(p) => p.req.session.as_deref().is_some_and(|s| {
+                        chunk.iter().any(|c| c.req.session.as_deref() == Some(s))
+                    }),
+                };
+                if dup {
                     break;
                 }
+                let p = q.pop_front().expect("front() was Some");
+                match validate_request(spec, &p.req) {
+                    Ok(()) => chunk.push(p),
+                    Err(e) => rejected.push((p, e)),
+                }
             }
-            chunk_len += 1;
         }
-        let remainder = rest.split_off(chunk_len);
-        run_chunk(model, spec, resident, rest, sessions, stats, clock, lr, scratch);
-        rest = remainder;
+        // Replies stay outside the inbox lock.
+        for (p, e) in rejected {
+            stats.record_bad_request();
+            p.reply(Response::Err {
+                id: p.req.id,
+                code: ErrCode::BadRequest,
+                msg: format!("{e:#}"),
+            });
+        }
+        if chunk.is_empty() {
+            if lock_recover(inbox).is_empty() {
+                return;
+            }
+            continue; // a run of invalid requests; keep draining
+        }
+        // From here until the chunk is answered, these routes are the
+        // supervisor's fail-over set.
+        {
+            let mut routes = lock_recover(inflight);
+            routes.clear();
+            routes.extend(chunk.iter().map(Pending::failover_route));
+        }
+        if let Some(f) = faults.as_mut() {
+            if let Some(us) = f.slow_delay_us() {
+                thread::sleep(std::time::Duration::from_micros(us));
+            }
+            if f.should_panic() {
+                panic!("injected fault: worker panic (CWY_FAULTS)");
+            }
+        }
+        run_chunk(model, spec, resident, chunk, sessions, stats, clock, lr, scratch);
+        lock_recover(inflight).clear();
     }
 }
 
@@ -821,9 +880,12 @@ fn run_chunk(
     stats.record_batch(k, &scratch.queue_waits, exec_us);
 }
 
-/// The worker pool: `n` threads, each owning a private model instance.
+/// The worker pool: `n` supervised threads, each owning a private model
+/// instance.  The per-thread loop — panic isolation, batch fail-over,
+/// capped-backoff respawn — lives in [`crate::serve::supervisor`].
 pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
+    live: Arc<AtomicUsize>,
 }
 
 impl WorkerPool {
@@ -836,60 +898,39 @@ impl WorkerPool {
         stats: Arc<ServeStats>,
         clock: Arc<Clock>,
         lr: f32,
+        policy: RestartPolicy,
+        faults: Option<FaultPlan>,
     ) -> WorkerPool {
-        let mut handles = Vec::with_capacity(n.max(1));
-        for w in 0..n.max(1) {
+        let n = n.max(1);
+        let live = Arc::new(AtomicUsize::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
             let factory = factory.clone();
             let batcher = batcher.clone();
             let sessions = sessions.clone();
             let stats = stats.clone();
             let clock = clock.clone();
+            let live = live.clone();
             let handle = thread::Builder::new()
                 .name(format!("cwy-serve-worker-{w}"))
                 .spawn(move || {
-                    // A worker that cannot build its model would leave a
-                    // pool that accepts work nobody serves; fail the whole
-                    // batcher instead so queued and future requests get
-                    // `unavailable` frames rather than silence.
-                    let mut model = match factory() {
-                        Ok(m) => m,
-                        Err(e) => {
-                            eprintln!("worker {w}: model init failed: {e:#}");
-                            batcher.shutdown();
-                            return;
-                        }
-                    };
-                    let mut resident = match model.initial_resident() {
-                        Ok(r) => r,
-                        Err(e) => {
-                            eprintln!("worker {w}: initial state failed: {e:#}");
-                            batcher.shutdown();
-                            return;
-                        }
-                    };
-                    // Per-worker hot-loop state: the signature is cloned
-                    // once, and the batch scratch reuses its buffers
-                    // across every request this worker ever serves.
-                    let spec = model.spec().clone();
-                    let mut scratch = WorkerScratch::default();
-                    while let Some(batch) = batcher.next_batch() {
-                        execute_batch(
-                            model.as_mut(),
-                            &spec,
-                            &mut resident,
-                            batch,
-                            &sessions,
-                            &stats,
-                            &clock,
-                            lr,
-                            &mut scratch,
-                        );
-                    }
+                    supervisor::run_worker(
+                        w, &*factory, &batcher, &sessions, &stats, &clock, lr, policy,
+                        faults, &live,
+                    );
                 })
                 .expect("spawning worker thread");
             handles.push(handle);
         }
-        WorkerPool { handles }
+        WorkerPool { handles, live }
+    }
+
+    /// Workers currently serving: spawned minus exited (shutdown) or
+    /// quarantined (the supervisor's restart budget ran out).  The chaos
+    /// suite asserts this returns to the configured count after injected
+    /// panics — pool capacity self-heals.
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::Acquire)
     }
 
     pub fn join(self) {

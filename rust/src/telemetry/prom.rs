@@ -98,6 +98,12 @@ pub fn registry_json_of(reg: &Registry) -> Json {
                 ("pool_queue_depth", num(reg.pool_queue_depth() as f64)),
                 ("pack_hits", num(reg.pack_hits() as f64)),
                 ("pack_misses", num(reg.pack_misses() as f64)),
+                // Supervision + fault-injection counters (ISSUE 10): the
+                // chaos acceptance bar requires these visible in both the
+                // stats table and the Prometheus export.
+                ("worker_restarts", num(reg.worker_restarts() as f64)),
+                ("batches_requeued", num(reg.batches_requeued() as f64)),
+                ("faults_injected", num(reg.faults_injected() as f64)),
                 // String label alongside the numeric code; skipped by the
                 // Prometheus renderer (gauges must be numeric) but shown
                 // by `cwy client --stats`.
@@ -207,6 +213,14 @@ mod tests {
         assert!(j.path(&["gauges", "pool_queue_depth"]).as_f64().is_some());
         assert!(j.path(&["gauges", "pool_workers"]).as_f64().is_some());
         assert_eq!(j.path(&["phases", "pool_park_us", "count"]).as_f64(), Some(1.0));
+        // Supervision counters ride the same gauges object (ISSUE 10).
+        r.add_worker_restart();
+        r.add_batch_requeued();
+        r.add_fault_injected();
+        let j = registry_json_of(&r);
+        assert_eq!(j.path(&["gauges", "worker_restarts"]).as_f64(), Some(1.0));
+        assert_eq!(j.path(&["gauges", "batches_requeued"]).as_f64(), Some(1.0));
+        assert_eq!(j.path(&["gauges", "faults_injected"]).as_f64(), Some(1.0));
         // Serde-free round trip: the frame must survive the wire.
         let back = crate::util::json::parse(&j.dump()).unwrap();
         assert_eq!(back, j);
@@ -225,6 +239,9 @@ mod tests {
         assert!(text.contains("# TYPE cwy_kernel_dispatch gauge"));
         assert!(text.contains("# TYPE cwy_pool_tasks gauge"));
         assert!(text.contains("# TYPE cwy_pack_hits gauge"));
+        assert!(text.contains("# TYPE cwy_worker_restarts gauge"));
+        assert!(text.contains("# TYPE cwy_batches_requeued gauge"));
+        assert!(text.contains("# TYPE cwy_faults_injected gauge"));
         assert!(text.contains("cwy_phase_us{phase=\"pool_park_us\",quantile=\"0.99\"} 0"));
         // The string label must NOT leak into the numeric exposition.
         assert!(!text.contains("cwy_kernel "));

@@ -35,9 +35,12 @@ pub enum SpanId {
     /// One band executed through the persistent parallel pool
     /// (`linalg::pool`).
     PoolTask = 11,
+    /// One supervised batch execution in a serve worker (`catch_unwind`
+    /// wrapper + fail-over bookkeeping — `serve::supervisor`).
+    Supervisor = 12,
 }
 
-pub const SPAN_COUNT: usize = 12;
+pub const SPAN_COUNT: usize = 13;
 
 /// The four GEMM transpose variants lead the [`SpanId`] numbering, so a
 /// span index below this doubles as a FLOP-counter index.
@@ -57,6 +60,7 @@ impl SpanId {
         SpanId::WriteBack,
         SpanId::EventLoop,
         SpanId::PoolTask,
+        SpanId::Supervisor,
     ];
 
     pub fn name(self) -> &'static str {
@@ -73,6 +77,7 @@ impl SpanId {
             SpanId::WriteBack => "write_back",
             SpanId::EventLoop => "event_loop",
             SpanId::PoolTask => "pool_task",
+            SpanId::Supervisor => "supervisor",
         }
     }
 
@@ -182,6 +187,15 @@ pub struct Registry {
     pack_hits: AtomicU64,
     /// `PackedOperand::ensure` rebuilds (key mismatch or epoch bump).
     pack_misses: AtomicU64,
+    /// Serve workers rebuilt by the supervisor after a batch panic
+    /// (`serve::supervisor` — ISSUE 10).
+    worker_restarts: AtomicU64,
+    /// Batches whose untouched tail entries were requeued after a worker
+    /// panic instead of being dropped.
+    batches_requeued: AtomicU64,
+    /// Deterministic faults fired by `serve::faults` (panic / slow /
+    /// partial-write / malformed sites combined).
+    faults_injected: AtomicU64,
     hists: [Histogram; HIST_COUNT],
 }
 
@@ -212,6 +226,9 @@ impl Registry {
             pool_workers: AtomicU64::new(0),
             pack_hits: AtomicU64::new(0),
             pack_misses: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            batches_requeued: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
             hists: [HIST; HIST_COUNT],
         }
     }
@@ -329,6 +346,32 @@ impl Registry {
         self.pack_misses.load(Ordering::Relaxed)
     }
 
+    // --- serve supervision + fault injection (ISSUE 10) ---
+
+    pub fn add_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn add_batch_requeued(&self) {
+        self.batches_requeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn batches_requeued(&self) -> u64 {
+        self.batches_requeued.load(Ordering::Relaxed)
+    }
+
+    pub fn add_fault_injected(&self) {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn faults_injected(&self) -> u64 {
+        self.faults_injected.load(Ordering::Relaxed)
+    }
+
     pub fn hist(&self, id: HistId) -> &Histogram {
         &self.hists[id as usize]
     }
@@ -437,6 +480,22 @@ mod tests {
         // Pool-task spans share the generic span slots.
         r.record_span(SpanId::PoolTask, 5_000);
         assert_eq!(r.span_calls(SpanId::PoolTask), 1);
+    }
+
+    #[test]
+    fn supervision_counters() {
+        let r = Registry::new();
+        r.add_worker_restart();
+        r.add_batch_requeued();
+        r.add_batch_requeued();
+        r.add_fault_injected();
+        assert_eq!(r.worker_restarts(), 1);
+        assert_eq!(r.batches_requeued(), 2);
+        assert_eq!(r.faults_injected(), 1);
+        // The supervisor span shares the generic span slots and feeds no
+        // phase histogram.
+        r.record_span(SpanId::Supervisor, 9_000);
+        assert_eq!(r.span_calls(SpanId::Supervisor), 1);
     }
 
     #[test]

@@ -121,6 +121,9 @@ macro_rules! span {
     (pool_task) => {
         $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::PoolTask)
     };
+    (supervisor) => {
+        $crate::telemetry::SpanGuard::enter($crate::telemetry::SpanId::Supervisor)
+    };
 }
 
 /// One exported trace event (a closed span).

@@ -13,9 +13,9 @@ use std::sync::Arc;
 
 use cwy::runtime::{Dtype, HostTensor};
 use cwy::serve::{
-    fetch_spec, fetch_stats, ping, protocol, run_load, run_sessions, serve, AdmissionCfg,
-    BatchCfg, ClientCfg, ErrCode, FakeModel, InferRequest, ModelFactory, Request, Response,
-    ServeCfg, ServeModel, Server, SessionCfg, SessionLoadCfg,
+    fetch_metrics, fetch_spec, fetch_stats, ping, protocol, run_load, run_sessions, serve,
+    AdmissionCfg, BatchCfg, ClientCfg, ErrCode, FakeModel, FaultPlan, InferRequest,
+    ModelFactory, Request, Response, ServeCfg, ServeModel, Server, SessionLoadCfg,
 };
 
 fn start_server(
@@ -35,9 +35,7 @@ fn start_server(
             // Timed batching: these tests predate continuous mode and
             // assert its window semantics (max_wait-driven coalescing).
             batch: BatchCfg { max_batch, max_wait_us, queue_cap, continuous: false },
-            session: SessionCfg::default(),
-            admission: AdmissionCfg::default(),
-            lr: 0.0,
+            ..ServeCfg::default()
         },
         factory,
     )
@@ -102,8 +100,8 @@ fn sustains_concurrent_load_with_zero_drops_and_coalesces() {
         addr: addr.clone(),
         requests: 300,
         concurrency: 16,
-        deadline_us: None,
         use_sessions: false,
+        ..ClientCfg::default()
     })
     .unwrap();
     assert_eq!(report.ok, 300, "every request must succeed: {report:?}");
@@ -306,9 +304,7 @@ fn closed_loop_sessions_are_answered_exactly_once() {
             addr: "127.0.0.1:0".to_string(),
             workers: 2,
             batch: BatchCfg { max_batch: 8, max_wait_us: 1_000, queue_cap: 4_096, continuous: true },
-            session: SessionCfg::default(),
-            admission: AdmissionCfg::default(),
-            lr: 0.0,
+            ..ServeCfg::default()
         },
         factory,
     )
@@ -318,8 +314,8 @@ fn closed_loop_sessions_are_answered_exactly_once() {
         sessions: 200,
         rounds: 3,
         conns: 8,
-        deadline_us: None,
         use_sessions: true,
+        ..SessionLoadCfg::default()
     })
     .unwrap();
     assert!(report.complete(), "closed-loop invariant violated: {report:?}");
@@ -341,9 +337,8 @@ fn per_connection_inflight_cap_sheds_typed_overload() {
             addr: "127.0.0.1:0".to_string(),
             workers: 1,
             batch: BatchCfg { max_batch: 1, max_wait_us: 100, queue_cap: 64, continuous: true },
-            session: SessionCfg::default(),
             admission: AdmissionCfg { max_inflight_per_conn: 2, ..AdmissionCfg::default() },
-            lr: 0.0,
+            ..ServeCfg::default()
         },
         factory,
     )
@@ -371,6 +366,113 @@ fn per_connection_inflight_cap_sheds_typed_overload() {
     assert_eq!(overloaded, vec![3, 4], "past-budget pipelining sheds typed overload");
     assert_eq!(server.snapshot().rejected_inflight, 2);
     server.stop();
+}
+
+#[test]
+fn chaos_panics_fail_over_and_the_closed_loop_stays_exactly_once() {
+    // ISSUE 10 acceptance: with deterministic worker panics injected on
+    // >= 10% of batch executions (plus slow executions), the closed-loop
+    // harness still sees every request answered exactly once — panicked
+    // batches come back as typed `worker_failed` frames the client retry
+    // budget absorbs, untouched queue entries are requeued, and the pool
+    // self-heals back to full capacity via supervised respawn.
+    let factory: Arc<ModelFactory> =
+        Arc::new(|| Ok(Box::new(FakeModel::new(8, 4, 100)) as Box<dyn ServeModel>));
+    let server = serve(
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            batch: BatchCfg { max_batch: 8, max_wait_us: 1_000, queue_cap: 4_096, continuous: true },
+            faults: Some(FaultPlan::parse("42:panic=0.15,slow=0.05@500").expect("fault spec")),
+            ..ServeCfg::default()
+        },
+        factory,
+    )
+    .expect("server start");
+    let addr = server.local_addr().to_string();
+    let report = run_sessions(&SessionLoadCfg {
+        addr: addr.clone(),
+        sessions: 300,
+        rounds: 3,
+        conns: 8,
+        use_sessions: true,
+        ..SessionLoadCfg::default()
+    })
+    .unwrap();
+    assert!(
+        report.exactly_once(),
+        "chaos must not break the exactly-once invariant: {report:?}"
+    );
+    assert_eq!(report.conn_failures, 0, "{report:?}");
+    assert_eq!(report.sent, 900, "the full schedule must go out: {report:?}");
+    assert!(
+        report.retries > 0,
+        "15% injected panics must surface retriable worker_failed frames: {report:?}"
+    );
+
+    // The pool healed, and the supervision counters are visible in the
+    // same metrics frame `cwy client --stats` renders.
+    assert_eq!(server.live_workers(), 2, "respawn must restore pool capacity");
+    let frame = fetch_metrics(&addr).unwrap();
+    let gauge = |name: &str| {
+        frame.path(&["telemetry", "gauges", name]).as_f64().unwrap_or(0.0)
+    };
+    assert!(gauge("worker_restarts") > 0.0, "restarts must be exported");
+    assert!(gauge("faults_injected") > 0.0, "fired faults must be counted");
+    server.stop();
+}
+
+#[test]
+fn stop_mid_load_answers_every_inflight_request() {
+    // ISSUE 10 satellite (graceful drain): `Server::stop` while a slow
+    // batch is executing and more requests sit queued.  Queued entries
+    // come back as typed `unavailable`, the executing batch completes,
+    // and EOF arrives only after every sent id has exactly one answer.
+    let factory: Arc<ModelFactory> =
+        Arc::new(|| Ok(Box::new(FakeModel::new(4, 4, 20_000)) as Box<dyn ServeModel>));
+    let server = serve(
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            batch: BatchCfg { max_batch: 4, max_wait_us: 500, queue_cap: 64, continuous: true },
+            ..ServeCfg::default()
+        },
+        factory,
+    )
+    .expect("server start");
+    let addr = server.local_addr().to_string();
+    let mut conn = RawConn::open(&addr);
+    let sent: Vec<u64> = (1..=12).collect();
+    for &id in &sent {
+        conn.send(&infer(id, None, None, [1.0; 4]));
+    }
+    // Let the worker check a batch out, then pull the plug mid-load.
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    let reader = std::thread::spawn(move || {
+        let mut got: Vec<u64> = Vec::new();
+        loop {
+            let mut line = String::new();
+            match conn.reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break, // EOF: the drain closed the socket
+                Ok(_) => match protocol::decode_response(&line).expect("valid frame") {
+                    Response::Ok { id, .. } => got.push(id),
+                    Response::Err { id, code, .. } => {
+                        assert!(
+                            matches!(code, ErrCode::Unavailable | ErrCode::Overloaded),
+                            "drain must shed typed frames, got {code:?} for id {id}"
+                        );
+                        got.push(id);
+                    }
+                    other => panic!("wrong frame: {other:?}"),
+                },
+            }
+        }
+        got
+    });
+    server.stop();
+    let mut got = reader.join().unwrap();
+    got.sort_unstable();
+    assert_eq!(got, sent, "every admitted request must be answered exactly once");
 }
 
 mod native_backend {
@@ -401,9 +503,7 @@ mod native_backend {
                     queue_cap: 256,
                     continuous: false,
                 },
-                session: SessionCfg::default(),
-                admission: AdmissionCfg::default(),
-                lr: 0.0,
+                ..ServeCfg::default()
             },
             factory,
         )
@@ -489,8 +589,8 @@ mod native_backend {
             addr,
             requests: 120,
             concurrency: 8,
-            deadline_us: None,
             use_sessions: true,
+            ..ClientCfg::default()
         })
         .unwrap();
         assert_eq!(report.ok, 120, "every request must succeed: {report:?}");
